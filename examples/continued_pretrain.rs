@@ -1,0 +1,72 @@
+//! Domain-adaptive continued pre-training (the paper's §4.1 scenario 2,
+//! VietVault): pre-train on the English-like corpus, checkpoint, then
+//! continue training the SAME weights on the Vietnamese-like corpus and
+//! compare against training on Vietnamese from scratch. The transferred
+//! run should start from a much lower loss on latin-script structure
+//! and converge faster.
+//!
+//!     cargo run --release --example continued_pretrain
+
+use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::checkpoint;
+use adafrugal::coordinator::method::Method;
+use adafrugal::coordinator::trainer::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let steps = 200;
+    let base_cfg = TrainConfig {
+        preset: "nano".into(),
+        steps,
+        warmup_steps: 20,
+        t_start: 25,
+        t_max: 100,
+        n_eval: 25,
+        log_every: 50,
+        ..TrainConfig::default()
+    };
+
+    // phase 1: pre-train on the English-like (C4-proxy) corpus
+    println!("== phase 1: pre-train on english-like corpus ({steps} steps) ==");
+    let mut t1 = Trainer::new(
+        TrainConfig { corpus: "english".into(), ..base_cfg.clone() },
+        Method::AdaFrugalCombined,
+    )?;
+    let r1 = t1.run()?;
+    println!("phase-1 final ppl: {:.2}", r1.final_ppl());
+    let ck_path = "results/continued_pretrain_phase1.ckpt";
+    checkpoint::save(
+        ck_path,
+        &checkpoint::train_header("nano", "combined", steps, r1.evals.last().unwrap().val_loss),
+        &t1.params_host()?,
+    )?;
+    println!("checkpoint saved to {ck_path}\n");
+
+    // phase 2a: continue on Vietnamese-like corpus from the checkpoint
+    println!("== phase 2a: continued pre-training on vietnamese-like corpus ==");
+    let mut t2 = Trainer::new(
+        TrainConfig { corpus: "vietnamese".into(), ..base_cfg.clone() },
+        Method::AdaFrugalCombined,
+    )?;
+    t2.restore_params(&checkpoint::load(ck_path)?.data)?;
+    let r2 = t2.run()?;
+
+    // phase 2b: from-scratch baseline on the same corpus
+    println!("\n== phase 2b: from-scratch baseline on vietnamese-like corpus ==");
+    let mut t3 = Trainer::new(
+        TrainConfig { corpus: "vietnamese".into(), ..base_cfg },
+        Method::AdaFrugalCombined,
+    )?;
+    t3.quiet = true;
+    let r3 = t3.run()?;
+
+    println!("\n== comparison (validation loss on vietnamese-like) ==");
+    println!("{:<8} {:>14} {:>14}", "step", "continued", "from-scratch");
+    for (ea, eb) in r2.evals.iter().zip(r3.evals.iter()) {
+        println!("{:<8} {:>14.3} {:>14.3}", ea.step, ea.val_loss, eb.val_loss);
+    }
+    let adv = r3.evals.first().unwrap().val_loss - r2.evals.first().unwrap().val_loss;
+    println!("\ntransfer advantage at first eval: {adv:.3} nats");
+    println!("continued final ppl {:.2} vs from-scratch {:.2}",
+             r2.final_ppl(), r3.final_ppl());
+    Ok(())
+}

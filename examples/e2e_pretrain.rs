@@ -1,0 +1,75 @@
+//! End-to-end driver (DESIGN.md "End-to-end validation"): pre-train a
+//! transformer on the synthetic C4-like corpus with BOTH the AdamW
+//! upper bound and AdaFRUGAL-Combined, logging loss curves, optimizer
+//! memory, throughput and the dynamic-control trajectory. Proves all
+//! three layers compose: Pallas kernel → JAX graph → HLO artifact →
+//! rust coordinator.
+//!
+//!     cargo run --release --example e2e_pretrain            # tiny (~9M params)
+//!     cargo run --release --example e2e_pretrain -- micro 600   # preset + steps
+//!
+//! The recorded run lives in EXPERIMENTS.md §E2E.
+
+use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::method::Method;
+use adafrugal::coordinator::trainer::Trainer;
+use adafrugal::experiments::common;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().cloned().unwrap_or_else(|| "tiny".to_string());
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    let cfg = TrainConfig {
+        preset: preset.clone(),
+        steps,
+        warmup_steps: steps / 10,
+        t_start: (steps / 10).max(10),
+        t_max: (steps / 2).max(20),
+        n_eval: (steps / 10).max(10),
+        log_every: (steps / 20).max(5),
+        val_batches: 4,
+        ..TrainConfig::default()
+    };
+
+    println!("== e2e pretraining on `{preset}` for {steps} steps ==");
+    let man = adafrugal::runtime::Manifest::load(&cfg.artifacts_dir, &preset)?;
+    println!("model: {:.2}M params (d={} L={} vocab={} seq={} batch={})\n",
+             man.n_params as f64 / 1e6, man.model.d_model, man.model.n_layers,
+             man.model.vocab, man.model.seq, man.model.batch);
+
+    let mut results = Vec::new();
+    for method in [Method::AdamW, Method::AdaFrugalCombined] {
+        println!("--- {} ---", method.label());
+        let mut t = Trainer::new(cfg.clone(), method)?;
+        let r = t.run()?;
+        let toks_per_step = (man.model.batch * man.model.seq) as f64;
+        println!(
+            "{}: final ppl {:.2}, mem {}, {:.1}s ({:.1} steps/s, {:.0} tok/s)\n",
+            method.label(),
+            r.final_ppl(),
+            r.memory.label(),
+            r.total_time_s,
+            steps as f64 / r.step_time_s.max(1e-9),
+            steps as f64 * toks_per_step / r.step_time_s.max(1e-9)
+        );
+        common::write_run_jsonl(
+            &format!("results/e2e_{preset}_{}.jsonl", method.id()), &cfg, &r)?;
+        results.push((method, r));
+    }
+
+    println!("== loss-curve comparison (validation) ==");
+    println!("{:<8} {:>12} {:>12}", "step", "AdamW", "AdaFRUGAL");
+    let (a, b) = (&results[0].1.evals, &results[1].1.evals);
+    for (ea, eb) in a.iter().zip(b.iter()) {
+        println!("{:<8} {:>12.3} {:>12.3}", ea.step, ea.val_loss, eb.val_loss);
+    }
+    let mem_a = results[0].1.memory.peak_bytes as f64;
+    let mem_b = results[1].1.memory.last_bytes() as f64;
+    println!(
+        "\nAdaFRUGAL final optimizer memory = {:.0}% of AdamW ({:.2} vs {:.2} MB)",
+        100.0 * mem_b / mem_a, mem_b / 1e6, mem_a / 1e6
+    );
+    println!("(metrics in results/e2e_{preset}_*.jsonl)");
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Fine-tune on one synthetic GLUE-like task with several optimizers
+//! and compare scores + optimizer memory — a single-task slice of the
+//! paper's Table 3.
+//!
+//!     cargo run --release --example glue_finetune            # SST-2
+//!     cargo run --release --example glue_finetune -- MRPC 2  # task + seeds
+
+use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::finetune::{FineTuner, FtMethod};
+use adafrugal::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let task = args.first().cloned().unwrap_or_else(|| "SST-2".to_string());
+    let seeds: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
+
+    let cfg = TrainConfig {
+        preset: "nano".into(),
+        steps: 120,
+        warmup_steps: 12,
+        t_start: 30,
+        t_max: 120,
+        n_eval: 30,
+        lr: 2e-3,
+        lr_free: 2e-4,
+        ..TrainConfig::default()
+    };
+
+    println!("== fine-tuning {task} for {} steps, {seeds} seeds ==\n", cfg.steps);
+    for method in [
+        FtMethod::FullAdamW,
+        FtMethod::Lora,
+        FtMethod::Frugal { dynamic_rho: false, dynamic_t: false },
+        FtMethod::Frugal { dynamic_rho: false, dynamic_t: true },
+    ] {
+        let mut scores = Vec::new();
+        for seed in 0..seeds {
+            let mut c = cfg.clone();
+            c.seed = seed;
+            let mut ft = FineTuner::new(c, method, &task, seed)?;
+            scores.push(ft.run()?.score);
+        }
+        println!(
+            "{:<22} {:>6.1} ± {:.1}",
+            method.label(),
+            stats::mean(&scores),
+            stats::std_dev(&scores)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Quickstart: train a small LLaMA-style model with AdaFRUGAL-Combined
+//! for a few hundred steps on the synthetic English corpus and watch
+//! the loss, the ρ decay and the T adaptation.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::method::Method;
+use adafrugal::coordinator::trainer::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = TrainConfig {
+        preset: "nano".into(),
+        steps: 300,
+        warmup_steps: 30,
+        t_start: 30,
+        t_max: 120,
+        n_eval: 30,
+        log_every: 30,
+        rho: 0.25,
+        rho_end: 0.05,
+        ..TrainConfig::default()
+    };
+
+    println!("== AdaFRUGAL quickstart: {} steps of AdaFRUGAL-Combined on `{}` ==\n",
+             cfg.steps, cfg.preset);
+    let mut trainer = Trainer::new(cfg, Method::AdaFrugalCombined)?;
+    let result = trainer.run()?;
+
+    println!("\nloss curve (validation):");
+    for e in &result.evals {
+        let bar = "#".repeat((e.val_loss * 8.0) as usize);
+        println!("  step {:>4}  loss {:.3}  ppl {:>8.2}  {}", e.step, e.val_loss, e.ppl, bar);
+    }
+    println!("\noptimizer memory: {}", result.memory.label());
+    println!("redefinitions: {}", result.redefinitions);
+    for ev in &result.t_events {
+        println!("dynamic-T event: step {} T {} -> {}", ev.step, ev.old_t, ev.new_t);
+    }
+    println!("\ndone in {:.1}s ({:.1} steps/s)", result.total_time_s,
+             result.steps.len() as f64 * 30.0 / result.total_time_s.max(1e-9));
+    Ok(())
+}

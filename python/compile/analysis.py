@@ -1,0 +1,94 @@
+"""L1/L2 profiling for the §Perf pass (build-time tool).
+
+Reports, per entry point:
+  - XLA cost analysis (flops, bytes accessed) of the lowered module;
+  - the Pallas hybrid-update kernel's VMEM footprint + arithmetic
+    intensity per BlockSpec tile (the TPU-shaped numbers DESIGN.md §6
+    promises — interpret=True wall-clock is NOT a TPU proxy, so we
+    report structure, not time);
+  - an achieved-vs-roofline estimate when given a measured step time.
+
+Usage (from python/):
+    python -m compile.analysis --preset micro [--step-ms 310]
+"""
+
+import argparse
+
+import jax
+
+from .configs import get_preset
+from .model import make_entrypoints
+# NB: compile.kernels.__init__ re-exports the *function* frugal_update,
+# shadowing the submodule attribute — fetch the module via sys.modules.
+import compile.kernels.frugal_update  # noqa: F401
+import sys
+fu = sys.modules["compile.kernels.frugal_update"]
+
+
+def entry_cost(fn, arg_specs):
+    lowered = jax.jit(fn).lower(*arg_specs)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return ca or {}
+
+
+def kernel_tile_report(rows: int, cols: int):
+    """VMEM + intensity for one frugal_update pallas_call tile."""
+    tr = fu._tile(rows, fu._ROWS_TILE)
+    tc = fu._tile(cols, fu._COLS_TILE)
+    tile_bytes = 4 * (4 * tr * tc + 3 * tr * tc + tc + 8)  # in: p,g,m,v + out:3 + mask+scal
+    # ~14 flops per element (2 EMAs, bias corr, rsqrt path, select, decay)
+    flops = 14 * tr * tc
+    hbm_bytes = 4 * (7 * tr * tc + tc)  # every tensor touched once
+    return {
+        "tile": (tr, tc),
+        "grid": (rows // tr, cols // tc),
+        "vmem_bytes": tile_bytes,
+        "arith_intensity": flops / hbm_bytes,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="micro")
+    ap.add_argument("--step-ms", type=float, default=None,
+                    help="measured rust step time for achieved-flops estimate")
+    ap.add_argument("--peak-gflops", type=float, default=50.0,
+                    help="assumed single-core peak for the efficiency ratio")
+    args = ap.parse_args()
+
+    cfg = get_preset(args.preset)
+    entries, specs, maskable, layout, _ = make_entrypoints(cfg, "lm")
+
+    print(f"== L2 cost analysis ({args.preset}) ==")
+    for name in ["frugal", "adamw", "grad", "eval"]:
+        fn, arg_specs = entries[name]
+        ca = entry_cost(fn, arg_specs)
+        flops = ca.get("flops", float("nan"))
+        bytes_ = ca.get("bytes accessed", float("nan"))
+        print(f"  {name:<8} flops={flops/1e9:8.3f} G   bytes={bytes_/1e6:9.1f} MB   "
+              f"intensity={flops/max(bytes_,1):.2f} flop/B")
+        if name == "frugal" and args.step_ms:
+            achieved = flops / (args.step_ms / 1e3) / 1e9
+            ratio = achieved / args.peak_gflops
+            print(f"           achieved {achieved:.2f} GFLOP/s at {args.step_ms} ms/step "
+                  f"-> {100*ratio:.0f}% of assumed {args.peak_gflops} GFLOP/s peak")
+
+    print(f"\n== L1 pallas frugal_update tiles ({args.preset}) ==")
+    seen = set()
+    for (name, shape, _, mk) in specs:
+        if not mk or shape in seen:
+            continue
+        seen.add(shape)
+        r = kernel_tile_report(shape[0], shape[1])
+        print(f"  {str(shape):<14} tile={r['tile']} grid={r['grid']} "
+              f"vmem={r['vmem_bytes']/1024:.0f} KiB  intensity={r['arith_intensity']:.2f} flop/B")
+    print("\n  (bandwidth-bound by design: the fused kernel makes ONE pass over")
+    print("   p,g,m,v per step; on TPU the tile fits VMEM with >100x headroom,")
+    print("   so the HBM stream is the roofline, as intended.)")
+
+
+if __name__ == "__main__":
+    main()

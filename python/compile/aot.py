@@ -1,0 +1,130 @@
+"""AOT compile path: lower every entry point to HLO **text** + emit the
+manifest the rust coordinator uses to wire buffers.
+
+HLO text (not a serialized HloModuleProto) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly.
+
+Usage (from python/):
+    python -m compile.aot --preset micro --out-dir ../artifacts
+    python -m compile.aot --preset micro --task cls --out-dir ../artifacts
+    python -m compile.aot --preset micro --task cls --lora --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .configs import get_preset
+from .model import make_entrypoints
+
+
+def to_hlo_text(lowered) -> str:
+    # return_tuple=False: every entry point returns a SINGLE flat array
+    # (packed-state ABI, see model.py) so the PJRT output buffer is the
+    # array itself — xla_extension 0.5.1 has no buffer-untupling API, and
+    # a tuple-shaped output could not be fed back as the next step's
+    # state input without a host round-trip.
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_name(preset: str, task: str, lora: bool, n_cls: int = 2) -> str:
+    if lora:
+        return f"{preset}.cls{n_cls}_lora"
+    return preset if task == "lm" else f"{preset}.cls{n_cls}"
+
+
+def build(preset: str, task: str, lora: bool, out_dir: str,
+          batch: int | None = None, seq: int | None = None,
+          n_cls: int = 2) -> dict:
+    cfg = get_preset(preset)
+    if batch or seq or (task != "lm" and n_cls != cfg.n_cls):
+        from dataclasses import replace
+        cfg = replace(cfg, batch=batch or cfg.batch, seq=seq or cfg.seq,
+                      n_cls=n_cls if task != "lm" else cfg.n_cls)
+    entries, specs, maskable, layout, lspecs = make_entrypoints(cfg, task, lora)
+    name = artifact_name(preset, task, lora, n_cls)
+    os.makedirs(out_dir, exist_ok=True)
+
+    import math
+
+    def param_entry(n, shape, std, mk):
+        e = {"name": n, "shape": list(shape), "init_std": std,
+             "maskable": mk, "size": int(math.prod(shape)),
+             "offset": layout.param_off[n][0]}
+        if mk:
+            e["mask_offset"], e["mask_len"] = layout.mask_off[n]
+            e["score_offset"], e["n_blocks"] = layout.score_off[n]
+        return e
+
+    manifest = {
+        "name": name,
+        "task": ("cls_lora" if lora else task),
+        "model": cfg.to_dict(),
+        "layout": {
+            "n_params": layout.n_params,
+            "state_len": layout.state_len,
+            "mask_len": layout.mask_len,
+            "score_len": layout.score_len,
+            "block_size": layout.block_size,
+        },
+        "params": [param_entry(*s) for s in specs],
+        "maskable": [n for (n, _, _, mk) in specs if mk],
+        "lora_params": (
+            [{"name": n, "shape": list(shape), "init_std": std,
+              "size": int(math.prod(shape))}
+             for (n, shape, std, _) in (lspecs or [])]
+        ),
+        "scalars": ["lr_full", "lr_free", "wd", "beta1", "beta2", "eps",
+                    "bc1", "bc2"],
+        "entrypoints": {},
+    }
+
+    for ename, (fn, arg_specs) in entries.items():
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.{ename}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["entrypoints"][ename] = {
+            "file": fname,
+            "n_inputs": len(arg_specs),
+            "input_shapes": [list(s.shape) for s in arg_specs],
+            "input_dtypes": [str(s.dtype) for s in arg_specs],
+        }
+        print(f"  wrote {fname}  ({len(text) / 1e6:.2f} MB, "
+              f"{len(arg_specs)} inputs)")
+
+    mpath = os.path.join(out_dir, f"{name}.manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote {os.path.basename(mpath)}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="micro")
+    ap.add_argument("--task", default="lm", choices=["lm", "cls"])
+    ap.add_argument("--lora", action="store_true")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--n-cls", type=int, default=2,
+                    help="classes for cls tasks (1 = regression head)")
+    args = ap.parse_args()
+    print(f"[aot] preset={args.preset} task={args.task} lora={args.lora} "
+          f"n_cls={args.n_cls}")
+    build(args.preset, args.task, args.lora, args.out_dir,
+          args.batch, args.seq, args.n_cls)
+
+
+if __name__ == "__main__":
+    main()

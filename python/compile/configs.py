@@ -1,0 +1,65 @@
+"""Model size presets.
+
+The paper trains LLaMA-130M (h=768, L=12, ffn=2048, vocab=32000). We keep
+that architecture family and expose scaled presets; tables run `micro`
+(1:100 step scaling, see DESIGN.md §4), the e2e example runs `tiny`, and
+`base130m` matches the paper's architecture (lowerable, but CPU wall-clock
+makes the paper's full 200k-step run infeasible here).
+
+All width-like dims are multiples of 64 so Pallas block tiling divides
+evenly (see kernels/frugal_update.py).
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ffn: int
+    vocab: int
+    seq: int          # training sequence length (tokens input is seq+1)
+    batch: int
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # classification-head variants (GLUE-sim)
+    n_cls: int = 2
+    lora_rank: int = 8
+    # column-block granularity for blockwise projection
+    block_size: int = 16
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_dict(self):
+        return asdict(self)
+
+
+PRESETS = {
+    # test-size: fast enough for hypothesis sweeps & CI
+    "nano": ModelConfig("nano", d_model=64, n_layers=2, n_heads=2, d_ffn=192,
+                        vocab=512, seq=64, batch=4, block_size=8),
+    # tables T1/T2/T3 run on this (~1.5M params)
+    "micro": ModelConfig("micro", d_model=128, n_layers=4, n_heads=4, d_ffn=384,
+                         vocab=2048, seq=128, batch=8, block_size=16),
+    # e2e example (~11M params)
+    "tiny": ModelConfig("tiny", d_model=256, n_layers=8, n_heads=8, d_ffn=768,
+                        vocab=4096, seq=256, batch=4, block_size=16),
+    # ~33M
+    "small": ModelConfig("small", d_model=512, n_layers=8, n_heads=8, d_ffn=1408,
+                         vocab=8192, seq=256, batch=4, block_size=32),
+    # the paper's LLaMA-130M architecture
+    "base130m": ModelConfig("base130m", d_model=768, n_layers=12, n_heads=12,
+                            d_ffn=2048, vocab=32000, seq=256, batch=4,
+                            block_size=64),
+}
+
+
+def get_preset(name: str) -> ModelConfig:
+    if name not in PRESETS:
+        raise KeyError(f"unknown preset {name!r}; have {sorted(PRESETS)}")
+    return PRESETS[name]

@@ -1,0 +1,3 @@
+from . import ref  # noqa: F401
+from .frugal_update import frugal_update, adamw_update  # noqa: F401
+from .rmsnorm import rmsnorm  # noqa: F401

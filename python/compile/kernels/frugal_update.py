@@ -1,0 +1,120 @@
+"""Layer-1 Pallas kernel: fused FRUGAL hybrid optimizer update.
+
+This is the paper's per-step hot spot: for every parameter matrix the
+gradient is split into a state-full column subspace (bias-corrected AdamW)
+and a state-free complement (SignSGD), the two updates and decoupled
+weight decay are applied, and the Adam state is re-masked — all in ONE
+pass over HBM. On TPU the kernel is tiled (rows_tile x cols_tile) so one
+(p, g, m, v) tile set plus the per-column mask fits VMEM; the "gradient
+split" is a select on the broadcast mask, so there is no gather and the
+kernel is purely bandwidth-bound (see DESIGN.md §6).
+
+interpret=True everywhere in this session: the CPU PJRT plugin cannot run
+Mosaic custom-calls; interpret-mode lowers to plain HLO so the kernel
+numerics ship inside the AOT artifact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget shaping: 4 f32 input tiles + 3 output tiles per grid cell.
+# 128x512 f32 = 256 KiB/tile -> ~1.8 MiB live per cell, well under ~16 MiB.
+_ROWS_TILE = 128
+_COLS_TILE = 512
+
+
+def _tile(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (shapes here are 64-multiples,
+    so this is nearly always cap itself)."""
+    if n <= cap:
+        return n
+    for t in range(cap, 0, -1):
+        if n % t == 0:
+            return t
+    return n
+
+
+def _frugal_kernel(scal_ref, p_ref, g_ref, m_ref, v_ref, mask_ref,
+                   p_out, m_out, v_out):
+    s = scal_ref[...]
+    lr_full, lr_free, wd = s[0], s[1], s[2]
+    b1, b2, eps = s[3], s[4], s[5]
+    bc1, bc2 = s[6], s[7]
+
+    p = p_ref[...]
+    g = g_ref[...]
+    m = m_ref[...]
+    v = v_ref[...]
+    mask = mask_ref[...]  # (1, cols_tile), broadcasts down rows
+
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    adam_dir = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    sign_dir = jnp.sign(g)
+    update = mask * (lr_full * adam_dir) + (1.0 - mask) * (lr_free * sign_dir)
+    decay = (mask * lr_full + (1.0 - mask) * lr_free) * wd * p
+
+    p_out[...] = p - update - decay
+    m_out[...] = m_new * mask
+    v_out[...] = v_new * mask
+
+
+@functools.partial(jax.jit, static_argnames=())
+def frugal_update(p, g, m, v, mask, scalars):
+    """Fused FRUGAL hybrid update for one 2-D parameter.
+
+    p, g, m, v: (rows, cols) f32; mask: (cols,) f32 in {0,1};
+    scalars: (8,) f32 — see kernels.ref.ref_frugal_update.
+    Returns (p', m', v').
+    """
+    assert p.ndim == 2, f"frugal_update wants 2-D params, got {p.shape}"
+    rows, cols = p.shape
+    tr = _tile(rows, _ROWS_TILE)
+    tc = _tile(cols, _COLS_TILE)
+    grid = (rows // tr, cols // tc)
+    mask2 = mask.reshape(1, cols).astype(p.dtype)
+
+    mat_spec = pl.BlockSpec((tr, tc), lambda i, j: (i, j))
+    out_shape = jax.ShapeDtypeStruct((rows, cols), p.dtype)
+
+    return pl.pallas_call(
+        _frugal_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((8,), lambda i, j: (0,)),         # scalars
+            mat_spec, mat_spec, mat_spec, mat_spec,        # p g m v
+            pl.BlockSpec((1, tc), lambda i, j: (0, j)),    # mask row
+        ],
+        out_specs=[mat_spec, mat_spec, mat_spec],
+        out_shape=[out_shape, out_shape, out_shape],
+        interpret=True,
+    )(scalars, p, g, m, v, mask2)
+
+
+def adamw_update(p, g, m, v, scalars):
+    """Full-rank AdamW step through the same fused kernel (mask == 1).
+
+    Keeping the baseline on the identical code path makes the Table-1/2
+    AdamW rows a true apples-to-apples comparison: same kernel, same
+    fusion, only the mask differs.
+    """
+    orig_shape = p.shape
+    if p.ndim == 1:
+        p, g, m, v = (x.reshape(1, -1) for x in (p, g, m, v))
+    ones = jnp.ones((p.shape[1],), p.dtype)
+    p2, m2, v2 = frugal_update(p, g, m, v, ones, scalars)
+    return (p2.reshape(orig_shape), m2.reshape(orig_shape),
+            v2.reshape(orig_shape))
+
+
+def frugal_update_any(p, g, m, v, mask, scalars):
+    """Rank-polymorphic wrapper: 1-D params are treated as a single row."""
+    if p.ndim == 1:
+        p2, m2, v2 = frugal_update(p.reshape(1, -1), g.reshape(1, -1),
+                                   m.reshape(1, -1), v.reshape(1, -1),
+                                   mask, scalars)
+        return p2.reshape(-1), m2.reshape(-1), v2.reshape(-1)
+    return frugal_update(p, g, m, v, mask, scalars)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: python/tests sweeps the kernels
+against these with hypothesis, and the rust integration tests check the
+fused HLO step against rust-side re-implementations that were themselves
+validated against the numbers these produce.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_rmsnorm(x, w, eps: float = 1e-5):
+    """RMSNorm over the last axis. x: (..., d), w: (d,)."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def ref_frugal_update(p, g, m, v, mask, scalars):
+    """FRUGAL hybrid update for one parameter tensor (reference).
+
+    Blockwise projection means the state-full subspace is a set of
+    columns; ``mask`` is the per-column 0/1 indicator (shape ``(cols,)``
+    or broadcastable to ``p``). State-full columns take a bias-corrected
+    AdamW step; state-free columns take a SignSGD step. Decoupled weight
+    decay is applied with the learning rate of whichever optimizer owns
+    the column. Optimizer state is only retained inside the subspace
+    (``m,v <- m',v' * mask``) so masked storage is bit-equivalent to
+    compacted storage.
+
+    scalars: (8,) f32 = [lr_full, lr_free, wd, beta1, beta2, eps,
+                         bc1, bc2] where bc_i = 1 - beta_i**t (t counted
+    since the last state reset — the coordinator tracks this).
+
+    Returns (p', m', v').
+    """
+    lr_full, lr_free, wd, b1, b2, eps, bc1, bc2 = [scalars[i] for i in range(8)]
+    mask = jnp.broadcast_to(mask, p.shape).astype(p.dtype)
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    mhat = m_new / bc1
+    vhat = v_new / bc2
+    adam_dir = mhat / (jnp.sqrt(vhat) + eps)
+    sign_dir = jnp.sign(g)
+    update = mask * (lr_full * adam_dir) + (1.0 - mask) * (lr_free * sign_dir)
+    decay = (mask * lr_full + (1.0 - mask) * lr_free) * wd * p
+    p_new = p - update - decay
+    return p_new, m_new * mask, v_new * mask
+
+
+def ref_adamw_update(p, g, m, v, scalars):
+    """Full-rank AdamW == FRUGAL with an all-ones mask."""
+    ones = jnp.ones(p.shape, p.dtype)
+    return ref_frugal_update(p, g, m, v, ones, scalars)
+
+
+def ref_rmsnorm_vjp(x, w, dy, eps: float = 1e-5):
+    """Analytic VJP of rmsnorm, used to validate the custom_vjp bwd."""
+    d = x.shape[-1]
+    r = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    dyw = dy * w
+    dx = r * dyw - x * (r ** 3 / d) * jnp.sum(dyw * x, axis=-1, keepdims=True)
+    dw = jnp.sum((dy * x * r).reshape(-1, d), axis=0)
+    return dx, dw

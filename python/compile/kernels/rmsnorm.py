@@ -1,0 +1,73 @@
+"""Layer-1 Pallas kernel: RMSNorm forward, with a custom_vjp so the
+kernel sits inside the differentiated training graph (the backward is the
+analytic jnp formula, validated against jax.vjp of the reference in
+python/tests/test_kernels.py).
+
+Row-tiled: each grid cell normalizes a (rows_tile, d) slab; d stays whole
+because the reduction runs over it (paper dims d<=768 -> a slab is well
+under VMEM).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_ROWS_TILE = 256
+
+
+def _tile(n: int, cap: int) -> int:
+    if n <= cap:
+        return n
+    for t in range(cap, 0, -1):
+        if n % t == 0:
+            return t
+    return n
+
+
+def _rmsnorm_kernel(eps, x_ref, w_ref, o_ref):
+    x = x_ref[...]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(ms + eps) * w_ref[...]
+
+
+def _rmsnorm_fwd_impl(x2, w, eps):
+    rows, d = x2.shape
+    tr = _tile(rows, _ROWS_TILE)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps),
+        grid=(rows // tr,),
+        in_specs=[
+            pl.BlockSpec((tr, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tr, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x2.dtype),
+        interpret=True,
+    )(x2, w)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(x, w, eps: float = 1e-5):
+    """y = x * rsqrt(mean(x^2, -1) + eps) * w; x: (..., d), w: (d,)."""
+    d = x.shape[-1]
+    y2 = _rmsnorm_fwd_impl(x.reshape(-1, d), w, eps)
+    return y2.reshape(x.shape)
+
+
+def _fwd(x, w, eps):
+    return rmsnorm(x, w, eps), (x, w)
+
+
+def _bwd(eps, res, dy):
+    x, w = res
+    d = x.shape[-1]
+    r = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    dyw = dy * w
+    dx = r * dyw - x * (r ** 3 / d) * jnp.sum(dyw * x, axis=-1, keepdims=True)
+    dw = jnp.sum((dy * x * r).reshape(-1, d), axis=0)
+    return dx, dw
+
+
+rmsnorm.defvjp(_fwd, _bwd)

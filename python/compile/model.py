@@ -1,0 +1,448 @@
+"""Layer-2: LLaMA-style transformer + fused training-step graphs in JAX.
+
+Architecture matches the paper's LLaMA-130M family: RMSNorm (Pallas
+kernel, custom_vjp), rotary position embeddings, causal multi-head
+attention, SwiGLU MLP, untied embedding / LM head.
+
+Entry points lowered by aot.py (all take/return FLAT lists in the
+manifest's sorted-by-name parameter order — the rust coordinator relies
+on this ordering):
+
+  grad_step    (params…, tokens)                          -> (loss, grads…)
+  frugal_step  (params…, m…, v…, masks…, scalars, tokens) -> (loss, params'…, m'…, v'…)
+  adamw_step   (params…, m…, v…, scalars, tokens)         -> (loss, params'…, m'…, v'…)
+  eval_step    (params…, tokens)                          -> (sum_nll, n_tok)
+  cls_*        same, with (tokens, labels); cls_eval also returns logits
+  lora_grad    (params…, lora…, tokens, labels)           -> (loss, lora_grads…)
+
+tokens: i32 (batch, seq+1); input = tokens[:, :-1], target = tokens[:, 1:].
+Masks exist only for "maskable" params (per-layer attention/MLP matrices);
+embed, lm_head and all 1-D norm gains are always state-full, mirroring
+FRUGAL's choice of keeping the logits layer and norms on Adam.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.rmsnorm import rmsnorm
+from .kernels.frugal_update import frugal_update_any, adamw_update
+
+# ---------------------------------------------------------------------------
+# Parameter registry
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig, task: str = "lm"):
+    """Ordered (name, shape, init_std, maskable) list; sorted by name.
+
+    maskable == participates in blockwise gradient splitting (2-D
+    transformer matrices). Everything else is always state-full.
+    """
+    d, f, v = cfg.d_model, cfg.d_ffn, cfg.vocab
+    specs = []
+    std = 0.02
+    resid_std = 0.02 / (2 * cfg.n_layers) ** 0.5
+    specs.append(("embed", (v, d), std, False))
+    for i in range(cfg.n_layers):
+        p = f"layers.{i:02d}."
+        specs.append((p + "attn_norm", (d,), 0.0, False))  # init to ones
+        specs.append((p + "wq", (d, d), std, True))
+        specs.append((p + "wk", (d, d), std, True))
+        specs.append((p + "wv", (d, d), std, True))
+        specs.append((p + "wo", (d, d), resid_std, True))
+        specs.append((p + "mlp_norm", (d,), 0.0, False))
+        specs.append((p + "w_gate", (d, f), std, True))
+        specs.append((p + "w_up", (d, f), std, True))
+        specs.append((p + "w_down", (f, d), resid_std, True))
+    specs.append(("final_norm", (d,), 0.0, False))
+    if task == "lm":
+        specs.append(("lm_head", (d, v), std, False))
+    else:
+        specs.append(("cls_head", (d, cfg.n_cls), std, False))
+    specs.sort(key=lambda s: s[0])
+    return specs
+
+
+def lora_specs(cfg: ModelConfig):
+    """LoRA (QV, rank r) adapter params + the trainable cls head."""
+    d, r = cfg.d_model, cfg.lora_rank
+    specs = []
+    for i in range(cfg.n_layers):
+        p = f"layers.{i:02d}."
+        for t in ("q", "v"):
+            specs.append((p + f"lora_a_{t}", (d, r), 0.02, False))
+            specs.append((p + f"lora_b_{t}", (r, d), 0.0, False))  # zeros
+    specs.append(("cls_head", (d, cfg.n_cls), 0.02, False))
+    specs.sort(key=lambda s: s[0])
+    return specs
+
+
+def unflatten(specs, flat):
+    assert len(flat) == len(specs), (len(flat), len(specs))
+    return {name: x for (name, _, _, _), x in zip(specs, flat)}
+
+
+def flatten(specs, tree):
+    return [tree[name] for (name, _, _, _) in specs]
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _rope(x, theta: float):
+    """x: (b, s, h, hd) -> rotary-embedded."""
+    b, s, h, hd = x.shape
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = jnp.arange(s, dtype=jnp.float32)
+    ang = pos[:, None] * freqs[None, :]          # (s, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def _attention(h, params, prefix, cfg: ModelConfig, causal: bool,
+               lora=None):
+    d, nh, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    b, s, _ = h.shape
+    x = rmsnorm(h, params[prefix + "attn_norm"] + 1.0, cfg.norm_eps)
+
+    def proj(w, t):
+        y = x @ w
+        if lora is not None and t in ("q", "v"):
+            a = lora[prefix + f"lora_a_{t}"]
+            bm = lora[prefix + f"lora_b_{t}"]
+            y = y + (x @ a) @ bm
+        return y.reshape(b, s, nh, hd)
+
+    q = proj(params[prefix + "wq"], "q")
+    k = proj(params[prefix + "wk"], "k")
+    v = proj(params[prefix + "wv"], "v")
+    q = _rope(q, cfg.rope_theta)
+    k = _rope(k, cfg.rope_theta)
+
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (hd ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(b, s, d)
+    return h + out @ params[prefix + "wo"]
+
+
+def _mlp(h, params, prefix, cfg: ModelConfig):
+    x = rmsnorm(h, params[prefix + "mlp_norm"] + 1.0, cfg.norm_eps)
+    gate = jax.nn.silu(x @ params[prefix + "w_gate"])
+    up = x @ params[prefix + "w_up"]
+    return h + (gate * up) @ params[prefix + "w_down"]
+
+
+def backbone(params, tokens_in, cfg: ModelConfig, causal: bool = True,
+             lora=None):
+    """tokens_in: i32 (b, s) -> hidden states (b, s, d).
+
+    Norm gains are stored as deltas around 1.0 so rust-side init can draw
+    every parameter from N(0, std) (std=0 for norms) uniformly.
+    """
+    h = params["embed"][tokens_in]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i:02d}."
+        h = _attention(h, params, p, cfg, causal, lora)
+        h = _mlp(h, params, p, cfg)
+    return rmsnorm(h, params["final_norm"] + 1.0, cfg.norm_eps)
+
+
+def lm_loss(params, tokens, cfg: ModelConfig):
+    """Mean next-token NLL. tokens: (b, seq+1) i32."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    h = backbone(params, inp, cfg, causal=True)
+    logits = h @ params["lm_head"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def lm_sum_nll(params, tokens, cfg: ModelConfig):
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    h = backbone(params, inp, cfg, causal=True)
+    logits = h @ params["lm_head"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll), jnp.float32(nll.size)
+
+
+def cls_logits(params, tokens, cfg: ModelConfig, lora=None):
+    """Mean-pooled encoder + linear head. tokens: (b, seq) i32."""
+    h = backbone(params, tokens, cfg, causal=False, lora=lora)
+    pooled = jnp.mean(h, axis=1)
+    return pooled @ params["cls_head"]
+
+
+def cls_loss(params, tokens, labels, cfg: ModelConfig, lora=None):
+    """Softmax CE for classification; MSE when n_cls == 1 (regression).
+
+    labels: (b,) i32 class ids, or (b,) f32 targets for regression
+    (passed as i32 bit-cast-free: regression targets are scaled to f32
+    via labels_f = labels / 1000 on the rust side? No — regression tasks
+    pass labels as f32 through a separate input; see cls entry points).
+    """
+    logits = cls_logits(params, tokens, cfg, lora)
+    if cfg.n_cls == 1:
+        return jnp.mean((logits[:, 0] - labels.astype(jnp.float32)) ** 2), logits
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    return jnp.mean(nll), logits
+
+
+# ---------------------------------------------------------------------------
+# Packed-state ABI (what aot.py lowers)
+# ---------------------------------------------------------------------------
+#
+# The runtime-facing entry points use a single flat f32 "state" vector so
+# the rust hot loop is fully device-buffer-resident: xla_extension 0.5.1
+# returns multi-output computations as ONE tuple buffer with no buffer
+# untupling API, so per-param outputs would force a full host round-trip
+# every step. Instead:
+#
+#   state  = concat(params… , m… , v… , [slack])   f32[3*N + 1]
+#   frugal  (state, masks, scalars, tokens[, labels]) -> state'
+#            where state' = concat(params'…, m'…, v'…, [loss])
+#   adamw   (state, scalars, tokens[, labels])        -> state'
+#   eval    (state, tokens)              -> f32[2]  (sum_nll, n_tok)   [lm]
+#   eval    (state, tokens, labels)      -> f32[1 + b*n_cls] (loss,logits) [cls]
+#   grad    (state, tokens[, labels])    -> f32[N + 1] (flat grads, loss)
+#   scores  (state, tokens[, labels])    -> f32[n_blocks_total]
+#            per-column-block sum of g^2 over maskable params (for
+#            projector redefinition — the coordinator only downloads this
+#            tiny vector every T steps)
+#
+# The next step feeds state' straight back as `state` (the loss slot is
+# slack on input); the coordinator reads the loss with a 4-byte
+# copy_raw_to_host_sync at offset 3*N. masks = concat of per-maskable
+# column masks. Layout offsets are recorded in the manifest.
+
+
+class Layout:
+    """Static offsets of every param inside the packed vectors."""
+
+    def __init__(self, specs, maskable, block_size):
+        self.specs = specs
+        self.maskable = maskable
+        self.block_size = block_size
+        self.param_off = {}
+        off = 0
+        for (name, shape, _, _) in specs:
+            sz = 1
+            for d in shape:
+                sz *= d
+            self.param_off[name] = (off, sz, shape)
+            off += sz
+        self.n_params = off
+        self.state_len = 3 * off + 1
+        self.mask_off = {}
+        moff = 0
+        self.score_off = {}
+        soff = 0
+        for (name, shape, _, _) in maskable:
+            cols = shape[1]
+            self.mask_off[name] = (moff, cols)
+            moff += cols
+            nb = cols // block_size
+            self.score_off[name] = (soff, nb)
+            soff += nb
+        self.mask_len = moff
+        self.score_len = soff
+
+
+def _unpack_region(layout, vec, region):
+    """region 0=params 1=m 2=v."""
+    base = region * layout.n_params
+    out = {}
+    for (name, shape, _, _) in layout.specs:
+        off, sz, _ = layout.param_off[name]
+        out[name] = jax.lax.slice(vec, (base + off,), (base + off + sz,)).reshape(shape)
+    return out
+
+
+def _pack(layout, p, m, v, loss):
+    parts = []
+    for region in (p, m, v):
+        for (name, shape, _, _) in layout.specs:
+            parts.append(region[name].reshape(-1))
+    parts.append(loss.reshape(1))
+    return jnp.concatenate(parts)
+
+
+def make_entrypoints(cfg: ModelConfig, task: str = "lm", lora: bool = False):
+    """Returns ({entry: (fn, arg_specs)}, specs, maskable, layout, lspecs)."""
+    specs = param_specs(cfg, task)
+    maskable = [s for s in specs if s[3]]
+    layout = Layout(specs, maskable, cfg.block_size)
+
+    f32 = jnp.float32
+    state_spec = jax.ShapeDtypeStruct((layout.state_len,), f32)
+    masks_spec = jax.ShapeDtypeStruct((layout.mask_len,), f32)
+    scal_spec = jax.ShapeDtypeStruct((8,), f32)
+
+    def tok_spec():
+        if task == "lm":
+            return jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32)
+        return jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+
+    def lab_spec():
+        dt = f32 if cfg.n_cls == 1 else jnp.int32
+        return jax.ShapeDtypeStruct((cfg.batch,), dt)
+
+    def loss_of(params, tokens, labels=None, lora_p=None):
+        if task == "lm":
+            return lm_loss(params, tokens, cfg)
+        return cls_loss(params, tokens, labels, cfg, lora_p)[0]
+
+    def data_tail():
+        return [tok_spec()] + ([lab_spec()] if task != "lm" else [])
+
+    def loss_and_grads(params, data):
+        if task == "lm":
+            return jax.value_and_grad(lambda p: loss_of(p, data[0]))(params)
+        return jax.value_and_grad(
+            lambda p: loss_of(p, data[0], data[1]))(params)
+
+    entries = {}
+
+    if lora:
+        lspecs = lora_specs(cfg)
+        llayout = Layout(lspecs, [], cfg.block_size)
+        base_spec = jax.ShapeDtypeStruct((layout.n_params,), f32)
+        lstate_spec = jax.ShapeDtypeStruct((llayout.state_len,), f32)
+
+        def base_of(vec):
+            out = {}
+            for (name, shape, _, _) in specs:
+                off, sz, _ = layout.param_off[name]
+                out[name] = jax.lax.slice(vec, (off,), (off + sz,)).reshape(shape)
+            return out
+
+        def lora_adamw(base_vec, lstate, scalars, tokens, labels):
+            """AdamW on the LoRA adapters + head; base frozen."""
+            base = base_of(base_vec)
+            lp = _unpack_region(llayout, lstate, 0)
+            lm_ = _unpack_region(llayout, lstate, 1)
+            lv = _unpack_region(llayout, lstate, 2)
+
+            def f(lp_):
+                b2 = dict(base)
+                b2["cls_head"] = lp_["cls_head"]
+                return cls_loss(b2, tokens, labels, cfg, lp_)[0]
+
+            loss, gl = jax.value_and_grad(f)(lp)
+            np_, nm, nv = {}, {}, {}
+            for (name, shape, _, _) in lspecs:
+                np_[name], nm[name], nv[name] = adamw_update(
+                    lp[name], gl[name], lm_[name], lv[name], scalars)
+            return _pack(llayout, np_, nm, nv, loss)
+
+        entries["lora_adamw"] = (lora_adamw,
+                                 [base_spec, lstate_spec, scal_spec,
+                                  tok_spec(), lab_spec()])
+
+        def lora_eval(base_vec, lstate, tokens, labels):
+            base = base_of(base_vec)
+            lp = _unpack_region(llayout, lstate, 0)
+            b2 = dict(base)
+            b2["cls_head"] = lp["cls_head"]
+            loss, logits = cls_loss(b2, tokens, labels, cfg, lp)
+            return jnp.concatenate([loss.reshape(1), logits.reshape(-1)])
+
+        entries["lora_eval"] = (lora_eval,
+                                [base_spec, lstate_spec, tok_spec(), lab_spec()])
+        return entries, specs, maskable, layout, lspecs
+
+    def frugal(state, masks, scalars, *data):
+        params = _unpack_region(layout, state, 0)
+        ms = _unpack_region(layout, state, 1)
+        vs = _unpack_region(layout, state, 2)
+        loss, grads = loss_and_grads(params, data)
+        new_p, new_m, new_v = {}, {}, {}
+        for (name, shape, _, mk) in specs:
+            p, g, m, v = params[name], grads[name], ms[name], vs[name]
+            if mk:
+                moff, cols = layout.mask_off[name]
+                mask = jax.lax.slice(masks, (moff,), (moff + cols,))
+                p2, m2, v2 = frugal_update_any(p, g, m, v, mask, scalars)
+            else:
+                p2, m2, v2 = adamw_update(p, g, m, v, scalars)
+            new_p[name], new_m[name], new_v[name] = p2, m2, v2
+        return _pack(layout, new_p, new_m, new_v, loss)
+
+    entries["frugal"] = (frugal, [state_spec, masks_spec, scal_spec] + data_tail())
+
+    def adamw(state, scalars, *data):
+        params = _unpack_region(layout, state, 0)
+        ms = _unpack_region(layout, state, 1)
+        vs = _unpack_region(layout, state, 2)
+        loss, grads = loss_and_grads(params, data)
+        new_p, new_m, new_v = {}, {}, {}
+        for (name, shape, _, _) in specs:
+            new_p[name], new_m[name], new_v[name] = adamw_update(
+                params[name], grads[name], ms[name], vs[name], scalars)
+        return _pack(layout, new_p, new_m, new_v, loss)
+
+    entries["adamw"] = (adamw, [state_spec, scal_spec] + data_tail())
+
+    # grad/scores take the params region only (f32[N]): the host-side
+    # baseline optimizers (GaLore/BAdam) re-upload params every step and
+    # must not pay for the m/v regions they don't use.
+    params_spec = jax.ShapeDtypeStruct((layout.n_params,), f32)
+
+    def params_of(vec):
+        out = {}
+        for (name, shape, _, _) in specs:
+            off, sz, _ = layout.param_off[name]
+            out[name] = jax.lax.slice(vec, (off,), (off + sz,)).reshape(shape)
+        return out
+
+    def grad(params_vec, *data):
+        params = params_of(params_vec)
+        loss, grads = loss_and_grads(params, data)
+        parts = [grads[name].reshape(-1) for (name, _, _, _) in specs]
+        parts.append(loss.reshape(1))
+        return jnp.concatenate(parts)
+
+    entries["grad"] = (grad, [params_spec] + data_tail())
+
+    def scores(params_vec, *data):
+        """Per-column-block sum of g^2 for every maskable param."""
+        params = params_of(params_vec)
+        _, grads = loss_and_grads(params, data)
+        parts = []
+        for (name, shape, _, _) in maskable:
+            g = grads[name]
+            rows, cols = shape
+            nb = cols // cfg.block_size
+            s = jnp.sum((g * g).reshape(rows, nb, cfg.block_size), axis=(0, 2))
+            parts.append(s)
+        return jnp.concatenate(parts)
+
+    entries["scores"] = (scores, [params_spec] + data_tail())
+
+    if task == "lm":
+        def eval_step(state, tokens):
+            params = _unpack_region(layout, state, 0)
+            s, c = lm_sum_nll(params, tokens, cfg)
+            return jnp.stack([s, c])
+
+        entries["eval"] = (eval_step, [state_spec, tok_spec()])
+    else:
+        def eval_step(state, tokens, labels):
+            params = _unpack_region(layout, state, 0)
+            loss, logits = cls_loss(params, tokens, labels, cfg)
+            return jnp.concatenate([loss.reshape(1), logits.reshape(-1)])
+
+        entries["eval"] = (eval_step, [state_spec, tok_spec(), lab_spec()])
+
+    return entries, specs, maskable, layout, None

@@ -1,0 +1,79 @@
+"""AOT artifact integrity: manifests consistent with model layout, HLO
+text parseable (structurally), entrypoint arities correct."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.configs import get_preset
+from compile.model import make_entrypoints
+
+
+@pytest.fixture(scope="module")
+def nano_artifacts(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("art"))
+    man = aot.build("nano", "lm", False, out)
+    return out, man
+
+
+def test_manifest_layout(nano_artifacts):
+    out, man = nano_artifacts
+    cfg = get_preset("nano")
+    _, specs, maskable, layout, _ = make_entrypoints(cfg, "lm")
+    assert man["layout"]["n_params"] == layout.n_params
+    assert man["layout"]["state_len"] == 3 * layout.n_params + 1
+    assert man["layout"]["mask_len"] == layout.mask_len
+    assert man["layout"]["score_len"] == layout.score_len
+    # offsets are contiguous & sorted by name
+    off = 0
+    for p in man["params"]:
+        assert p["offset"] == off
+        off += p["size"]
+    assert off == man["layout"]["n_params"]
+
+
+def test_mask_and_score_offsets(nano_artifacts):
+    _, man = nano_artifacts
+    moff = soff = 0
+    for p in man["params"]:
+        if p["maskable"]:
+            assert p["mask_offset"] == moff
+            assert p["mask_len"] == p["shape"][1]
+            moff += p["mask_len"]
+            assert p["score_offset"] == soff
+            assert p["n_blocks"] == p["shape"][1] // man["layout"]["block_size"]
+            soff += p["n_blocks"]
+    assert moff == man["layout"]["mask_len"]
+    assert soff == man["layout"]["score_len"]
+
+
+def test_hlo_files_exist_and_look_like_hlo(nano_artifacts):
+    out, man = nano_artifacts
+    assert set(man["entrypoints"]) == {"frugal", "adamw", "grad", "scores", "eval"}
+    for e, meta in man["entrypoints"].items():
+        path = os.path.join(out, meta["file"])
+        assert os.path.exists(path), path
+        text = open(path).read()
+        assert "ENTRY" in text and "HloModule" in text
+        # input arity matches the manifest
+        assert text.count("parameter(") >= meta["n_inputs"]
+
+
+def test_entry_input_shapes(nano_artifacts):
+    _, man = nano_artifacts
+    st = man["layout"]["state_len"]
+    cfg = man["model"]
+    assert man["entrypoints"]["frugal"]["input_shapes"] == [
+        [st], [man["layout"]["mask_len"]], [8],
+        [cfg["batch"], cfg["seq"] + 1]]
+    assert man["entrypoints"]["eval"]["input_shapes"] == [
+        [st], [cfg["batch"], cfg["seq"] + 1]]
+
+
+def test_manifest_json_roundtrip(nano_artifacts):
+    out, man = nano_artifacts
+    with open(os.path.join(out, "nano.manifest.json")) as f:
+        man2 = json.load(f)
+    assert man2 == json.loads(json.dumps(man))

@@ -1,0 +1,222 @@
+"""L2 model correctness: loss sanity, gradient checks, packed-ABI
+consistency (frugal entry == grad entry + per-param reference update)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import get_preset
+from compile import model as M
+from compile.kernels import ref
+
+CFG = get_preset("nano")
+
+
+def _init_params(specs, key):
+    out = {}
+    for (name, shape, std, _) in specs:
+        key, sub = jax.random.split(key)
+        out[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return out
+
+
+def _pack_state(layout, params):
+    n = layout.n_params
+    vec = np.zeros(layout.state_len, np.float32)
+    for (name, shape, _, _) in layout.specs:
+        off, sz, _ = layout.param_off[name]
+        vec[off:off + sz] = np.asarray(params[name]).reshape(-1)
+    return jnp.asarray(vec)
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    entries, specs, maskable, layout, _ = M.make_entrypoints(CFG, "lm")
+    key = jax.random.PRNGKey(0)
+    params = _init_params(specs, key)
+    tokens = jax.random.randint(jax.random.PRNGKey(1),
+                                (CFG.batch, CFG.seq + 1), 0, CFG.vocab)
+    return entries, specs, maskable, layout, params, tokens
+
+
+def test_init_loss_near_uniform(lm_setup):
+    _, _, _, _, params, tokens = lm_setup
+    loss = M.lm_loss(params, tokens, CFG)
+    assert np.isfinite(float(loss))
+    # tiny init => logits ~ 0 => NLL ~ log(vocab)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.2
+
+
+def test_grad_entry_matches_value_and_grad(lm_setup):
+    entries, specs, _, layout, params, tokens = lm_setup
+    state = _pack_state(layout, params)
+    out = entries["grad"][0](state[:layout.n_params], tokens)
+    loss_direct, grads = jax.value_and_grad(
+        lambda p: M.lm_loss(p, tokens, CFG))(params)
+    np.testing.assert_allclose(float(out[-1]), float(loss_direct), rtol=1e-5)
+    for (name, shape, _, _) in specs:
+        off, sz, _ = layout.param_off[name]
+        got = np.asarray(out[off:off + sz]).reshape(shape)
+        np.testing.assert_allclose(got, np.asarray(grads[name]),
+                                   rtol=2e-4, atol=1e-6,
+                                   err_msg=f"grad mismatch for {name}")
+
+
+def test_gradient_finite_difference(lm_setup):
+    """Spot-check autodiff against central differences on a few coords."""
+    _, specs, _, _, params, tokens = lm_setup
+    f = lambda p: float(M.lm_loss(p, tokens, CFG))
+    grads = jax.grad(lambda p: M.lm_loss(p, tokens, CFG))(params)
+    rng = np.random.RandomState(0)
+    name = "layers.00.wq"
+    shape = dict((s[0], s[1]) for s in specs)[name]
+    for _ in range(3):
+        i, j = rng.randint(shape[0]), rng.randint(shape[1])
+        eps = 1e-3
+        pp = dict(params); arr = np.asarray(params[name]).copy()
+        arr[i, j] += eps; pp[name] = jnp.asarray(arr)
+        up = f(pp)
+        arr[i, j] -= 2 * eps; pp[name] = jnp.asarray(arr)
+        down = f(pp)
+        fd = (up - down) / (2 * eps)
+        ad = float(grads[name][i, j])
+        assert abs(fd - ad) < 5e-3 + 0.2 * abs(ad), (fd, ad)
+
+
+def test_frugal_entry_matches_composed_reference(lm_setup):
+    """The fused packed step must equal grad + per-param ref updates.
+    This is the key cross-layer consistency check: rust trusts this ABI."""
+    entries, specs, maskable, layout, params, tokens = lm_setup
+    key = jax.random.PRNGKey(42)
+    state = np.asarray(_pack_state(layout, params)).copy()
+    n = layout.n_params
+    # random m, v (state must be inside mask for containment, but the
+    # kernel re-masks anyway)
+    state[n:2 * n] = 0.01 * np.random.RandomState(0).randn(n)
+    state[2 * n:3 * n] = np.abs(0.01 * np.random.RandomState(1).randn(n))
+    masks = np.zeros(layout.mask_len, np.float32)
+    rng = np.random.RandomState(2)
+    for (name, shape, _, _) in maskable:
+        moff, cols = layout.mask_off[name]
+        nb = cols // layout.block_size
+        active = rng.rand(nb) < 0.25
+        masks[moff:moff + cols] = np.repeat(active, layout.block_size)
+    scal = jnp.array([1e-3, 1e-4, 0.1, 0.9, 0.999, 1e-8,
+                      1 - 0.9 ** 3, 1 - 0.999 ** 3], jnp.float32)
+
+    out = np.asarray(entries["frugal"][0](jnp.asarray(state),
+                                          jnp.asarray(masks), scal, tokens))
+
+    # compose reference: grads then per-param ref update
+    loss, grads = jax.value_and_grad(lambda p: M.lm_loss(p, tokens, CFG))(params)
+    np.testing.assert_allclose(out[-1], float(loss), rtol=1e-5)
+    for (name, shape, _, mk) in specs:
+        off, sz, _ = layout.param_off[name]
+        p = state[off:off + sz].reshape(shape)
+        m = state[n + off:n + off + sz].reshape(shape)
+        v = state[2 * n + off:2 * n + off + sz].reshape(shape)
+        g = np.asarray(grads[name])
+        if mk:
+            moff, cols = layout.mask_off[name]
+            mask = masks[moff:moff + cols]
+        else:
+            mask = np.ones(shape[-1] if len(shape) else 1, np.float32)
+        want_p, want_m, want_v = ref.ref_frugal_update(
+            jnp.asarray(p), jnp.asarray(g), jnp.asarray(m), jnp.asarray(v),
+            jnp.asarray(mask), scal)
+        got_p = out[off:off + sz].reshape(shape)
+        got_m = out[n + off:n + off + sz].reshape(shape)
+        got_v = out[2 * n + off:2 * n + off + sz].reshape(shape)
+        np.testing.assert_allclose(got_p, np.asarray(want_p), rtol=2e-4,
+                                   atol=1e-6, err_msg=f"p mismatch {name}")
+        np.testing.assert_allclose(got_m, np.asarray(want_m), rtol=2e-4,
+                                   atol=1e-6, err_msg=f"m mismatch {name}")
+        np.testing.assert_allclose(got_v, np.asarray(want_v), rtol=2e-4,
+                                   atol=1e-7, err_msg=f"v mismatch {name}")
+
+
+def test_eval_entry_matches_loss(lm_setup):
+    entries, _, _, layout, params, tokens = lm_setup
+    state = _pack_state(layout, params)
+    out = entries["eval"][0](state, tokens)
+    sum_nll, count = float(out[0]), float(out[1])
+    assert count == CFG.batch * CFG.seq
+    loss = float(M.lm_loss(params, tokens, CFG))
+    np.testing.assert_allclose(sum_nll / count, loss, rtol=1e-5)
+
+
+def test_scores_entry(lm_setup):
+    entries, specs, maskable, layout, params, tokens = lm_setup
+    state = _pack_state(layout, params)
+    scores = np.asarray(entries["scores"][0](state[:layout.n_params], tokens))
+    assert scores.shape == (layout.score_len,)
+    assert (scores >= 0).all()
+    # scores must equal per-block sums of g^2
+    grads = jax.grad(lambda p: M.lm_loss(p, tokens, CFG))(params)
+    for (name, shape, _, _) in maskable[:3]:
+        soff, nb = layout.score_off[name]
+        g = np.asarray(grads[name])
+        want = (g * g).reshape(shape[0], nb, layout.block_size).sum((0, 2))
+        np.testing.assert_allclose(scores[soff:soff + nb], want,
+                                   rtol=1e-3, atol=1e-9)
+
+
+def test_cls_model():
+    cfg = CFG
+    entries, specs, _, layout, _ = M.make_entrypoints(cfg, "cls")
+    params = _init_params(specs, jax.random.PRNGKey(3))
+    tokens = jax.random.randint(jax.random.PRNGKey(4),
+                                (cfg.batch, cfg.seq), 0, cfg.vocab)
+    labels = jax.random.randint(jax.random.PRNGKey(5), (cfg.batch,), 0, cfg.n_cls)
+    state = _pack_state(layout, params)
+    out = np.asarray(entries["eval"][0](state, tokens, labels))
+    assert out.shape == (1 + cfg.batch * cfg.n_cls,)
+    assert np.isfinite(out).all()
+    assert abs(out[0] - np.log(cfg.n_cls)) < 0.3
+
+
+def test_lora_entrypoints():
+    cfg = CFG
+    entries, specs, _, layout, lspecs = M.make_entrypoints(cfg, "cls", lora=True)
+    params = _init_params(specs, jax.random.PRNGKey(6))
+    base = np.zeros(layout.n_params, np.float32)
+    for (name, shape, _, _) in specs:
+        off, sz, _ = layout.param_off[name]
+        base[off:off + sz] = np.asarray(params[name]).reshape(-1)
+    nl = sum(s[1][0] * s[1][1] for s in lspecs)
+    lstate = np.zeros(3 * nl + 1, np.float32)
+    # init adapters: A ~ N(0, .02), B = 0, head ~ N(0, .02)
+    rng = np.random.RandomState(0)
+    off = 0
+    for (name, shape, std, _) in lspecs:
+        sz = shape[0] * shape[1]
+        lstate[off:off + sz] = std * rng.randn(sz)
+        off += sz
+    tokens = jax.random.randint(jax.random.PRNGKey(7),
+                                (cfg.batch, cfg.seq), 0, cfg.vocab)
+    labels = jax.random.randint(jax.random.PRNGKey(8), (cfg.batch,), 0, cfg.n_cls)
+    scal = jnp.array([1e-3, 0, 0.0, 0.9, 0.999, 1e-8, 0.1, 1e-3], jnp.float32)
+    out = np.asarray(entries["lora_adamw"][0](
+        jnp.asarray(base), jnp.asarray(lstate), scal, tokens, labels))
+    assert out.shape == (3 * nl + 1,)
+    assert np.isfinite(out).all()
+    # adapters moved, loss recorded
+    assert np.abs(out[:nl] - lstate[:nl]).max() > 0
+    assert out[-1] > 0
+    ev = np.asarray(entries["lora_eval"][0](
+        jnp.asarray(base), jnp.asarray(lstate), tokens, labels))
+    assert ev.shape == (1 + cfg.batch * cfg.n_cls,)
+
+
+def test_param_specs_sorted_and_counts():
+    specs = M.param_specs(CFG, "lm")
+    names = [s[0] for s in specs]
+    assert names == sorted(names)
+    total = sum(int(np.prod(s[1])) for s in specs)
+    # nano: embed 512*64*2 + 2 layers
+    assert total > 60_000
+    maskable = [s for s in specs if s[3]]
+    assert len(maskable) == 7 * CFG.n_layers
+    for (_, shape, _, _) in maskable:
+        assert len(shape) == 2 and shape[1] % CFG.block_size == 0

@@ -1,0 +1,16 @@
+//! Regenerates Fig. 1 (optimizer memory over training steps:
+//! AdamW vs FRUGAL vs AdaFRUGAL-Dynamic-ρ).
+
+use adafrugal::config::TrainConfig;
+use adafrugal::experiments::fig1;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/micro.manifest.json").exists() {
+        eprintln!("SKIP bench_fig1: run `make artifacts` first");
+        return Ok(());
+    }
+    let quick = std::env::var("ADAFRUGAL_FULL").is_err();
+    let mut cfg = TrainConfig::default();
+    cfg.preset = std::env::var("ADAFRUGAL_PRESET").unwrap_or_else(|_| "nano".into());
+    fig1::run(&cfg, quick)
+}

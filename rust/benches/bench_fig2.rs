@@ -1,0 +1,16 @@
+//! Regenerates Fig. 2 (relative training time across T policies,
+//! normalized to static FRUGAL T=200).
+
+use adafrugal::config::TrainConfig;
+use adafrugal::experiments::fig2;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/micro.manifest.json").exists() {
+        eprintln!("SKIP bench_fig2: run `make artifacts` first");
+        return Ok(());
+    }
+    let quick = std::env::var("ADAFRUGAL_FULL").is_err();
+    let mut cfg = TrainConfig::default();
+    cfg.preset = std::env::var("ADAFRUGAL_PRESET").unwrap_or_else(|_| "nano".into());
+    fig2::run(&cfg, quick)
+}

@@ -1,0 +1,92 @@
+//! Runtime micro-benchmarks: HLO execute latency per entry point,
+//! upload/download costs — the L3 hot-path inventory (EXPERIMENTS.md
+//! §Perf).
+
+use adafrugal::model::init;
+use adafrugal::optim::StepScalars;
+use adafrugal::projection::{Strategy, SubspaceMask};
+use adafrugal::runtime::Engine;
+use adafrugal::util::bench::{bench, header};
+use adafrugal::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/nano.manifest.json").exists() {
+        eprintln!("SKIP bench_runtime: run `make artifacts` first");
+        return Ok(());
+    }
+    header("runtime micro-benchmarks (preset nano)");
+
+    let engine = Engine::load("artifacts", "nano", &["frugal", "adamw", "grad", "eval"])?;
+    let man = &engine.manifest;
+    let mut rng = Rng::new(0);
+    let state = init::init_state(man, 0);
+    let mut mask = SubspaceMask::new(man);
+    mask.redefine(Strategy::Random, 0.25, None, &mut rng)?;
+    let rendered = mask.render();
+    let toks: Vec<i32> = (0..man.model.batch * (man.model.seq + 1))
+        .map(|_| rng.below(man.model.vocab) as i32)
+        .collect();
+    let scal = StepScalars::new(1e-3, 1e-4, 0.0, 0.9, 0.999, 1e-8, 1).to_array();
+
+    let sbuf = engine.upload_f32(&state, &[man.state_len])?;
+    let mbuf = engine.upload_f32(&rendered, &[man.mask_len])?;
+    let cbuf = engine.upload_f32(&scal, &[8])?;
+    let tbuf = engine.upload_i32(&toks, &[man.model.batch, man.model.seq + 1])?;
+    let pbuf = engine.upload_f32(&state[..man.n_params], &[man.n_params])?;
+
+    let r = bench("upload state (f32 x state_len)", 3, 20, || {
+        engine.upload_f32(&state, &[man.state_len]).unwrap()
+    });
+    println!("{}", r.report());
+
+    let r = bench("upload tokens", 3, 50, || {
+        engine.upload_i32(&toks, &[man.model.batch, man.model.seq + 1]).unwrap()
+    });
+    println!("{}", r.report());
+
+    let r = bench("execute frugal (fused fwd+bwd+update)", 2, 15, || {
+        engine.run("frugal", &[&sbuf, &mbuf, &cbuf, &tbuf]).unwrap()
+    });
+    println!("{}", r.report());
+
+    let r = bench("execute adamw (fused fwd+bwd+update)", 2, 15, || {
+        engine.run("adamw", &[&sbuf, &cbuf, &tbuf]).unwrap()
+    });
+    println!("{}", r.report());
+
+    let r = bench("execute grad (fwd+bwd only)", 2, 15, || {
+        engine.run("grad", &[&pbuf, &tbuf]).unwrap()
+    });
+    println!("{}", r.report());
+
+    let r = bench("execute eval", 2, 15, || {
+        engine.run("eval", &[&sbuf, &tbuf]).unwrap()
+    });
+    println!("{}", r.report());
+
+    let out = engine.run("frugal", &[&sbuf, &mbuf, &cbuf, &tbuf])?;
+    let r = bench("download full state (literal)", 2, 15, || {
+        engine.read_all_f32(&out).unwrap()
+    });
+    println!("{}", r.report());
+
+    let r = bench("render mask (host)", 3, 200, || mask.render());
+    println!("{}", r.report());
+
+    // §Perf before/after: the naive step loop (download state + re-upload
+    // every step, as a per-param-output ABI would force) vs the
+    // buffer-resident loop this codebase ships.
+    let r = bench("NAIVE step (execute + download + re-upload)", 2, 15, || {
+        let o = engine.run("frugal", &[&sbuf, &mbuf, &cbuf, &tbuf]).unwrap();
+        let host = engine.read_all_f32(&o).unwrap();
+        engine.upload_f32(&host, &[man.state_len]).unwrap()
+    });
+    println!("{}", r.report());
+    let r = bench("RESIDENT step (execute, feed buffer back)", 2, 15, || {
+        let mut s = engine.run("frugal", &[&sbuf, &mbuf, &cbuf, &tbuf]).unwrap();
+        s = engine.run("frugal", &[&s, &mbuf, &cbuf, &tbuf]).unwrap();
+        s
+    });
+    println!("{} (2 steps per iter)", r.report());
+    Ok(())
+}

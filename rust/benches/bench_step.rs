@@ -1,0 +1,44 @@
+//! Per-method end-to-end training-step latency: what one optimizer step
+//! costs through the full coordinator path for every method in the
+//! tables (fused device-resident vs host-baseline paths).
+
+use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::method::Method;
+use adafrugal::coordinator::trainer::Trainer;
+use adafrugal::util::bench::header;
+use adafrugal::util::timer::Timer;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/nano.manifest.json").exists() {
+        eprintln!("SKIP bench_step: run `make artifacts` first");
+        return Ok(());
+    }
+    header("per-method step latency (preset nano, 40 steps each)");
+    let steps = 40;
+    for &m in Method::table_roster() {
+        let cfg = TrainConfig {
+            preset: "nano".into(),
+            steps,
+            warmup_steps: 5,
+            t_start: 20,
+            n_eval: steps, // no mid-run eval: isolate the step cost
+            log_every: 10_000,
+            val_batches: 1,
+            ..TrainConfig::default()
+        };
+        let mut t = Trainer::new(cfg, m)?;
+        t.quiet = true;
+        let timer = Timer::start();
+        let r = t.run()?;
+        let total = timer.secs();
+        println!(
+            "{:<28} {:>8.2} ms/step   (run {:.2}s, step {:.2}s, redef {:.3}s)",
+            m.label(),
+            1e3 * r.step_time_s / steps as f64,
+            total,
+            r.step_time_s,
+            r.redef_time_s
+        );
+    }
+    Ok(())
+}

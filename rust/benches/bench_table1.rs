@@ -1,0 +1,18 @@
+//! Regenerates Table 1 (C4-like pre-training: perplexity grid + memory)
+//! at bench scale. `ADAFRUGAL_FULL=1 cargo bench --bench bench_table1`
+//! runs the full 2000-step (1:100) configuration used in EXPERIMENTS.md;
+//! the default is a quick smoke-scale pass so `cargo bench` stays fast.
+
+use adafrugal::config::TrainConfig;
+use adafrugal::experiments::table1;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/micro.manifest.json").exists() {
+        eprintln!("SKIP bench_table1: run `make artifacts` first");
+        return Ok(());
+    }
+    let quick = std::env::var("ADAFRUGAL_FULL").is_err();
+    let mut cfg = TrainConfig::default();
+    cfg.preset = std::env::var("ADAFRUGAL_PRESET").unwrap_or_else(|_| "nano".into());
+    table1::run(&cfg, "english", "table1", quick)
+}

@@ -1,0 +1,16 @@
+//! Regenerates Table 2 (VietVault-like pre-training). Same scale
+//! switches as bench_table1 (`ADAFRUGAL_FULL=1` for the recorded runs).
+
+use adafrugal::config::TrainConfig;
+use adafrugal::experiments::table1;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/micro.manifest.json").exists() {
+        eprintln!("SKIP bench_table2: run `make artifacts` first");
+        return Ok(());
+    }
+    let quick = std::env::var("ADAFRUGAL_FULL").is_err();
+    let mut cfg = TrainConfig::default();
+    cfg.preset = std::env::var("ADAFRUGAL_PRESET").unwrap_or_else(|_| "nano".into());
+    table1::run(&cfg, "vietnamese", "table2", quick)
+}

@@ -1,0 +1,16 @@
+//! Regenerates Table 3 (GLUE-like fine-tuning, mean ± std over seeds).
+//! `ADAFRUGAL_FULL=1` runs 300 steps × 3 seeds × 8 tasks × 7 methods.
+
+use adafrugal::config::TrainConfig;
+use adafrugal::experiments::table3;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/micro.cls2.manifest.json").exists() {
+        eprintln!("SKIP bench_table3: run `make artifacts` first");
+        return Ok(());
+    }
+    let quick = std::env::var("ADAFRUGAL_FULL").is_err();
+    let mut cfg = TrainConfig::default();
+    cfg.preset = std::env::var("ADAFRUGAL_PRESET").unwrap_or_else(|_| "nano".into());
+    table3::run(&cfg, quick)
+}

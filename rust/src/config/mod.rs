@@ -1,0 +1,237 @@
+//! Training configuration: presets + a TOML-lite file format
+//! (`key = value` under `[section]` headers; no external deps available
+//! offline). The CLI layers `--key value` overrides on top.
+
+mod parse;
+
+pub use parse::{parse_file, parse_str, ConfigMap};
+
+use anyhow::Result;
+
+/// Hyperparameters of one training run (Algorithm 1's inputs).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// artifact/model preset name ("micro", "tiny", …)
+    pub preset: String,
+    /// artifacts directory
+    pub artifacts_dir: String,
+    pub steps: usize,
+    pub seed: u64,
+
+    // -- optimizer --
+    pub lr: f32,
+    /// state-free (SignSGD) lr; FRUGAL uses a much smaller lr here
+    pub lr_free: f32,
+    pub weight_decay: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// linear warmup steps then cosine decay to lr_min_ratio * lr
+    pub warmup_steps: usize,
+    pub lr_min_ratio: f32,
+
+    // -- FRUGAL / AdaFRUGAL (paper §3, §4.3) --
+    /// static state-full ratio, or rho_start when dynamic
+    pub rho: f64,
+    /// dynamic-rho target (Eq. 1); rho decays rho -> rho_end over `steps`
+    pub rho_end: f64,
+    /// initial subspace update interval (static T, or T_start)
+    pub t_start: usize,
+    /// dynamic-T cap (Eq. 3)
+    pub t_max: usize,
+    /// evaluate validation loss every n_eval steps (Eq. 2 cadence)
+    pub n_eval: usize,
+    /// stability threshold tau_low (Eq. 2)
+    pub tau_low: f64,
+    /// multiplicative increase factor gamma (Eq. 3)
+    pub gamma_increase: f64,
+    /// block selection strategy: "random" | "topk" | "roundrobin"
+    pub strategy: String,
+    /// state management on subspace change: "reset" | "project" (Alg. 1, S)
+    pub state_mgmt: String,
+
+    // -- data --
+    /// corpus profile: "english" | "vietnamese"
+    pub corpus: String,
+    pub val_batches: usize,
+    /// log metrics every n steps
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        // paper §4.3 defaults, step counts scaled 1:100 (DESIGN.md §4)
+        TrainConfig {
+            preset: "micro".into(),
+            artifacts_dir: "artifacts".into(),
+            steps: 2000,
+            seed: 0,
+            lr: 1e-3,
+            lr_free: 1e-4,
+            weight_decay: 0.0,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            warmup_steps: 100,
+            lr_min_ratio: 0.1,
+            rho: 0.25,
+            rho_end: 0.05,
+            t_start: 100,
+            t_max: 800,
+            n_eval: 100,
+            tau_low: 0.008,
+            gamma_increase: 1.5,
+            strategy: "random".into(),
+            state_mgmt: "reset".into(),
+            corpus: "english".into(),
+            val_batches: 8,
+            log_every: 20,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Build from a parsed config map (section "train"), defaulting
+    /// everything absent.
+    pub fn from_map(map: &ConfigMap) -> Result<TrainConfig> {
+        let mut c = TrainConfig::default();
+        let get = |k: &str| map.get("train", k);
+        macro_rules! set {
+            ($field:ident, $conv:ident) => {
+                if let Some(v) = get(stringify!($field)) {
+                    c.$field = parse::$conv(v)?;
+                }
+            };
+        }
+        set!(preset, as_string);
+        set!(artifacts_dir, as_string);
+        set!(steps, as_usize);
+        set!(seed, as_u64);
+        set!(lr, as_f32);
+        set!(lr_free, as_f32);
+        set!(weight_decay, as_f32);
+        set!(beta1, as_f32);
+        set!(beta2, as_f32);
+        set!(eps, as_f32);
+        set!(warmup_steps, as_usize);
+        set!(lr_min_ratio, as_f32);
+        set!(rho, as_f64);
+        set!(rho_end, as_f64);
+        set!(t_start, as_usize);
+        set!(t_max, as_usize);
+        set!(n_eval, as_usize);
+        set!(tau_low, as_f64);
+        set!(gamma_increase, as_f64);
+        set!(strategy, as_string);
+        set!(state_mgmt, as_string);
+        set!(corpus, as_string);
+        set!(val_batches, as_usize);
+        set!(log_every, as_usize);
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.rho >= 0.0 && self.rho <= 1.0, "rho must be in [0,1]");
+        anyhow::ensure!(self.rho_end >= 0.0 && self.rho_end <= self.rho,
+                        "rho_end must be in [0, rho]");
+        anyhow::ensure!(self.t_start > 0, "t_start must be > 0");
+        anyhow::ensure!(self.t_max >= self.t_start, "t_max must be >= t_start");
+        anyhow::ensure!(self.gamma_increase >= 1.0, "gamma_increase must be >= 1");
+        anyhow::ensure!(self.n_eval > 0, "n_eval must be > 0");
+        anyhow::ensure!(
+            matches!(self.strategy.as_str(), "random" | "topk" | "roundrobin"),
+            "unknown strategy {:?}", self.strategy
+        );
+        anyhow::ensure!(
+            matches!(self.state_mgmt.as_str(), "reset" | "project"),
+            "unknown state_mgmt {:?}", self.state_mgmt
+        );
+        Ok(())
+    }
+
+    /// Apply a single `key=value` override (CLI `--set train.key=value`).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let mut m = ConfigMap::default();
+        m.insert("train", key, value);
+        let merged = Self::from_map_over(self.clone(), &m)?;
+        *self = merged;
+        Ok(())
+    }
+
+    fn from_map_over(base: TrainConfig, map: &ConfigMap) -> Result<TrainConfig> {
+        let mut c = base;
+        let get = |k: &str| map.get("train", k);
+        macro_rules! set {
+            ($field:ident, $conv:ident) => {
+                if let Some(v) = get(stringify!($field)) {
+                    c.$field = parse::$conv(v)?;
+                }
+            };
+        }
+        set!(preset, as_string);
+        set!(artifacts_dir, as_string);
+        set!(steps, as_usize);
+        set!(seed, as_u64);
+        set!(lr, as_f32);
+        set!(lr_free, as_f32);
+        set!(weight_decay, as_f32);
+        set!(beta1, as_f32);
+        set!(beta2, as_f32);
+        set!(eps, as_f32);
+        set!(warmup_steps, as_usize);
+        set!(lr_min_ratio, as_f32);
+        set!(rho, as_f64);
+        set!(rho_end, as_f64);
+        set!(t_start, as_usize);
+        set!(t_max, as_usize);
+        set!(n_eval, as_usize);
+        set!(tau_low, as_f64);
+        set!(gamma_increase, as_f64);
+        set!(strategy, as_string);
+        set!(state_mgmt, as_string);
+        set!(corpus, as_string);
+        set!(val_batches, as_usize);
+        set!(log_every, as_usize);
+        c.validate()?;
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = TrainConfig::default();
+        assert_eq!(c.rho, 0.25);
+        assert_eq!(c.rho_end, 0.05);
+        assert_eq!(c.t_start, 100);
+        assert_eq!(c.t_max, 800);
+        assert_eq!(c.gamma_increase, 1.5);
+        assert_eq!(c.tau_low, 0.008);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn from_map_overrides() {
+        let m = parse_str("[train]\nsteps = 50\nrho = 0.5\nstrategy = \"topk\"\n").unwrap();
+        let c = TrainConfig::from_map(&m).unwrap();
+        assert_eq!(c.steps, 50);
+        assert_eq!(c.rho, 0.5);
+        assert_eq!(c.strategy, "topk");
+        assert_eq!(c.t_max, 800); // untouched default
+    }
+
+    #[test]
+    fn set_override_and_validation() {
+        let mut c = TrainConfig::default();
+        c.set("steps", "123").unwrap();
+        assert_eq!(c.steps, 123);
+        assert!(c.set("rho", "1.5").is_err());
+        assert!(c.set("strategy", "bogus").is_err());
+        // failed set must not corrupt state
+        assert_eq!(c.rho, 0.25);
+    }
+}

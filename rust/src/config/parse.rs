@@ -1,0 +1,151 @@
+//! TOML-lite parser: `[section]` headers, `key = value` lines, `#`
+//! comments, quoted strings, ints/floats/bools. Enough for run configs
+//! without pulling in a TOML crate (not vendored).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct ConfigMap {
+    // (section, key) -> raw value string (unquoted)
+    entries: BTreeMap<(String, String), String>,
+}
+
+impl ConfigMap {
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.entries
+            .get(&(section.to_string(), key.to_string()))
+            .map(|s| s.as_str())
+    }
+
+    pub fn insert(&mut self, section: &str, key: &str, value: &str) {
+        self.entries
+            .insert((section.to_string(), key.to_string()), value.to_string());
+    }
+
+    pub fn sections(&self) -> Vec<String> {
+        let mut out: Vec<String> = self.entries.keys().map(|(s, _)| s.clone()).collect();
+        out.dedup();
+        out
+    }
+}
+
+pub fn parse_file(path: impl AsRef<Path>) -> Result<ConfigMap> {
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+    parse_str(&text)
+}
+
+pub fn parse_str(text: &str) -> Result<ConfigMap> {
+    let mut map = ConfigMap::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: bad section header", lineno + 1))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = k.trim();
+        let mut val = v.trim().to_string();
+        if val.starts_with('"') {
+            if !(val.len() >= 2 && val.ends_with('"')) {
+                bail!("line {}: unterminated string", lineno + 1);
+            }
+            val = val[1..val.len() - 1].to_string();
+        }
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        map.insert(&section, key, &val);
+    }
+    Ok(map)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quotes
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+pub fn as_string(v: &str) -> Result<String> {
+    Ok(v.to_string())
+}
+
+pub fn as_usize(v: &str) -> Result<usize> {
+    v.parse().with_context(|| format!("bad usize {v:?}"))
+}
+
+pub fn as_u64(v: &str) -> Result<u64> {
+    v.parse().with_context(|| format!("bad u64 {v:?}"))
+}
+
+pub fn as_f32(v: &str) -> Result<f32> {
+    v.parse().with_context(|| format!("bad f32 {v:?}"))
+}
+
+pub fn as_f64(v: &str) -> Result<f64> {
+    v.parse().with_context(|| format!("bad f64 {v:?}"))
+}
+
+#[allow(dead_code)]
+pub fn as_bool(v: &str) -> Result<bool> {
+    match v {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        _ => bail!("bad bool {v:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_types_comments() {
+        let m = parse_str(
+            "# top comment\n[train]\nsteps = 100  # trailing\nlr = 1e-3\nname = \"a # b\"\n\n[data]\ncorpus = english\n",
+        )
+        .unwrap();
+        assert_eq!(m.get("train", "steps"), Some("100"));
+        assert_eq!(m.get("train", "lr"), Some("1e-3"));
+        assert_eq!(m.get("train", "name"), Some("a # b"));
+        assert_eq!(m.get("data", "corpus"), Some("english"));
+        assert_eq!(m.get("data", "nope"), None);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_str("[train\nk=1").is_err());
+        assert!(parse_str("[t]\nnovalue").is_err());
+        assert!(parse_str("[t]\nk = \"unterminated").is_err());
+        assert!(parse_str("[t]\n= 1").is_err());
+    }
+
+    #[test]
+    fn conversions() {
+        assert_eq!(as_usize("5").unwrap(), 5);
+        assert!(as_usize("-1").is_err());
+        assert_eq!(as_f32("0.5").unwrap(), 0.5);
+        assert!(as_bool("yes").unwrap());
+        assert!(!as_bool("0").unwrap());
+        assert!(as_bool("maybe").is_err());
+    }
+}

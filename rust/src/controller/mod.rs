@@ -1,0 +1,108 @@
+//! The paper's contribution: dynamic control of the FRUGAL
+//! hyperparameters.
+//!
+//! - [`rho::RhoSchedule`] — dynamic state-full ratio ρ(k) (§3.1, Eq. 1)
+//! - [`tee::TController`] — loss-aware adaptive update frequency T
+//!   (§3.2, Eqs. 2–3)
+//! - [`AdaFrugalController`] — the integrated controller used by
+//!   Algorithm 1's loop in `coordinator::trainer`.
+
+pub mod rho;
+pub mod tee;
+
+pub use rho::RhoSchedule;
+pub use tee::{TController, TEvent};
+
+use crate::config::TrainConfig;
+
+/// Integrated dynamic control (Algorithm 1 lines 8–17).
+#[derive(Debug, Clone)]
+pub struct AdaFrugalController {
+    pub rho: RhoSchedule,
+    pub tee: TController,
+}
+
+impl AdaFrugalController {
+    /// Build the controller for one of the paper's method variants.
+    /// `dynamic_rho` / `dynamic_t` correspond to AdaFRUGAL-Dyn-ρ /
+    /// AdaFRUGAL-Dyn-T; both = AdaFRUGAL-Combined; neither = static
+    /// FRUGAL.
+    pub fn from_config(cfg: &TrainConfig, dynamic_rho: bool, dynamic_t: bool) -> Self {
+        let rho = if dynamic_rho {
+            RhoSchedule::linear(cfg.rho, cfg.rho_end, cfg.steps)
+        } else {
+            RhoSchedule::constant(cfg.rho)
+        };
+        let tee = if dynamic_t {
+            TController::loss_aware(
+                cfg.t_start,
+                cfg.t_max,
+                cfg.n_eval,
+                cfg.tau_low,
+                cfg.gamma_increase,
+            )
+        } else {
+            TController::fixed(cfg.t_start)
+        };
+        AdaFrugalController { rho, tee }
+    }
+
+    /// ρ(k) for the current step.
+    pub fn rho_at(&self, step: usize) -> f64 {
+        self.rho.at(step)
+    }
+
+    /// Feed a validation loss observation (every N_eval steps); may
+    /// grow T (Eq. 3). Returns the event if T changed.
+    pub fn observe_val_loss(&mut self, step: usize, val_loss: f64) -> Option<TEvent> {
+        self.tee.observe(step, val_loss)
+    }
+
+    /// Current update interval T_k.
+    pub fn t_current(&self) -> usize {
+        self.tee.current()
+    }
+
+    /// Does step k redefine the subspace? (Algorithm 1 line 21:
+    /// k mod T_k == 0.)
+    pub fn is_redefinition_step(&self, step: usize) -> bool {
+        step % self.t_current().max(1) == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TrainConfig {
+        TrainConfig { steps: 1000, ..TrainConfig::default() }
+    }
+
+    #[test]
+    fn static_variant_is_static() {
+        let c = AdaFrugalController::from_config(&cfg(), false, false);
+        assert_eq!(c.rho_at(0), 0.25);
+        assert_eq!(c.rho_at(999), 0.25);
+        assert_eq!(c.t_current(), 100);
+    }
+
+    #[test]
+    fn combined_variant_moves_both() {
+        let mut c = AdaFrugalController::from_config(&cfg(), true, true);
+        assert_eq!(c.rho_at(0), 0.25);
+        assert!(c.rho_at(1000) <= 0.05 + 1e-12);
+        // two plateaued observations -> T grows
+        c.observe_val_loss(100, 10.0);
+        let ev = c.observe_val_loss(200, 10.0001);
+        assert!(ev.is_some());
+        assert_eq!(c.t_current(), 150);
+    }
+
+    #[test]
+    fn redefinition_schedule_follows_t() {
+        let c = AdaFrugalController::from_config(&cfg(), false, false);
+        assert!(c.is_redefinition_step(0));
+        assert!(!c.is_redefinition_step(50));
+        assert!(c.is_redefinition_step(100));
+    }
+}

@@ -1,0 +1,154 @@
+//! Dynamic state-full ratio control (paper §3.1).
+//!
+//! Eq. 1:  ρ(k) = max(ρ_end, ρ_start − (ρ_start − ρ_end) · k / K_total)
+//!
+//! plus two extensions the paper's conclusion calls out as future work
+//! ("more sophisticated, non-linear control policies"): cosine decay and
+//! step decay — exercised by the ablation harness.
+
+#[derive(Debug, Clone)]
+pub enum RhoSchedule {
+    Constant { rho: f64 },
+    /// the paper's Eq. 1
+    Linear { start: f64, end: f64, total_steps: usize },
+    /// extension: cosine from start to end over total_steps
+    Cosine { start: f64, end: f64, total_steps: usize },
+    /// extension: multiply by `factor` every `every` steps, floored at end
+    Step { start: f64, end: f64, every: usize, factor: f64 },
+}
+
+impl RhoSchedule {
+    pub fn constant(rho: f64) -> Self {
+        RhoSchedule::Constant { rho }
+    }
+
+    pub fn linear(start: f64, end: f64, total_steps: usize) -> Self {
+        RhoSchedule::Linear { start, end, total_steps }
+    }
+
+    pub fn cosine(start: f64, end: f64, total_steps: usize) -> Self {
+        RhoSchedule::Cosine { start, end, total_steps }
+    }
+
+    /// ρ(k) — always clamped to [min(start,end), max(start,end)].
+    pub fn at(&self, step: usize) -> f64 {
+        match *self {
+            RhoSchedule::Constant { rho } => rho,
+            RhoSchedule::Linear { start, end, total_steps } => {
+                let k = step as f64 / total_steps.max(1) as f64;
+                (start - (start - end) * k).max(end)
+            }
+            RhoSchedule::Cosine { start, end, total_steps } => {
+                let k = (step as f64 / total_steps.max(1) as f64).min(1.0);
+                end + 0.5 * (start - end) * (1.0 + (std::f64::consts::PI * k).cos())
+            }
+            RhoSchedule::Step { start, end, every, factor } => {
+                let n = step / every.max(1);
+                (start * factor.powi(n as i32)).max(end)
+            }
+        }
+    }
+
+    /// Final ρ (for memory reporting).
+    pub fn end_value(&self) -> f64 {
+        match *self {
+            RhoSchedule::Constant { rho } => rho,
+            RhoSchedule::Linear { end, .. }
+            | RhoSchedule::Cosine { end, .. }
+            | RhoSchedule::Step { end, .. } => end,
+        }
+    }
+
+    pub fn is_dynamic(&self) -> bool {
+        !matches!(self, RhoSchedule::Constant { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn linear_matches_eq1() {
+        let s = RhoSchedule::linear(0.25, 0.05, 200_000);
+        assert_eq!(s.at(0), 0.25);
+        // Eq. 1 at k = K/2: 0.25 - 0.20*0.5 = 0.15
+        assert!((s.at(100_000) - 0.15).abs() < 1e-12);
+        assert!((s.at(200_000) - 0.05).abs() < 1e-12);
+        // clamped beyond the horizon
+        assert_eq!(s.at(400_000), 0.05);
+    }
+
+    #[test]
+    fn cosine_endpoints_and_monotone() {
+        let s = RhoSchedule::cosine(0.25, 0.05, 1000);
+        assert!((s.at(0) - 0.25).abs() < 1e-12);
+        assert!((s.at(1000) - 0.05).abs() < 1e-12);
+        let mut prev = s.at(0);
+        for k in (0..=1000).step_by(50) {
+            let v = s.at(k);
+            assert!(v <= prev + 1e-12, "cosine must be nonincreasing");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn step_decay_floors() {
+        let s = RhoSchedule::Step { start: 0.4, end: 0.1, every: 100, factor: 0.5 };
+        assert_eq!(s.at(0), 0.4);
+        assert_eq!(s.at(100), 0.2);
+        assert_eq!(s.at(250), 0.1);
+        assert_eq!(s.at(10_000), 0.1);
+    }
+
+    #[test]
+    fn prop_rho_bounds_and_monotonicity() {
+        prop::forall(
+            "rho-schedule-invariants",
+            60,
+            |r| {
+                let start = 0.05 + 0.9 * r.f64();
+                let end = start * r.f64();
+                let total = 10 + r.below(100_000);
+                (start, end, total)
+            },
+            |&(start, end, total)| {
+                for sched in [
+                    RhoSchedule::linear(start, end, total),
+                    RhoSchedule::cosine(start, end, total),
+                ] {
+                    let mut prev = f64::INFINITY;
+                    for k in 0..=(total + total / 2) {
+                        if k % (total / 10).max(1) != 0 {
+                            continue;
+                        }
+                        let v = sched.at(k);
+                        // bounded
+                        if !(v >= end - 1e-9 && v <= start + 1e-9) {
+                            return false;
+                        }
+                        // nonincreasing
+                        if v > prev + 1e-9 {
+                            return false;
+                        }
+                        prev = v;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn slow_variation_property() {
+        // §5.7: per-step change is O(1/K_total) — required for the
+        // convergence argument.
+        let total = 10_000;
+        let s = RhoSchedule::linear(0.25, 0.05, total);
+        let max_delta = (0..total)
+            .map(|k| (s.at(k) - s.at(k + 1)).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_delta <= 0.2001 / total as f64, "max_delta={max_delta}");
+    }
+}

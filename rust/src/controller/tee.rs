@@ -1,0 +1,197 @@
+//! Loss-aware adaptive update-frequency control (paper §3.2).
+//!
+//! Every N_eval steps the trainer reports the validation loss; the
+//! controller computes the relative change (Eq. 2)
+//!
+//!   ΔL_rel = |L(k−N_eval) − L(k)| / L(k−N_eval)
+//!
+//! and, when ΔL_rel < τ_low (training plateaued), grows the interval
+//! (Eq. 3):  T ← min(T_max, T · γ_increase).
+
+/// A T change, recorded for the experiment logs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TEvent {
+    pub step: usize,
+    pub delta_l_rel: f64,
+    pub old_t: usize,
+    pub new_t: usize,
+}
+
+#[derive(Debug, Clone)]
+pub enum TController {
+    Fixed { t: usize },
+    LossAware {
+        t: f64,
+        t_max: usize,
+        n_eval: usize,
+        tau_low: f64,
+        gamma: f64,
+        prev_loss: Option<f64>,
+        last_observe_step: Option<usize>,
+        pub_events: Vec<TEvent>,
+    },
+}
+
+impl TController {
+    pub fn fixed(t: usize) -> Self {
+        TController::Fixed { t }
+    }
+
+    pub fn loss_aware(t_start: usize, t_max: usize, n_eval: usize, tau_low: f64,
+                      gamma: f64) -> Self {
+        TController::LossAware {
+            t: t_start as f64,
+            t_max,
+            n_eval,
+            tau_low,
+            gamma,
+            prev_loss: None,
+            last_observe_step: None,
+            pub_events: Vec::new(),
+        }
+    }
+
+    pub fn current(&self) -> usize {
+        match self {
+            TController::Fixed { t } => *t,
+            TController::LossAware { t, .. } => t.round() as usize,
+        }
+    }
+
+    pub fn is_dynamic(&self) -> bool {
+        matches!(self, TController::LossAware { .. })
+    }
+
+    /// Report a validation loss at `step`. Applies Eq. 2 + Eq. 3.
+    /// Observations are expected every `n_eval` steps; irregular gaps
+    /// are tolerated (the ratio is gap-independent).
+    pub fn observe(&mut self, step: usize, val_loss: f64) -> Option<TEvent> {
+        let TController::LossAware {
+            t, t_max, tau_low, gamma, prev_loss, last_observe_step, pub_events, ..
+        } = self
+        else {
+            return None;
+        };
+        // ignore duplicate reports for the same step
+        if *last_observe_step == Some(step) {
+            return None;
+        }
+        *last_observe_step = Some(step);
+        let Some(prev) = *prev_loss else {
+            *prev_loss = Some(val_loss);
+            return None;
+        };
+        *prev_loss = Some(val_loss);
+        if prev <= 0.0 || !val_loss.is_finite() {
+            return None; // degenerate losses never adapt T
+        }
+        let delta_l_rel = (prev - val_loss).abs() / prev;
+        if delta_l_rel < *tau_low {
+            let old_t = t.round() as usize;
+            *t = (*t * *gamma).min(*t_max as f64);
+            let new_t = t.round() as usize;
+            if new_t != old_t {
+                let ev = TEvent { step, delta_l_rel, old_t, new_t };
+                pub_events.push(ev.clone());
+                return Some(ev);
+            }
+        }
+        None
+    }
+
+    pub fn events(&self) -> &[TEvent] {
+        match self {
+            TController::Fixed { .. } => &[],
+            TController::LossAware { pub_events, .. } => pub_events,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn fixed_never_moves() {
+        let mut c = TController::fixed(200);
+        assert_eq!(c.current(), 200);
+        assert!(c.observe(100, 5.0).is_none());
+        assert!(c.observe(200, 5.0).is_none());
+        assert_eq!(c.current(), 200);
+        assert!(c.events().is_empty());
+    }
+
+    #[test]
+    fn eq2_eq3_sequence() {
+        // paper values: T0=100, Tmax=800, gamma=1.5, tau=0.008
+        let mut c = TController::loss_aware(100, 800, 100, 0.008, 1.5);
+        // first observation only primes the window
+        assert!(c.observe(100, 10.0).is_none());
+        // big improvement: 10 -> 9 is 10% >> tau, no change
+        assert!(c.observe(200, 9.0).is_none());
+        assert_eq!(c.current(), 100);
+        // plateau: |9 - 8.95|/9 = 0.0056 < 0.008 -> T *= 1.5
+        let ev = c.observe(300, 8.95).unwrap();
+        assert_eq!(ev.old_t, 100);
+        assert_eq!(ev.new_t, 150);
+        assert!((ev.delta_l_rel - 0.0056).abs() < 1e-3);
+        // repeated plateaus saturate at T_max
+        for i in 0..10 {
+            c.observe(400 + i * 100, 8.95);
+        }
+        assert_eq!(c.current(), 800);
+        assert_eq!(c.events().last().unwrap().new_t, 800);
+    }
+
+    #[test]
+    fn worsening_loss_also_counts_as_stable_only_if_small() {
+        // Eq. 2 uses |ΔL|: a small regression is still a plateau
+        let mut c = TController::loss_aware(100, 800, 100, 0.008, 1.5);
+        c.observe(100, 5.0);
+        let ev = c.observe(200, 5.001); // |Δ|/5 = 0.0002 < tau
+        assert!(ev.is_some());
+        // a big regression is NOT a plateau
+        let mut c2 = TController::loss_aware(100, 800, 100, 0.008, 1.5);
+        c2.observe(100, 5.0);
+        assert!(c2.observe(200, 6.0).is_none());
+    }
+
+    #[test]
+    fn duplicate_and_degenerate_observations_ignored() {
+        let mut c = TController::loss_aware(100, 800, 100, 0.008, 1.5);
+        c.observe(100, 5.0);
+        assert!(c.observe(100, 5.0).is_none()); // duplicate step
+        assert!(c.observe(200, f64::NAN).is_none()); // NaN ignored
+        assert_eq!(c.current(), 100);
+    }
+
+    #[test]
+    fn prop_t_monotone_and_bounded() {
+        // invariant: T is nondecreasing and never exceeds T_max,
+        // regardless of the loss sequence.
+        prop::forall_with_rng(
+            "t-monotone-bounded",
+            50,
+            |r| {
+                let n = 5 + r.below(40);
+                let losses: Vec<f64> =
+                    (0..n).map(|_| 0.1 + 20.0 * r.f64()).collect();
+                losses
+            },
+            |losses, _| {
+                let mut c = TController::loss_aware(100, 800, 100, 0.008, 1.5);
+                let mut prev_t = c.current();
+                for (i, &l) in losses.iter().enumerate() {
+                    c.observe((i + 1) * 100, l);
+                    let t = c.current();
+                    if t < prev_t || t > 800 {
+                        return false;
+                    }
+                    prev_t = t;
+                }
+                true
+            },
+        );
+    }
+}

@@ -1,0 +1,101 @@
+//! Checkpointing: packed state (or params) + a JSON header, in a simple
+//! length-prefixed binary container. Used by the continued-pretraining
+//! example (train on the C4-like corpus, restore, continue on the
+//! VietVault-like corpus).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::{self, Value};
+
+const MAGIC: &[u8; 8] = b"ADAFRUG1";
+
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub header: Value,
+    pub data: Vec<f32>,
+}
+
+pub fn save(path: impl AsRef<Path>, header: &Value, data: &[f32]) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    let hdr = header.to_string();
+    f.write_all(MAGIC)?;
+    f.write_all(&(hdr.len() as u64).to_le_bytes())?;
+    f.write_all(hdr.as_bytes())?;
+    f.write_all(&(data.len() as u64).to_le_bytes())?;
+    // f32 LE payload
+    let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(&path)
+            .with_context(|| format!("opening checkpoint {}", path.as_ref().display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    ensure!(&magic == MAGIC, "bad checkpoint magic");
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    ensure!(hlen < 1 << 20, "header too large");
+    let mut hbytes = vec![0u8; hlen];
+    f.read_exact(&mut hbytes)?;
+    let header = json::parse(std::str::from_utf8(&hbytes)?)?;
+    f.read_exact(&mut len8)?;
+    let dlen = u64::from_le_bytes(len8) as usize;
+    let mut dbytes = vec![0u8; dlen * 4];
+    f.read_exact(&mut dbytes)?;
+    let data: Vec<f32> = dbytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Checkpoint { header, data })
+}
+
+/// Standard header for a training checkpoint.
+pub fn train_header(preset: &str, method: &str, step: usize, val_loss: f64) -> Value {
+    json::obj(vec![
+        ("preset", json::s(preset)),
+        ("method", json::s(method)),
+        ("step", json::num(step as f64)),
+        ("val_loss", json::num(val_loss)),
+        ("kind", json::s("packed_state")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("adafrugal_ckpt_{}", std::process::id()));
+        let path = dir.join("t.ckpt");
+        let hdr = train_header("nano", "frugal", 42, 3.25);
+        let data: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5).collect();
+        save(&path, &hdr, &data).unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.data, data);
+        assert_eq!(ck.header.get("step").unwrap().as_usize().unwrap(), 42);
+        assert_eq!(ck.header.get("preset").unwrap().as_str().unwrap(), "nano");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let dir = std::env::temp_dir().join(format!("adafrugal_ckpt2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTMAGIC????????").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,344 @@
+//! GLUE-style fine-tuning driver (Table 3): short sensitive runs of the
+//! classification model under each optimizer, scored with the task's
+//! official metric. Reuses the same controllers/projection as
+//! pre-training; hyperparameters are scaled to the short duration the
+//! way §4.3 describes ("parameters related to training length were
+//! naturally adjusted").
+
+use anyhow::{Context, Result};
+use xla::PjRtBuffer;
+
+use crate::config::TrainConfig;
+use crate::controller::AdaFrugalController;
+use crate::data::glue::{self, Example, TaskData, TaskSpec};
+use crate::model::init;
+use crate::optim::StepScalars;
+use crate::projection::{Strategy, SubspaceMask};
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+/// Fine-tuning method roster for Table 3. LoRA is a distinct path
+/// (adapter-only training on the frozen backbone).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FtMethod {
+    FullAdamW,
+    Lora,
+    GaLore,
+    Frugal { dynamic_rho: bool, dynamic_t: bool },
+}
+
+impl FtMethod {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FtMethod::FullAdamW => "Full-Parameter",
+            FtMethod::Lora => "LoRA",
+            FtMethod::GaLore => "GaLore",
+            FtMethod::Frugal { dynamic_rho: false, dynamic_t: false } => "FRUGAL (static)",
+            FtMethod::Frugal { dynamic_rho: true, dynamic_t: false } => "AdaFRUGAL-Dyn-rho",
+            FtMethod::Frugal { dynamic_rho: false, dynamic_t: true } => "AdaFRUGAL-Dyn-T",
+            FtMethod::Frugal { dynamic_rho: true, dynamic_t: true } => "AdaFRUGAL-Combined",
+        }
+    }
+
+    pub fn roster() -> Vec<FtMethod> {
+        vec![
+            FtMethod::FullAdamW,
+            FtMethod::Lora,
+            FtMethod::GaLore,
+            FtMethod::Frugal { dynamic_rho: false, dynamic_t: false },
+            FtMethod::Frugal { dynamic_rho: true, dynamic_t: false },
+            FtMethod::Frugal { dynamic_rho: false, dynamic_t: true },
+            FtMethod::Frugal { dynamic_rho: true, dynamic_t: true },
+        ]
+    }
+}
+
+pub struct FineTuner {
+    pub cfg: TrainConfig,
+    pub method: FtMethod,
+    pub spec: &'static TaskSpec,
+    engine: Engine,
+    /// LoRA only: frozen backbone params + adapter state
+    lora_base: Option<Vec<f32>>,
+    data: TaskData,
+    rng: Rng,
+}
+
+/// Result of one (task, method, seed) fine-tune.
+#[derive(Debug, Clone)]
+pub struct FtResult {
+    pub score: f64,
+    pub final_train_loss: f64,
+}
+
+impl FineTuner {
+    /// `backbone`: optional pre-trained params (from an LM checkpoint
+    /// with matching geometry); fresh init otherwise.
+    pub fn new(cfg: TrainConfig, method: FtMethod, task_name: &str, seed: u64)
+               -> Result<FineTuner> {
+        let spec = glue::task(task_name).with_context(|| format!("no task {task_name}"))?;
+        let lora = method == FtMethod::Lora;
+        let artifact = if lora {
+            format!("{}.cls{}_lora", cfg.preset, spec.n_cls)
+        } else {
+            format!("{}.cls{}", cfg.preset, spec.n_cls)
+        };
+        let entries: Vec<&str> = if lora {
+            vec!["lora_adamw", "lora_eval"]
+        } else {
+            match method {
+                FtMethod::FullAdamW => vec!["adamw", "eval"],
+                FtMethod::GaLore => vec!["grad", "eval"],
+                _ => vec!["frugal", "eval"],
+            }
+        };
+        let engine = Engine::load(&cfg.artifacts_dir, &artifact, &entries)?;
+        let dims = engine.manifest.model.clone();
+        let data = glue::generate(spec, dims.vocab, dims.seq, seed ^ 0x61ed);
+        let lora_base = if lora {
+            Some(init::init_state(&engine.manifest, seed)[..engine.manifest.n_params].to_vec())
+        } else {
+            None
+        };
+        Ok(FineTuner {
+            cfg,
+            method,
+            spec,
+            engine,
+            lora_base,
+            data,
+            rng: Rng::new(seed),
+        })
+    }
+
+    fn batchify(&self, examples: &[Example], idx: &[usize]) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let seq = self.engine.manifest.model.seq;
+        let mut toks = Vec::with_capacity(idx.len() * seq);
+        let mut li = Vec::with_capacity(idx.len());
+        let mut lf = Vec::with_capacity(idx.len());
+        for &i in idx {
+            toks.extend_from_slice(&examples[i].tokens);
+            li.push(examples[i].label_i);
+            lf.push(examples[i].label_f);
+        }
+        (toks, li, lf)
+    }
+
+    fn upload_labels(&self, li: &[i32], lf: &[f32]) -> Result<PjRtBuffer> {
+        if self.spec.n_cls == 1 {
+            self.engine.upload_f32(lf, &[lf.len()])
+        } else {
+            self.engine.upload_i32(li, &[li.len()])
+        }
+    }
+
+    /// Evaluate: returns (score, mean_eval_loss).
+    fn score_eval(&self, state_buf: &PjRtBuffer, lora: bool) -> Result<(f64, f64)> {
+        let man = &self.engine.manifest;
+        let batch = man.model.batch;
+        let n_cls = man.model.n_cls;
+        let mut pred_cls = Vec::new();
+        let mut truth_cls = Vec::new();
+        let mut pred_reg = Vec::new();
+        let mut truth_reg = Vec::new();
+        let mut losses = Vec::new();
+        let n_batches = self.data.eval.len() / batch;
+        for bi in 0..n_batches {
+            let idx: Vec<usize> = (0..batch).map(|j| bi * batch + j).collect();
+            let (toks, li, lf) = self.batchify(&self.data.eval, &idx);
+            let tbuf = self.engine.upload_i32(&toks, &[batch, man.model.seq])?;
+            let lbuf = self.upload_labels(&li, &lf)?;
+            let out = if lora {
+                let base = self.lora_base.as_ref().unwrap();
+                let bbuf = self.engine.upload_f32(base, &[base.len()])?;
+                self.engine.run("lora_eval", &[&bbuf, state_buf, &tbuf, &lbuf])?
+            } else {
+                self.engine.run("eval", &[state_buf, &tbuf, &lbuf])?
+            };
+            let v = self.engine.read_f32(&out, 0, 1 + batch * n_cls)?;
+            losses.push(v[0] as f64);
+            for b in 0..batch {
+                let logits = &v[1 + b * n_cls..1 + (b + 1) * n_cls];
+                if n_cls == 1 {
+                    pred_reg.push(logits[0] as f64);
+                    truth_reg.push(lf[b] as f64);
+                } else {
+                    let pred = logits
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0;
+                    pred_cls.push(pred);
+                    truth_cls.push(li[b] as usize);
+                }
+            }
+        }
+        let score = glue::score(self.spec, &pred_cls, &truth_cls, &pred_reg, &truth_reg);
+        Ok((score, crate::util::stats::mean(&losses)))
+    }
+
+    /// Run fine-tuning for `cfg.steps` steps; returns the eval score.
+    pub fn run(&mut self) -> Result<FtResult> {
+        let man = &self.engine.manifest;
+        let batch = man.model.batch;
+        let is_lora = self.method == FtMethod::Lora;
+        let frugal = matches!(self.method, FtMethod::Frugal { .. });
+
+        // controller + mask (frugal family only)
+        let (dyn_rho, dyn_t) = match self.method {
+            FtMethod::Frugal { dynamic_rho, dynamic_t } => (dynamic_rho, dynamic_t),
+            _ => (false, false),
+        };
+        let mut controller = AdaFrugalController::from_config(&self.cfg, dyn_rho, dyn_t);
+        let mut mask = SubspaceMask::new(man);
+        let strategy = Strategy::parse(&self.cfg.strategy)?;
+        if frugal {
+            let s0 = if strategy == Strategy::TopK { Strategy::Random } else { strategy };
+            mask.redefine(s0, controller.rho_at(0), None, &mut self.rng)?;
+        }
+
+        // state
+        let mut state_buf = if is_lora {
+            let lstate = init::init_lora_state(man, self.cfg.seed);
+            self.engine.upload_f32(&lstate, &[lstate.len()])?
+        } else {
+            let state = init::init_state(man, self.cfg.seed);
+            self.engine.upload_f32(&state, &[man.state_len])?
+        };
+        let mut masks_buf = if frugal {
+            Some(self.engine.upload_f32(&mask.render(), &[man.mask_len])?)
+        } else {
+            None
+        };
+        // GaLore host state
+        let mut galore_state: Option<(Vec<f32>, crate::optim::galore::GaLore)> =
+            if self.method == FtMethod::GaLore {
+                let state = init::init_state(man, self.cfg.seed);
+                Some((
+                    state[..man.n_params].to_vec(),
+                    crate::optim::galore::GaLore::new(man, self.cfg.rho, self.cfg.t_start,
+                                                      self.cfg.seed),
+                ))
+            } else {
+                None
+            };
+
+        let mut order: Vec<usize> = (0..self.data.train.len()).collect();
+        let mut cursor = 0usize;
+        let mut t_since_reset = 0usize;
+        let mut last_loss = f64::NAN;
+
+        for step in 0..self.cfg.steps {
+            // dynamic control
+            if frugal && controller.is_redefinition_step(step) && step > 0 {
+                mask.redefine(strategy.no_scores(), controller.rho_at(step), None,
+                              &mut self.rng)?;
+                masks_buf =
+                    Some(self.engine.upload_f32(&mask.render(), &[man.mask_len])?);
+                if self.cfg.state_mgmt == "reset" {
+                    let mut state = self.engine.read_all_f32(&state_buf)?;
+                    let n = man.n_params;
+                    for p in man.maskable() {
+                        state[n + p.offset..n + p.offset + p.size].fill(0.0);
+                        state[2 * n + p.offset..2 * n + p.offset + p.size].fill(0.0);
+                    }
+                    state_buf = self.engine.upload_f32(&state, &[man.state_len])?;
+                    t_since_reset = 0;
+                }
+            }
+            t_since_reset += 1;
+
+            // batch
+            let idx: Vec<usize> = (0..batch)
+                .map(|_| {
+                    if cursor == 0 {
+                        self.rng.shuffle(&mut order);
+                    }
+                    let i = order[cursor];
+                    cursor = (cursor + 1) % order.len();
+                    i
+                })
+                .collect();
+            let (toks, li, lf) = self.batchify(&self.data.train, &idx);
+            let tbuf = self.engine.upload_i32(&toks, &[batch, man.model.seq])?;
+            let lbuf = self.upload_labels(&li, &lf)?;
+
+            let lr = self.lr_at(step);
+            let s = StepScalars::new(lr, self.cfg.lr_free * (lr / self.cfg.lr),
+                                     self.cfg.weight_decay, self.cfg.beta1,
+                                     self.cfg.beta2, self.cfg.eps, t_since_reset);
+            let scal_buf = self.engine.upload_f32(&s.to_array(), &[8])?;
+
+            match self.method {
+                FtMethod::Lora => {
+                    let base = self.lora_base.as_ref().unwrap();
+                    let bbuf = self.engine.upload_f32(base, &[base.len()])?;
+                    state_buf = self.engine.run(
+                        "lora_adamw", &[&bbuf, &state_buf, &scal_buf, &tbuf, &lbuf])?;
+                }
+                FtMethod::FullAdamW => {
+                    state_buf =
+                        self.engine.run("adamw", &[&state_buf, &scal_buf, &tbuf, &lbuf])?;
+                }
+                FtMethod::GaLore => {
+                    let (params, opt) = galore_state.as_mut().unwrap();
+                    let pbuf = self.engine.upload_f32(params, &[params.len()])?;
+                    let out = self.engine.run("grad", &[&pbuf, &tbuf, &lbuf])?;
+                    let gl = self.engine.read_all_f32(&out)?;
+                    let n = params.len();
+                    opt.step(man, params, &gl[..n], &s);
+                    last_loss = gl[n] as f64;
+                    // keep state_buf in sync for eval
+                    let mut state = vec![0f32; man.state_len];
+                    state[..n].copy_from_slice(params);
+                    state_buf = self.engine.upload_f32(&state, &[man.state_len])?;
+                }
+                FtMethod::Frugal { .. } => {
+                    let masks = masks_buf.as_ref().unwrap();
+                    state_buf = self.engine.run(
+                        "frugal", &[&state_buf, masks, &scal_buf, &tbuf, &lbuf])?;
+                }
+            }
+
+            // loss readback only at observation boundaries (reading the
+            // packed state transfers the whole buffer — see engine.rs)
+            let last_step = step + 1 == self.cfg.steps;
+            if (dyn_t && (step + 1) % self.cfg.n_eval == 0) || last_step {
+                let loss_slot = if is_lora { man.lora_state_len() } else { man.state_len } - 1;
+                if self.method != FtMethod::GaLore {
+                    last_loss = self.engine.read_f32(&state_buf, loss_slot, 1)?[0] as f64;
+                }
+                if dyn_t && !last_step {
+                    controller.observe_val_loss(step + 1, last_loss);
+                }
+            }
+        }
+
+        let (score, _eval_loss) = self.score_eval(&state_buf, is_lora)?;
+        Ok(FtResult { score, final_train_loss: last_loss })
+    }
+
+    fn lr_at(&self, step: usize) -> f32 {
+        let c = &self.cfg;
+        if step < c.warmup_steps {
+            return c.lr * (step + 1) as f32 / c.warmup_steps.max(1) as f32;
+        }
+        let progress = (step - c.warmup_steps) as f32
+            / (c.steps.saturating_sub(c.warmup_steps)).max(1) as f32;
+        let min_lr = c.lr * c.lr_min_ratio;
+        min_lr + 0.5 * (c.lr - min_lr) * (1.0 + (std::f32::consts::PI * progress).cos())
+    }
+}
+
+impl Strategy {
+    /// During fine-tuning redefinitions we avoid the extra scores pass
+    /// (short runs); TopK degrades to Random there.
+    fn no_scores(self) -> Strategy {
+        if self == Strategy::TopK {
+            Strategy::Random
+        } else {
+            self
+        }
+    }
+}

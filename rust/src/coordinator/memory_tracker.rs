@@ -1,0 +1,108 @@
+//! Per-step optimizer-memory tracking (feeds Fig. 1 and the Memory
+//! column of Tables 1–2). Samples the analytic memory model against the
+//! live subspace mask; records the trajectory + running peak.
+
+use crate::coordinator::method::Method;
+use crate::model::memory;
+use crate::projection::SubspaceMask;
+use crate::runtime::manifest::Manifest;
+
+#[derive(Debug, Clone, Copy)]
+pub struct MemorySample {
+    pub step: usize,
+    pub bytes: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct MemoryTracker {
+    pub samples: Vec<MemorySample>,
+    pub peak_bytes: usize,
+}
+
+impl MemoryTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current optimizer-state bytes for the method.
+    pub fn bytes_now(man: &Manifest, method: Method, mask: Option<&SubspaceMask>,
+                     rho: f64) -> usize {
+        match method {
+            Method::AdamW => memory::adamw_bytes(man),
+            Method::GaLore => memory::galore_bytes(man, rho),
+            Method::BAdam => memory::badam_bytes(man, rho),
+            _ => match mask {
+                Some(m) => memory::frugal_bytes(man, m),
+                None => memory::frugal_bytes_at_rho(man, rho),
+            },
+        }
+    }
+
+    pub fn record(&mut self, step: usize, bytes: usize) {
+        self.samples.push(MemorySample { step, bytes });
+        self.peak_bytes = self.peak_bytes.max(bytes);
+    }
+
+    pub fn first_bytes(&self) -> usize {
+        self.samples.first().map(|s| s.bytes).unwrap_or(0)
+    }
+
+    pub fn last_bytes(&self) -> usize {
+        self.samples.last().map(|s| s.bytes).unwrap_or(0)
+    }
+
+    /// "0.52G -> 0.37G" style label used in the tables (adaptive units:
+    /// the scaled-down presets land in the MB range).
+    pub fn label(&self) -> String {
+        let first = self.first_bytes();
+        let last = self.last_bytes();
+        let diff = (first as f64 - last as f64).abs() / (first as f64).max(1e-12);
+        if diff < 0.02 {
+            fmt_bytes(first)
+        } else {
+            format!("{} -> {}", fmt_bytes(first), fmt_bytes(last))
+        }
+    }
+}
+
+/// Human-readable byte label with paper-style "G" at GB scale.
+pub fn fmt_bytes(b: usize) -> String {
+    if b >= 100_000_000 {
+        format!("{:.2}G", b as f64 / 1e9)
+    } else {
+        format!("{:.2}M", b as f64 / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_and_labels() {
+        let mut t = MemoryTracker::new();
+        t.record(0, 520_000_000);
+        t.record(100, 450_000_000);
+        t.record(200, 370_000_000);
+        assert_eq!(t.peak_bytes, 520_000_000);
+        assert_eq!(t.label(), "0.52G -> 0.37G");
+        let mut s = MemoryTracker::new();
+        s.record(0, 520_000_000);
+        s.record(200, 520_000_000);
+        assert_eq!(s.label(), "0.52G");
+        let mut m = MemoryTracker::new();
+        m.record(0, 1_400_000);
+        m.record(10, 900_000);
+        assert_eq!(m.label(), "1.40M -> 0.90M");
+    }
+
+    #[test]
+    fn bytes_now_dispatches() {
+        let man = crate::model::init::test_manifest();
+        let adamw = MemoryTracker::bytes_now(&man, Method::AdamW, None, 0.25);
+        let frugal = MemoryTracker::bytes_now(&man, Method::FrugalStatic, None, 0.25);
+        assert!(frugal < adamw);
+        let galore = MemoryTracker::bytes_now(&man, Method::GaLore, None, 0.25);
+        assert!(galore > frugal); // projector overhead
+    }
+}

@@ -1,0 +1,141 @@
+//! The method matrix of Tables 1–3: the upper-bound baseline, the
+//! memory-efficient baselines, and the paper's proposed variants.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// full-rank AdamW (performance upper bound, 1.00× memory)
+    AdamW,
+    /// static FRUGAL (ρ, T fixed) — the paper's primary baseline
+    FrugalStatic,
+    /// AdaFRUGAL-Dynamic-ρ (Eq. 1 only)
+    AdaFrugalDynRho,
+    /// AdaFRUGAL-Dynamic-T (Eqs. 2–3 only)
+    AdaFrugalDynT,
+    /// AdaFRUGAL-Combined (both controllers)
+    AdaFrugalCombined,
+    /// GaLore baseline (low-rank projected Adam, host path)
+    GaLore,
+    /// BAdam baseline (block coordinate descent, host path)
+    BAdam,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "adamw" => Method::AdamW,
+            "frugal" | "frugal-static" => Method::FrugalStatic,
+            "adafrugal-dyn-rho" | "dyn-rho" | "dyn_rho" => Method::AdaFrugalDynRho,
+            "adafrugal-dyn-t" | "dyn-t" | "dyn_t" => Method::AdaFrugalDynT,
+            "adafrugal-combined" | "combined" | "adafrugal" => Method::AdaFrugalCombined,
+            "galore" => Method::GaLore,
+            "badam" => Method::BAdam,
+            _ => bail!("unknown method {s:?}"),
+        })
+    }
+
+    /// Row label as printed in the paper's tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::AdamW => "AdamW",
+            Method::FrugalStatic => "FRUGAL (static, rho=0.25)",
+            Method::AdaFrugalDynRho => "AdaFRUGAL-Dyn-rho",
+            Method::AdaFrugalDynT => "AdaFRUGAL-Dyn-T",
+            Method::AdaFrugalCombined => "AdaFRUGAL-Combined",
+            Method::GaLore => "GaLore (rho=0.25)",
+            Method::BAdam => "BAdam (rho=0.25)",
+        }
+    }
+
+    /// Short machine id for filenames.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Method::AdamW => "adamw",
+            Method::FrugalStatic => "frugal",
+            Method::AdaFrugalDynRho => "dyn_rho",
+            Method::AdaFrugalDynT => "dyn_t",
+            Method::AdaFrugalCombined => "combined",
+            Method::GaLore => "galore",
+            Method::BAdam => "badam",
+        }
+    }
+
+    pub fn dynamic_rho(&self) -> bool {
+        matches!(self, Method::AdaFrugalDynRho | Method::AdaFrugalCombined)
+    }
+
+    pub fn dynamic_t(&self) -> bool {
+        matches!(self, Method::AdaFrugalDynT | Method::AdaFrugalCombined)
+    }
+
+    /// Runs on the fused device-resident step path?
+    pub fn is_fused(&self) -> bool {
+        !matches!(self, Method::GaLore | Method::BAdam)
+    }
+
+    /// Uses FRUGAL gradient splitting (i.e. needs masks + redefinition)?
+    pub fn is_frugal_family(&self) -> bool {
+        matches!(
+            self,
+            Method::FrugalStatic
+                | Method::AdaFrugalDynRho
+                | Method::AdaFrugalDynT
+                | Method::AdaFrugalCombined
+        )
+    }
+
+    /// All Table-1/2 rows in paper order.
+    pub fn table_roster() -> &'static [Method] {
+        &[
+            Method::AdamW,
+            Method::GaLore,
+            Method::BAdam,
+            Method::FrugalStatic,
+            Method::AdaFrugalDynRho,
+            Method::AdaFrugalDynT,
+            Method::AdaFrugalCombined,
+        ]
+    }
+
+    /// HLO entry points this method needs.
+    pub fn entries(&self) -> Vec<&'static str> {
+        match self {
+            Method::AdamW => vec!["adamw", "eval"],
+            Method::GaLore | Method::BAdam => vec!["grad", "eval"],
+            m if m.is_frugal_family() => vec!["frugal", "eval", "scores", "grad"],
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in Method::table_roster() {
+            assert_eq!(&Method::parse(m.id()).unwrap(), m);
+        }
+        assert!(Method::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn variant_flags() {
+        assert!(Method::AdaFrugalCombined.dynamic_rho());
+        assert!(Method::AdaFrugalCombined.dynamic_t());
+        assert!(!Method::FrugalStatic.dynamic_rho());
+        assert!(!Method::AdamW.is_frugal_family());
+        assert!(Method::AdamW.is_fused());
+        assert!(!Method::GaLore.is_fused());
+    }
+
+    #[test]
+    fn roster_matches_paper_order() {
+        let labels: Vec<&str> = Method::table_roster().iter().map(|m| m.label()).collect();
+        assert_eq!(labels[0], "AdamW");
+        assert_eq!(labels[3], "FRUGAL (static, rho=0.25)");
+        assert_eq!(labels.len(), 7);
+    }
+}

@@ -1,0 +1,6 @@
+//! The training coordinator (Algorithm 1).
+pub mod method;
+pub mod trainer;
+pub mod checkpoint;
+pub mod finetune;
+pub mod memory_tracker;

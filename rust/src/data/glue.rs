@@ -1,0 +1,254 @@
+//! Synthetic GLUE-like benchmark suite (Table 3 substitution, DESIGN.md
+//! §4): eight tasks matching the GLUE roster's *shapes* — single- vs
+//! pair-sentence, binary/3-way classification and regression — with the
+//! matched metric per task (Matthews for CoLA, F1 for MRPC/QQP,
+//! Pearson/Spearman for STS-B, accuracy elsewhere).
+//!
+//! Each task plants a latent linear signal in "keyword" token groups so
+//! it is genuinely learnable by the encoder, with task-specific label
+//! noise controlling difficulty (calibrated so fine-tuned scores land in
+//! a GLUE-like 55–95 range and harder tasks show higher seed variance).
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    Accuracy,
+    Matthews,
+    F1,
+    PearsonSpearman,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TaskSpec {
+    pub name: &'static str,
+    /// number of classes; 1 = regression
+    pub n_cls: usize,
+    pub pair: bool,
+    pub metric: Metric,
+    /// label noise rate (classification) or noise std (regression)
+    pub noise: f64,
+    pub n_train: usize,
+    pub n_eval: usize,
+}
+
+/// The GLUE roster in the paper's Table 3 column order.
+pub const TASKS: &[TaskSpec] = &[
+    TaskSpec { name: "CoLA", n_cls: 2, pair: false, metric: Metric::Matthews,
+               noise: 0.18, n_train: 512, n_eval: 256 },
+    TaskSpec { name: "SST-2", n_cls: 2, pair: false, metric: Metric::Accuracy,
+               noise: 0.03, n_train: 512, n_eval: 256 },
+    TaskSpec { name: "MRPC", n_cls: 2, pair: true, metric: Metric::F1,
+               noise: 0.08, n_train: 512, n_eval: 256 },
+    TaskSpec { name: "STS-B", n_cls: 1, pair: true, metric: Metric::PearsonSpearman,
+               noise: 0.12, n_train: 512, n_eval: 256 },
+    TaskSpec { name: "QQP", n_cls: 2, pair: true, metric: Metric::Accuracy,
+               noise: 0.07, n_train: 512, n_eval: 256 },
+    TaskSpec { name: "MNLI-m", n_cls: 3, pair: true, metric: Metric::Accuracy,
+               noise: 0.10, n_train: 768, n_eval: 256 },
+    TaskSpec { name: "QNLI", n_cls: 2, pair: true, metric: Metric::Accuracy,
+               noise: 0.06, n_train: 512, n_eval: 256 },
+    TaskSpec { name: "RTE", n_cls: 2, pair: true, metric: Metric::Accuracy,
+               noise: 0.15, n_train: 384, n_eval: 256 },
+];
+
+pub fn task(name: &str) -> Option<&'static TaskSpec> {
+    TASKS.iter().find(|t| t.name == name)
+}
+
+/// One example: token ids (fixed seq len) + label (class id, or scaled
+/// regression target for n_cls == 1).
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub tokens: Vec<i32>,
+    pub label_i: i32,
+    pub label_f: f32,
+}
+
+pub struct TaskData {
+    pub spec: &'static TaskSpec,
+    pub train: Vec<Example>,
+    pub eval: Vec<Example>,
+}
+
+/// Generate a task dataset over the given vocab/seq geometry.
+///
+/// Construction: each class c owns a set of `keywords_per_class` token
+/// ids; an example of class c draws a class-mixture where its own
+/// keywords dominate, plus uniform filler. Pair tasks concatenate two
+/// "sentences" separated by an EOS token; for NLI-style tasks the second
+/// sentence's keyword overlap with the first encodes the label. The
+/// latent signal strength (and the label noise) sets task difficulty.
+pub fn generate(spec: &'static TaskSpec, vocab: usize, seq: usize, seed: u64) -> TaskData {
+    let mut rng = Rng::new(seed ^ 0x61ce);
+    let kw_per_class = 12usize;
+    let n_sig = spec.n_cls.max(2);
+    // disjoint keyword sets drawn from the mid-frequency band
+    let band = (vocab / 4)..(vocab / 4 + n_sig * kw_per_class);
+    let keywords: Vec<Vec<i32>> = (0..n_sig)
+        .map(|c| {
+            band.clone()
+                .skip(c * kw_per_class)
+                .take(kw_per_class)
+                .map(|t| t as i32)
+                .collect()
+        })
+        .collect();
+
+    let gen_split = |n: usize, rng: &mut Rng| -> Vec<Example> {
+        (0..n)
+            .map(|_| {
+                if spec.n_cls == 1 {
+                    // regression: similarity in [0, 1] = keyword overlap
+                    let sim = rng.f64();
+                    let ex = make_pair_example(&keywords, sim, vocab, seq, rng);
+                    let noisy = (sim + spec.noise * rng.normal()).clamp(0.0, 1.0);
+                    Example { tokens: ex, label_i: 0, label_f: noisy as f32 }
+                } else {
+                    let c = rng.below(spec.n_cls);
+                    let tokens = if spec.pair {
+                        let sim = if c == 0 { 0.15 } else if c == 1 { 0.85 } else { 0.5 };
+                        make_pair_example(&keywords, sim, vocab, seq, rng)
+                    } else {
+                        make_single_example(&keywords[c], vocab, seq, rng)
+                    };
+                    // label noise: flip to a random other class
+                    let label = if rng.f64() < spec.noise {
+                        (c + 1 + rng.below(spec.n_cls - 1)) % spec.n_cls
+                    } else {
+                        c
+                    };
+                    Example { tokens, label_i: label as i32, label_f: label as f32 }
+                }
+            })
+            .collect()
+    };
+
+    let train = gen_split(spec.n_train, &mut rng);
+    let eval = gen_split(spec.n_eval, &mut rng);
+    TaskData { spec, train, eval }
+}
+
+fn make_single_example(kws: &[i32], vocab: usize, seq: usize, rng: &mut Rng) -> Vec<i32> {
+    (0..seq)
+        .map(|_| {
+            if rng.f64() < 0.35 {
+                kws[rng.below(kws.len())]
+            } else {
+                rng.below(vocab) as i32
+            }
+        })
+        .collect()
+}
+
+/// Pair example: sentence A uses keyword set 0, sentence B shares A's
+/// keywords with probability `sim` (else set 1) — overlap encodes the
+/// label/similarity.
+fn make_pair_example(keywords: &[Vec<i32>], sim: f64, vocab: usize, seq: usize,
+                     rng: &mut Rng) -> Vec<i32> {
+    let half = seq / 2;
+    let mut out = Vec::with_capacity(seq);
+    for i in 0..seq {
+        if i == half {
+            out.push(super::tokenizer::EOS as i32);
+            continue;
+        }
+        let first = i < half;
+        let t = if rng.f64() < 0.35 {
+            let set = if first || rng.f64() < sim { &keywords[0] } else { &keywords[1] };
+            set[rng.below(set.len())]
+        } else {
+            rng.below(vocab) as i32
+        };
+        out.push(t);
+    }
+    out
+}
+
+/// Score predictions with the task's official metric (0-100 scale, like
+/// the paper's Table 3).
+pub fn score(spec: &TaskSpec, pred_cls: &[usize], truth_cls: &[usize],
+             pred_reg: &[f64], truth_reg: &[f64]) -> f64 {
+    100.0
+        * match spec.metric {
+            Metric::Accuracy => stats::accuracy(pred_cls, truth_cls),
+            Metric::Matthews => stats::matthews(pred_cls, truth_cls),
+            Metric::F1 => stats::f1(pred_cls, truth_cls),
+            Metric::PearsonSpearman => {
+                0.5 * (stats::pearson(pred_reg, truth_reg)
+                    + stats::spearman(pred_reg, truth_reg))
+            }
+        }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roster_matches_table3() {
+        let names: Vec<&str> = TASKS.iter().map(|t| t.name).collect();
+        assert_eq!(names, vec!["CoLA", "SST-2", "MRPC", "STS-B", "QQP", "MNLI-m",
+                               "QNLI", "RTE"]);
+        assert_eq!(task("STS-B").unwrap().n_cls, 1);
+        assert_eq!(task("MNLI-m").unwrap().n_cls, 3);
+        assert!(task("nope").is_none());
+    }
+
+    #[test]
+    fn generation_shapes_and_determinism() {
+        let spec = task("SST-2").unwrap();
+        let a = generate(spec, 512, 64, 0);
+        let b = generate(spec, 512, 64, 0);
+        assert_eq!(a.train.len(), spec.n_train);
+        assert_eq!(a.eval.len(), spec.n_eval);
+        assert_eq!(a.train[0].tokens, b.train[0].tokens);
+        for ex in a.train.iter().take(20) {
+            assert_eq!(ex.tokens.len(), 64);
+            assert!(ex.tokens.iter().all(|&t| (t as usize) < 512));
+            assert!((ex.label_i as usize) < 2);
+        }
+    }
+
+    #[test]
+    fn classes_are_separable_by_keyword_counts() {
+        // a trivial bag-of-keywords classifier must beat chance by a lot
+        let spec = task("SST-2").unwrap();
+        let d = generate(spec, 512, 64, 1);
+        let kws: Vec<Vec<i32>> = vec![
+            (128..140).collect(),
+            (140..152).collect(),
+        ];
+        let mut correct = 0;
+        for ex in &d.eval {
+            let c0 = ex.tokens.iter().filter(|t| kws[0].contains(t)).count();
+            let c1 = ex.tokens.iter().filter(|t| kws[1].contains(t)).count();
+            let pred = if c1 > c0 { 1 } else { 0 };
+            if pred == ex.label_i as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / d.eval.len() as f64;
+        assert!(acc > 0.8, "keyword classifier acc={acc}");
+    }
+
+    #[test]
+    fn regression_labels_in_range() {
+        let spec = task("STS-B").unwrap();
+        let d = generate(spec, 512, 64, 2);
+        for ex in &d.train {
+            assert!((0.0..=1.0).contains(&(ex.label_f as f64)));
+        }
+    }
+
+    #[test]
+    fn score_dispatches_metrics() {
+        let truth = vec![0, 1, 0, 1];
+        let pred = vec![0, 1, 0, 1];
+        assert_eq!(score(task("SST-2").unwrap(), &pred, &truth, &[], &[]), 100.0);
+        assert_eq!(score(task("CoLA").unwrap(), &pred, &truth, &[], &[]), 100.0);
+        let r = vec![0.1, 0.5, 0.9];
+        assert!((score(task("STS-B").unwrap(), &[], &[], &r, &r) - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,5 @@
+//! Synthetic data pipeline.
+pub mod corpus;
+pub mod tokenizer;
+pub mod loader;
+pub mod glue;

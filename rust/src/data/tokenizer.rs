@@ -1,0 +1,166 @@
+//! Word-level tokenizer with byte fallback, vocabulary trained by
+//! frequency on a corpus sample (a compact stand-in for the BPE
+//! tokenizers the paper's models use; what matters for optimizer
+//! dynamics is a Zipfian id stream of the configured vocab size).
+//!
+//! Ids: 0 = <pad>, 1 = <unk>, 2 = <eos> ('.'), 3..259 = byte fallback,
+//! 260.. = trained word vocabulary.
+
+use std::collections::HashMap;
+
+pub const PAD: u32 = 0;
+pub const UNK: u32 = 1;
+pub const EOS: u32 = 2;
+pub const BYTE_BASE: u32 = 3;
+pub const WORD_BASE: u32 = 259;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab_size: usize,
+    word_to_id: HashMap<String, u32>,
+    id_to_word: Vec<String>,
+}
+
+impl Tokenizer {
+    /// Train on `text`: the (vocab_size - WORD_BASE) most frequent words
+    /// get dedicated ids; everything else falls back to bytes.
+    pub fn train(text: &str, vocab_size: usize) -> Tokenizer {
+        assert!(vocab_size as u32 > WORD_BASE + 1, "vocab too small: {vocab_size}");
+        let mut freq: HashMap<&str, usize> = HashMap::new();
+        for w in text.split_whitespace() {
+            let w = w.trim_end_matches('.');
+            if !w.is_empty() {
+                *freq.entry(w).or_default() += 1;
+            }
+        }
+        let mut by_freq: Vec<(&str, usize)> = freq.into_iter().collect();
+        // sort by (freq desc, word asc) for determinism
+        by_freq.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        let n_words = vocab_size - WORD_BASE as usize;
+        let mut word_to_id = HashMap::new();
+        let mut id_to_word = Vec::new();
+        for (i, (w, _)) in by_freq.into_iter().take(n_words).enumerate() {
+            word_to_id.insert(w.to_string(), WORD_BASE + i as u32);
+            id_to_word.push(w.to_string());
+        }
+        Tokenizer { vocab_size, word_to_id, id_to_word }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    pub fn n_words(&self) -> usize {
+        self.id_to_word.len()
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids = Vec::new();
+        for token in text.split_whitespace() {
+            let (word, eos) = match token.strip_suffix('.') {
+                Some(w) => (w, true),
+                None => (token, false),
+            };
+            if !word.is_empty() {
+                match self.word_to_id.get(word) {
+                    Some(&id) => ids.push(id),
+                    None => {
+                        for b in word.bytes() {
+                            ids.push(BYTE_BASE + b as u32);
+                        }
+                    }
+                }
+            }
+            if eos {
+                ids.push(EOS);
+            }
+        }
+        ids
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut out = String::new();
+        let mut byte_run: Vec<u8> = Vec::new();
+        let flush = |byte_run: &mut Vec<u8>, out: &mut String| {
+            if !byte_run.is_empty() {
+                if !out.is_empty() && !out.ends_with(' ') {
+                    out.push(' ');
+                }
+                out.push_str(&String::from_utf8_lossy(byte_run));
+                byte_run.clear();
+            }
+        };
+        for &id in ids {
+            if (BYTE_BASE..WORD_BASE).contains(&id) {
+                byte_run.push((id - BYTE_BASE) as u8);
+                continue;
+            }
+            flush(&mut byte_run, &mut out);
+            match id {
+                PAD => {}
+                UNK => {
+                    if !out.is_empty() {
+                        out.push(' ');
+                    }
+                    out.push_str("<unk>");
+                }
+                EOS => out.push('.'),
+                id => {
+                    let w = &self.id_to_word[(id - WORD_BASE) as usize];
+                    if !out.is_empty() && !out.ends_with(' ') {
+                        out.push(' ');
+                    }
+                    out.push_str(w);
+                }
+            }
+        }
+        flush(&mut byte_run, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_known_words() {
+        let tok = Tokenizer::train("foo bar foo baz. foo bar", 300);
+        let ids = tok.encode("foo bar baz.");
+        assert_eq!(tok.decode(&ids), "foo bar baz.");
+        // most frequent word gets the first id
+        assert_eq!(tok.encode("foo")[0], WORD_BASE);
+    }
+
+    #[test]
+    fn byte_fallback_roundtrip() {
+        let tok = Tokenizer::train("a b c", 300);
+        let ids = tok.encode("zzz9");
+        assert!(ids.iter().all(|&i| (BYTE_BASE..WORD_BASE).contains(&i)));
+        assert_eq!(tok.decode(&ids), "zzz9");
+    }
+
+    #[test]
+    fn byte_fallback_handles_unicode() {
+        let tok = Tokenizer::train("a b", 300);
+        let ids = tok.encode("đạo");
+        assert_eq!(tok.decode(&ids), "đạo");
+    }
+
+    #[test]
+    fn ids_bounded_by_vocab() {
+        let text = "w1 w2 w3 w4 w5 w6 w7 w8 w1 w1 w2.";
+        let tok = Tokenizer::train(text, 264); // room for 5 words only
+        assert_eq!(tok.n_words(), 5);
+        for id in tok.encode(text) {
+            assert!((id as usize) < 264);
+        }
+    }
+
+    #[test]
+    fn deterministic_vocab_under_freq_ties() {
+        let a = Tokenizer::train("x y z", 300);
+        let b = Tokenizer::train("x y z", 300);
+        assert_eq!(a.encode("x y z"), b.encode("x y z"));
+    }
+}

@@ -1,0 +1,155 @@
+//! Ablations for the design choices the paper's analysis discusses:
+//! τ_low sensitivity (§5.5 robustness), S ∈ {Reset, Project} (Alg. 1),
+//! block-selection strategy, and non-linear ρ schedules (the
+//! conclusion's future-work direction).
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::controller::RhoSchedule;
+use crate::coordinator::method::Method;
+use crate::coordinator::trainer::Trainer;
+use crate::experiments::common::{self, TablePrinter};
+use crate::util::csv::CsvWriter;
+
+fn quick_cfg(base: &TrainConfig, quick: bool) -> TrainConfig {
+    let mut c = common::table_config(base, "english", true);
+    if !quick {
+        c.steps = 800;
+        c.t_start = 50;
+        c.t_max = 400;
+        c.n_eval = 50;
+    }
+    c
+}
+
+/// §5.5: how sensitive is Dynamic-T to τ_low?
+pub fn tau_sweep(base: &TrainConfig, quick: bool) -> Result<()> {
+    let cfg = quick_cfg(base, quick);
+    println!("\n=== Ablation — tau_low sensitivity (Dyn-T, {} steps) ===\n", cfg.steps);
+    let printer = TablePrinter::new(
+        &["tau_low", "final ppl", "final T", "#redefs", "time_s"],
+        &[10, 12, 9, 9, 9]);
+    let mut csv = CsvWriter::create(
+        common::results_dir().join("ablation_tau.csv"),
+        &["tau_low", "final_ppl", "final_t", "redefinitions", "time_s"],
+    )?;
+    for tau in [0.002, 0.004, 0.008, 0.016, 0.032] {
+        let mut c = cfg.clone();
+        c.tau_low = tau;
+        let mut t = Trainer::new(c, Method::AdaFrugalDynT)?;
+        t.quiet = true;
+        let r = t.run()?;
+        let final_t = r.t_events.last().map(|e| e.new_t).unwrap_or(cfg.t_start);
+        printer.row(&[
+            format!("{tau}"),
+            format!("{:.2}", r.final_ppl()),
+            final_t.to_string(),
+            r.redefinitions.to_string(),
+            format!("{:.1}", r.total_time_s),
+        ]);
+        csv.row(&[
+            format!("{tau}"),
+            format!("{:.4}", r.final_ppl()),
+            final_t.to_string(),
+            r.redefinitions.to_string(),
+            format!("{:.2}", r.total_time_s),
+        ])?;
+        csv.flush()?;
+    }
+    println!("\n(written to results/ablation_tau.csv)");
+    Ok(())
+}
+
+/// Algorithm 1's S ∈ {Reset, Project} state-management strategies.
+pub fn state_mgmt(base: &TrainConfig, quick: bool) -> Result<()> {
+    let cfg = quick_cfg(base, quick);
+    println!("\n=== Ablation — state management S in {{Reset, Project}} ({} steps) ===\n",
+             cfg.steps);
+    let printer = TablePrinter::new(&["S", "method", "final ppl"], &[10, 24, 12]);
+    let mut csv = CsvWriter::create(
+        common::results_dir().join("ablation_state.csv"),
+        &["state_mgmt", "method", "final_ppl"],
+    )?;
+    for s in ["reset", "project"] {
+        for m in [Method::FrugalStatic, Method::AdaFrugalCombined] {
+            let mut c = cfg.clone();
+            c.state_mgmt = s.into();
+            let mut t = Trainer::new(c, m)?;
+            t.quiet = true;
+            let r = t.run()?;
+            printer.row(&[s.to_string(), m.label().to_string(),
+                          format!("{:.2}", r.final_ppl())]);
+            csv.row(&[s.to_string(), m.id().to_string(),
+                      format!("{:.4}", r.final_ppl())])?;
+            csv.flush()?;
+        }
+    }
+    println!("\n(written to results/ablation_state.csv)");
+    Ok(())
+}
+
+/// Block-selection strategy: Random (FRUGAL default) vs TopK gradient
+/// energy vs RoundRobin.
+pub fn strategy_sweep(base: &TrainConfig, quick: bool) -> Result<()> {
+    let cfg = quick_cfg(base, quick);
+    println!("\n=== Ablation — block selection strategy ({} steps) ===\n", cfg.steps);
+    let printer = TablePrinter::new(&["strategy", "final ppl", "time_s"], &[12, 12, 9]);
+    let mut csv = CsvWriter::create(
+        common::results_dir().join("ablation_strategy.csv"),
+        &["strategy", "final_ppl", "time_s"],
+    )?;
+    for strat in ["random", "topk", "roundrobin"] {
+        let mut c = cfg.clone();
+        c.strategy = strat.into();
+        let mut t = Trainer::new(c, Method::FrugalStatic)?;
+        t.quiet = true;
+        let r = t.run()?;
+        printer.row(&[strat.to_string(), format!("{:.2}", r.final_ppl()),
+                      format!("{:.1}", r.total_time_s)]);
+        csv.row(&[strat.to_string(), format!("{:.4}", r.final_ppl()),
+                  format!("{:.2}", r.total_time_s)])?;
+        csv.flush()?;
+    }
+    println!("\n(written to results/ablation_strategy.csv)");
+    Ok(())
+}
+
+/// Future-work extension: non-linear ρ schedules (cosine vs linear vs
+/// constant), compared at matched end-points.
+pub fn rho_schedules(base: &TrainConfig, quick: bool) -> Result<()> {
+    let cfg = quick_cfg(base, quick);
+    println!("\n=== Ablation — rho schedule shape ({} steps) ===\n", cfg.steps);
+    let printer = TablePrinter::new(
+        &["schedule", "final ppl", "mem first", "mem last"], &[12, 12, 12, 12]);
+    let mut csv = CsvWriter::create(
+        common::results_dir().join("ablation_rho_schedule.csv"),
+        &["schedule", "final_ppl", "memory_first", "memory_last"],
+    )?;
+    for shape in ["constant", "linear", "cosine"] {
+        let mut c = cfg.clone();
+        let m = if shape == "constant" { Method::FrugalStatic } else { Method::AdaFrugalDynRho };
+        let mut t = Trainer::new(c.clone(), m)?;
+        if shape == "cosine" {
+            t.set_rho_schedule(RhoSchedule::cosine(c.rho, c.rho_end, c.steps));
+        }
+        t.quiet = true;
+        let r = t.run()?;
+        printer.row(&[
+            shape.to_string(),
+            format!("{:.2}", r.final_ppl()),
+            format!("{:.2}MB", r.memory.first_bytes() as f64 / 1e6),
+            format!("{:.2}MB", r.memory.last_bytes() as f64 / 1e6),
+        ]);
+        csv.row(&[
+            shape.to_string(),
+            format!("{:.4}", r.final_ppl()),
+            r.memory.first_bytes().to_string(),
+            r.memory.last_bytes().to_string(),
+        ])?;
+        csv.flush()?;
+        c.steps = cfg.steps; // silence unused warnings pattern
+    }
+    println!("\n(written to results/ablation_rho_schedule.csv)");
+    Ok(())
+}

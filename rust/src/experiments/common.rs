@@ -1,0 +1,156 @@
+//! Shared experiment plumbing: run configs, result serialization, table
+//! printing.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::method::Method;
+use crate::coordinator::trainer::{RunResult, Trainer};
+use crate::util::json::{self, Value};
+use crate::util::log::JsonlWriter;
+
+/// The paper's checkpoint grid as fractions of the run (4k/20k/40k/100k/
+/// 200k of 200k).
+pub const CHECKPOINT_FRACS: [f64; 5] = [0.02, 0.10, 0.20, 0.50, 1.0];
+pub const CHECKPOINT_LABELS: [&str; 5] = ["4k", "20k", "40k", "100k", "200k"];
+
+/// Table-run config: paper §4.3 hyperparameters at 1:100 scale.
+pub fn table_config(base: &TrainConfig, corpus: &str, quick: bool) -> TrainConfig {
+    let mut c = base.clone();
+    c.corpus = corpus.into();
+    if quick {
+        c.steps = 150;
+        c.t_start = 25;
+        c.t_max = 100;
+        c.n_eval = 25;
+        c.warmup_steps = 20;
+    } else {
+        c.steps = 2000;
+        c.t_start = 100; // paper T_start=100 (static baseline uses T=200)
+        c.t_max = 800;
+        c.n_eval = 100;
+        c.warmup_steps = 100;
+    }
+    c
+}
+
+/// The static-FRUGAL baseline uses T=200 (paper §4.2); dynamic-T starts
+/// at T=100. Mirror that split per method.
+pub fn configure_for_method(mut cfg: TrainConfig, m: Method, quick: bool) -> TrainConfig {
+    if !m.dynamic_t() {
+        cfg.t_start = if quick { 50 } else { 200 };
+    }
+    cfg
+}
+
+/// Run one method and return its result.
+pub fn run_method(cfg: &TrainConfig, m: Method, quick: bool) -> Result<RunResult> {
+    let cfg = configure_for_method(cfg.clone(), m, quick);
+    let mut t = Trainer::new(cfg, m)?;
+    t.quiet = true;
+    t.run()
+}
+
+/// Steps corresponding to the paper's checkpoint columns.
+pub fn checkpoint_steps(total: usize) -> Vec<usize> {
+    CHECKPOINT_FRACS
+        .iter()
+        .map(|f| ((total as f64 * f).round() as usize).max(1))
+        .collect()
+}
+
+pub fn results_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from("results")
+}
+
+/// Serialize a run to JSONL (one line per eval point + a summary line).
+pub fn write_run_jsonl(path: &str, cfg: &TrainConfig, r: &RunResult) -> Result<()> {
+    let mut w = JsonlWriter::create(path)?;
+    for e in &r.evals {
+        w.write(&json::obj(vec![
+            ("kind", json::s("eval")),
+            ("method", json::s(r.method.id())),
+            ("step", json::num(e.step as f64)),
+            ("val_loss", json::num(e.val_loss)),
+            ("ppl", json::num(e.ppl)),
+            ("memory_bytes", json::num(e.memory_bytes as f64)),
+            ("elapsed_s", json::num(e.elapsed_s)),
+        ]))?;
+    }
+    for s in &r.steps {
+        w.write(&json::obj(vec![
+            ("kind", json::s("step")),
+            ("step", json::num(s.step as f64)),
+            ("train_loss", json::num(s.train_loss as f64)),
+            ("rho", json::num(s.rho)),
+            ("t", json::num(s.t_current as f64)),
+        ]))?;
+    }
+    w.write(&summary_json(cfg, r))?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn summary_json(cfg: &TrainConfig, r: &RunResult) -> Value {
+    json::obj(vec![
+        ("kind", json::s("summary")),
+        ("method", json::s(r.method.id())),
+        ("preset", json::s(&cfg.preset)),
+        ("corpus", json::s(&cfg.corpus)),
+        ("steps", json::num(cfg.steps as f64)),
+        ("final_ppl", json::num(r.final_ppl())),
+        ("redefinitions", json::num(r.redefinitions as f64)),
+        ("total_time_s", json::num(r.total_time_s)),
+        ("step_time_s", json::num(r.step_time_s)),
+        ("redef_time_s", json::num(r.redef_time_s)),
+        ("memory_first", json::num(r.memory.first_bytes() as f64)),
+        ("memory_last", json::num(r.memory.last_bytes() as f64)),
+        ("memory_peak", json::num(r.memory.peak_bytes as f64)),
+    ])
+}
+
+/// Fixed-width table printer.
+pub struct TablePrinter {
+    widths: Vec<usize>,
+}
+
+impl TablePrinter {
+    pub fn new(header: &[&str], widths: &[usize]) -> TablePrinter {
+        let t = TablePrinter { widths: widths.to_vec() };
+        t.row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + widths.len()));
+        t
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        let line: Vec<String> = cells
+            .iter()
+            .zip(&self.widths)
+            .map(|(c, w)| format!("{c:<w$}", w = w))
+            .collect();
+        println!("{}", line.join(" "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_grid() {
+        assert_eq!(checkpoint_steps(2000), vec![40, 200, 400, 1000, 2000]);
+        assert_eq!(checkpoint_steps(200_000), vec![4000, 20_000, 40_000, 100_000, 200_000]);
+    }
+
+    #[test]
+    fn method_t_configuration() {
+        let base = TrainConfig::default();
+        let stat = configure_for_method(table_config(&base, "english", false),
+                                        Method::FrugalStatic, false);
+        assert_eq!(stat.t_start, 200);
+        let dyn_t = configure_for_method(table_config(&base, "english", false),
+                                         Method::AdaFrugalDynT, false);
+        assert_eq!(dyn_t.t_start, 100);
+        assert_eq!(dyn_t.t_max, 800);
+    }
+}

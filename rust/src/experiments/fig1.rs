@@ -1,0 +1,50 @@
+//! Figure 1: peak optimizer-memory trajectory over training steps —
+//! AdamW vs static FRUGAL vs AdaFRUGAL-Dynamic-ρ. The paper's plot shows
+//! Dynamic-ρ starting at the static footprint and stepping down as ρ(k)
+//! decays; the series here is the measured per-eval memory samples.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::method::Method;
+use crate::experiments::common;
+use crate::util::csv::CsvWriter;
+
+pub fn run(base: &TrainConfig, quick: bool) -> Result<()> {
+    let cfg = common::table_config(base, "english", quick);
+    println!("\n=== Fig. 1 — Optimizer memory over steps (preset {}, {} steps) ===\n",
+             cfg.preset, cfg.steps);
+    let methods = [Method::AdamW, Method::FrugalStatic, Method::AdaFrugalDynRho];
+    let mut csv = CsvWriter::create(
+        common::results_dir().join("fig1.csv"),
+        &["method", "step", "memory_bytes"],
+    )?;
+    let mut series = Vec::new();
+    for m in methods {
+        let r = common::run_method(&cfg, m, quick)?;
+        for s in &r.memory.samples {
+            csv.row(&[m.id().to_string(), s.step.to_string(), s.bytes.to_string()])?;
+        }
+        csv.flush()?;
+        series.push((m, r));
+    }
+
+    // ASCII rendering of the trajectories (normalized to AdamW = 1.0)
+    let adamw_bytes = series[0].1.memory.peak_bytes as f64;
+    println!("step      " );
+    for (m, r) in &series {
+        print!("{:<22}", m.label());
+        for s in &r.memory.samples {
+            let frac = s.bytes as f64 / adamw_bytes;
+            print!(" {:.2}", frac);
+        }
+        println!();
+    }
+    println!("\n  (each column = one eval point; values = fraction of AdamW optimizer memory)");
+    for (m, r) in &series {
+        println!("  {:<22} peak {:>10} bytes, final {:>10} bytes", m.label(),
+                 r.memory.peak_bytes, r.memory.last_bytes());
+    }
+    println!("\n(written to results/fig1.csv)");
+    Ok(())
+}

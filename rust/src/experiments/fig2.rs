@@ -1,0 +1,75 @@
+//! Figure 2: relative training time, normalized to static FRUGAL T=200.
+//! The paper compares {FRUGAL T=100, T=200 (=1.0), T=800, Dynamic-T}:
+//! Dynamic-T should approach the manually-tuned T=800 wall-clock without
+//! prior knowledge. Wall-clock here is measured end-to-end on this host,
+//! with the step/redefinition breakdown reported alongside.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::method::Method;
+use crate::coordinator::trainer::Trainer;
+use crate::experiments::common::{self, TablePrinter};
+use crate::util::csv::CsvWriter;
+
+pub fn run(base: &TrainConfig, quick: bool) -> Result<()> {
+    let cfg = common::table_config(base, "english", quick);
+    println!("\n=== Fig. 2 — Relative training time vs T policy (preset {}, {} steps) ===\n",
+             cfg.preset, cfg.steps);
+
+    // (label, t_start, dynamic)
+    let t_scale = if quick { 4 } else { 1 };
+    let variants: Vec<(String, usize, bool)> = vec![
+        (format!("FRUGAL T={}", 100 / t_scale), 100 / t_scale, false),
+        (format!("FRUGAL T={}", 200 / t_scale), 200 / t_scale, false),
+        (format!("FRUGAL T={}", 800 / t_scale), 800 / t_scale, false),
+        (format!("AdaFRUGAL-Dyn-T (T0={})", 100 / t_scale), 100 / t_scale, true),
+    ];
+
+    let mut rows = Vec::new();
+    for (label, t_start, dynamic) in &variants {
+        let mut c = cfg.clone();
+        c.t_start = *t_start;
+        c.t_max = if *dynamic { 800 / t_scale } else { *t_start };
+        let method = if *dynamic { Method::AdaFrugalDynT } else { Method::FrugalStatic };
+        let mut tr = Trainer::new(c, method)?;
+        tr.quiet = true;
+        let r = tr.run()?;
+        rows.push((label.clone(), r));
+    }
+
+    let baseline_time = rows[1].1.total_time_s; // T=200 is the 1.0 reference
+    let printer = TablePrinter::new(
+        &["Policy", "rel.time", "total_s", "step_s", "redef_s", "#redefs", "final ppl"],
+        &[26, 10, 9, 9, 9, 9, 10],
+    );
+    let mut csv = CsvWriter::create(
+        common::results_dir().join("fig2.csv"),
+        &["policy", "relative_time", "total_s", "step_s", "redef_s",
+          "redefinitions", "final_ppl"],
+    )?;
+    for (label, r) in &rows {
+        let rel = r.total_time_s / baseline_time;
+        printer.row(&[
+            label.clone(),
+            format!("{rel:.3}"),
+            format!("{:.1}", r.total_time_s),
+            format!("{:.1}", r.step_time_s),
+            format!("{:.2}", r.redef_time_s),
+            r.redefinitions.to_string(),
+            format!("{:.2}", r.final_ppl()),
+        ]);
+        csv.row(&[
+            label.clone(),
+            format!("{rel:.4}"),
+            format!("{:.2}", r.total_time_s),
+            format!("{:.2}", r.step_time_s),
+            format!("{:.3}", r.redef_time_s),
+            r.redefinitions.to_string(),
+            format!("{:.3}", r.final_ppl()),
+        ])?;
+        csv.flush()?;
+    }
+    println!("\n(written to results/fig2.csv)");
+    Ok(())
+}

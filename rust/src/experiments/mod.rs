@@ -1,0 +1,17 @@
+//! Regeneration drivers for every table and figure in the paper's
+//! evaluation (§5), plus the ablations its analysis sections discuss.
+//! Each driver prints the paper-style rows AND writes a CSV under
+//! `results/` (EXPERIMENTS.md records paper-vs-measured).
+//!
+//! Scale: paper runs are 200k steps of LLaMA-130M; these run the `micro`
+//! preset at 1:100 steps (checkpoints 40/200/400/1k/2k ↔ the paper's
+//! 4k/20k/40k/100k/200k) — see DESIGN.md §4. `--quick` shrinks further
+//! for smoke runs.
+
+pub mod ablation;
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod scaling;
+pub mod table1;
+pub mod table3;

@@ -1,0 +1,65 @@
+//! §5.6 scaling analysis: extrapolate the measured Dynamic-ρ memory
+//! saving up the model ladder with the O(L·ρ·h²) law, reproducing the
+//! paper's "0.15 GB at 130M → ~5.7 GB at 7B" arithmetic alongside our
+//! own measured base point.
+
+use anyhow::Result;
+
+use crate::experiments::common::{self, TablePrinter};
+use crate::model::memory::{self, ScalingPoint, SCALING_LADDER};
+use crate::runtime::Manifest;
+use crate::util::csv::CsvWriter;
+
+pub fn run() -> Result<()> {
+    println!("\n=== §5.6 — Scaling extrapolation of Dynamic-rho memory savings ===\n");
+
+    // paper arithmetic reproduction (their base uses L=24-equivalent)
+    let paper_base = ScalingPoint { name: "paper-base", n_layers: 24, hidden: 768 };
+    let seven_b = SCALING_LADDER[3];
+    let paper_factor = memory::scaling_factor(paper_base, seven_b);
+    println!("paper arithmetic: (32/24)*(4096/768)^2 = {paper_factor:.1} ; \
+              0.15 GB * {paper_factor:.1} = {:.1} GB (paper says ~5.7 GB)\n",
+             0.15 * paper_factor);
+
+    // our measured base point: micro manifest at rho 0.25 -> 0.05
+    let man = Manifest::load("artifacts", "micro")?;
+    let hi = memory::frugal_bytes_at_rho(&man, 0.25);
+    let lo = memory::frugal_bytes_at_rho(&man, 0.05);
+    let saving = hi - lo;
+    println!("measured base ({}, d={} L={}): rho 0.25 -> 0.05 saves {:.3} MB\n",
+             man.name, man.model.d_model, man.model.n_layers, saving as f64 / 1e6);
+
+    let base = ScalingPoint {
+        name: "measured",
+        n_layers: man.model.n_layers,
+        hidden: man.model.d_model,
+    };
+    let printer = TablePrinter::new(
+        &["scale", "layers", "hidden", "factor", "extrapolated saving"],
+        &[14, 8, 8, 10, 22]);
+    let mut csv = CsvWriter::create(
+        common::results_dir().join("scaling.csv"),
+        &["scale", "layers", "hidden", "factor", "saving_bytes"],
+    )?;
+    for &target in SCALING_LADDER {
+        let f = memory::scaling_factor(base, target);
+        let extr = memory::extrapolate_saving(saving, base, target);
+        printer.row(&[
+            target.name.to_string(),
+            target.n_layers.to_string(),
+            target.hidden.to_string(),
+            format!("{f:.1}"),
+            format!("{:.2} GB", extr / 1e9),
+        ]);
+        csv.row(&[
+            target.name.to_string(),
+            target.n_layers.to_string(),
+            target.hidden.to_string(),
+            format!("{f:.2}"),
+            format!("{extr:.0}"),
+        ])?;
+    }
+    csv.flush()?;
+    println!("\n(written to results/scaling.csv)");
+    Ok(())
+}

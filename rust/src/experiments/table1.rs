@@ -1,0 +1,58 @@
+//! Tables 1 & 2: validation perplexity at the paper's checkpoint grid +
+//! optimizer memory, for all seven methods, on the English-like (C4
+//! proxy) or Vietnamese-like (VietVault proxy) corpus.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::method::Method;
+use crate::experiments::common::{self, TablePrinter};
+use crate::util::csv::CsvWriter;
+
+pub fn run(base: &TrainConfig, corpus: &str, tag: &str, quick: bool) -> Result<()> {
+    let cfg = common::table_config(base, corpus, quick);
+    let checkpoints = common::checkpoint_steps(cfg.steps);
+    println!(
+        "\n=== {} — Validation Perplexity + Optimizer Memory ({}-like corpus, preset {}, {} steps ~ paper 200k) ===\n",
+        tag, corpus, cfg.preset, cfg.steps
+    );
+
+    let mut csv = CsvWriter::create(
+        common::results_dir().join(format!("{tag}.csv")),
+        &["method", "memory_label", "4k", "20k", "40k", "100k", "200k",
+          "redefinitions", "time_s"],
+    )?;
+
+    let widths = [28, 22, 8, 8, 8, 8, 8];
+    let t = TablePrinter::new(
+        &["Method", "Memory", "4k", "20k", "40k", "100k", "200k"], &widths);
+
+    for &m in Method::table_roster() {
+        let r = common::run_method(&cfg, m, quick)?;
+        let ppls: Vec<f64> = checkpoints.iter().map(|&s| r.ppl_at(s)).collect();
+        let mem = r.memory.label();
+        t.row(&[
+            m.label().to_string(),
+            mem.clone(),
+            format!("{:.2}", ppls[0]),
+            format!("{:.2}", ppls[1]),
+            format!("{:.2}", ppls[2]),
+            format!("{:.2}", ppls[3]),
+            format!("{:.2}", ppls[4]),
+        ]);
+        csv.row(&[
+            m.id().to_string(),
+            mem,
+            format!("{:.4}", ppls[0]),
+            format!("{:.4}", ppls[1]),
+            format!("{:.4}", ppls[2]),
+            format!("{:.4}", ppls[3]),
+            format!("{:.4}", ppls[4]),
+            r.redefinitions.to_string(),
+            format!("{:.1}", r.total_time_s),
+        ])?;
+        csv.flush()?;
+    }
+    println!("\n(written to results/{tag}.csv)");
+    Ok(())
+}

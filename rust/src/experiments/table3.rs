@@ -1,0 +1,80 @@
+//! Table 3: GLUE-style fine-tuning (QV rank-8 setting) — mean ± std over
+//! 3 seeds for 7 methods × 8 tasks, each scored with its official
+//! metric.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::finetune::{FineTuner, FtMethod};
+use crate::data::glue;
+use crate::experiments::common::{self, TablePrinter};
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+
+pub fn ft_config(base: &TrainConfig, quick: bool) -> TrainConfig {
+    let mut c = base.clone();
+    c.steps = if quick { 60 } else { 240 };
+    c.warmup_steps = if quick { 6 } else { 24 };
+    c.t_start = if quick { 20 } else { 60 };
+    c.t_max = c.steps;
+    c.n_eval = if quick { 20 } else { 50 };
+    c.lr = 2e-3;
+    c.lr_free = 2e-4;
+    // rho decay over the short run (rank-8-analogue: blocks, not ranks)
+    c.rho = 0.25;
+    c.rho_end = 0.05;
+    c
+}
+
+pub fn run(base: &TrainConfig, quick: bool) -> Result<()> {
+    let cfg = ft_config(base, quick);
+    let seeds: u64 = if quick { 1 } else { 2 };
+    println!(
+        "\n=== Table 3 — GLUE-like fine-tuning (preset {}, {} steps, {} seeds) ===\n",
+        cfg.preset, cfg.steps, seeds
+    );
+
+    let methods = FtMethod::roster();
+    let mut csv = CsvWriter::create(
+        common::results_dir().join("table3.csv"),
+        &["method", "task", "mean", "std", "seeds"],
+    )?;
+
+    let mut header: Vec<&str> = vec!["Method"];
+    header.extend(glue::TASKS.iter().map(|t| t.name));
+    header.push("Avg.");
+    let widths: Vec<usize> = std::iter::once(22usize)
+        .chain(std::iter::repeat(10).take(glue::TASKS.len() + 1))
+        .collect();
+    let printer = TablePrinter::new(&header, &widths);
+
+    for m in methods {
+        let mut cells = vec![m.label().to_string()];
+        let mut task_means = Vec::new();
+        for task in glue::TASKS {
+            let mut scores = Vec::new();
+            for seed in 0..seeds {
+                let mut c = cfg.clone();
+                c.seed = 100 + seed;
+                let mut ft = FineTuner::new(c, m, task.name, seed)?;
+                scores.push(ft.run()?.score);
+            }
+            let mean = stats::mean(&scores);
+            let sd = stats::std_dev(&scores);
+            task_means.push(mean);
+            cells.push(format!("{mean:.1}±{sd:.1}"));
+            csv.row(&[
+                m.label().to_string(),
+                task.name.to_string(),
+                format!("{mean:.3}"),
+                format!("{sd:.3}"),
+                seeds.to_string(),
+            ])?;
+            csv.flush()?;
+        }
+        cells.push(format!("{:.1}", stats::mean(&task_means)));
+        printer.row(&cells);
+    }
+    println!("\n(written to results/table3.csv)");
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! # AdaFRUGAL
+//!
+//! Adaptive memory-efficient LLM training: a production-shaped
+//! reproduction of *"AdaFRUGAL: Adaptive Memory-Efficient Training with
+//! Dynamic Control"* (Bui & Ta, 2025), built as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! - **Layer 3 (this crate)** — the training coordinator: the paper's
+//!   contribution (dynamic state-full-ratio ρ and loss-aware update
+//!   frequency T, [`controller`]), Algorithm 1's integrated loop
+//!   ([`coordinator`]), the projection subsystem ([`projection`]), the
+//!   baseline optimizer zoo ([`optim`]), the data pipeline ([`data`]),
+//!   the optimizer-memory accounting model ([`model`]), and the
+//!   experiment harness ([`experiments`]).
+//! - **Layer 2** — a LLaMA-style transformer + fused optimizer-step
+//!   graphs in JAX (`python/compile/model.py`), AOT-lowered once to HLO
+//!   text artifacts.
+//! - **Layer 1** — Pallas kernels (`python/compile/kernels/`): the fused
+//!   FRUGAL hybrid update (gradient splitting + AdamW + SignSGD in one
+//!   memory pass) and RMSNorm.
+//!
+//! Python never runs on the step path: [`runtime`] loads the artifacts
+//! through the PJRT C API (`xla` crate) and the whole training loop is
+//! device-buffer-resident (see `DESIGN.md`).
+
+pub mod config;
+pub mod controller;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod model;
+pub mod optim;
+pub mod projection;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use config::TrainConfig;
+pub use controller::{AdaFrugalController, RhoSchedule, TController};

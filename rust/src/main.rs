@@ -1,0 +1,293 @@
+//! `adafrugal` — the launcher CLI.
+//!
+//! ```text
+//! adafrugal train  [--method combined] [--preset micro] [--steps N]
+//!                  [--config run.toml] [--set train.key=value ...]
+//!                  [--out results/run] [--save-checkpoint path]
+//!                  [--from-checkpoint path] [--corpus english|vietnamese]
+//! adafrugal finetune --task SST-2 [--ft-method frugal] [--seeds 3]
+//! adafrugal exp    table1|table2|table3|fig1|fig2|ablation-tau|
+//!                  ablation-state|ablation-strategy|scaling [--quick]
+//! adafrugal info   [--preset micro]
+//! ```
+
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::checkpoint;
+use adafrugal::coordinator::finetune::{FineTuner, FtMethod};
+use adafrugal::coordinator::method::Method;
+use adafrugal::coordinator::trainer::Trainer;
+use adafrugal::experiments;
+use adafrugal::info;
+
+/// Minimal flag parser: `--key value` pairs + positional args.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, String)>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut switches = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // switch-style flags take no value
+                if matches!(name, "quick" | "quiet" | "verbose") {
+                    switches.push(name.to_string());
+                } else if i + 1 < argv.len() {
+                    flags.push((name.to_string(), argv[i + 1].clone()));
+                    i += 1;
+                } else {
+                    switches.push(name.to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args { positional, flags, switches }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+
+    fn all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
+    }
+}
+
+fn build_config(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        TrainConfig::from_map(&adafrugal::config::parse_file(path)?)?
+    } else {
+        TrainConfig::default()
+    };
+    for (flag, key) in [
+        ("preset", "preset"),
+        ("steps", "steps"),
+        ("seed", "seed"),
+        ("corpus", "corpus"),
+        ("artifacts", "artifacts_dir"),
+        ("lr", "lr"),
+        ("rho", "rho"),
+        ("rho-end", "rho_end"),
+        ("t-start", "t_start"),
+        ("t-max", "t_max"),
+        ("strategy", "strategy"),
+        ("state-mgmt", "state_mgmt"),
+    ] {
+        if let Some(v) = args.get(flag) {
+            cfg.set(key, v).with_context(|| format!("--{flag} {v}"))?;
+        }
+    }
+    // generic overrides: --set train.key=value
+    for s in args.all("set") {
+        let (k, v) = s.split_once('=').context("--set wants key=value")?;
+        let k = k.strip_prefix("train.").unwrap_or(k);
+        cfg.set(k, v)?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let method = Method::parse(args.get("method").unwrap_or("combined"))?;
+    info!("training {} on preset {} for {} steps", method.label(), cfg.preset, cfg.steps);
+    let mut trainer = Trainer::new(cfg.clone(), method)?;
+    trainer.quiet = args.has("quiet");
+    if let Some(ck) = args.get("from-checkpoint") {
+        let c = checkpoint::load(ck)?;
+        trainer.restore_params(&c.data)?;
+        info!("restored params from {ck}");
+    }
+    let result = trainer.run()?;
+
+    println!("\nmethod: {}", method.label());
+    println!("final val ppl: {:.2}", result.final_ppl());
+    println!("memory: {}", result.memory.label());
+    println!(
+        "time: {:.1}s total ({:.1}s step / {:.1}s redefine / {:.1}s eval), {} redefinitions",
+        result.total_time_s, result.step_time_s, result.redef_time_s, result.eval_time_s,
+        result.redefinitions
+    );
+    for e in &result.t_events {
+        println!("  T event @step {}: {} -> {} (dL_rel {:.5})",
+                 e.step, e.old_t, e.new_t, e.delta_l_rel);
+    }
+
+    if let Some(out) = args.get("out") {
+        experiments::common::write_run_jsonl(out, &cfg, &result)?;
+        info!("wrote metrics to {out}");
+    }
+    if let Some(path) = args.get("save-checkpoint") {
+        let params = trainer.params_host()?;
+        let hdr = checkpoint::train_header(
+            &cfg.preset, method.id(), cfg.steps,
+            result.evals.last().map(|e| e.val_loss).unwrap_or(f64::NAN));
+        checkpoint::save(path, &hdr, &params)?;
+        info!("saved checkpoint to {path}");
+    }
+    Ok(())
+}
+
+pub fn parse_ft_method(s: &str) -> Result<FtMethod> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "full" | "adamw" => FtMethod::FullAdamW,
+        "lora" => FtMethod::Lora,
+        "galore" => FtMethod::GaLore,
+        "frugal" => FtMethod::Frugal { dynamic_rho: false, dynamic_t: false },
+        "dyn-rho" | "dyn_rho" => FtMethod::Frugal { dynamic_rho: true, dynamic_t: false },
+        "dyn-t" | "dyn_t" => FtMethod::Frugal { dynamic_rho: false, dynamic_t: true },
+        "combined" => FtMethod::Frugal { dynamic_rho: true, dynamic_t: true },
+        _ => bail!("unknown ft-method {s:?}"),
+    })
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let mut cfg = build_config(args)?;
+    if args.get("steps").is_none() && args.get("config").is_none() {
+        cfg.steps = 200; // short fine-tuning defaults (§4.3)
+        cfg.warmup_steps = 20;
+        cfg.t_start = 50;
+        cfg.t_max = 200;
+        cfg.n_eval = 50;
+        cfg.lr = 2e-3;
+    }
+    let task = args.get("task").unwrap_or("SST-2");
+    let ft_method = parse_ft_method(args.get("ft-method").unwrap_or("frugal"))?;
+    let seeds: usize = args.get("seeds").unwrap_or("1").parse()?;
+    let mut scores = Vec::new();
+    for seed in 0..seeds {
+        let mut cfg_s = cfg.clone();
+        cfg_s.seed = cfg.seed + seed as u64;
+        let mut ft = FineTuner::new(cfg_s, ft_method, task, seed as u64)?;
+        let r = ft.run()?;
+        println!("{task} {} seed {}: {:.1}", ft_method.label(), seed, r.score);
+        scores.push(r.score);
+    }
+    println!(
+        "{task} {}: {:.1} ± {:.1} over {} seeds",
+        ft_method.label(),
+        adafrugal::util::stats::mean(&scores),
+        adafrugal::util::stats::std_dev(&scores),
+        seeds
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).context(
+        "usage: adafrugal exp <table1|table2|table3|fig1|fig2|ablation-tau|\
+         ablation-state|ablation-strategy|ablation-rho-schedule|scaling>",
+    )?;
+    let quick = args.has("quick");
+    let cfg = build_config(args)?;
+    match which.as_str() {
+        "table1" => experiments::table1::run(&cfg, "english", "table1", quick)?,
+        "table2" => experiments::table1::run(&cfg, "vietnamese", "table2", quick)?,
+        "table3" => experiments::table3::run(&cfg, quick)?,
+        "fig1" => experiments::fig1::run(&cfg, quick)?,
+        "fig2" => experiments::fig2::run(&cfg, quick)?,
+        "ablation-tau" => experiments::ablation::tau_sweep(&cfg, quick)?,
+        "ablation-state" => experiments::ablation::state_mgmt(&cfg, quick)?,
+        "ablation-strategy" => experiments::ablation::strategy_sweep(&cfg, quick)?,
+        "ablation-rho-schedule" => experiments::ablation::rho_schedules(&cfg, quick)?,
+        "scaling" => experiments::scaling::run()?,
+        _ => bail!("unknown experiment {which:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let preset = args.get("preset").unwrap_or("micro");
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let man = adafrugal::runtime::Manifest::load(dir, preset)?;
+    println!("preset: {} (task {})", man.name, man.task);
+    println!(
+        "model: d={} L={} heads={} ffn={} vocab={} seq={} batch={}",
+        man.model.d_model, man.model.n_layers, man.model.n_heads, man.model.d_ffn,
+        man.model.vocab, man.model.seq, man.model.batch
+    );
+    println!("params: {} ({:.2}M)", man.n_params, man.n_params as f64 / 1e6);
+    println!("maskable: {} params, {} column blocks of {}",
+             man.maskable().count(), man.total_blocks(), man.block_size);
+    println!("state vector: {} f32 ({:.1} MB on device)",
+             man.state_len, man.state_len as f64 * 4.0 / 1e6);
+    let adamw = adafrugal::model::memory::adamw_bytes(&man);
+    println!("optimizer memory: AdamW {:.3} MB", adamw as f64 / 1e6);
+    for rho in [0.25, 0.05] {
+        let b = adafrugal::model::memory::frugal_bytes_at_rho(&man, rho);
+        println!("  FRUGAL rho={rho}: {:.3} MB ({:.2}x)", b as f64 / 1e6,
+                 b as f64 / adamw as f64);
+    }
+    println!("entrypoints: {:?}", man.entrypoints.keys().collect::<Vec<_>>());
+    Ok(())
+}
+
+fn usage() -> &'static str {
+    "adafrugal — adaptive memory-efficient training (AdaFRUGAL reproduction)
+
+USAGE:
+  adafrugal train    [--method adamw|frugal|dyn-rho|dyn-t|combined|galore|badam]
+                     [--preset micro] [--steps N] [--corpus english|vietnamese]
+                     [--config run.toml] [--set train.key=value]...
+                     [--out results/run.jsonl] [--save-checkpoint p] [--from-checkpoint p]
+  adafrugal finetune --task CoLA|SST-2|MRPC|STS-B|QQP|MNLI-m|QNLI|RTE
+                     [--ft-method full|lora|galore|frugal|dyn-rho|dyn-t|combined]
+                     [--seeds N]
+  adafrugal exp      table1|table2|table3|fig1|fig2|ablation-tau|ablation-state|
+                     ablation-strategy|ablation-rho-schedule|scaling [--quick]
+  adafrugal info     [--preset micro]
+"
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    if args.has("verbose") {
+        adafrugal::util::log::set_level(adafrugal::util::log::Level::Debug);
+    }
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let r = match cmd {
+        "train" => cmd_train(&args),
+        "finetune" => cmd_finetune(&args),
+        "exp" => cmd_exp(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{}", usage());
+            return ExitCode::FAILURE;
+        }
+    };
+    match r {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Analytic FLOPs / bandwidth model per model geometry — used by the
+//! e2e reporting and the §Perf roofline discussion (the L2 XLA cost
+//! analysis in python/compile/analysis.py is the ground truth; this is
+//! the rust-side closed form for throughput accounting).
+
+use crate::runtime::manifest::ModelDims;
+
+/// Forward-pass FLOPs per token (the standard 2·N approximation plus
+/// attention's 2·s·d per token per layer, counted exactly below).
+pub fn fwd_flops_per_token(m: &ModelDims) -> f64 {
+    let d = m.d_model as f64;
+    let f = m.d_ffn as f64;
+    let v = m.vocab as f64;
+    let s = m.seq as f64;
+    let per_layer = 2.0 * (4.0 * d * d)      // qkv + out projections
+        + 2.0 * (3.0 * d * f)                // swiglu gate/up/down
+        + 2.0 * 2.0 * s * d; // attention scores + mix (causal avg ~ s/2 each direction)
+    m.n_layers as f64 * per_layer + 2.0 * v * d // lm head
+}
+
+/// Training-step FLOPs (fwd + ~2x bwd) for one batch.
+pub fn train_step_flops(m: &ModelDims) -> f64 {
+    3.0 * fwd_flops_per_token(m) * (m.batch * m.seq) as f64
+}
+
+/// Optimizer-update bytes moved per step by the fused hybrid kernel:
+/// one read+write pass over params and moments (7 tensors of n floats).
+pub fn optimizer_bytes_per_step(n_params: usize) -> f64 {
+    7.0 * 4.0 * n_params as f64
+}
+
+/// Achieved throughput report against an assumed peak.
+pub fn achieved(m: &ModelDims, n_params: usize, step_seconds: f64,
+                peak_gflops: f64) -> String {
+    let fl = train_step_flops(m);
+    let gf = fl / step_seconds / 1e9;
+    format!(
+        "{:.2} GFLOP/step, {:.2} GFLOP/s achieved ({:.0}% of {peak_gflops} GFLOP/s peak), \
+         optimizer stream {:.1} MB/step",
+        fl / 1e9,
+        gf,
+        100.0 * gf / peak_gflops,
+        optimizer_bytes_per_step(n_params) / 1e6
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            d_model: 768, n_layers: 12, n_heads: 12, d_ffn: 2048, vocab: 32000,
+            seq: 256, batch: 4, n_cls: 2, lora_rank: 8, block_size: 64,
+        }
+    }
+
+    #[test]
+    fn flops_scale_is_6n_per_token_ish() {
+        // ~134M-param model: train flops per token should be ~6x params
+        let m = dims();
+        let per_tok = 3.0 * fwd_flops_per_token(&m);
+        let n = 134.0e6;
+        let ratio = per_tok / (6.0 * n);
+        assert!(ratio > 0.7 && ratio < 1.4, "ratio {ratio}");
+    }
+
+    #[test]
+    fn train_step_scales_with_batch() {
+        let m = dims();
+        let m2 = ModelDims { batch: 8, ..dims() };
+        assert!((train_step_flops(&m2) / train_step_flops(&m) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn achieved_report_formats() {
+        let m = dims();
+        let s = achieved(&m, 134_000_000, 1.0, 50.0);
+        assert!(s.contains("GFLOP/step"));
+        assert!(s.contains("optimizer stream"));
+    }
+}

@@ -1,0 +1,121 @@
+//! Host-side parameter initialization from the manifest.
+//!
+//! model.py stores norm gains as deltas around 1.0 (init_std = 0), so
+//! every parameter is drawn i.i.d. N(0, init_std²) — embedding/linear
+//! layers use std 0.02 and residual-output layers 0.02/√(2L), matching
+//! LLaMA-style init. The packed state vector is params‖m‖v‖loss with
+//! m = v = 0 (Adam state starts empty).
+
+use crate::runtime::manifest::Manifest;
+use crate::util::rng::Rng;
+
+/// Fresh packed state vector (params initialized, m/v zero).
+pub fn init_state(man: &Manifest, seed: u64) -> Vec<f32> {
+    let mut state = vec![0f32; man.state_len];
+    let mut rng = Rng::new(seed ^ 0x1717_1717);
+    fill_params(man, &mut state[..man.n_params], &mut rng);
+    state
+}
+
+/// Initialize just the params region (used by checkpoint restore tests).
+pub fn fill_params(man: &Manifest, params: &mut [f32], rng: &mut Rng) {
+    assert_eq!(params.len(), man.n_params);
+    for p in &man.params {
+        // independent stream per param so init is order/layout stable
+        let mut prng = rng.fork(hash_name(&p.name));
+        let std = p.init_std;
+        let dst = &mut params[p.offset..p.offset + p.size];
+        if std == 0.0 {
+            dst.iter_mut().for_each(|x| *x = 0.0);
+        } else {
+            dst.iter_mut().for_each(|x| *x = prng.normal_f32(std));
+        }
+    }
+}
+
+/// LoRA packed state: A ~ N(0, std), B = 0 (adapters start as identity),
+/// head ~ N(0, std).
+pub fn init_lora_state(man: &Manifest, seed: u64) -> Vec<f32> {
+    let mut state = vec![0f32; man.lora_state_len()];
+    let mut rng = Rng::new(seed ^ 0x10ad);
+    let mut off = 0usize;
+    for p in &man.lora_params {
+        let mut prng = rng.fork(hash_name(&p.name));
+        for x in &mut state[off..off + p.size] {
+            *x = if p.init_std == 0.0 { 0.0 } else { prng.normal_f32(p.init_std) };
+        }
+        off += p.size;
+    }
+    state
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+pub(crate) fn test_manifest() -> Manifest {
+    use crate::util::json;
+    use std::path::PathBuf;
+    let text = r#"{
+      "name":"t","task":"lm",
+      "model":{"name":"t","d_model":4,"n_layers":1,"n_heads":1,"d_ffn":4,
+               "vocab":8,"seq":4,"batch":2,"rope_theta":1e4,"norm_eps":1e-5,
+               "n_cls":2,"lora_rank":2,"block_size":2},
+      "layout":{"n_params":24,"state_len":73,"mask_len":4,"score_len":2,"block_size":2},
+      "params":[
+        {"name":"a","shape":[4,4],"size":16,"offset":0,"init_std":0.02,
+         "maskable":true,"mask_offset":0,"mask_len":4,"score_offset":0,"n_blocks":2},
+        {"name":"norm","shape":[4],"size":4,"offset":16,"init_std":0.0,"maskable":false},
+        {"name":"z","shape":[4],"size":4,"offset":20,"init_std":0.1,"maskable":false}],
+      "lora_params":[{"name":"la","shape":[4,2],"size":8,"init_std":0.02},
+                     {"name":"lb","shape":[2,4],"size":8,"init_std":0.0}],
+      "scalars":[], "entrypoints":{}}"#;
+    Manifest::from_json(&json::parse(text).unwrap(), PathBuf::from("/tmp")).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_deterministic_and_zeroes_state() {
+        let m = test_manifest();
+        let a = init_state(&m, 7);
+        let b = init_state(&m, 7);
+        let c = init_state(&m, 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 73);
+        // m, v, loss slot zero
+        assert!(a[24..].iter().all(|&x| x == 0.0));
+        // norm deltas zero, others non-zero
+        assert!(a[16..20].iter().all(|&x| x == 0.0));
+        assert!(a[0..16].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn init_std_scales() {
+        let m = test_manifest();
+        let s = init_state(&m, 1);
+        let std_a = (s[0..16].iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / 16.0).sqrt();
+        assert!(std_a < 0.08, "std_a={std_a}");
+        let std_z = (s[20..24].iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / 4.0).sqrt();
+        assert!(std_z > std_a);
+    }
+
+    #[test]
+    fn lora_init_b_zero() {
+        let m = test_manifest();
+        let s = init_lora_state(&m, 3);
+        assert_eq!(s.len(), 3 * 16 + 1);
+        assert!(s[0..8].iter().any(|&x| x != 0.0)); // la
+        assert!(s[8..16].iter().all(|&x| x == 0.0)); // lb zeros
+    }
+}

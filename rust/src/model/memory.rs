@@ -1,0 +1,172 @@
+//! Optimizer-state memory accounting (Tables 1–2 "Memory" column,
+//! Fig. 1, and the §5.6 scaling analysis).
+//!
+//! AdamW keeps two f32 moments per parameter. FRUGAL keeps them only for
+//! the state-full set: all 1-D gains + embedding + head (mirroring
+//! FRUGAL's always-Adam logits/norms) plus a ρ-fraction of each
+//! maskable matrix. The paper reports *optimizer-state overhead*, not
+//! process RSS, so this model measures exactly that quantity from the
+//! live mask — deterministically, which is the substitution DESIGN.md §4
+//! documents for Fig. 1. `optim::frugal::CompactFrugal` demonstrates the
+//! savings are realizable, not just counted.
+
+use crate::projection::SubspaceMask;
+use crate::runtime::manifest::Manifest;
+
+pub const BYTES_PER_STATE_ELEM: usize = 2 * 4; // m + v, f32
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryReport {
+    /// bytes of optimizer state currently held
+    pub state_bytes: usize,
+    /// bytes a full-rank AdamW would hold (the 1.00× reference)
+    pub adamw_bytes: usize,
+}
+
+impl MemoryReport {
+    pub fn ratio(&self) -> f64 {
+        self.state_bytes as f64 / self.adamw_bytes.max(1) as f64
+    }
+
+    pub fn gb(&self) -> f64 {
+        self.state_bytes as f64 / 1e9
+    }
+}
+
+/// Optimizer-state bytes for full-rank AdamW.
+pub fn adamw_bytes(man: &Manifest) -> usize {
+    man.n_params * BYTES_PER_STATE_ELEM
+}
+
+/// Optimizer-state bytes for FRUGAL with the given live mask.
+pub fn frugal_bytes(man: &Manifest, mask: &SubspaceMask) -> usize {
+    let always_full: usize = man.params.iter().filter(|p| !p.maskable).map(|p| p.size).sum();
+    (always_full + mask.active_elems(man)) * BYTES_PER_STATE_ELEM
+}
+
+/// Analytic FRUGAL bytes at a given ρ (no live mask needed; used for
+/// schedules and the scaling analysis).
+pub fn frugal_bytes_at_rho(man: &Manifest, rho: f64) -> usize {
+    let always_full: usize = man.params.iter().filter(|p| !p.maskable).map(|p| p.size).sum();
+    let masked: f64 = man.maskable_elems() as f64 * rho;
+    (always_full + masked.round() as usize) * BYTES_PER_STATE_ELEM
+}
+
+/// GaLore stores rank-r moments (r = ρ·min_dim per matrix) plus the
+/// projector P (rows × r), plus full state for non-projected params.
+pub fn galore_bytes(man: &Manifest, rho: f64) -> usize {
+    let always_full: usize = man.params.iter().filter(|p| !p.maskable).map(|p| p.size).sum();
+    let mut bytes = always_full * BYTES_PER_STATE_ELEM;
+    for p in man.maskable() {
+        let r = ((rho * p.cols().min(p.rows()) as f64).round() as usize).max(1);
+        bytes += r * p.rows() * BYTES_PER_STATE_ELEM; // moments in subspace
+        bytes += p.cols() * r * 4; // projector (f32)
+    }
+    bytes
+}
+
+/// BAdam keeps Adam state only for the currently-active block (one
+/// ρ-fraction of maskable params) — same order as FRUGAL.
+pub fn badam_bytes(man: &Manifest, rho: f64) -> usize {
+    frugal_bytes_at_rho(man, rho)
+}
+
+pub fn report(man: &Manifest, mask: &SubspaceMask) -> MemoryReport {
+    MemoryReport { state_bytes: frugal_bytes(man, mask), adamw_bytes: adamw_bytes(man) }
+}
+
+// ---------------------------------------------------------------------------
+// §5.6 scaling extrapolation
+// ---------------------------------------------------------------------------
+
+/// Blockwise optimizer-state overhead model O(L·ρ·h²) from §5.6, used to
+/// extrapolate savings from the measured model to larger scales.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalingPoint {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub hidden: usize,
+}
+
+pub const SCALING_LADDER: &[ScalingPoint] = &[
+    ScalingPoint { name: "130M (paper)", n_layers: 12, hidden: 768 },
+    ScalingPoint { name: "350M", n_layers: 24, hidden: 1024 },
+    ScalingPoint { name: "1.3B", n_layers: 24, hidden: 2048 },
+    ScalingPoint { name: "7B", n_layers: 32, hidden: 4096 },
+];
+
+/// §5.6: overhead scales ≈ L·ρ·h²; returns the multiplicative factor
+/// from `base` to `target`.
+pub fn scaling_factor(base: ScalingPoint, target: ScalingPoint) -> f64 {
+    (target.n_layers as f64 / base.n_layers as f64)
+        * (target.hidden as f64 / base.hidden as f64).powi(2)
+}
+
+/// Extrapolated absolute memory saving (bytes) of decaying ρ start→end
+/// at `target` scale, given the measured saving at `base`.
+pub fn extrapolate_saving(measured_saving_bytes: usize, base: ScalingPoint,
+                          target: ScalingPoint) -> f64 {
+    measured_saving_bytes as f64 * scaling_factor(base, target)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::test_manifest;
+    use crate::projection::Strategy;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn adamw_counts_everything() {
+        let man = test_manifest();
+        assert_eq!(adamw_bytes(&man), 24 * 8);
+    }
+
+    #[test]
+    fn frugal_interpolates_between_bounds() {
+        let man = test_manifest();
+        let mut mask = crate::projection::SubspaceMask::new(&man);
+        let mut rng = Rng::new(0);
+        mask.redefine(Strategy::Random, 0.0, None, &mut rng).unwrap();
+        // only non-maskable (8 elems) retain state
+        assert_eq!(frugal_bytes(&man, &mask), 8 * 8);
+        mask.redefine(Strategy::Random, 1.0, None, &mut rng).unwrap();
+        assert_eq!(frugal_bytes(&man, &mask), adamw_bytes(&man));
+        // analytic model agrees with the live mask at rho=0.5
+        mask.redefine(Strategy::Random, 0.5, None, &mut rng).unwrap();
+        assert_eq!(frugal_bytes(&man, &mask), frugal_bytes_at_rho(&man, 0.5));
+    }
+
+    #[test]
+    fn dynamic_rho_monotone_memory() {
+        let man = test_manifest();
+        let mut prev = usize::MAX;
+        for step in 0..=10 {
+            let rho = 0.25 - 0.20 * step as f64 / 10.0;
+            let b = frugal_bytes_at_rho(&man, rho);
+            assert!(b <= prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn galore_includes_projector() {
+        let man = test_manifest();
+        // galore at same rho should cost more than frugal (projector)
+        assert!(galore_bytes(&man, 0.25) > frugal_bytes_at_rho(&man, 0.25));
+    }
+
+    #[test]
+    fn paper_scaling_number() {
+        // §5.6: (32/24)·(4096/768)² ≈ 37.8 — wait, paper says L=12 for
+        // 130M but uses 24 in the 37.8 figure; we reproduce THEIR
+        // arithmetic here: base L=24? (32/24)*(4096/768)^2 = 37.9
+        let base = ScalingPoint { name: "base", n_layers: 24, hidden: 768 };
+        let target = ScalingPoint { name: "7B", n_layers: 32, hidden: 4096 };
+        let f = scaling_factor(base, target);
+        assert!((f - 37.9).abs() < 0.5, "factor={f}");
+        // 0.15 GB measured saving -> ~5.7 GB at 7B
+        let s = extrapolate_saving(150_000_000, base, target) / 1e9;
+        assert!((s - 5.7).abs() < 0.2, "saving={s}");
+    }
+}

@@ -1,0 +1,4 @@
+//! Model-side host logic: parameter init + the optimizer memory model.
+pub mod flops;
+pub mod init;
+pub mod memory;

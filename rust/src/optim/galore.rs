@@ -1,0 +1,233 @@
+//! GaLore baseline (Zhao et al., 2024): project each 2-D gradient onto a
+//! rank-r subspace obtained from (approximate) SVD of the gradient,
+//! keep Adam moments in the subspace, project the update back, and
+//! refresh the projector every T steps.
+//!
+//! The projector uses subspace (orthogonal) iteration on GᵀG — at the
+//! simulated model sizes this is exact enough (the paper's comparison is
+//! about *where the state lives*, not SVD precision).
+
+use super::adamw::AdamW;
+use super::StepScalars;
+use crate::runtime::manifest::Manifest;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct GaLore {
+    /// rank fraction (rho in the tables: r = rho * min_dim)
+    pub rho: f64,
+    /// projector refresh interval
+    pub update_interval: usize,
+    /// per maskable param (manifest order): projector P (cols × r)
+    projectors: Vec<Option<Tensor>>,
+    /// per maskable param: Adam moments on the projected grad (rows × r)
+    sub_m: Vec<Vec<f32>>,
+    sub_v: Vec<Vec<f32>>,
+    /// full Adam for non-maskable params, keyed over their flat region
+    full: AdamW,
+    full_map: Vec<(usize, usize)>, // (offset, size) of non-maskable params
+    step_no: usize,
+    rng: Rng,
+}
+
+impl GaLore {
+    pub fn new(man: &Manifest, rho: f64, update_interval: usize, seed: u64) -> Self {
+        let n_maskable = man.maskable().count();
+        let full_map: Vec<(usize, usize)> = man
+            .params
+            .iter()
+            .filter(|p| !p.maskable)
+            .map(|p| (p.offset, p.size))
+            .collect();
+        let full_len: usize = full_map.iter().map(|(_, s)| s).sum();
+        GaLore {
+            rho,
+            update_interval,
+            projectors: vec![None; n_maskable],
+            sub_m: vec![Vec::new(); n_maskable],
+            sub_v: vec![Vec::new(); n_maskable],
+            full: AdamW::new(full_len),
+            full_map,
+            step_no: 0,
+            rng: Rng::new(seed ^ 0x9a10),
+        }
+    }
+
+    pub fn rank_of(&self, rows: usize, cols: usize) -> usize {
+        ((self.rho * rows.min(cols) as f64).round() as usize).clamp(1, rows.min(cols))
+    }
+
+    /// Optimizer state bytes currently held (for the memory columns).
+    pub fn state_bytes_held(&self) -> usize {
+        let sub: usize = self
+            .sub_m
+            .iter()
+            .zip(&self.sub_v)
+            .map(|(m, v)| (m.len() + v.len()) * 4)
+            .sum();
+        let proj: usize = self
+            .projectors
+            .iter()
+            .flatten()
+            .map(|p| p.len() * 4)
+            .sum();
+        sub + proj + self.full.state_bytes()
+    }
+
+    /// One GaLore step on the flat params/grads regions.
+    pub fn step(&mut self, man: &Manifest, params: &mut [f32], grads: &[f32],
+                s: &StepScalars) {
+        self.step_no += 1;
+        let t = self.step_no;
+        // non-maskable: gather -> full AdamW -> scatter
+        let mut fp: Vec<f32> = Vec::new();
+        let mut fg: Vec<f32> = Vec::new();
+        for &(off, size) in &self.full_map {
+            fp.extend_from_slice(&params[off..off + size]);
+            fg.extend_from_slice(&grads[off..off + size]);
+        }
+        self.full.step(&mut fp, &fg, s);
+        let mut cur = 0;
+        for &(off, size) in &self.full_map {
+            params[off..off + size].copy_from_slice(&fp[cur..cur + size]);
+            cur += size;
+        }
+
+        // maskable: low-rank projected Adam
+        for (pi, spec) in man.maskable().enumerate() {
+            let rows = spec.rows();
+            let cols = spec.cols();
+            let r = self.rank_of(rows, cols);
+            let g = Tensor::from_vec(grads[spec.offset..spec.offset + spec.size].to_vec(),
+                                     &[rows, cols]).unwrap();
+            let refresh = self.projectors[pi].is_none()
+                || (t - 1) % self.update_interval == 0;
+            if refresh {
+                self.projectors[pi] = Some(top_right_singular_vectors(&g, r, &mut self.rng));
+                // GaLore resets subspace moments on projector change
+                self.sub_m[pi] = vec![0.0; rows * r];
+                self.sub_v[pi] = vec![0.0; rows * r];
+            }
+            let p_mat = self.projectors[pi].as_ref().unwrap(); // (cols, r)
+            let proj = g.matmul(p_mat); // (rows, r)
+            let m = &mut self.sub_m[pi];
+            let v = &mut self.sub_v[pi];
+            let mut upd = vec![0f32; rows * r];
+            for i in 0..rows * r {
+                let gi = proj.data[i];
+                m[i] = s.beta1 * m[i] + (1.0 - s.beta1) * gi;
+                v[i] = s.beta2 * v[i] + (1.0 - s.beta2) * gi * gi;
+                let mhat = m[i] / s.bc1;
+                let vhat = v[i] / s.bc2;
+                upd[i] = mhat / (vhat.sqrt() + s.eps);
+            }
+            let upd_t = Tensor::from_vec(upd, &[rows, r]).unwrap();
+            let back = upd_t.matmul(&p_mat.t()); // (rows, cols)
+            for i in 0..spec.size {
+                params[spec.offset + i] -=
+                    s.lr_full * back.data[i] + s.lr_full * s.wd * params[spec.offset + i];
+            }
+        }
+    }
+}
+
+/// Top-r right singular vectors of G via orthogonal iteration on GᵀG.
+/// Returns (cols × r) with orthonormal columns.
+pub fn top_right_singular_vectors(g: &Tensor, r: usize, rng: &mut Rng) -> Tensor {
+    let cols = g.cols();
+    let gtg = g.t().matmul(g); // (cols, cols)
+    let mut q = Tensor::from_vec(
+        (0..cols * r).map(|_| rng.normal_f32(1.0)).collect(),
+        &[cols, r],
+    )
+    .unwrap();
+    orthonormalize(&mut q);
+    for _ in 0..12 {
+        let z = gtg.matmul(&q);
+        q = z;
+        orthonormalize(&mut q);
+    }
+    q
+}
+
+/// Modified Gram-Schmidt over columns.
+fn orthonormalize(q: &mut Tensor) {
+    let (n, r) = (q.shape[0], q.shape[1]);
+    for j in 0..r {
+        for k in 0..j {
+            let mut dot = 0f64;
+            for i in 0..n {
+                dot += q.data[i * r + j] as f64 * q.data[i * r + k] as f64;
+            }
+            for i in 0..n {
+                q.data[i * r + j] -= (dot as f32) * q.data[i * r + k];
+            }
+        }
+        let mut norm = 0f64;
+        for i in 0..n {
+            norm += (q.data[i * r + j] as f64).powi(2);
+        }
+        let norm = norm.sqrt().max(1e-12) as f32;
+        for i in 0..n {
+            q.data[i * r + j] /= norm;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::test_manifest;
+
+    #[test]
+    fn svd_recovers_dominant_direction() {
+        let mut rng = Rng::new(0);
+        // G = u v^T with v = e0-ish: rank 1
+        let rows = 6;
+        let cols = 8;
+        let mut g = Tensor::zeros(&[rows, cols]);
+        for i in 0..rows {
+            g.data[i * cols] = (i + 1) as f32; // column 0 carries everything
+        }
+        let p = top_right_singular_vectors(&g, 1, &mut rng);
+        assert_eq!(p.shape, vec![cols, 1]);
+        // dominant right-singular vector ~ ±e0
+        assert!(p.data[0].abs() > 0.99, "p={:?}", p.data);
+        for c in 1..cols {
+            assert!(p.data[c].abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn projector_is_orthonormal() {
+        let mut rng = Rng::new(1);
+        let g = Tensor::randn(&[10, 12], 1.0, &mut rng);
+        let p = top_right_singular_vectors(&g, 4, &mut rng);
+        let ptp = p.t().matmul(&p);
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((ptp.at(i, j) - want).abs() < 1e-4, "PtP[{i},{j}]={}", ptp.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn galore_steps_and_saves_memory() {
+        let man = test_manifest();
+        let mut opt = GaLore::new(&man, 0.25, 10, 0);
+        let mut p = crate::model::init::init_state(&man, 0)[..man.n_params].to_vec();
+        let p0 = p.clone();
+        let mut rng = Rng::new(3);
+        let s = StepScalars::new(1e-2, 0.0, 0.0, 0.9, 0.999, 1e-8, 1);
+        for _ in 0..3 {
+            let g: Vec<f32> = (0..man.n_params).map(|_| rng.normal_f32(1.0)).collect();
+            opt.step(&man, &mut p, &g, &s);
+        }
+        assert_ne!(p, p0);
+        // subspace moments: rows*r vs rows*cols full
+        let full_bytes = man.n_params * 8;
+        assert!(opt.state_bytes_held() < full_bytes,
+                "{} !< {}", opt.state_bytes_held(), full_bytes);
+    }
+}

@@ -1,0 +1,68 @@
+//! Host-side optimizer zoo.
+//!
+//! Two roles: (1) *references* — `adamw`/`frugal` re-implement exactly
+//! what the fused L1 kernel computes, and the integration tests assert
+//! the HLO step matches them element-wise; (2) *baselines* — `galore`
+//! and `badam` implement the paper's comparison methods on top of the
+//! `grad` HLO entry (gradients come from the compiled graph, updates run
+//! on host — these are not on the paper's hot path).
+
+pub mod adamw;
+pub mod badam;
+pub mod quantized;
+pub mod frugal;
+pub mod galore;
+pub mod signsgd;
+
+/// The 8-scalar cross-language ABI consumed by the fused kernel
+/// (order pinned by kernels/ref.py and the manifest "scalars" list).
+#[derive(Debug, Clone, Copy)]
+pub struct StepScalars {
+    pub lr_full: f32,
+    pub lr_free: f32,
+    pub wd: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// bias corrections 1 - beta^t, t counted since last state reset
+    pub bc1: f32,
+    pub bc2: f32,
+}
+
+impl StepScalars {
+    pub fn new(lr_full: f32, lr_free: f32, wd: f32, beta1: f32, beta2: f32,
+               eps: f32, t_since_reset: usize) -> Self {
+        let t = t_since_reset.max(1) as i32;
+        StepScalars {
+            lr_full,
+            lr_free,
+            wd,
+            beta1,
+            beta2,
+            eps,
+            bc1: 1.0 - beta1.powi(t),
+            bc2: 1.0 - beta2.powi(t),
+        }
+    }
+
+    pub fn to_array(self) -> [f32; 8] {
+        [self.lr_full, self.lr_free, self.wd, self.beta1, self.beta2,
+         self.eps, self.bc1, self.bc2]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_abi_order() {
+        let s = StepScalars::new(1e-3, 1e-4, 0.1, 0.9, 0.999, 1e-8, 2);
+        let a = s.to_array();
+        assert_eq!(a[0], 1e-3);
+        assert_eq!(a[1], 1e-4);
+        assert_eq!(a[2], 0.1);
+        assert!((a[6] - (1.0 - 0.81)).abs() < 1e-6);
+        assert!((a[7] - (1.0 - 0.999f32 * 0.999)).abs() < 1e-6);
+    }
+}

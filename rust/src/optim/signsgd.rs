@@ -1,0 +1,57 @@
+//! SignSGD (Bernstein et al., 2018) — FRUGAL's state-free optimizer.
+//! Stateless by construction; kept as its own module because the paper
+//! treats it as a first-class baseline component.
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SignSgd;
+
+impl SignSgd {
+    pub fn step(&self, params: &mut [f32], grads: &[f32], lr: f32, wd: f32) {
+        assert_eq!(params.len(), grads.len());
+        for i in 0..params.len() {
+            params[i] -= lr * sign(grads[i]) + lr * wd * params[i];
+        }
+    }
+}
+
+/// Matches jnp.sign: sign(0) == 0 (an SGD coordinate with zero gradient
+/// must not move).
+#[inline]
+pub fn sign(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sign_semantics() {
+        assert_eq!(sign(3.2), 1.0);
+        assert_eq!(sign(-0.001), -1.0);
+        assert_eq!(sign(0.0), 0.0);
+        assert_eq!(sign(-0.0), 0.0);
+    }
+
+    #[test]
+    fn step_moves_by_lr() {
+        let o = SignSgd;
+        let mut p = vec![1.0, 1.0, 1.0];
+        o.step(&mut p, &[5.0, -0.1, 0.0], 0.01, 0.0);
+        assert_eq!(p, vec![0.99, 1.01, 1.0]);
+    }
+
+    #[test]
+    fn weight_decay() {
+        let o = SignSgd;
+        let mut p = vec![2.0];
+        o.step(&mut p, &[0.0], 0.1, 0.5);
+        assert!((p[0] - 1.9).abs() < 1e-6);
+    }
+}

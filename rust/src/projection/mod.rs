@@ -1,0 +1,353 @@
+//! Blockwise projection subsystem (paper §2.2, §4.3 "Block-wise
+//! projection is used as the default projection type").
+//!
+//! The state-full subspace of a 2-D parameter is a set of column
+//! *blocks* (contiguous groups of `block_size` columns). A
+//! [`SubspaceMask`] holds the active blocks of every maskable parameter
+//! and renders them into the flat f32 mask vector the fused HLO step
+//! consumes. Redefinition (Algorithm 1, `RedefineProjector`) picks new
+//! active blocks per the configured [`Strategy`].
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::Manifest;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// FRUGAL's default: uniform-random block subset each redefinition.
+    Random,
+    /// pick the blocks with the largest gradient energy (per-block sum
+    /// of g², from the `scores` HLO entry)
+    TopK,
+    /// deterministic cycling through blocks (BAdam-style coverage)
+    RoundRobin,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Strategy> {
+        Ok(match s {
+            "random" => Strategy::Random,
+            "topk" => Strategy::TopK,
+            "roundrobin" => Strategy::RoundRobin,
+            _ => bail!("unknown strategy {s:?}"),
+        })
+    }
+}
+
+/// Active-block state for every maskable parameter.
+#[derive(Debug, Clone)]
+pub struct SubspaceMask {
+    /// per maskable param (manifest order): active flags per block
+    pub active: Vec<Vec<bool>>,
+    /// per maskable param: (n_blocks, block_size, mask_offset, cols)
+    meta: Vec<BlockMeta>,
+    mask_len: usize,
+    /// round-robin cursor (persists across redefinitions)
+    rr_cursor: usize,
+}
+
+#[derive(Debug, Clone)]
+struct BlockMeta {
+    n_blocks: usize,
+    block_size: usize,
+    mask_offset: usize,
+    score_offset: usize,
+}
+
+impl SubspaceMask {
+    pub fn new(man: &Manifest) -> SubspaceMask {
+        let mut active = Vec::new();
+        let mut meta = Vec::new();
+        for p in man.maskable() {
+            active.push(vec![false; p.n_blocks]);
+            meta.push(BlockMeta {
+                n_blocks: p.n_blocks,
+                block_size: man.block_size,
+                mask_offset: p.mask_offset,
+                score_offset: p.score_offset,
+            });
+        }
+        SubspaceMask { active, meta, mask_len: man.mask_len, rr_cursor: 0 }
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.meta.iter().map(|m| m.n_blocks).sum()
+    }
+
+    pub fn active_blocks(&self) -> usize {
+        self.active.iter().map(|a| a.iter().filter(|&&x| x).count()).sum()
+    }
+
+    /// Fraction of blocks currently state-full.
+    pub fn density(&self) -> f64 {
+        self.active_blocks() as f64 / self.total_blocks().max(1) as f64
+    }
+
+    /// Blocks to activate for a given rho: round(rho * n_blocks),
+    /// computed per parameter so every matrix keeps ~rho coverage
+    /// (matching FRUGAL's per-parameter split).
+    fn target_per_param(&self, rho: f64) -> Vec<usize> {
+        self.meta
+            .iter()
+            .map(|m| ((rho * m.n_blocks as f64).round() as usize).min(m.n_blocks))
+            .collect()
+    }
+
+    /// Redefine the subspace (Algorithm 1 line 22). `scores` is the
+    /// concatenated per-block gradient-energy vector (only used by
+    /// TopK); `rho` is the current state-full ratio from Eq. 1.
+    pub fn redefine(
+        &mut self,
+        strategy: Strategy,
+        rho: f64,
+        scores: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> Result<()> {
+        let targets = self.target_per_param(rho);
+        for (i, target) in targets.iter().enumerate() {
+            let nb = self.meta[i].n_blocks;
+            let act = &mut self.active[i];
+            act.iter_mut().for_each(|x| *x = false);
+            match strategy {
+                Strategy::Random => {
+                    for b in rng.choose_k(nb, *target) {
+                        act[b] = true;
+                    }
+                }
+                Strategy::TopK => {
+                    let Some(scores) = scores else {
+                        bail!("topk strategy needs gradient scores");
+                    };
+                    let off = self.meta[i].score_offset;
+                    let mut idx: Vec<usize> = (0..nb).collect();
+                    idx.sort_by(|&a, &b| {
+                        scores[off + b]
+                            .partial_cmp(&scores[off + a])
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                    });
+                    for &b in idx.iter().take(*target) {
+                        act[b] = true;
+                    }
+                }
+                Strategy::RoundRobin => {
+                    for k in 0..*target {
+                        act[(self.rr_cursor + k) % nb] = true;
+                    }
+                }
+            }
+        }
+        if strategy == Strategy::RoundRobin {
+            // advance so the next redefinition covers fresh blocks
+            if let Some(t) = targets.first() {
+                let nb = self.meta.first().map(|m| m.n_blocks).unwrap_or(1);
+                self.rr_cursor = (self.rr_cursor + t.max(&1)) % nb.max(1);
+            }
+        }
+        Ok(())
+    }
+
+    /// Render into the flat f32 mask vector the fused HLO consumes
+    /// (per-column 0/1, concatenated in manifest maskable order).
+    pub fn render(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.mask_len];
+        self.render_into(&mut out);
+        out
+    }
+
+    pub fn render_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.mask_len);
+        for (i, m) in self.meta.iter().enumerate() {
+            for (b, &on) in self.active[i].iter().enumerate() {
+                let start = m.mask_offset + b * m.block_size;
+                let val = if on { 1.0 } else { 0.0 };
+                out[start..start + m.block_size].iter_mut().for_each(|x| *x = val);
+            }
+        }
+    }
+
+    /// Count of state-full *elements* (columns × rows) given the params
+    /// table — used by the memory model.
+    pub fn active_elems(&self, man: &Manifest) -> usize {
+        man.maskable()
+            .enumerate()
+            .map(|(i, p)| {
+                let act = self.active[i].iter().filter(|&&x| x).count();
+                act * man.block_size * p.rows()
+            })
+            .sum()
+    }
+
+    /// Blocks that changed (either direction) vs `other` — the Project
+    /// strategy keeps state only on blocks active in both.
+    pub fn changed_blocks(&self, other: &SubspaceMask) -> usize {
+        self.active
+            .iter()
+            .zip(&other.active)
+            .map(|(a, b)| a.iter().zip(b).filter(|(x, y)| x != y).count())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use crate::util::json;
+    use crate::util::prop;
+    use std::path::PathBuf;
+
+    /// Build a synthetic manifest: 3 maskable params with 8/4/16 blocks
+    /// of size 4, one non-maskable.
+    fn test_manifest() -> Manifest {
+        let mk = |name: &str, rows: usize, cols: usize, off: usize, moff: usize,
+                  soff: usize| {
+            format!(
+                r#"{{"name":"{name}","shape":[{rows},{cols}],"size":{},"offset":{off},
+                 "init_std":0.02,"maskable":true,"mask_offset":{moff},"mask_len":{cols},
+                 "score_offset":{soff},"n_blocks":{}}}"#,
+                rows * cols,
+                cols / 4
+            )
+        };
+        let p1 = mk("a", 2, 32, 0, 0, 0);
+        let p2 = mk("b", 3, 16, 64, 32, 8);
+        let p3 = mk("c", 1, 64, 112, 48, 12);
+        let n = 64 + 48 + 64 + 4;
+        let text = format!(
+            r#"{{"name":"t","task":"lm",
+            "model":{{"name":"t","d_model":4,"n_layers":1,"n_heads":1,"d_ffn":4,
+                      "vocab":8,"seq":4,"batch":2,"rope_theta":1e4,"norm_eps":1e-5,
+                      "n_cls":2,"lora_rank":8,"block_size":4}},
+            "layout":{{"n_params":{n},"state_len":{},"mask_len":112,"score_len":28,"block_size":4}},
+            "params":[{p1},{p2},{p3},
+              {{"name":"z","shape":[4],"size":4,"offset":176,"init_std":0.0,"maskable":false}}],
+            "lora_params":[], "scalars":[], "entrypoints":{{}}}}"#,
+            3 * n + 1
+        );
+        Manifest::from_json(&json::parse(&text).unwrap(), PathBuf::from("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn density_matches_rho() {
+        let man = test_manifest();
+        let mut sm = SubspaceMask::new(&man);
+        let mut rng = Rng::new(0);
+        for &rho in &[0.0, 0.25, 0.5, 1.0] {
+            sm.redefine(Strategy::Random, rho, None, &mut rng).unwrap();
+            // per-param rounding: density within 1 block of rho per param
+            for (i, a) in sm.active.iter().enumerate() {
+                let nb = a.len();
+                let want = (rho * nb as f64).round() as usize;
+                assert_eq!(a.iter().filter(|&&x| x).count(), want, "param {i} rho {rho}");
+            }
+        }
+    }
+
+    #[test]
+    fn render_block_structure() {
+        let man = test_manifest();
+        let mut sm = SubspaceMask::new(&man);
+        let mut rng = Rng::new(1);
+        sm.redefine(Strategy::Random, 0.5, None, &mut rng).unwrap();
+        let mask = sm.render();
+        assert_eq!(mask.len(), 112);
+        // every block is uniformly 0 or 1
+        for chunk in mask.chunks(4) {
+            assert!(chunk.iter().all(|&x| x == chunk[0]));
+            assert!(chunk[0] == 0.0 || chunk[0] == 1.0);
+        }
+        // ones fraction ~ 0.5
+        let ones: f32 = mask.iter().sum();
+        assert_eq!(ones as usize, sm.active_blocks() * 4);
+    }
+
+    #[test]
+    fn topk_picks_highest_scores() {
+        let man = test_manifest();
+        let mut sm = SubspaceMask::new(&man);
+        let mut rng = Rng::new(2);
+        // scores: block j of param i gets score j (ascending)
+        let mut scores = vec![0f32; man.score_len];
+        for p in man.maskable() {
+            for b in 0..p.n_blocks {
+                scores[p.score_offset + b] = b as f32;
+            }
+        }
+        sm.redefine(Strategy::TopK, 0.25, Some(&scores), &mut rng).unwrap();
+        // param a: 8 blocks, target 2 -> blocks 6,7
+        assert_eq!(sm.active[0], vec![false, false, false, false, false, false, true, true]);
+        // topk without scores errors
+        assert!(sm.redefine(Strategy::TopK, 0.25, None, &mut rng).is_err());
+    }
+
+    #[test]
+    fn roundrobin_cycles_coverage() {
+        let man = test_manifest();
+        let mut sm = SubspaceMask::new(&man);
+        let mut rng = Rng::new(3);
+        let mut covered = vec![false; 8];
+        for _ in 0..4 {
+            sm.redefine(Strategy::RoundRobin, 0.25, None, &mut rng).unwrap();
+            for (b, &on) in sm.active[0].iter().enumerate() {
+                if on {
+                    covered[b] = true;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "round-robin must cover all blocks: {covered:?}");
+    }
+
+    #[test]
+    fn active_elems_counts_rows() {
+        let man = test_manifest();
+        let mut sm = SubspaceMask::new(&man);
+        let mut rng = Rng::new(4);
+        sm.redefine(Strategy::Random, 1.0, None, &mut rng).unwrap();
+        // all active: every maskable element
+        assert_eq!(sm.active_elems(&man), man.maskable_elems());
+        sm.redefine(Strategy::Random, 0.0, None, &mut rng).unwrap();
+        assert_eq!(sm.active_elems(&man), 0);
+    }
+
+    #[test]
+    fn prop_mask_invariants() {
+        let man = test_manifest();
+        prop::forall_with_rng(
+            "mask-invariants",
+            40,
+            |r| (r.f64(), r.below(3)),
+            |&(rho, strat), rng| {
+                let strategy = [Strategy::Random, Strategy::RoundRobin, Strategy::Random][strat];
+                let mut sm = SubspaceMask::new(&man);
+                sm.redefine(strategy, rho, None, rng).unwrap();
+                let mask = sm.render();
+                // invariant 1: mask values are exactly 0/1
+                if !mask.iter().all(|&x| x == 0.0 || x == 1.0) {
+                    return false;
+                }
+                // invariant 2: per-param active count == round(rho*nb)
+                for a in &sm.active {
+                    let nb = a.len();
+                    let want = ((rho * nb as f64).round() as usize).min(nb);
+                    if a.iter().filter(|&&x| x).count() != want {
+                        return false;
+                    }
+                }
+                // invariant 3: rendered ones == active blocks * block size
+                let ones = mask.iter().filter(|&&x| x == 1.0).count();
+                ones == sm.active_blocks() * 4
+            },
+        );
+    }
+
+    #[test]
+    fn redefinition_is_seed_deterministic() {
+        let man = test_manifest();
+        let mut a = SubspaceMask::new(&man);
+        let mut b = SubspaceMask::new(&man);
+        a.redefine(Strategy::Random, 0.3, None, &mut Rng::new(9)).unwrap();
+        b.redefine(Strategy::Random, 0.3, None, &mut Rng::new(9)).unwrap();
+        assert_eq!(a.active, b.active);
+    }
+}

@@ -1,0 +1,164 @@
+//! The execution engine: one compiled PJRT executable per entry point,
+//! plus host↔device transfer helpers. Everything on the hot path works
+//! on `PjRtBuffer`s; the only per-step host traffic is the tokens upload
+//! (a few KB), the 32-byte scalars upload, and a 4-byte loss readback.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, XlaComputation};
+
+use super::manifest::Manifest;
+use crate::info;
+
+/// `PjRtClient` wraps a raw pointer to the C++ TfrtCpuClient, which is
+/// internally thread-safe; the rust wrapper just doesn't declare it.
+/// This newtype asserts that so a single process-wide client can back
+/// every Engine (each TfrtCpuClient spawns its own thread pool — one per
+/// experiment run would be wasteful and noisy).
+struct SharedClient(PjRtClient);
+unsafe impl Send for SharedClient {}
+unsafe impl Sync for SharedClient {}
+
+/// Process-wide PJRT CPU client.
+pub fn client() -> Result<&'static PjRtClient> {
+    use std::sync::OnceLock;
+    static CLIENT: OnceLock<SharedClient> = OnceLock::new();
+    if CLIENT.get().is_none() {
+        let c = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        let _ = CLIENT.set(SharedClient(c));
+    }
+    Ok(&CLIENT.get().unwrap().0)
+}
+
+/// Compiled-executable wrapper asserting thread-safety of the
+/// underlying PJRT executable (same argument as `SharedClient`).
+pub struct SharedExe(xla::PjRtLoadedExecutable);
+unsafe impl Send for SharedExe {}
+unsafe impl Sync for SharedExe {}
+
+/// Process-wide compiled-executable cache keyed by HLO path. The
+/// experiment harness constructs many Engines for the same artifacts
+/// (per method × task × seed); recompiling identical HLO each time
+/// dominated Table-3 wall-clock (~4 s per run) before this cache —
+/// see EXPERIMENTS.md §Perf.
+fn exe_cache() -> &'static std::sync::Mutex<BTreeMap<String, std::sync::Arc<SharedExe>>> {
+    use std::sync::{Mutex, OnceLock};
+    static CACHE: OnceLock<Mutex<BTreeMap<String, std::sync::Arc<SharedExe>>>> =
+        OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+pub struct Engine {
+    pub manifest: Manifest,
+    client: &'static PjRtClient,
+    executables: BTreeMap<String, std::sync::Arc<SharedExe>>,
+}
+
+impl Engine {
+    /// Load + compile the given entry points of a manifest (compiling
+    /// everything eagerly keeps the step path allocation-free; results
+    /// are cached process-wide by HLO path).
+    pub fn load(dir: impl AsRef<Path>, name: &str, entries: &[&str]) -> Result<Engine> {
+        let manifest = Manifest::load(&dir, name)?;
+        let client = client()?;
+        let mut executables = BTreeMap::new();
+        for &e in entries {
+            let path = manifest.hlo_path(e)?;
+            let key = path.to_str().context("non-utf8 path")?.to_string();
+            if let Some(cached) = exe_cache().lock().unwrap().get(&key).cloned() {
+                executables.insert(e.to_string(), cached);
+                continue;
+            }
+            let t = std::time::Instant::now();
+            let proto = HloModuleProto::from_text_file(&key)
+                .map_err(|err| anyhow::anyhow!("parsing {}: {err}", path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|err| anyhow::anyhow!("compiling {e}: {err}"))?;
+            info!("compiled {name}.{e} in {:.2}s", t.elapsed().as_secs_f64());
+            let exe = std::sync::Arc::new(SharedExe(exe));
+            exe_cache().lock().unwrap().insert(key, exe.clone());
+            executables.insert(e.to_string(), exe);
+        }
+        Ok(Engine { manifest, client, executables })
+    }
+
+    /// Load every entry point listed in the manifest.
+    pub fn load_all(dir: impl AsRef<Path>, name: &str) -> Result<Engine> {
+        let manifest = Manifest::load(&dir, name)?;
+        let entries: Vec<String> = manifest.entrypoints.keys().cloned().collect();
+        let refs: Vec<&str> = entries.iter().map(|s| s.as_str()).collect();
+        Self::load(dir, name, &refs)
+    }
+
+    pub fn has_entry(&self, entry: &str) -> bool {
+        self.executables.contains_key(entry)
+    }
+
+    /// Execute an entry point on device buffers; returns the single
+    /// output buffer (the packed-state ABI guarantees single-array
+    /// outputs — see aot.py).
+    pub fn run(&self, entry: &str, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
+        let exe = self
+            .executables
+            .get(entry)
+            .with_context(|| format!("entry {entry:?} not loaded"))?;
+        let mut out = exe
+            .0
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("executing {entry}: {e}"))?;
+        ensure!(out.len() == 1, "expected 1 replica, got {}", out.len());
+        let mut replica = out.pop().unwrap();
+        ensure!(replica.len() == 1, "expected 1 output, got {} (ABI violation)", replica.len());
+        Ok(replica.pop().unwrap())
+    }
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload f32: {e}"))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload i32: {e}"))
+    }
+
+    /// Blocking read of `len` f32s starting at flat `offset`.
+    ///
+    /// NOTE: PJRT's CopyRawToHost is not implemented in the bundled
+    /// xla_extension 0.5.1 CPU client, so this transfers the WHOLE
+    /// buffer via a literal and slices on host. The coordinator
+    /// therefore only reads buffers at log/eval boundaries, never on
+    /// the per-step hot path (see trainer.rs + EXPERIMENTS.md §Perf).
+    pub fn read_f32(&self, buf: &PjRtBuffer, offset: usize, len: usize) -> Result<Vec<f32>> {
+        let all = self.read_all_f32(buf)?;
+        anyhow::ensure!(offset + len <= all.len(), "read past end: {}+{} > {}",
+                        offset, len, all.len());
+        Ok(all[offset..offset + len].to_vec())
+    }
+
+    /// Read a whole f32 buffer (one device→host copy + one memcpy).
+    pub fn read_all_f32(&self, buf: &PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+        let n = lit.element_count();
+        let mut out = vec![0f32; n];
+        lit.copy_raw_to(&mut out)
+            .map_err(|e| anyhow::anyhow!("literal copy: {e}"))?;
+        Ok(out)
+    }
+
+    /// Upload a literal (used by tests that want exact round-trips).
+    pub fn upload_literal(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow::anyhow!("upload literal: {e}"))
+    }
+}
+

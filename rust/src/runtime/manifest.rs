@@ -1,0 +1,324 @@
+//! Parses `artifacts/<name>.manifest.json` — the cross-language contract
+//! describing the packed-state ABI (see python/compile/model.py): param
+//! offsets inside the flat state vector, mask/score layout, entry-point
+//! arities, and the model dimensions.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::{self, Value};
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+    /// offset of this param inside the flat params region
+    pub offset: usize,
+    pub init_std: f32,
+    pub maskable: bool,
+    /// offset/len inside the concatenated mask vector (maskable only)
+    pub mask_offset: usize,
+    pub mask_len: usize,
+    /// offset/count inside the concatenated block-score vector
+    pub score_offset: usize,
+    pub n_blocks: usize,
+}
+
+impl ParamSpec {
+    pub fn rows(&self) -> usize {
+        if self.shape.len() == 2 {
+            self.shape[0]
+        } else {
+            1
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ffn: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub n_cls: usize,
+    pub lora_rank: usize,
+    pub block_size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub file: String,
+    pub n_inputs: usize,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub input_dtypes: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct LoraSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+    pub init_std: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub task: String,
+    pub dir: PathBuf,
+    pub model: ModelDims,
+    pub n_params: usize,
+    pub state_len: usize,
+    pub mask_len: usize,
+    pub score_len: usize,
+    pub block_size: usize,
+    pub params: Vec<ParamSpec>,
+    pub lora_params: Vec<LoraSpec>,
+    pub entrypoints: BTreeMap<String, EntrySpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/<name>.manifest.json`.
+    pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join(format!("{name}.manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&v, dir)
+    }
+
+    pub fn from_json(v: &Value, dir: PathBuf) -> Result<Manifest> {
+        let layout = v.get("layout")?;
+        let model = v.get("model")?;
+        let dims = ModelDims {
+            d_model: model.get("d_model")?.as_usize()?,
+            n_layers: model.get("n_layers")?.as_usize()?,
+            n_heads: model.get("n_heads")?.as_usize()?,
+            d_ffn: model.get("d_ffn")?.as_usize()?,
+            vocab: model.get("vocab")?.as_usize()?,
+            seq: model.get("seq")?.as_usize()?,
+            batch: model.get("batch")?.as_usize()?,
+            n_cls: model.get("n_cls")?.as_usize()?,
+            lora_rank: model.get("lora_rank")?.as_usize()?,
+            block_size: model.get("block_size")?.as_usize()?,
+        };
+
+        let mut params = Vec::new();
+        for p in v.get("params")?.as_arr()? {
+            let maskable = p.get("maskable")?.as_bool()?;
+            let get_or0 = |k: &str| -> usize {
+                p.opt(k).and_then(|x| x.as_usize().ok()).unwrap_or(0)
+            };
+            params.push(ParamSpec {
+                name: p.get("name")?.as_str()?.to_string(),
+                shape: p
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                size: p.get("size")?.as_usize()?,
+                offset: p.get("offset")?.as_usize()?,
+                init_std: p.get("init_std")?.as_f64()? as f32,
+                maskable,
+                mask_offset: get_or0("mask_offset"),
+                mask_len: get_or0("mask_len"),
+                score_offset: get_or0("score_offset"),
+                n_blocks: get_or0("n_blocks"),
+            });
+        }
+
+        let mut lora_params = Vec::new();
+        for p in v.get("lora_params")?.as_arr()? {
+            lora_params.push(LoraSpec {
+                name: p.get("name")?.as_str()?.to_string(),
+                shape: p
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                size: p.get("size")?.as_usize()?,
+                init_std: p.get("init_std")?.as_f64()? as f32,
+            });
+        }
+
+        let mut entrypoints = BTreeMap::new();
+        if let Value::Obj(m) = v.get("entrypoints")? {
+            for (k, e) in m {
+                entrypoints.insert(
+                    k.clone(),
+                    EntrySpec {
+                        file: e.get("file")?.as_str()?.to_string(),
+                        n_inputs: e.get("n_inputs")?.as_usize()?,
+                        input_shapes: e
+                            .get("input_shapes")?
+                            .as_arr()?
+                            .iter()
+                            .map(|s| {
+                                s.as_arr()?.iter().map(|d| d.as_usize()).collect::<Result<_>>()
+                            })
+                            .collect::<Result<_>>()?,
+                        input_dtypes: e
+                            .get("input_dtypes")?
+                            .as_arr()?
+                            .iter()
+                            .map(|s| Ok(s.as_str()?.to_string()))
+                            .collect::<Result<_>>()?,
+                    },
+                );
+            }
+        }
+
+        let man = Manifest {
+            name: v.get("name")?.as_str()?.to_string(),
+            task: v.get("task")?.as_str()?.to_string(),
+            dir,
+            model: dims,
+            n_params: layout.get("n_params")?.as_usize()?,
+            state_len: layout.get("state_len")?.as_usize()?,
+            mask_len: layout.get("mask_len")?.as_usize()?,
+            score_len: layout.get("score_len")?.as_usize()?,
+            block_size: layout.get("block_size")?.as_usize()?,
+            params,
+            lora_params,
+            entrypoints,
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.state_len == 3 * self.n_params + 1, "state_len mismatch");
+        let mut off = 0;
+        let mut moff = 0;
+        let mut soff = 0;
+        let mut names: Vec<&str> = Vec::new();
+        for p in &self.params {
+            ensure!(p.offset == off, "param {} offset {} != {}", p.name, p.offset, off);
+            ensure!(p.size == p.shape.iter().product::<usize>(), "size mismatch {}", p.name);
+            off += p.size;
+            if p.maskable {
+                ensure!(p.shape.len() == 2, "maskable must be 2-D: {}", p.name);
+                ensure!(p.mask_offset == moff, "mask offset mismatch {}", p.name);
+                ensure!(p.mask_len == p.cols(), "mask len mismatch {}", p.name);
+                moff += p.mask_len;
+                ensure!(p.score_offset == soff, "score offset mismatch {}", p.name);
+                ensure!(p.n_blocks == p.cols() / self.block_size, "n_blocks mismatch {}", p.name);
+                soff += p.n_blocks;
+            }
+            names.push(&p.name);
+        }
+        ensure!(off == self.n_params, "params region size mismatch");
+        ensure!(moff == self.mask_len, "mask region size mismatch");
+        ensure!(soff == self.score_len, "score region size mismatch");
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        ensure!(names == sorted, "params must be sorted by name");
+        Ok(())
+    }
+
+    pub fn param(&self, name: &str) -> Result<&ParamSpec> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .with_context(|| format!("no param {name:?}"))
+    }
+
+    pub fn maskable(&self) -> impl Iterator<Item = &ParamSpec> {
+        self.params.iter().filter(|p| p.maskable)
+    }
+
+    /// Total elements in maskable 2-D params (the subspace universe).
+    pub fn maskable_elems(&self) -> usize {
+        self.maskable().map(|p| p.size).sum()
+    }
+
+    /// Total column blocks across maskable params.
+    pub fn total_blocks(&self) -> usize {
+        self.score_len
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entrypoints
+            .get(name)
+            .with_context(|| format!("no entrypoint {name:?} in {}", self.name))
+    }
+
+    pub fn hlo_path(&self, entry: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.entry(entry)?.file))
+    }
+
+    pub fn lora_state_len(&self) -> usize {
+        3 * self.lora_params.iter().map(|p| p.size).sum::<usize>() + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest_json() -> String {
+        // two params: "a" 2x4 maskable, "b" (4,) not; block_size 2
+        r#"{
+          "name": "fake", "task": "lm",
+          "model": {"name":"fake","d_model":4,"n_layers":1,"n_heads":1,
+                    "d_ffn":4,"vocab":8,"seq":4,"batch":2,"rope_theta":10000.0,
+                    "norm_eps":1e-5,"n_cls":2,"lora_rank":8,"block_size":2},
+          "layout": {"n_params": 12, "state_len": 37, "mask_len": 4,
+                     "score_len": 2, "block_size": 2},
+          "params": [
+            {"name":"a","shape":[2,4],"size":8,"offset":0,"init_std":0.02,
+             "maskable":true,"mask_offset":0,"mask_len":4,"score_offset":0,"n_blocks":2},
+            {"name":"b","shape":[4],"size":4,"offset":8,"init_std":0.0,"maskable":false}
+          ],
+          "lora_params": [],
+          "scalars": ["lr_full","lr_free","wd","beta1","beta2","eps","bc1","bc2"],
+          "entrypoints": {
+            "eval": {"file":"fake.eval.hlo.txt","n_inputs":2,
+                     "input_shapes":[[37],[2,5]],"input_dtypes":["float32","int32"]}
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let v = json::parse(&fake_manifest_json()).unwrap();
+        let m = Manifest::from_json(&v, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.n_params, 12);
+        assert_eq!(m.state_len, 37);
+        assert_eq!(m.params.len(), 2);
+        assert!(m.param("a").unwrap().maskable);
+        assert_eq!(m.param("a").unwrap().rows(), 2);
+        assert_eq!(m.maskable_elems(), 8);
+        assert_eq!(m.total_blocks(), 2);
+        assert_eq!(m.entry("eval").unwrap().n_inputs, 2);
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_offsets() {
+        let bad = fake_manifest_json().replace("\"offset\":8", "\"offset\":9");
+        let v = json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&v, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_state_len() {
+        let bad = fake_manifest_json().replace("\"state_len\": 37", "\"state_len\": 36");
+        let v = json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(&v, PathBuf::from("/tmp")).is_err());
+    }
+}

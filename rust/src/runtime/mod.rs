@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them with device-resident
+//! buffers. This is the only module that touches the `xla` crate; the
+//! rest of the coordinator works with [`manifest::Manifest`] metadata
+//! and opaque [`xla::PjRtBuffer`]s.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::Engine;
+pub use manifest::{EntrySpec, Manifest, ParamSpec};

@@ -1,0 +1,192 @@
+//! Host-side f32 tensors for the baseline optimizers, reference
+//! implementations and tests. Deliberately simple (row-major Vec<f32> +
+//! shape); the performance-critical math runs in the AOT-compiled HLO,
+//! not here.
+
+use anyhow::{ensure, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Result<Tensor> {
+        ensure!(
+            data.len() == shape.iter().product::<usize>(),
+            "data len {} != shape {:?}",
+            data.len(),
+            shape
+        );
+        Ok(Tensor { data, shape: shape.to_vec() })
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { data: vec![v; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn randn(shape: &[usize], std: f32, rng: &mut crate::util::rng::Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            data: (0..n).map(|_| rng.normal_f32(std)).collect(),
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rows(&self) -> usize {
+        if self.shape.len() == 2 {
+            self.shape[0]
+        } else {
+            1
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols() + c]
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        let cols = self.cols();
+        self.data[r * cols + c] = v;
+    }
+
+    /// Squared L2 norm.
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add_scaled(&mut self, other: &Tensor, s: f32) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    /// self @ other for 2-D tensors (small sizes only: GaLore projector).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(other.shape.len(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dim mismatch");
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &other.data[p * n..(p + 1) * n];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * row[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Transpose a 2-D tensor.
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    /// Per-column-block sum of squares (mirrors the `scores` entry).
+    pub fn block_scores(&self, block_size: usize) -> Vec<f64> {
+        assert_eq!(self.shape.len(), 2);
+        let cols = self.cols();
+        assert_eq!(cols % block_size, 0);
+        let nb = cols / block_size;
+        let mut out = vec![0f64; nb];
+        for r in 0..self.rows() {
+            let row = &self.data[r * cols..(r + 1) * cols];
+            for b in 0..nb {
+                let mut acc = 0f64;
+                for &x in &row[b * block_size..(b + 1) * block_size] {
+                    acc += (x as f64) * (x as f64);
+                }
+                out[b] += acc;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn construction_and_shape_guards() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert!(Tensor::from_vec(vec![1.0; 5], &[2, 3]).is_err());
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(vec![1., 2., 3., 4.], &[2, 2]).unwrap();
+        let b = Tensor::from_vec(vec![1., 1., 1., 1.], &[2, 2]).unwrap();
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(0);
+        let a = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        assert_eq!(a.t().t(), a);
+        assert_eq!(a.t().at(2, 1), a.at(1, 2));
+    }
+
+    #[test]
+    fn block_scores_match_manual() {
+        let a = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6., 7., 8.], &[2, 4]).unwrap();
+        let s = a.block_scores(2);
+        // block 0: 1+4+25+36 = 66; block 1: 9+16+49+64 = 138
+        assert_eq!(s, vec![66.0, 138.0]);
+    }
+
+    #[test]
+    fn add_scaled_and_norm() {
+        let mut a = Tensor::full(&[4], 1.0);
+        let b = Tensor::full(&[4], 2.0);
+        a.add_scaled(&b, 0.5);
+        assert_eq!(a.data, vec![2.0; 4]);
+        assert_eq!(a.sq_norm(), 16.0);
+    }
+}

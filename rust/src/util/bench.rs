@@ -1,0 +1,74 @@
+//! Mini-criterion: warmup + timed iterations with mean/std/percentiles.
+//! (criterion is not in the vendored registry; `cargo bench` runs these
+//! through `harness = false` bench targets.)
+
+use std::time::Instant;
+
+use super::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.3} ms ±{:>8.3}  p50 {:>9.3}  p95 {:>9.3}  (n={})",
+            self.name,
+            1e3 * self.mean_s,
+            1e3 * self.std_s,
+            1e3 * self.p50_s,
+            1e3 * self.p95_s,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured calls.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&samples),
+        std_s: stats::std_dev(&samples),
+        p50_s: stats::percentile(&samples, 50.0),
+        p95_s: stats::percentile(&samples, 95.0),
+    }
+}
+
+/// Standard bench-binary header so `cargo bench` output is scannable.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<44} {:>13} {:>9} {:>13} {:>13}",
+        "benchmark", "mean", "std", "p50", "p95"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures() {
+        let r = bench("noop", 2, 10, || 1 + 1);
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0 && r.mean_s < 0.1);
+        assert!(r.report().contains("noop"));
+    }
+}

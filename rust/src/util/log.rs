@@ -1,0 +1,109 @@
+//! Leveled stderr logging + JSONL metric sinks (no `log`-crate consumers
+//! downstream, so a tiny built-in is simpler and dependency-free).
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    l as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(l: Level, args: std::fmt::Arguments) {
+    if enabled(l) {
+        let tag = match l {
+            Level::Debug => "DBG",
+            Level::Info => "INF",
+            Level::Warn => "WRN",
+            Level::Error => "ERR",
+        };
+        eprintln!("[{tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, format_args!($($t)*)) }
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($t)*)) }
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($t)*)) }
+}
+
+/// Line-buffered JSONL sink for training metrics / experiment records.
+pub struct JsonlWriter {
+    w: BufWriter<File>,
+}
+
+impl JsonlWriter {
+    pub fn create(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        Ok(JsonlWriter { w: BufWriter::new(File::create(path)?) })
+    }
+
+    pub fn write(&mut self, v: &crate::util::json::Value) -> anyhow::Result<()> {
+        writeln!(self.w, "{}", v.to_string())?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("adafrugal_log_{}", std::process::id()));
+        let path = dir.join("m.jsonl");
+        {
+            let mut w = JsonlWriter::create(&path).unwrap();
+            w.write(&json::obj(vec![("step", json::num(1.0))])).unwrap();
+            w.write(&json::obj(vec![("step", json::num(2.0))])).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let v = json::parse(lines[1]).unwrap();
+        assert_eq!(v.get("step").unwrap().as_f64().unwrap(), 2.0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

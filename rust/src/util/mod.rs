@@ -1,0 +1,11 @@
+//! Self-contained utilities (the offline vendored registry has no
+//! serde/clap/rand/criterion, so these are hand-rolled and unit-tested).
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,96 @@
+//! Wall-clock timing with named phase accumulation (the Fig. 2 harness
+//! needs a step-vs-redefinition time breakdown).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Accumulates wall-clock per named phase.
+#[derive(Default, Debug, Clone)]
+pub struct PhaseTimer {
+    totals: BTreeMap<&'static str, Duration>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(phase, t.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        *self.totals.entry(phase).or_default() += d;
+        *self.counts.entry(phase).or_default() += 1;
+    }
+
+    pub fn total_secs(&self, phase: &str) -> f64 {
+        self.totals.get(phase).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.counts.get(phase).copied().unwrap_or(0)
+    }
+
+    pub fn grand_total_secs(&self) -> f64 {
+        self.totals.values().map(|d| d.as_secs_f64()).sum()
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&'static str, f64, u64)> + '_ {
+        self.totals
+            .iter()
+            .map(|(&k, d)| (k, d.as_secs_f64(), self.count(k)))
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, secs, n) in self.phases() {
+            out.push_str(&format!(
+                "{k:<16} {secs:>9.3}s  n={n:<8} avg={:.3}ms\n",
+                1e3 * secs / n.max(1) as f64
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_phases() {
+        let mut pt = PhaseTimer::new();
+        let x = pt.time("a", || 21 * 2);
+        assert_eq!(x, 42);
+        pt.time("a", || std::thread::sleep(Duration::from_millis(2)));
+        pt.time("b", || ());
+        assert_eq!(pt.count("a"), 2);
+        assert_eq!(pt.count("b"), 1);
+        assert!(pt.total_secs("a") >= 0.002);
+        assert!(pt.grand_total_secs() >= pt.total_secs("a"));
+        assert!(pt.report().contains("a"));
+    }
+}

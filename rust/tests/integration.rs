@@ -1,0 +1,271 @@
+//! Integration tests over the REAL artifacts (run `make artifacts`
+//! first; tests are skipped with a notice if artifacts are missing).
+//!
+//! The centerpiece is the cross-language equivalence check: one fused
+//! FRUGAL HLO step (L1 Pallas kernel inside the L2 graph, executed
+//! through the L3 runtime) must match the independent rust reference
+//! optimizer applied to gradients from the `grad` entry.
+
+use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::method::Method;
+use adafrugal::coordinator::trainer::Trainer;
+use adafrugal::model::init;
+use adafrugal::optim::frugal::MaskedFrugal;
+use adafrugal::optim::StepScalars;
+use adafrugal::projection::{Strategy, SubspaceMask};
+use adafrugal::runtime::Engine;
+use adafrugal::util::rng::Rng;
+
+const ART: &str = "artifacts";
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(ART).join("nano.manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("SKIP: artifacts missing; run `make artifacts`");
+            return;
+        }
+    };
+}
+
+fn nano_cfg() -> TrainConfig {
+    TrainConfig {
+        preset: "nano".into(),
+        artifacts_dir: ART.into(),
+        steps: 60,
+        warmup_steps: 10,
+        n_eval: 20,
+        t_start: 20,
+        t_max: 80,
+        log_every: 1000,
+        val_batches: 4,
+        seed: 7,
+        ..TrainConfig::default()
+    }
+}
+
+fn random_tokens(man: &adafrugal::runtime::Manifest, rng: &mut Rng) -> Vec<i32> {
+    let n = man.model.batch * (man.model.seq + 1);
+    (0..n).map(|_| rng.below(man.model.vocab) as i32).collect()
+}
+
+#[test]
+fn eval_at_init_is_near_uniform() {
+    require_artifacts!();
+    let engine = Engine::load(ART, "nano", &["eval"]).unwrap();
+    let man = &engine.manifest;
+    let state = init::init_state(man, 0);
+    let sbuf = engine.upload_f32(&state, &[man.state_len]).unwrap();
+    let mut rng = Rng::new(1);
+    let toks = random_tokens(man, &mut rng);
+    let tbuf = engine
+        .upload_i32(&toks, &[man.model.batch, man.model.seq + 1])
+        .unwrap();
+    let out = engine.run("eval", &[&sbuf, &tbuf]).unwrap();
+    let v = engine.read_f32(&out, 0, 2).unwrap();
+    let mean_nll = v[0] as f64 / v[1] as f64;
+    let uniform = (man.model.vocab as f64).ln();
+    assert!((mean_nll - uniform).abs() < 0.3,
+            "init nll {mean_nll} vs uniform {uniform}");
+    assert_eq!(v[1] as usize, man.model.batch * man.model.seq);
+}
+
+#[test]
+fn fused_frugal_hlo_matches_host_reference() {
+    require_artifacts!();
+    let engine = Engine::load(ART, "nano", &["frugal", "grad"]).unwrap();
+    let man = &engine.manifest;
+    let mut rng = Rng::new(3);
+
+    // random-ish state: params from init, moments small random INSIDE
+    // the mask (the kernel contains state to the subspace each step)
+    let mut state = init::init_state(man, 3);
+    let n = man.n_params;
+    let mut mask = SubspaceMask::new(man);
+    mask.redefine(Strategy::Random, 0.4, None, &mut rng).unwrap();
+    let rendered = mask.render();
+    for p in &man.params {
+        for i in 0..p.size {
+            let on = if p.maskable {
+                rendered[p.mask_offset + (i % p.cols())] != 0.0
+            } else {
+                true
+            };
+            if on {
+                state[n + p.offset + i] = 0.01 * rng.normal_f32(1.0);
+                state[2 * n + p.offset + i] = (0.01 * rng.normal_f32(1.0)).abs();
+            }
+        }
+    }
+
+    let toks = random_tokens(man, &mut rng);
+    let scal = StepScalars::new(3e-3, 3e-4, 0.05, 0.9, 0.999, 1e-8, 5);
+
+    // --- device step ---
+    let sbuf = engine.upload_f32(&state, &[man.state_len]).unwrap();
+    let mbuf = engine.upload_f32(&rendered, &[man.mask_len]).unwrap();
+    let cbuf = engine.upload_f32(&scal.to_array(), &[8]).unwrap();
+    let tbuf = engine
+        .upload_i32(&toks, &[man.model.batch, man.model.seq + 1])
+        .unwrap();
+    let out = engine.run("frugal", &[&sbuf, &mbuf, &cbuf, &tbuf]).unwrap();
+    let device_state = engine.read_all_f32(&out).unwrap();
+
+    // --- host reference: grads from the grad entry + rust optimizer ---
+    let pbuf = engine.upload_f32(&state[..n], &[n]).unwrap();
+    let gout = engine.run("grad", &[&pbuf, &tbuf]).unwrap();
+    let gl = engine.read_all_f32(&gout).unwrap();
+    let (grads, loss) = (&gl[..n], gl[n]);
+
+    let mut host_params = state[..n].to_vec();
+    let mut host_opt = MaskedFrugal::new(n);
+    host_opt.m.copy_from_slice(&state[n..2 * n]);
+    host_opt.v.copy_from_slice(&state[2 * n..3 * n]);
+    host_opt.step(man, &mut host_params, grads, &rendered, &scal);
+
+    // losses agree
+    assert!((device_state[3 * n] - loss).abs() < 1e-4,
+            "loss mismatch: {} vs {}", device_state[3 * n], loss);
+    // parameters agree element-wise
+    let mut max_err = 0f32;
+    for i in 0..n {
+        max_err = max_err.max((device_state[i] - host_params[i]).abs());
+    }
+    assert!(max_err < 2e-4, "param max err {max_err}");
+    // moments agree and obey containment
+    for i in 0..n {
+        assert!((device_state[n + i] - host_opt.m[i]).abs() < 2e-4,
+                "m mismatch at {i}");
+        assert!((device_state[2 * n + i] - host_opt.v[i]).abs() < 2e-4,
+                "v mismatch at {i}");
+    }
+}
+
+#[test]
+fn adamw_hlo_matches_host_reference() {
+    require_artifacts!();
+    let engine = Engine::load(ART, "nano", &["adamw", "grad"]).unwrap();
+    let man = &engine.manifest;
+    let n = man.n_params;
+    let mut rng = Rng::new(9);
+    let state = init::init_state(man, 9);
+    let toks = random_tokens(man, &mut rng);
+    let scal = StepScalars::new(1e-3, 0.0, 0.1, 0.9, 0.999, 1e-8, 1);
+
+    let sbuf = engine.upload_f32(&state, &[man.state_len]).unwrap();
+    let cbuf = engine.upload_f32(&scal.to_array(), &[8]).unwrap();
+    let tbuf = engine
+        .upload_i32(&toks, &[man.model.batch, man.model.seq + 1])
+        .unwrap();
+    let out = engine.run("adamw", &[&sbuf, &cbuf, &tbuf]).unwrap();
+    let device_state = engine.read_all_f32(&out).unwrap();
+
+    let pbuf = engine.upload_f32(&state[..n], &[n]).unwrap();
+    let gout = engine.run("grad", &[&pbuf, &tbuf]).unwrap();
+    let gl = engine.read_all_f32(&gout).unwrap();
+
+    let mut host_params = state[..n].to_vec();
+    let mut host = adafrugal::optim::adamw::AdamW::new(n);
+    host.step(&mut host_params, &gl[..n], &scal);
+    let mut max_err = 0f32;
+    for i in 0..n {
+        max_err = max_err.max((device_state[i] - host_params[i]).abs());
+    }
+    assert!(max_err < 2e-4, "adamw param max err {max_err}");
+}
+
+#[test]
+fn scores_entry_matches_host_block_scores() {
+    require_artifacts!();
+    let engine = Engine::load(ART, "nano", &["scores", "grad"]).unwrap();
+    let man = &engine.manifest;
+    let n = man.n_params;
+    let mut rng = Rng::new(11);
+    let state = init::init_state(man, 11);
+    let toks = random_tokens(man, &mut rng);
+    let pbuf = engine.upload_f32(&state[..n], &[n]).unwrap();
+    let tbuf = engine
+        .upload_i32(&toks, &[man.model.batch, man.model.seq + 1])
+        .unwrap();
+    let sout = engine.run("scores", &[&pbuf, &tbuf]).unwrap();
+    let scores = engine.read_all_f32(&sout).unwrap();
+    assert_eq!(scores.len(), man.score_len);
+
+    let gout = engine.run("grad", &[&pbuf, &tbuf]).unwrap();
+    let gl = engine.read_all_f32(&gout).unwrap();
+    for p in man.maskable() {
+        let g = adafrugal::tensor::Tensor::from_vec(
+            gl[p.offset..p.offset + p.size].to_vec(),
+            &[p.rows(), p.cols()],
+        )
+        .unwrap();
+        let want = g.block_scores(man.block_size);
+        for b in 0..p.n_blocks {
+            let got = scores[p.score_offset + b] as f64;
+            let w = want[b];
+            assert!((got - w).abs() <= 1e-6 + 1e-3 * w.abs(),
+                    "score mismatch {}[{}]: {} vs {}", p.name, b, got, w);
+        }
+    }
+}
+
+#[test]
+fn trainer_loss_decreases_frugal() {
+    require_artifacts!();
+    let mut t = Trainer::new(nano_cfg(), Method::FrugalStatic).unwrap();
+    t.quiet = true;
+    let r = t.run().unwrap();
+    let first = r.evals.first().unwrap().val_loss;
+    let last = r.evals.last().unwrap().val_loss;
+    assert!(last < first - 0.1, "no learning: {first} -> {last}");
+    assert!(r.redefinitions >= 2);
+}
+
+#[test]
+fn trainer_all_methods_step_without_diverging() {
+    require_artifacts!();
+    for &m in Method::table_roster() {
+        let cfg = TrainConfig { steps: 12, n_eval: 12, t_start: 6, warmup_steps: 4,
+                                val_batches: 2, ..nano_cfg() };
+        let mut t = Trainer::new(cfg, m).unwrap();
+        t.quiet = true;
+        let r = t.run().unwrap();
+        assert!(r.evals.last().unwrap().val_loss.is_finite(), "{m:?}");
+    }
+}
+
+#[test]
+fn dynamic_rho_reduces_memory_over_run() {
+    require_artifacts!();
+    let cfg = TrainConfig { steps: 60, rho: 0.5, rho_end: 0.1, ..nano_cfg() };
+    let mut t = Trainer::new(cfg, Method::AdaFrugalDynRho).unwrap();
+    t.quiet = true;
+    let r = t.run().unwrap();
+    assert!(r.memory.last_bytes() < r.memory.first_bytes(),
+            "memory should shrink: {:?}", r.memory.samples);
+}
+
+#[test]
+fn checkpoint_roundtrip_through_trainer() {
+    require_artifacts!();
+    let mut t = Trainer::new(nano_cfg(), Method::FrugalStatic).unwrap();
+    t.quiet = true;
+    let params = t.params_host().unwrap();
+    let dir = std::env::temp_dir().join(format!("adafrugal_it_{}", std::process::id()));
+    let path = dir.join("ck.ckpt");
+    adafrugal::coordinator::checkpoint::save(
+        &path,
+        &adafrugal::coordinator::checkpoint::train_header("nano", "frugal", 0, 0.0),
+        &params,
+    )
+    .unwrap();
+    let ck = adafrugal::coordinator::checkpoint::load(&path).unwrap();
+    let mut t2 = Trainer::new(nano_cfg(), Method::FrugalStatic).unwrap();
+    t2.quiet = true;
+    t2.restore_params(&ck.data).unwrap();
+    assert_eq!(t2.params_host().unwrap(), params);
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -1,0 +1,86 @@
+//! Integration tests for the GLUE fine-tuning path (cls + LoRA
+//! artifacts). Skipped when artifacts are missing.
+
+use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::finetune::{FineTuner, FtMethod};
+
+const ART: &str = "artifacts";
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(ART).join("nano.cls2.manifest.json").exists()
+}
+
+fn ft_cfg() -> TrainConfig {
+    TrainConfig {
+        preset: "nano".into(),
+        artifacts_dir: ART.into(),
+        steps: 60,
+        warmup_steps: 6,
+        n_eval: 20,
+        t_start: 20,
+        t_max: 60,
+        lr: 2e-3,
+        val_batches: 2,
+        seed: 5,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn finetune_beats_chance_frugal() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let mut ft = FineTuner::new(
+        ft_cfg(),
+        FtMethod::Frugal { dynamic_rho: false, dynamic_t: false },
+        "SST-2",
+        0,
+    )
+    .unwrap();
+    let r = ft.run().unwrap();
+    // SST-2-like task is easy; chance is 50
+    assert!(r.score > 65.0, "score {}", r.score);
+    assert!(r.final_train_loss.is_finite());
+}
+
+#[test]
+fn finetune_full_adamw_runs() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let mut ft = FineTuner::new(ft_cfg(), FtMethod::FullAdamW, "SST-2", 1).unwrap();
+    let r = ft.run().unwrap();
+    assert!(r.score > 65.0, "score {}", r.score);
+}
+
+#[test]
+fn finetune_lora_runs() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let cfg = TrainConfig { steps: 80, ..ft_cfg() };
+    let mut ft = FineTuner::new(cfg, FtMethod::Lora, "SST-2", 2).unwrap();
+    let r = ft.run().unwrap();
+    assert!(r.score > 55.0, "lora score {}", r.score);
+}
+
+#[test]
+fn finetune_galore_and_dynamic_variants_run() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    for m in [
+        FtMethod::GaLore,
+        FtMethod::Frugal { dynamic_rho: true, dynamic_t: true },
+    ] {
+        let cfg = TrainConfig { steps: 24, ..ft_cfg() };
+        let mut ft = FineTuner::new(cfg, m, "SST-2", 3).unwrap();
+        let r = ft.run().unwrap();
+        assert!(r.score.is_finite(), "{m:?}");
+    }
+}

@@ -1,0 +1,221 @@
+//! Cross-module property tests that need no artifacts: controller
+//! composition, memory-model monotonicity, data-pipeline invariants,
+//! checkpoint fuzzing, failure injection.
+
+use adafrugal::config::TrainConfig;
+use adafrugal::controller::{AdaFrugalController, RhoSchedule, TController};
+use adafrugal::coordinator::checkpoint;
+use adafrugal::data::corpus::{CorpusGenerator, CorpusProfile};
+use adafrugal::data::loader::Loader;
+use adafrugal::data::tokenizer::Tokenizer;
+use adafrugal::util::prop;
+use adafrugal::util::rng::Rng;
+
+#[test]
+fn controller_composition_follows_paper_dynamics() {
+    // Simulate Algorithm 1's control flow over a synthetic loss curve:
+    // fast improvement then plateau. T must stay at T_start during
+    // improvement and grow monotonically during the plateau; rho must
+    // decay linearly throughout.
+    let cfg = TrainConfig { steps: 2000, ..TrainConfig::default() };
+    let mut c = AdaFrugalController::from_config(&cfg, true, true);
+    let mut t_history = Vec::new();
+    for k in (100..=2000).step_by(100) {
+        // loss: 1/k-ish improvement until 1000, then flat
+        let loss = if k <= 1000 { 100.0 / (k as f64).sqrt() } else { 3.16 };
+        c.observe_val_loss(k, loss);
+        t_history.push(c.t_current());
+        let rho = c.rho_at(k);
+        let expected = (0.25 - 0.20 * k as f64 / 2000.0).max(0.05);
+        assert!((rho - expected).abs() < 1e-12, "rho at {k}");
+    }
+    // T never decreased
+    for w in t_history.windows(2) {
+        assert!(w[1] >= w[0], "T decreased: {t_history:?}");
+    }
+    // T grew during the plateau and respects T_max
+    assert!(*t_history.last().unwrap() > cfg.t_start);
+    assert!(*t_history.last().unwrap() <= cfg.t_max);
+}
+
+#[test]
+fn prop_memory_model_monotone_in_rho() {
+    use adafrugal::model::memory;
+    let man = test_manifest();
+    prop::forall(
+        "memory-monotone-rho",
+        50,
+        |r| (r.f64(), r.f64()),
+        |&(a, b)| {
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            memory::frugal_bytes_at_rho(&man, lo) <= memory::frugal_bytes_at_rho(&man, hi)
+        },
+    );
+}
+
+#[test]
+fn prop_tokenizer_roundtrip_on_generated_corpora() {
+    // decode(encode(text)) must reproduce the corpus text exactly: the
+    // generator emits space-separated words with '.'-suffixed sentence
+    // ends, which is precisely the tokenizer's normal form.
+    for profile in [CorpusProfile::English, CorpusProfile::Vietnamese] {
+        prop::forall(
+            "tokenizer-roundtrip",
+            8,
+            |r| r.below(1000) as u64,
+            |&seed| {
+                let gen = CorpusGenerator::new(profile, 300, seed);
+                let c = gen.generate(400, seed);
+                let tok = Tokenizer::train(&c.text, 600);
+                let ids = tok.encode(&c.text);
+                ids.iter().all(|&i| (i as usize) < 600) && tok.decode(&ids) == c.text
+            },
+        );
+    }
+}
+
+#[test]
+fn tokenizer_decode_reinserts_sentence_dots() {
+    let gen = CorpusGenerator::new(CorpusProfile::English, 200, 1);
+    let c = gen.generate(200, 1);
+    let tok = Tokenizer::train(&c.text, 500);
+    let ids = tok.encode(&c.text);
+    let dots_in = c.text.matches('.').count();
+    let dots_out = tok.decode(&ids).matches('.').count();
+    assert_eq!(dots_in, dots_out);
+}
+
+#[test]
+fn prop_loader_never_mixes_train_and_val() {
+    prop::forall(
+        "loader-split-disjoint",
+        20,
+        |r| (200 + r.below(800), 1 + r.below(4), 4 + r.below(12)),
+        |&(n_tokens, batch, seq)| {
+            let ids: Vec<u32> = (0..n_tokens as u32).collect();
+            if n_tokens / (seq + 1) < 2 {
+                return true;
+            }
+            let (mut tr, va) = Loader::split(ids, batch, seq, 0.2, 9);
+            // validation windows come from the tail; every train batch
+            // token must be strictly below the smallest val window start
+            let val_min = (0..va.n_windows())
+                .map(|i| *va.eval_batch(i).tokens.iter().min().unwrap())
+                .min()
+                .unwrap();
+            for _ in 0..5 {
+                let b = tr.next_batch();
+                if b.tokens.iter().any(|&t| t >= val_min) {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn corpus_profiles_give_different_token_statistics() {
+    // the two corpora must be distinguishable in vocabulary usage —
+    // that's what makes Table 2 a genuine second dataset
+    let en = CorpusGenerator::new(CorpusProfile::English, 400, 5).generate(3000, 0);
+    let vi = CorpusGenerator::new(CorpusProfile::Vietnamese, 400, 5).generate(3000, 0);
+    let uniq = |t: &str| {
+        t.split_whitespace()
+            .map(|w| w.trim_end_matches('.'))
+            .collect::<std::collections::HashSet<_>>()
+            .len()
+    };
+    let (u_en, u_vi) = (uniq(&en.text), uniq(&vi.text));
+    assert!(u_en > 50 && u_vi > 50);
+    // texts differ entirely
+    assert_ne!(en.text[..200], vi.text[..200]);
+}
+
+#[test]
+fn checkpoint_rejects_truncation_fuzz() {
+    let dir = std::env::temp_dir().join(format!("adafrugal_fuzz_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("c.ckpt");
+    let data: Vec<f32> = (0..500).map(|i| i as f32).collect();
+    checkpoint::save(&path, &checkpoint::train_header("nano", "m", 1, 0.5), &data).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let mut rng = Rng::new(0);
+    for _ in 0..20 {
+        // truncate at a random point — must error, never panic or
+        // return wrong-length data
+        let cut = 1 + rng.below(bytes.len() - 1);
+        let p2 = dir.join("t.ckpt");
+        std::fs::write(&p2, &bytes[..cut]).unwrap();
+        match checkpoint::load(&p2) {
+            Ok(ck) => assert_eq!(ck.data, data, "silent corruption at cut {cut}"),
+            Err(_) => {}
+        }
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn t_controller_is_gap_robust() {
+    // missing observations (e.g. eval skipped) must not break monotonicity
+    let mut c = TController::loss_aware(100, 800, 100, 0.008, 1.5);
+    let mut prev = c.current();
+    let mut rng = Rng::new(4);
+    let mut loss = 10.0;
+    let mut step = 0;
+    for _ in 0..30 {
+        step += 100 * (1 + rng.below(5)); // irregular gaps
+        loss *= 0.999 + 0.002 * rng.f64();
+        c.observe(step, loss);
+        assert!(c.current() >= prev && c.current() <= 800);
+        prev = c.current();
+    }
+}
+
+#[test]
+fn rho_schedules_converge_to_end() {
+    for sched in [
+        RhoSchedule::linear(0.3, 0.05, 1234),
+        RhoSchedule::cosine(0.3, 0.05, 1234),
+    ] {
+        assert!((sched.at(1234) - 0.05).abs() < 1e-9);
+        assert!((sched.at(5000) - 0.05).abs() < 1e-9);
+        assert_eq!(sched.end_value(), 0.05);
+        assert!(sched.is_dynamic());
+    }
+}
+
+#[test]
+fn config_rejects_inconsistent_paper_params() {
+    let mut c = TrainConfig::default();
+    c.t_max = 50; // < t_start 100
+    assert!(c.validate().is_err());
+    let mut c = TrainConfig::default();
+    c.rho_end = 0.5; // > rho 0.25
+    assert!(c.validate().is_err());
+    let mut c = TrainConfig::default();
+    c.gamma_increase = 0.5; // would shrink T
+    assert!(c.validate().is_err());
+}
+
+/// Small synthetic manifest shared by the memory-model property test.
+fn test_manifest() -> adafrugal::runtime::Manifest {
+    let text = r#"{
+      "name":"p","task":"lm",
+      "model":{"name":"p","d_model":8,"n_layers":1,"n_heads":1,"d_ffn":8,
+               "vocab":16,"seq":4,"batch":2,"rope_theta":1e4,"norm_eps":1e-5,
+               "n_cls":2,"lora_rank":2,"block_size":4},
+      "layout":{"n_params":96,"state_len":289,"mask_len":16,"score_len":4,"block_size":4},
+      "params":[
+        {"name":"a","shape":[8,8],"size":64,"offset":0,"init_std":0.02,
+         "maskable":true,"mask_offset":0,"mask_len":8,"score_offset":0,"n_blocks":2},
+        {"name":"b","shape":[2,8],"size":16,"offset":64,"init_std":0.02,
+         "maskable":true,"mask_offset":8,"mask_len":8,"score_offset":2,"n_blocks":2},
+        {"name":"z","shape":[16],"size":16,"offset":80,"init_std":0.0,"maskable":false}],
+      "lora_params":[], "scalars":[], "entrypoints":{}}"#;
+    adafrugal::runtime::Manifest::from_json(
+        &adafrugal::util::json::parse(text).unwrap(),
+        std::path::PathBuf::from("/tmp"),
+    )
+    .unwrap()
+}
