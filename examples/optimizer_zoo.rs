@@ -1,0 +1,53 @@
+//! Tour of the unified optimizer registry: build every registered
+//! update rule by name on a synthetic manifest (no artifacts needed),
+//! take a few steps, and print the memory each one actually holds —
+//! the head-to-head comparison the paper's tables are built from.
+//!
+//!     cargo run --release --example optimizer_zoo
+
+use adafrugal::model::init;
+use adafrugal::optim::{self, MaskCtx, OptimBuild, Optimizer, StepScalars};
+use adafrugal::projection::{Strategy, SubspaceMask};
+use adafrugal::runtime::Manifest;
+use adafrugal::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let man = Manifest::synthetic_lm(4, 64, 128, 16)?;
+    let mut rng = Rng::new(0);
+    let mut mask = SubspaceMask::new(&man);
+    mask.redefine(Strategy::Random, 0.25, None, &mut rng)?;
+    let rendered = mask.render();
+
+    println!("== optimizer registry on a synthetic {:.1}K-param manifest (rho=0.25) ==\n",
+             man.n_params as f64 / 1e3);
+    println!("{:<16} {:>12} {:>9}  {}", "name", "state bytes", "vs adamw", "summary");
+    let adamw_bytes = man.n_params * 8;
+
+    for spec in optim::registered() {
+        let mut opt: Box<dyn Optimizer> = optim::build(spec.name, &man, &OptimBuild::default())?;
+        let mut params = init::init_state(&man, 1)[..man.n_params].to_vec();
+        for t in 1..=5 {
+            let grads: Vec<f32> = (0..man.n_params).map(|_| rng.normal_f32(1.0)).collect();
+            let s = StepScalars::new(1e-3, 1e-4, 0.01, 0.9, 0.999, 1e-8, t);
+            let ctx = MaskCtx { mask: &mask, rendered: &rendered };
+            opt.step(&man, &mut params, &grads, Some(&ctx), &s)?;
+        }
+        println!(
+            "{:<16} {:>12} {:>8.2}x  {}",
+            spec.name,
+            opt.state_bytes(),
+            opt.state_bytes() as f64 / adamw_bytes as f64,
+            spec.summary
+        );
+    }
+
+    println!("\naliases: {}",
+             optim::registered()
+                 .iter()
+                 .filter(|s| !s.aliases.is_empty())
+                 .map(|s| format!("{} -> {}", s.aliases.join("/"), s.name))
+                 .collect::<Vec<_>>()
+                 .join(", "));
+    println!("see docs/OPTIMIZERS.md for config keys, memory formulas and paper equations");
+    Ok(())
+}

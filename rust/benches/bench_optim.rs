@@ -1,0 +1,72 @@
+//! Host optimizer step throughput through the unified registry, serial
+//! vs parallel — runs WITHOUT artifacts (synthetic manifest), so this
+//! is the one bench that always works offline. This is the hot path the
+//! rayon-style `util::par` fan-out targets; compare the `1 thread` and
+//! `auto` rows per optimizer.
+
+use adafrugal::model::init;
+use adafrugal::optim::{self, MaskCtx, OptimBuild, Optimizer, StepScalars};
+use adafrugal::projection::{Strategy, SubspaceMask};
+use adafrugal::runtime::Manifest;
+use adafrugal::util::rng::Rng;
+use adafrugal::util::{bench, par};
+
+fn main() -> anyhow::Result<()> {
+    // LM-shaped host workload: 12 maskable 256x512 matrices (~1.6M params)
+    let man = Manifest::synthetic_lm(12, 256, 512, 32)?;
+    bench::header(&format!(
+        "host optimizer step, {:.2}M params, {} specs (registry path)",
+        man.n_params as f64 / 1e6,
+        man.params.len()
+    ));
+
+    let mut rng = Rng::new(0);
+    let mut mask = SubspaceMask::new(&man);
+    mask.redefine(Strategy::Random, 0.25, None, &mut rng)?;
+    let rendered = mask.render();
+    let grads: Vec<f32> = (0..man.n_params).map(|_| rng.normal_f32(1.0)).collect();
+    let p0 = init::init_state(&man, 1)[..man.n_params].to_vec();
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    for name in optim::names() {
+        for &threads in &[1usize, auto] {
+            par::set_threads(threads);
+            let mut opt: Box<dyn Optimizer> = optim::build(name, &man, &OptimBuild::default())?;
+            let mut params = p0.clone();
+            let mut t = 0usize;
+            let r = bench::bench(
+                &format!("{name:<16} ({threads:>2} thread{})",
+                         if threads == 1 { " " } else { "s" }),
+                2,
+                10,
+                || {
+                    t += 1;
+                    let s = StepScalars::new(1e-3, 1e-4, 0.01, 0.9, 0.999, 1e-8, t);
+                    let ctx = MaskCtx { mask: &mask, rendered: &rendered };
+                    opt.step(&man, &mut params, &grads, Some(&ctx), &s).unwrap();
+                },
+            );
+            println!("{}", r.report());
+        }
+    }
+    par::set_threads(0);
+
+    // mask rendering (the redefinition-pause component) — on a wide
+    // mask so the render crosses util::par's work-size gate
+    let wide = Manifest::synthetic_lm(12, 8, 4096, 16)?;
+    let mut wide_mask = SubspaceMask::new(&wide);
+    wide_mask.redefine(Strategy::Random, 0.25, None, &mut rng)?;
+    for &threads in &[1usize, auto] {
+        par::set_threads(threads);
+        let r = bench::bench(
+            &format!("mask render      ({threads:>2} thread{})",
+                     if threads == 1 { " " } else { "s" }),
+            3,
+            20,
+            || wide_mask.render(),
+        );
+        println!("{}", r.report());
+    }
+    par::set_threads(0);
+    Ok(())
+}

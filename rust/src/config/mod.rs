@@ -15,6 +15,10 @@ pub struct TrainConfig {
     pub preset: String,
     /// artifacts directory
     pub artifacts_dir: String,
+    /// training method by roster name ("adamw", "frugal", "dyn-rho",
+    /// "dyn-t", "combined", "galore", "badam" — see
+    /// `coordinator::method::Method::parse`)
+    pub method: String,
     pub steps: usize,
     pub seed: u64,
 
@@ -64,6 +68,7 @@ impl Default for TrainConfig {
         TrainConfig {
             preset: "micro".into(),
             artifacts_dir: "artifacts".into(),
+            method: "combined".into(),
             steps: 2000,
             seed: 0,
             lr: 1e-3,
@@ -105,6 +110,7 @@ impl TrainConfig {
         }
         set!(preset, as_string);
         set!(artifacts_dir, as_string);
+        set!(method, as_string);
         set!(steps, as_usize);
         set!(seed, as_u64);
         set!(lr, as_f32);
@@ -132,6 +138,9 @@ impl TrainConfig {
     }
 
     pub fn validate(&self) -> Result<()> {
+        // `method` is carried as a plain name here and resolved by
+        // `coordinator::method::Method::parse` at the use sites —
+        // config stays the bottom layer with no coordinator dependency
         anyhow::ensure!(self.rho >= 0.0 && self.rho <= 1.0, "rho must be in [0,1]");
         anyhow::ensure!(self.rho_end >= 0.0 && self.rho_end <= self.rho,
                         "rho_end must be in [0, rho]");
@@ -143,10 +152,8 @@ impl TrainConfig {
             matches!(self.strategy.as_str(), "random" | "topk" | "roundrobin"),
             "unknown strategy {:?}", self.strategy
         );
-        anyhow::ensure!(
-            matches!(self.state_mgmt.as_str(), "reset" | "project"),
-            "unknown state_mgmt {:?}", self.state_mgmt
-        );
+        // single source of truth for the reset/project vocabulary
+        crate::optim::StateMgmt::parse(&self.state_mgmt)?;
         Ok(())
     }
 
@@ -171,6 +178,7 @@ impl TrainConfig {
         }
         set!(preset, as_string);
         set!(artifacts_dir, as_string);
+        set!(method, as_string);
         set!(steps, as_usize);
         set!(seed, as_u64);
         set!(lr, as_f32);
@@ -233,5 +241,17 @@ mod tests {
         assert!(c.set("strategy", "bogus").is_err());
         // failed set must not corrupt state
         assert_eq!(c.rho, 0.25);
+    }
+
+    #[test]
+    fn method_selected_by_name() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.method, "combined");
+        c.set("method", "galore").unwrap();
+        assert_eq!(c.method, "galore");
+        // the vocabulary itself is owned by Method::parse at the use
+        // site (cmd_train / Trainer callers); config just carries it
+        let m = parse_str("[train]\nmethod = \"badam\"\n").unwrap();
+        assert_eq!(TrainConfig::from_map(&m).unwrap().method, "badam");
     }
 }

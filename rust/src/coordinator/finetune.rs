@@ -12,46 +12,12 @@ use crate::config::TrainConfig;
 use crate::controller::AdaFrugalController;
 use crate::data::glue::{self, Example, TaskData, TaskSpec};
 use crate::model::init;
-use crate::optim::StepScalars;
+use crate::optim::{self, OptimBuild, Optimizer, StateMgmt, StepScalars};
 use crate::projection::{Strategy, SubspaceMask};
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
 
-/// Fine-tuning method roster for Table 3. LoRA is a distinct path
-/// (adapter-only training on the frozen backbone).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum FtMethod {
-    FullAdamW,
-    Lora,
-    GaLore,
-    Frugal { dynamic_rho: bool, dynamic_t: bool },
-}
-
-impl FtMethod {
-    pub fn label(&self) -> &'static str {
-        match self {
-            FtMethod::FullAdamW => "Full-Parameter",
-            FtMethod::Lora => "LoRA",
-            FtMethod::GaLore => "GaLore",
-            FtMethod::Frugal { dynamic_rho: false, dynamic_t: false } => "FRUGAL (static)",
-            FtMethod::Frugal { dynamic_rho: true, dynamic_t: false } => "AdaFRUGAL-Dyn-rho",
-            FtMethod::Frugal { dynamic_rho: false, dynamic_t: true } => "AdaFRUGAL-Dyn-T",
-            FtMethod::Frugal { dynamic_rho: true, dynamic_t: true } => "AdaFRUGAL-Combined",
-        }
-    }
-
-    pub fn roster() -> Vec<FtMethod> {
-        vec![
-            FtMethod::FullAdamW,
-            FtMethod::Lora,
-            FtMethod::GaLore,
-            FtMethod::Frugal { dynamic_rho: false, dynamic_t: false },
-            FtMethod::Frugal { dynamic_rho: true, dynamic_t: false },
-            FtMethod::Frugal { dynamic_rho: false, dynamic_t: true },
-            FtMethod::Frugal { dynamic_rho: true, dynamic_t: true },
-        ]
-    }
-}
+pub use crate::coordinator::method::FtMethod;
 
 pub struct FineTuner {
     pub cfg: TrainConfig,
@@ -77,22 +43,13 @@ impl FineTuner {
     pub fn new(cfg: TrainConfig, method: FtMethod, task_name: &str, seed: u64)
                -> Result<FineTuner> {
         let spec = glue::task(task_name).with_context(|| format!("no task {task_name}"))?;
-        let lora = method == FtMethod::Lora;
+        let lora = method.is_lora();
         let artifact = if lora {
             format!("{}.cls{}_lora", cfg.preset, spec.n_cls)
         } else {
             format!("{}.cls{}", cfg.preset, spec.n_cls)
         };
-        let entries: Vec<&str> = if lora {
-            vec!["lora_adamw", "lora_eval"]
-        } else {
-            match method {
-                FtMethod::FullAdamW => vec!["adamw", "eval"],
-                FtMethod::GaLore => vec!["grad", "eval"],
-                _ => vec!["frugal", "eval"],
-            }
-        };
-        let engine = Engine::load(&cfg.artifacts_dir, &artifact, &entries)?;
+        let engine = Engine::load(&cfg.artifacts_dir, &artifact, &method.entries())?;
         let dims = engine.manifest.model.clone();
         let data = glue::generate(spec, dims.vocab, dims.seq, seed ^ 0x61ed);
         let lora_base = if lora {
@@ -182,17 +139,15 @@ impl FineTuner {
     pub fn run(&mut self) -> Result<FtResult> {
         let man = &self.engine.manifest;
         let batch = man.model.batch;
-        let is_lora = self.method == FtMethod::Lora;
-        let frugal = matches!(self.method, FtMethod::Frugal { .. });
+        let is_lora = self.method.is_lora();
+        let frugal = self.method.is_frugal();
 
         // controller + mask (frugal family only)
-        let (dyn_rho, dyn_t) = match self.method {
-            FtMethod::Frugal { dynamic_rho, dynamic_t } => (dynamic_rho, dynamic_t),
-            _ => (false, false),
-        };
+        let (dyn_rho, dyn_t) = self.method.dynamic();
         let mut controller = AdaFrugalController::from_config(&self.cfg, dyn_rho, dyn_t);
         let mut mask = SubspaceMask::new(man);
         let strategy = Strategy::parse(&self.cfg.strategy)?;
+        let state_mgmt = StateMgmt::parse(&self.cfg.state_mgmt)?;
         if frugal {
             let s0 = if strategy == Strategy::TopK { Strategy::Random } else { strategy };
             mask.redefine(s0, controller.rho_at(0), None, &mut self.rng)?;
@@ -211,17 +166,17 @@ impl FineTuner {
         } else {
             None
         };
-        // GaLore host state
-        let mut galore_state: Option<(Vec<f32>, crate::optim::galore::GaLore)> =
-            if self.method == FtMethod::GaLore {
-                let state = init::init_state(man, self.cfg.seed);
-                Some((
-                    state[..man.n_params].to_vec(),
-                    crate::optim::galore::GaLore::new(man, self.cfg.rho, self.cfg.t_start,
-                                                      self.cfg.seed),
-                ))
-            } else {
-                None
+        // host-path state: registry-built update rule fed by `grad`
+        let mut host_state: Option<(Vec<f32>, Box<dyn Optimizer>)> =
+            match self.method.host_optimizer() {
+                Some(name) => {
+                    let state = init::init_state(man, self.cfg.seed);
+                    Some((
+                        state[..man.n_params].to_vec(),
+                        optim::build(name, man, &OptimBuild::from_config(&self.cfg))?,
+                    ))
+                }
+                None => None,
             };
 
         let mut order: Vec<usize> = (0..self.data.train.len()).collect();
@@ -236,7 +191,7 @@ impl FineTuner {
                               &mut self.rng)?;
                 masks_buf =
                     Some(self.engine.upload_f32(&mask.render(), &[man.mask_len])?);
-                if self.cfg.state_mgmt == "reset" {
+                if state_mgmt == StateMgmt::Reset {
                     let mut state = self.engine.read_all_f32(&state_buf)?;
                     let n = man.n_params;
                     for p in man.maskable() {
@@ -270,35 +225,40 @@ impl FineTuner {
                                      self.cfg.beta2, self.cfg.eps, t_since_reset);
             let scal_buf = self.engine.upload_f32(&s.to_array(), &[8])?;
 
-            match self.method {
-                FtMethod::Lora => {
-                    let base = self.lora_base.as_ref().unwrap();
-                    let bbuf = self.engine.upload_f32(base, &[base.len()])?;
-                    state_buf = self.engine.run(
-                        "lora_adamw", &[&bbuf, &state_buf, &scal_buf, &tbuf, &lbuf])?;
-                }
-                FtMethod::FullAdamW => {
-                    state_buf =
-                        self.engine.run("adamw", &[&state_buf, &scal_buf, &tbuf, &lbuf])?;
-                }
-                FtMethod::GaLore => {
-                    let (params, opt) = galore_state.as_mut().unwrap();
-                    let pbuf = self.engine.upload_f32(params, &[params.len()])?;
-                    let out = self.engine.run("grad", &[&pbuf, &tbuf, &lbuf])?;
-                    let gl = self.engine.read_all_f32(&out)?;
-                    let n = params.len();
-                    opt.step(man, params, &gl[..n], &s);
-                    last_loss = gl[n] as f64;
-                    // keep state_buf in sync for eval
-                    let mut state = vec![0f32; man.state_len];
-                    state[..n].copy_from_slice(params);
-                    state_buf = self.engine.upload_f32(&state, &[man.state_len])?;
-                }
-                FtMethod::Frugal { .. } => {
-                    let masks = masks_buf.as_ref().unwrap();
-                    state_buf = self.engine.run(
-                        "frugal", &[&state_buf, masks, &scal_buf, &tbuf, &lbuf])?;
-                }
+            if let Some((params, opt)) = host_state.as_mut() {
+                // host path: gradients from `grad`, registry-built update
+                let pbuf = self.engine.upload_f32(params, &[params.len()])?;
+                let out = self.engine.run("grad", &[&pbuf, &tbuf, &lbuf])?;
+                let gl = self.engine.read_all_f32(&out)?;
+                let n = params.len();
+                opt.step(man, params, &gl[..n], None, &s)?;
+                last_loss = gl[n] as f64;
+                // keep state_buf in sync for eval
+                let mut state = vec![0f32; man.state_len];
+                state[..n].copy_from_slice(params);
+                state_buf = self.engine.upload_f32(&state, &[man.state_len])?;
+            } else {
+                // fused path: argument shape is method-independent —
+                // [base?] + state + [masks?] + scalars + tokens + labels
+                let out = {
+                    let bbuf = match &self.lora_base {
+                        Some(base) => Some(self.engine.upload_f32(base, &[base.len()])?),
+                        None => None,
+                    };
+                    let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(6);
+                    if let Some(b) = &bbuf {
+                        args.push(b);
+                    }
+                    args.push(&state_buf);
+                    if let Some(m) = &masks_buf {
+                        args.push(m);
+                    }
+                    args.push(&scal_buf);
+                    args.push(&tbuf);
+                    args.push(&lbuf);
+                    self.engine.run(self.method.step_entry(), &args)?
+                };
+                state_buf = out;
             }
 
             // loss readback only at observation boundaries (reading the
@@ -306,7 +266,7 @@ impl FineTuner {
             let last_step = step + 1 == self.cfg.steps;
             if (dyn_t && (step + 1) % self.cfg.n_eval == 0) || last_step {
                 let loss_slot = if is_lora { man.lora_state_len() } else { man.state_len } - 1;
-                if self.method != FtMethod::GaLore {
+                if host_state.is_none() {
                     last_loss = self.engine.read_f32(&state_buf, loss_slot, 1)?[0] as f64;
                 }
                 if dyn_t && !last_step {

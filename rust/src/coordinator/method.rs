@@ -1,5 +1,13 @@
 //! The method matrix of Tables 1–3: the upper-bound baseline, the
-//! memory-efficient baselines, and the paper's proposed variants.
+//! memory-efficient baselines, and the paper's proposed variants — both
+//! the pre-training roster ([`Method`]) and the fine-tuning roster
+//! ([`FtMethod`]).
+//!
+//! Methods are selected **by name** (config `method = "..."` / CLI
+//! `--method`), and the host-path update rules they use are constructed
+//! through the optimizer registry (`optim::build`) keyed by
+//! [`Method::host_optimizer`] — the trainer and fine-tuner contain no
+//! per-method dispatch of their own.
 
 use anyhow::{bail, Result};
 
@@ -48,7 +56,8 @@ impl Method {
         }
     }
 
-    /// Short machine id for filenames.
+    /// Short machine id for filenames. For host-path methods this is
+    /// also the optimizer-registry key (see [`Method::host_optimizer`]).
     pub fn id(&self) -> &'static str {
         match self {
             Method::AdamW => "adamw",
@@ -69,9 +78,22 @@ impl Method {
         matches!(self, Method::AdaFrugalDynT | Method::AdaFrugalCombined)
     }
 
+    /// Registry name of the host-side update rule, for methods whose
+    /// step runs on host over `grad`-entry gradients. `None` means the
+    /// method runs on the fused device-resident step path. This is the
+    /// only method→optimizer mapping in the codebase; the trainer feeds
+    /// it straight into `optim::build`.
+    pub fn host_optimizer(&self) -> Option<&'static str> {
+        match self {
+            Method::GaLore => Some("galore"),
+            Method::BAdam => Some("badam"),
+            _ => None,
+        }
+    }
+
     /// Runs on the fused device-resident step path?
     pub fn is_fused(&self) -> bool {
-        !matches!(self, Method::GaLore | Method::BAdam)
+        self.host_optimizer().is_none()
     }
 
     /// Uses FRUGAL gradient splitting (i.e. needs masks + redefinition)?
@@ -100,11 +122,111 @@ impl Method {
 
     /// HLO entry points this method needs.
     pub fn entries(&self) -> Vec<&'static str> {
+        if self.host_optimizer().is_some() {
+            vec!["grad", "eval"]
+        } else if self.is_frugal_family() {
+            vec!["frugal", "eval", "scores", "grad"]
+        } else {
+            vec!["adamw", "eval"]
+        }
+    }
+}
+
+/// Fine-tuning method roster for Table 3. LoRA is a distinct path
+/// (adapter-only training on the frozen backbone).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FtMethod {
+    FullAdamW,
+    Lora,
+    GaLore,
+    Frugal { dynamic_rho: bool, dynamic_t: bool },
+}
+
+impl FtMethod {
+    pub fn parse(s: &str) -> Result<FtMethod> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "full" | "adamw" => FtMethod::FullAdamW,
+            "lora" => FtMethod::Lora,
+            "galore" => FtMethod::GaLore,
+            "frugal" => FtMethod::Frugal { dynamic_rho: false, dynamic_t: false },
+            "dyn-rho" | "dyn_rho" => FtMethod::Frugal { dynamic_rho: true, dynamic_t: false },
+            "dyn-t" | "dyn_t" => FtMethod::Frugal { dynamic_rho: false, dynamic_t: true },
+            "combined" => FtMethod::Frugal { dynamic_rho: true, dynamic_t: true },
+            _ => bail!("unknown ft-method {s:?}"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
         match self {
-            Method::AdamW => vec!["adamw", "eval"],
-            Method::GaLore | Method::BAdam => vec!["grad", "eval"],
-            m if m.is_frugal_family() => vec!["frugal", "eval", "scores", "grad"],
-            _ => unreachable!(),
+            FtMethod::FullAdamW => "Full-Parameter",
+            FtMethod::Lora => "LoRA",
+            FtMethod::GaLore => "GaLore",
+            FtMethod::Frugal { dynamic_rho: false, dynamic_t: false } => "FRUGAL (static)",
+            FtMethod::Frugal { dynamic_rho: true, dynamic_t: false } => "AdaFRUGAL-Dyn-rho",
+            FtMethod::Frugal { dynamic_rho: false, dynamic_t: true } => "AdaFRUGAL-Dyn-T",
+            FtMethod::Frugal { dynamic_rho: true, dynamic_t: true } => "AdaFRUGAL-Combined",
+        }
+    }
+
+    pub fn roster() -> Vec<FtMethod> {
+        vec![
+            FtMethod::FullAdamW,
+            FtMethod::Lora,
+            FtMethod::GaLore,
+            FtMethod::Frugal { dynamic_rho: false, dynamic_t: false },
+            FtMethod::Frugal { dynamic_rho: true, dynamic_t: false },
+            FtMethod::Frugal { dynamic_rho: false, dynamic_t: true },
+            FtMethod::Frugal { dynamic_rho: true, dynamic_t: true },
+        ]
+    }
+
+    pub fn is_lora(&self) -> bool {
+        *self == FtMethod::Lora
+    }
+
+    pub fn is_frugal(&self) -> bool {
+        matches!(self, FtMethod::Frugal { .. })
+    }
+
+    /// (dynamic_rho, dynamic_t) controller flags.
+    pub fn dynamic(&self) -> (bool, bool) {
+        match self {
+            FtMethod::Frugal { dynamic_rho, dynamic_t } => (*dynamic_rho, *dynamic_t),
+            _ => (false, false),
+        }
+    }
+
+    /// Registry name of the host-side update rule (same contract as
+    /// [`Method::host_optimizer`]).
+    pub fn host_optimizer(&self) -> Option<&'static str> {
+        match self {
+            FtMethod::GaLore => Some("galore"),
+            _ => None,
+        }
+    }
+
+    /// HLO entry points this method needs.
+    pub fn entries(&self) -> Vec<&'static str> {
+        if self.is_lora() {
+            vec!["lora_adamw", "lora_eval"]
+        } else if self.host_optimizer().is_some() {
+            vec!["grad", "eval"]
+        } else if self.is_frugal() {
+            vec!["frugal", "eval"]
+        } else {
+            vec!["adamw", "eval"]
+        }
+    }
+
+    /// The fused step entry point (host-path methods use `grad`
+    /// directly and never call this through the fused dispatch).
+    pub fn step_entry(&self) -> &'static str {
+        if self.is_lora() {
+            "lora_adamw"
+        } else if self.is_frugal() {
+            "frugal"
+        } else {
+            "adamw"
         }
     }
 }
@@ -137,5 +259,42 @@ mod tests {
         assert_eq!(labels[0], "AdamW");
         assert_eq!(labels[3], "FRUGAL (static, rho=0.25)");
         assert_eq!(labels.len(), 7);
+    }
+
+    #[test]
+    fn host_methods_resolve_in_registry() {
+        let roster: Vec<Method> = Method::table_roster().to_vec();
+        for m in roster {
+            if let Some(name) = m.host_optimizer() {
+                assert!(crate::optim::lookup(name).is_some(),
+                        "{name:?} not in optimizer registry");
+                assert_eq!(name, m.id());
+            }
+        }
+        for f in FtMethod::roster() {
+            if let Some(name) = f.host_optimizer() {
+                assert!(crate::optim::lookup(name).is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn ft_parse_and_entries() {
+        assert_eq!(FtMethod::parse("lora").unwrap(), FtMethod::Lora);
+        assert_eq!(FtMethod::parse("combined").unwrap(),
+                   FtMethod::Frugal { dynamic_rho: true, dynamic_t: true });
+        assert!(FtMethod::parse("sgd").is_err());
+        assert_eq!(FtMethod::Lora.entries(), vec!["lora_adamw", "lora_eval"]);
+        assert_eq!(FtMethod::GaLore.entries(), vec!["grad", "eval"]);
+        assert_eq!(FtMethod::parse("frugal").unwrap().step_entry(), "frugal");
+        assert_eq!(FtMethod::FullAdamW.step_entry(), "adamw");
+    }
+
+    #[test]
+    fn entries_match_paths() {
+        assert_eq!(Method::AdamW.entries(), vec!["adamw", "eval"]);
+        assert_eq!(Method::GaLore.entries(), vec!["grad", "eval"]);
+        assert_eq!(Method::FrugalStatic.entries(),
+                   vec!["frugal", "eval", "scores", "grad"]);
     }
 }

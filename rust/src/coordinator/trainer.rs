@@ -10,7 +10,10 @@
 //!
 //! Host path (GaLore/BAdam baselines): gradients come from the `grad`
 //! entry, the update runs on host (these baselines are not the paper's
-//! hot path).
+//! hot path). The update rule is constructed through the optimizer
+//! registry (`optim::build`, keyed by `Method::host_optimizer`) and
+//! driven through the `optim::Optimizer` trait — the trainer itself has
+//! no per-method optimizer dispatch.
 
 use anyhow::{bail, Context, Result};
 use xla::PjRtBuffer;
@@ -24,9 +27,7 @@ use crate::data::loader::{Batch, Loader};
 use crate::data::tokenizer::Tokenizer;
 use crate::info;
 use crate::model::init;
-use crate::optim::badam::BAdam;
-use crate::optim::galore::GaLore;
-use crate::optim::StepScalars;
+use crate::optim::{self, OptimBuild, Optimizer, StateMgmt, StepScalars};
 use crate::projection::{Strategy, SubspaceMask};
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
@@ -84,8 +85,9 @@ impl RunResult {
 enum OptState {
     /// device-resident packed state (fused path)
     Fused { state_buf: PjRtBuffer, masks_buf: Option<PjRtBuffer> },
-    Galore { params: Vec<f32>, opt: Box<GaLore> },
-    BAdam { params: Vec<f32>, opt: Box<BAdam> },
+    /// host-resident params + a registry-built update rule fed by the
+    /// `grad` entry (GaLore/BAdam baselines — not the paper's hot path)
+    Host { params: Vec<f32>, opt: Box<dyn Optimizer> },
 }
 
 pub struct Trainer {
@@ -95,6 +97,7 @@ pub struct Trainer {
     controller: AdaFrugalController,
     mask: SubspaceMask,
     strategy: Strategy,
+    state_mgmt: StateMgmt,
     opt: OptState,
     train: Loader,
     val: Loader,
@@ -132,6 +135,7 @@ impl Trainer {
         let mut rng = Rng::new(cfg.seed ^ 0x7a11);
         let mut mask = SubspaceMask::new(man);
         let strategy = Strategy::parse(&cfg.strategy)?;
+        let state_mgmt = StateMgmt::parse(&cfg.state_mgmt)?;
         if method.is_frugal_family() {
             // initial projector (Algorithm 1 line 2); random at step 0
             // even under TopK (no gradients exist yet)
@@ -139,18 +143,14 @@ impl Trainer {
             mask.redefine(s0, controller.rho_at(0), None, &mut rng)?;
         }
 
-        // --- optimizer state ---
+        // --- optimizer state: fused (device) or registry-built host ---
         let state = init::init_state(man, cfg.seed);
-        let opt = match method {
-            Method::GaLore => OptState::Galore {
+        let opt = match method.host_optimizer() {
+            Some(name) => OptState::Host {
                 params: state[..man.n_params].to_vec(),
-                opt: Box::new(GaLore::new(man, cfg.rho, cfg.t_start, cfg.seed)),
+                opt: optim::build(name, man, &OptimBuild::from_config(&cfg))?,
             },
-            Method::BAdam => OptState::BAdam {
-                params: state[..man.n_params].to_vec(),
-                opt: Box::new(BAdam::new(man, cfg.rho, cfg.t_start)),
-            },
-            _ => {
+            None => {
                 let state_buf = engine.upload_f32(&state, &[man.state_len])?;
                 let masks_buf = if method.is_frugal_family() {
                     Some(engine.upload_f32(&mask.render(), &[man.mask_len])?)
@@ -164,6 +164,7 @@ impl Trainer {
         Ok(Trainer {
             cfg,
             method,
+            state_mgmt,
             engine,
             controller,
             mask,
@@ -219,7 +220,7 @@ impl Trainer {
         let state_buf_owned;
         let state_buf: &PjRtBuffer = match &self.opt {
             OptState::Fused { state_buf, .. } => state_buf,
-            OptState::Galore { params, .. } | OptState::BAdam { params, .. } => {
+            OptState::Host { params, .. } => {
                 let mut state = vec![0f32; man_state_len];
                 state[..n_params].copy_from_slice(params);
                 state_buf_owned = self.engine.upload_f32(&state, &[man_state_len])?;
@@ -260,7 +261,7 @@ impl Trainer {
                 self.engine
                     .upload_f32(&self.mask.render(), &[self.engine.manifest.mask_len])?,
             );
-            if self.cfg.state_mgmt == "reset" {
+            if self.state_mgmt == StateMgmt::Reset {
                 // S = Reset: zero m/v of maskable params. (The fused
                 // kernel re-masks every step, so Project is automatic;
                 // Reset needs an explicit host pass.)
@@ -285,9 +286,7 @@ impl Trainer {
         let n = self.engine.manifest.n_params;
         match &self.opt {
             OptState::Fused { state_buf, .. } => self.engine.read_f32(state_buf, 0, n),
-            OptState::Galore { params, .. } | OptState::BAdam { params, .. } => {
-                Ok(params.clone())
-            }
+            OptState::Host { params, .. } => Ok(params.clone()),
         }
     }
 
@@ -302,7 +301,7 @@ impl Trainer {
                 state[..man.n_params].copy_from_slice(params);
                 *state_buf = self.engine.upload_f32(&state, &[man.state_len])?;
             }
-            OptState::Galore { params: p, .. } | OptState::BAdam { params: p, .. } => {
+            OptState::Host { params: p, .. } => {
                 p.copy_from_slice(params);
             }
         }
@@ -333,7 +332,7 @@ impl Trainer {
                 *state_buf = out;
                 Ok(None)
             }
-            OptState::Galore { params, opt } => {
+            OptState::Host { params, opt } => {
                 let pbuf = self.engine.upload_f32(params, &[params.len()])?;
                 let tokens = self.engine.upload_i32(&b.tokens, &[b.batch, b.seq_plus_1])?;
                 let out = self.engine.run("grad", &[&pbuf, &tokens])?;
@@ -341,18 +340,7 @@ impl Trainer {
                 let n = params.len();
                 let s = StepScalars::new(scal[0], scal[1], scal[2], scal[3], scal[4],
                                          scal[5], step + 1);
-                opt.step(&self.engine.manifest, params, &gl[..n], &s);
-                Ok(Some(gl[n]))
-            }
-            OptState::BAdam { params, opt } => {
-                let pbuf = self.engine.upload_f32(params, &[params.len()])?;
-                let tokens = self.engine.upload_i32(&b.tokens, &[b.batch, b.seq_plus_1])?;
-                let out = self.engine.run("grad", &[&pbuf, &tokens])?;
-                let gl = self.engine.read_all_f32(&out)?;
-                let n = params.len();
-                let s = StepScalars::new(scal[0], scal[1], scal[2], scal[3], scal[4],
-                                         scal[5], step + 1);
-                opt.step(&self.engine.manifest, params, &gl[..n], &s);
+                opt.step(&self.engine.manifest, params, &gl[..n], None, &s)?;
                 Ok(Some(gl[n]))
             }
         }

@@ -21,7 +21,16 @@
 //!
 //! Python never runs on the step path: [`runtime`] loads the artifacts
 //! through the PJRT C API (`xla` crate) and the whole training loop is
-//! device-buffer-resident (see `DESIGN.md`).
+//! device-buffer-resident (see `DESIGN.md`). The offline build vendors
+//! a host-side `xla` stub (`vendor/xla`), so everything except HLO
+//! execution — including the full host optimizer zoo — works with zero
+//! external dependencies.
+//!
+//! Every update rule lives behind the unified [`optim::Optimizer`]
+//! trait and is constructed by name through the string-keyed registry
+//! ([`optim::build`]); the host step and mask rendering are
+//! data-parallel via [`util::par`]. See `docs/ARCHITECTURE.md` for the
+//! layer map and `docs/OPTIMIZERS.md` for the registry reference.
 
 pub mod config;
 pub mod controller;
@@ -37,3 +46,4 @@ pub mod util;
 
 pub use config::TrainConfig;
 pub use controller::{AdaFrugalController, RhoSchedule, TController};
+pub use optim::{Optimizer, StepScalars};

@@ -85,6 +85,7 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     };
     for (flag, key) in [
         ("preset", "preset"),
+        ("method", "method"),
         ("steps", "steps"),
         ("seed", "seed"),
         ("corpus", "corpus"),
@@ -111,8 +112,10 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // method comes from the config (`[train] method = "..."` or
+    // `--method`), validated against the roster by name
     let cfg = build_config(args)?;
-    let method = Method::parse(args.get("method").unwrap_or("combined"))?;
+    let method = Method::parse(&cfg.method)?;
     info!("training {} on preset {} for {} steps", method.label(), cfg.preset, cfg.steps);
     let mut trainer = Trainer::new(cfg.clone(), method)?;
     trainer.quiet = args.has("quiet");
@@ -151,19 +154,6 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-pub fn parse_ft_method(s: &str) -> Result<FtMethod> {
-    Ok(match s.to_ascii_lowercase().as_str() {
-        "full" | "adamw" => FtMethod::FullAdamW,
-        "lora" => FtMethod::Lora,
-        "galore" => FtMethod::GaLore,
-        "frugal" => FtMethod::Frugal { dynamic_rho: false, dynamic_t: false },
-        "dyn-rho" | "dyn_rho" => FtMethod::Frugal { dynamic_rho: true, dynamic_t: false },
-        "dyn-t" | "dyn_t" => FtMethod::Frugal { dynamic_rho: false, dynamic_t: true },
-        "combined" => FtMethod::Frugal { dynamic_rho: true, dynamic_t: true },
-        _ => bail!("unknown ft-method {s:?}"),
-    })
-}
-
 fn cmd_finetune(args: &Args) -> Result<()> {
     let mut cfg = build_config(args)?;
     if args.get("steps").is_none() && args.get("config").is_none() {
@@ -175,7 +165,7 @@ fn cmd_finetune(args: &Args) -> Result<()> {
         cfg.lr = 2e-3;
     }
     let task = args.get("task").unwrap_or("SST-2");
-    let ft_method = parse_ft_method(args.get("ft-method").unwrap_or("frugal"))?;
+    let ft_method = FtMethod::parse(args.get("ft-method").unwrap_or("frugal"))?;
     let seeds: usize = args.get("seeds").unwrap_or("1").parse()?;
     let mut scores = Vec::new();
     for seed in 0..seeds {

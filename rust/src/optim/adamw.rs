@@ -1,9 +1,13 @@
 //! Host reference AdamW (decoupled weight decay, bias-corrected),
 //! element-for-element identical to the fused kernel with an all-ones
 //! mask. Used to validate the `adamw` HLO entry and by the GLUE/LoRA
-//! paths.
+//! paths. The step fans out over equal chunks of the flat vector via
+//! `util::par`; chunking cannot change the numerics because no element
+//! reads another.
 
-use super::StepScalars;
+use super::{MaskCtx, Optimizer, StepScalars};
+use crate::runtime::manifest::Manifest;
+use crate::util::par;
 
 #[derive(Debug, Clone)]
 pub struct AdamW {
@@ -20,14 +24,24 @@ impl AdamW {
     pub fn step(&mut self, params: &mut [f32], grads: &[f32], s: &StepScalars) {
         assert_eq!(params.len(), grads.len());
         assert_eq!(params.len(), self.m.len());
-        for i in 0..params.len() {
-            let g = grads[i];
-            self.m[i] = s.beta1 * self.m[i] + (1.0 - s.beta1) * g;
-            self.v[i] = s.beta2 * self.v[i] + (1.0 - s.beta2) * g * g;
-            let mhat = self.m[i] / s.bc1;
-            let vhat = self.v[i] / s.bc2;
-            params[i] -= s.lr_full * mhat / (vhat.sqrt() + s.eps) + s.lr_full * s.wd * params[i];
-        }
+        let chunk = params.len().div_ceil(par::threads()).max(1);
+        let jobs: Vec<_> = params
+            .chunks_mut(chunk)
+            .zip(grads.chunks(chunk))
+            .zip(self.m.chunks_mut(chunk))
+            .zip(self.v.chunks_mut(chunk))
+            .map(|(((p, g), m), v)| (p, g, m, v))
+            .collect();
+        par::run_for(params.len(), jobs, |(p, g, m, v)| {
+            for i in 0..p.len() {
+                let gi = g[i];
+                m[i] = s.beta1 * m[i] + (1.0 - s.beta1) * gi;
+                v[i] = s.beta2 * v[i] + (1.0 - s.beta2) * gi * gi;
+                let mhat = m[i] / s.bc1;
+                let vhat = v[i] / s.bc2;
+                p[i] -= s.lr_full * mhat / (vhat.sqrt() + s.eps) + s.lr_full * s.wd * p[i];
+            }
+        });
     }
 
     pub fn state_bytes(&self) -> usize {
@@ -37,6 +51,22 @@ impl AdamW {
     pub fn reset(&mut self) {
         self.m.iter_mut().for_each(|x| *x = 0.0);
         self.v.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+impl Optimizer for AdamW {
+    fn name(&self) -> &'static str {
+        "adamw"
+    }
+
+    fn step(&mut self, _man: &Manifest, params: &mut [f32], grads: &[f32],
+            _mask: Option<&MaskCtx>, s: &StepScalars) -> anyhow::Result<()> {
+        AdamW::step(self, params, grads, s);
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        AdamW::state_bytes(self)
     }
 }
 
@@ -92,5 +122,13 @@ mod tests {
         opt.reset();
         assert!(opt.m.iter().all(|&x| x == 0.0));
         assert!(opt.v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn empty_vector_is_a_noop() {
+        let mut opt = AdamW::new(0);
+        let mut p: Vec<f32> = Vec::new();
+        opt.step(&mut p, &[], &scal(1));
+        assert_eq!(opt.state_bytes(), 0);
     }
 }

@@ -131,6 +131,22 @@ impl BAdam {
     }
 }
 
+impl super::Optimizer for BAdam {
+    fn name(&self) -> &'static str {
+        "badam"
+    }
+
+    fn step(&mut self, man: &Manifest, params: &mut [f32], grads: &[f32],
+            _mask: Option<&super::MaskCtx>, s: &StepScalars) -> anyhow::Result<()> {
+        BAdam::step(self, man, params, grads, s);
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.state_bytes_held()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -10,13 +10,20 @@
 //!   paper's 0.52G→0.37G numbers assume. A property test pins
 //!   Masked ≡ Compact, which is what makes the masked on-device
 //!   representation an honest stand-in for real savings.
+//!
+//! Both steps are parallel over parameter specs: the manifest's offset
+//! layout is contiguous and disjoint, so each spec's params/grads/state
+//! region is carved off with `split_at_mut` and updated on its own
+//! thread (`util::par`). The per-element math is untouched, so the
+//! parallel step is bit-identical to the serial one.
 
 use std::collections::BTreeMap;
 
 use super::signsgd::sign;
-use super::StepScalars;
+use super::{MaskCtx, Optimizer, StateMgmt, StepScalars};
 use crate::projection::SubspaceMask;
-use crate::runtime::manifest::Manifest;
+use crate::runtime::manifest::{Manifest, ParamSpec};
+use crate::util::par;
 
 /// Per-element FRUGAL update given the column's mask bit; single source
 /// of truth shared by both backends (and mirrored by kernels/ref.py).
@@ -56,19 +63,37 @@ impl MaskedFrugal {
     /// params are always state-full.
     pub fn step(&mut self, man: &Manifest, params: &mut [f32], grads: &[f32],
                 mask_cols: &[f32], s: &StepScalars) {
+        // carve disjoint per-spec regions; offsets are contiguous by
+        // Manifest::validate, so sequential split_at_mut lands exactly
+        // on spec boundaries
+        let mut jobs: Vec<(&ParamSpec, &mut [f32], &[f32], &mut [f32], &mut [f32])> =
+            Vec::with_capacity(man.params.len());
+        let mut p_rest = params;
+        let mut g_rest = grads;
+        let mut m_rest = &mut self.m[..];
+        let mut v_rest = &mut self.v[..];
         for spec in &man.params {
-            let (off, size, cols) = (spec.offset, spec.size, spec.cols());
-            for i in 0..size {
-                let idx = off + i;
+            let (p, pr) = p_rest.split_at_mut(spec.size);
+            let (g, gr) = g_rest.split_at(spec.size);
+            let (m, mr) = m_rest.split_at_mut(spec.size);
+            let (v, vr) = v_rest.split_at_mut(spec.size);
+            p_rest = pr;
+            g_rest = gr;
+            m_rest = mr;
+            v_rest = vr;
+            jobs.push((spec, p, g, m, v));
+        }
+        par::run_for(man.n_params, jobs, |(spec, p, g, m, v)| {
+            let cols = spec.cols();
+            for i in 0..spec.size {
                 let on = if spec.maskable {
                     mask_cols[spec.mask_offset + (i % cols)] != 0.0
                 } else {
                     true
                 };
-                hybrid_update(&mut params[idx], grads[idx], &mut self.m[idx],
-                              &mut self.v[idx], on, s);
+                hybrid_update(&mut p[i], g[i], &mut m[i], &mut v[i], on, s);
             }
-        }
+        });
     }
 
     /// State reset (Algorithm 1, S = Reset): zero the moments of every
@@ -103,6 +128,31 @@ impl MaskedFrugal {
     }
 }
 
+impl Optimizer for MaskedFrugal {
+    fn name(&self) -> &'static str {
+        "frugal-masked"
+    }
+
+    fn step(&mut self, man: &Manifest, params: &mut [f32], grads: &[f32],
+            mask: Option<&MaskCtx>, s: &StepScalars) -> anyhow::Result<()> {
+        let ctx = mask.ok_or_else(|| anyhow::anyhow!("frugal-masked needs a subspace mask"))?;
+        MaskedFrugal::step(self, man, params, grads, ctx.rendered, s);
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.state_bytes_held()
+    }
+
+    fn on_redefine(&mut self, man: &Manifest, mask: Option<&MaskCtx>, mgmt: StateMgmt) {
+        match (mgmt, mask) {
+            (StateMgmt::Reset, _) => self.reset_maskable(man),
+            (StateMgmt::Project, Some(ctx)) => self.project_to(man, ctx.rendered),
+            (StateMgmt::Project, None) => {}
+        }
+    }
+}
+
 /// Compacted-state backend: moments exist only for active blocks.
 #[derive(Debug, Clone)]
 pub struct CompactFrugal {
@@ -110,6 +160,23 @@ pub struct CompactFrugal {
     full: BTreeMap<usize, (Vec<f32>, Vec<f32>)>,
     /// per maskable param: active block id -> (m, v) of rows×block_size
     blocks: BTreeMap<usize, BTreeMap<usize, (Vec<f32>, Vec<f32>)>>,
+}
+
+/// One per-spec unit of parallel work inside [`CompactFrugal::step`].
+enum CompactJob<'a> {
+    Full {
+        p: &'a mut [f32],
+        g: &'a [f32],
+        m: &'a mut [f32],
+        v: &'a mut [f32],
+    },
+    Masked {
+        spec: &'a ParamSpec,
+        p: &'a mut [f32],
+        g: &'a [f32],
+        active: &'a [bool],
+        bm: &'a mut BTreeMap<usize, (Vec<f32>, Vec<f32>)>,
+    },
 }
 
 impl CompactFrugal {
@@ -152,47 +219,98 @@ impl CompactFrugal {
     pub fn step(&mut self, man: &Manifest, params: &mut [f32], grads: &[f32],
                 mask: &SubspaceMask, s: &StepScalars) {
         let bs = man.block_size;
-        // always-state-full params
-        for spec in man.params.iter().filter(|p| !p.maskable) {
-            let (m, v) = self.full.get_mut(&spec.offset).unwrap();
-            for i in 0..spec.size {
-                let idx = spec.offset + i;
-                hybrid_update(&mut params[idx], grads[idx], &mut m[i], &mut v[i], true, s);
+        // ensure every maskable spec has a block map so the parallel
+        // carve below can hand out one disjoint `&mut` entry per spec
+        for spec in man.maskable() {
+            self.blocks.entry(spec.offset).or_default();
+        }
+        // both BTreeMaps iterate in offset order, which is exactly the
+        // manifest spec order restricted to their kind
+        let mut full_iter = self.full.iter_mut();
+        let mut block_iter = self.blocks.iter_mut();
+        let mut jobs: Vec<CompactJob> = Vec::with_capacity(man.params.len());
+        let mut p_rest = params;
+        let mut g_rest = grads;
+        let mut mi = 0usize;
+        for spec in &man.params {
+            let (p, pr) = p_rest.split_at_mut(spec.size);
+            let (g, gr) = g_rest.split_at(spec.size);
+            p_rest = pr;
+            g_rest = gr;
+            if spec.maskable {
+                let (_, bm) = block_iter.next().expect("block map entry per maskable spec");
+                jobs.push(CompactJob::Masked { spec, p, g, active: &mask.active[mi], bm });
+                mi += 1;
+            } else {
+                let (_, (m, v)) = full_iter.next().expect("full state entry per spec");
+                jobs.push(CompactJob::Full { p, g, m, v });
             }
         }
-        // maskable params: active blocks via compact storage, inactive
-        // via stateless SignSGD
-        for (pi, spec) in man.maskable().enumerate() {
-            let rows = spec.rows();
-            let cols = spec.cols();
-            let bm = self.blocks.entry(spec.offset).or_default();
-            for (b, &on) in mask.active[pi].iter().enumerate() {
-                let c0 = b * bs;
-                if on {
-                    let (m, v) = bm
-                        .entry(b)
-                        .or_insert_with(|| (vec![0.0; rows * bs], vec![0.0; rows * bs]));
-                    for r in 0..rows {
-                        for c in 0..bs {
-                            let idx = spec.offset + r * cols + c0 + c;
-                            let si = r * bs + c;
-                            hybrid_update(&mut params[idx], grads[idx], &mut m[si],
-                                          &mut v[si], true, s);
+        par::run_for(man.n_params, jobs, |job| match job {
+            // always-state-full params
+            CompactJob::Full { p, g, m, v } => {
+                for i in 0..p.len() {
+                    hybrid_update(&mut p[i], g[i], &mut m[i], &mut v[i], true, s);
+                }
+            }
+            // maskable params: active blocks via compact storage,
+            // inactive via stateless SignSGD
+            CompactJob::Masked { spec, p, g, active, bm } => {
+                let rows = spec.rows();
+                let cols = spec.cols();
+                for (b, &on) in active.iter().enumerate() {
+                    let c0 = b * bs;
+                    if on {
+                        let (m, v) = bm
+                            .entry(b)
+                            .or_insert_with(|| (vec![0.0; rows * bs], vec![0.0; rows * bs]));
+                        for r in 0..rows {
+                            for c in 0..bs {
+                                let idx = r * cols + c0 + c;
+                                let si = r * bs + c;
+                                hybrid_update(&mut p[idx], g[idx], &mut m[si], &mut v[si],
+                                              true, s);
+                            }
                         }
-                    }
-                } else {
-                    bm.remove(&b);
-                    let mut dead_m = 0.0;
-                    let mut dead_v = 0.0;
-                    for r in 0..rows {
-                        for c in 0..bs {
-                            let idx = spec.offset + r * cols + c0 + c;
-                            hybrid_update(&mut params[idx], grads[idx], &mut dead_m,
-                                          &mut dead_v, false, s);
+                    } else {
+                        bm.remove(&b);
+                        let mut dead_m = 0.0;
+                        let mut dead_v = 0.0;
+                        for r in 0..rows {
+                            for c in 0..bs {
+                                let idx = r * cols + c0 + c;
+                                hybrid_update(&mut p[idx], g[idx], &mut dead_m, &mut dead_v,
+                                              false, s);
+                            }
                         }
                     }
                 }
             }
+        });
+    }
+}
+
+impl Optimizer for CompactFrugal {
+    fn name(&self) -> &'static str {
+        "frugal-compact"
+    }
+
+    fn step(&mut self, man: &Manifest, params: &mut [f32], grads: &[f32],
+            mask: Option<&MaskCtx>, s: &StepScalars) -> anyhow::Result<()> {
+        let ctx = mask.ok_or_else(|| anyhow::anyhow!("frugal-compact needs a subspace mask"))?;
+        CompactFrugal::step(self, man, params, grads, ctx.mask, s);
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.state_bytes_held()
+    }
+
+    fn on_redefine(&mut self, man: &Manifest, mask: Option<&MaskCtx>, mgmt: StateMgmt) {
+        match (mgmt, mask) {
+            (StateMgmt::Reset, _) => self.reset_maskable(),
+            (StateMgmt::Project, Some(ctx)) => self.retain_blocks(man, ctx.mask),
+            (StateMgmt::Project, None) => {}
         }
     }
 }

@@ -131,6 +131,22 @@ impl GaLore {
     }
 }
 
+impl super::Optimizer for GaLore {
+    fn name(&self) -> &'static str {
+        "galore"
+    }
+
+    fn step(&mut self, man: &Manifest, params: &mut [f32], grads: &[f32],
+            _mask: Option<&super::MaskCtx>, s: &StepScalars) -> anyhow::Result<()> {
+        GaLore::step(self, man, params, grads, s);
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.state_bytes_held()
+    }
+}
+
 /// Top-r right singular vectors of G via orthogonal iteration on GᵀG.
 /// Returns (cols × r) with orthonormal columns.
 pub fn top_right_singular_vectors(g: &Tensor, r: usize, rng: &mut Rng) -> Tensor {

@@ -1,18 +1,47 @@
-//! Host-side optimizer zoo.
+//! Host-side optimizer zoo behind one unified [`Optimizer`] trait and a
+//! string-keyed registry.
 //!
-//! Two roles: (1) *references* — `adamw`/`frugal` re-implement exactly
-//! what the fused L1 kernel computes, and the integration tests assert
-//! the HLO step matches them element-wise; (2) *baselines* — `galore`
-//! and `badam` implement the paper's comparison methods on top of the
-//! `grad` HLO entry (gradients come from the compiled graph, updates run
-//! on host — these are not on the paper's hot path).
+//! # Roles
+//!
+//! Two roles: (1) *references* — [`adamw`]/[`frugal`] re-implement
+//! exactly what the fused L1 kernel computes, and the integration tests
+//! assert the HLO step matches them element-wise; (2) *baselines* —
+//! [`galore`] and [`badam`] implement the paper's comparison methods on
+//! top of the `grad` HLO entry (gradients come from the compiled graph,
+//! updates run on host — these are not on the paper's hot path).
+//!
+//! # The trait and the registry
+//!
+//! Every update rule implements [`Optimizer`]: construct from a
+//! [`Manifest`](crate::runtime::manifest::Manifest) via the registry,
+//! advance with [`Optimizer::step`], account memory with
+//! [`Optimizer::state_bytes`], and react to subspace redefinitions with
+//! [`Optimizer::on_redefine`]. Call sites (`coordinator::trainer`,
+//! `coordinator::finetune`, benches, examples) select implementations
+//! **by name** through [`build`] instead of per-method match-arms, so
+//! adding an optimizer is a one-file change: implement the trait and add
+//! an [`OptimSpec`] row to [`registered`]. The registered names are
+//! documented per-optimizer in `docs/OPTIMIZERS.md`.
+//!
+//! # Parallelism
+//!
+//! The step loops are data-parallel over the manifest's disjoint
+//! per-parameter regions; implementations use
+//! [`crate::util::par`] to fan work out across threads while staying
+//! bit-identical to the serial loop (pinned by a property test — see
+//! `util::par` for why that holds).
 
 pub mod adamw;
 pub mod badam;
-pub mod quantized;
 pub mod frugal;
 pub mod galore;
+pub mod quantized;
 pub mod signsgd;
+
+use anyhow::{bail, Result};
+
+use crate::projection::SubspaceMask;
+use crate::runtime::manifest::Manifest;
 
 /// The 8-scalar cross-language ABI consumed by the fused kernel
 /// (order pinned by kernels/ref.py and the manifest "scalars" list).
@@ -51,9 +80,200 @@ impl StepScalars {
     }
 }
 
+/// Subspace view handed to mask-aware optimizers: the live block mask
+/// plus its rendered flat per-column form (cached by the caller so the
+/// render cost is paid once per redefinition, not per step).
+pub struct MaskCtx<'a> {
+    pub mask: &'a SubspaceMask,
+    pub rendered: &'a [f32],
+}
+
+/// Algorithm 1's `S` policy applied at subspace redefinition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StateMgmt {
+    /// zero the moments of every maskable parameter
+    Reset,
+    /// keep moments only where the new mask is active
+    Project,
+}
+
+impl StateMgmt {
+    pub fn parse(s: &str) -> Result<StateMgmt> {
+        Ok(match s {
+            "reset" => StateMgmt::Reset,
+            "project" => StateMgmt::Project,
+            _ => bail!("unknown state_mgmt {s:?} (expected \"reset\" or \"project\")"),
+        })
+    }
+}
+
+/// One update rule over the manifest's flat parameter vector.
+///
+/// Contract:
+/// - `params`/`grads` cover exactly `man.n_params` elements laid out
+///   per the manifest's `ParamSpec` offsets (pass `&state[..n_params]`,
+///   never the whole packed state vector);
+/// - `mask` is `Some` whenever the run maintains a FRUGAL subspace;
+///   mask-free optimizers ignore it, mask-requiring ones error on
+///   `None`;
+/// - `state_bytes` reports the optimizer state *currently held* (the
+///   honest Fig.-1 quantity, not an analytic bound).
+pub trait Optimizer: Send {
+    /// Registry name of this implementation.
+    fn name(&self) -> &'static str;
+
+    /// Apply one optimizer step in place.
+    fn step(&mut self, man: &Manifest, params: &mut [f32], grads: &[f32],
+            mask: Option<&MaskCtx>, s: &StepScalars) -> Result<()>;
+
+    /// Bytes of optimizer state currently allocated.
+    fn state_bytes(&self) -> usize;
+
+    /// Notification that the subspace was redefined (Algorithm 1 lines
+    /// 21–27). Mask-free optimizers keep the default no-op.
+    fn on_redefine(&mut self, _man: &Manifest, _mask: Option<&MaskCtx>, _mgmt: StateMgmt) {}
+}
+
+/// Hyperparameters an optimizer constructor may need, decoupled from
+/// the full `TrainConfig` so benches/examples can build optimizers
+/// without a training run.
+#[derive(Debug, Clone)]
+pub struct OptimBuild {
+    /// state-full ratio (FRUGAL/BAdam block fraction, GaLore rank
+    /// fraction)
+    pub rho: f64,
+    /// projector refresh / block switch interval in steps
+    pub interval: usize,
+    /// seed for stochastic constructors (GaLore's subspace iteration)
+    pub seed: u64,
+}
+
+impl Default for OptimBuild {
+    fn default() -> Self {
+        OptimBuild { rho: 0.25, interval: 100, seed: 0 }
+    }
+}
+
+impl OptimBuild {
+    pub fn from_config(cfg: &crate::config::TrainConfig) -> OptimBuild {
+        OptimBuild { rho: cfg.rho, interval: cfg.t_start, seed: cfg.seed }
+    }
+}
+
+/// One registry row: canonical name, accepted aliases, a one-line
+/// summary (surfaced by `examples/optimizer_zoo.rs` and the README),
+/// and the constructor.
+pub struct OptimSpec {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub summary: &'static str,
+    pub build: fn(&Manifest, &OptimBuild) -> Result<Box<dyn Optimizer>>,
+}
+
+fn build_adamw(man: &Manifest, _b: &OptimBuild) -> Result<Box<dyn Optimizer>> {
+    Ok(Box::new(adamw::AdamW::new(man.n_params)))
+}
+
+fn build_frugal_masked(man: &Manifest, _b: &OptimBuild) -> Result<Box<dyn Optimizer>> {
+    Ok(Box::new(frugal::MaskedFrugal::new(man.n_params)))
+}
+
+fn build_frugal_compact(man: &Manifest, _b: &OptimBuild) -> Result<Box<dyn Optimizer>> {
+    Ok(Box::new(frugal::CompactFrugal::new(man)))
+}
+
+fn build_galore(man: &Manifest, b: &OptimBuild) -> Result<Box<dyn Optimizer>> {
+    Ok(Box::new(galore::GaLore::new(man, b.rho, b.interval, b.seed)))
+}
+
+fn build_badam(man: &Manifest, b: &OptimBuild) -> Result<Box<dyn Optimizer>> {
+    Ok(Box::new(badam::BAdam::new(man, b.rho, b.interval)))
+}
+
+fn build_signsgd(_man: &Manifest, _b: &OptimBuild) -> Result<Box<dyn Optimizer>> {
+    Ok(Box::new(signsgd::SignSgd))
+}
+
+fn build_adamw8bit(man: &Manifest, _b: &OptimBuild) -> Result<Box<dyn Optimizer>> {
+    Ok(Box::new(quantized::AdamW8bit::new(man.n_params)))
+}
+
+/// Every registered optimizer, in table order. This is the single list
+/// `build`/`names` derive from; `docs/OPTIMIZERS.md` documents each row.
+pub fn registered() -> &'static [OptimSpec] {
+    static REGISTRY: &[OptimSpec] = &[
+        OptimSpec {
+            name: "adamw",
+            aliases: &[],
+            summary: "full-rank AdamW (performance upper bound, 1.00x memory)",
+            build: build_adamw,
+        },
+        OptimSpec {
+            name: "frugal-masked",
+            aliases: &["frugal"],
+            summary: "FRUGAL hybrid, full-size re-masked state (mirrors the fused device step)",
+            build: build_frugal_masked,
+        },
+        OptimSpec {
+            name: "frugal-compact",
+            aliases: &[],
+            summary: "FRUGAL hybrid, state allocated only for active blocks (realizes the savings)",
+            build: build_frugal_compact,
+        },
+        OptimSpec {
+            name: "galore",
+            aliases: &[],
+            summary: "low-rank projected Adam (Zhao et al., 2024)",
+            build: build_galore,
+        },
+        OptimSpec {
+            name: "badam",
+            aliases: &[],
+            summary: "block coordinate descent Adam (Luo et al., 2024)",
+            build: build_badam,
+        },
+        OptimSpec {
+            name: "signsgd",
+            aliases: &[],
+            summary: "stateless sign descent (Bernstein et al., 2018)",
+            build: build_signsgd,
+        },
+        OptimSpec {
+            name: "adamw8bit",
+            aliases: &["quantized"],
+            summary: "AdamW with blockwise 8-bit quantized moments (Dettmers et al., 2022)",
+            build: build_adamw8bit,
+        },
+    ];
+    REGISTRY
+}
+
+/// Look up a registry row by canonical name or alias (ASCII
+/// case-insensitive).
+pub fn lookup(name: &str) -> Option<&'static OptimSpec> {
+    let key = name.to_ascii_lowercase();
+    registered()
+        .iter()
+        .find(|s| s.name == key || s.aliases.contains(&key.as_str()))
+}
+
+/// Canonical registry names, in table order.
+pub fn names() -> Vec<&'static str> {
+    registered().iter().map(|s| s.name).collect()
+}
+
+/// Construct an optimizer by registry name.
+pub fn build(name: &str, man: &Manifest, b: &OptimBuild) -> Result<Box<dyn Optimizer>> {
+    match lookup(name) {
+        Some(spec) => (spec.build)(man, b),
+        None => bail!("unknown optimizer {name:?}; registered: {}", names().join(", ")),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::init::test_manifest;
 
     #[test]
     fn scalar_abi_order() {
@@ -64,5 +284,50 @@ mod tests {
         assert_eq!(a[2], 0.1);
         assert!((a[6] - (1.0 - 0.81)).abs() < 1e-6);
         assert!((a[7] - (1.0 - 0.999f32 * 0.999)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn registry_builds_every_optimizer() {
+        let man = test_manifest();
+        let b = OptimBuild::default();
+        for spec in registered() {
+            let opt = build(spec.name, &man, &b).unwrap();
+            assert_eq!(opt.name(), spec.name);
+            for alias in spec.aliases {
+                assert_eq!(build(alias, &man, &b).unwrap().name(), spec.name);
+            }
+        }
+        // case-insensitive + the two FRUGAL backends are distinct
+        assert_eq!(build("AdamW", &man, &b).unwrap().name(), "adamw");
+        assert!(build("sgd", &man, &b).is_err());
+        let err = format!("{:#}", build("sgd", &man, &b).unwrap_err());
+        assert!(err.contains("adamw") && err.contains("frugal-compact"), "{err}");
+    }
+
+    #[test]
+    fn registry_covers_the_six_modules() {
+        // one registry row (or alias) per optimizer module in the zoo
+        for want in ["adamw", "frugal", "galore", "badam", "signsgd", "quantized"] {
+            assert!(lookup(want).is_some(), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn state_bytes_through_trait() {
+        let man = test_manifest();
+        let b = OptimBuild::default();
+        let adamw = build("adamw", &man, &b).unwrap();
+        assert_eq!(adamw.state_bytes(), man.n_params * 8);
+        assert_eq!(build("signsgd", &man, &b).unwrap().state_bytes(), 0);
+        // compact FRUGAL allocates lazily: nothing maskable held yet
+        let compact = build("frugal-compact", &man, &b).unwrap();
+        assert!(compact.state_bytes() < adamw.state_bytes());
+    }
+
+    #[test]
+    fn state_mgmt_parses() {
+        assert_eq!(StateMgmt::parse("reset").unwrap(), StateMgmt::Reset);
+        assert_eq!(StateMgmt::parse("project").unwrap(), StateMgmt::Project);
+        assert!(StateMgmt::parse("drop").is_err());
     }
 }

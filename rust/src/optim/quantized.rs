@@ -124,6 +124,23 @@ impl AdamW8bit {
     }
 }
 
+impl super::Optimizer for AdamW8bit {
+    fn name(&self) -> &'static str {
+        "adamw8bit"
+    }
+
+    fn step(&mut self, _man: &crate::runtime::manifest::Manifest, params: &mut [f32],
+            grads: &[f32], _mask: Option<&super::MaskCtx>,
+            s: &super::StepScalars) -> anyhow::Result<()> {
+        AdamW8bit::step(self, params, grads, s);
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        AdamW8bit::state_bytes(self)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

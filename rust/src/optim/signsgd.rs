@@ -1,6 +1,10 @@
 //! SignSGD (Bernstein et al., 2018) — FRUGAL's state-free optimizer.
 //! Stateless by construction; kept as its own module because the paper
-//! treats it as a first-class baseline component.
+//! treats it as a first-class baseline component. Registered as
+//! `signsgd`, where it steps with the primary learning rate.
+
+use super::{MaskCtx, Optimizer, StepScalars};
+use crate::runtime::manifest::Manifest;
 
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SignSgd;
@@ -11,6 +15,28 @@ impl SignSgd {
         for i in 0..params.len() {
             params[i] -= lr * sign(grads[i]) + lr * wd * params[i];
         }
+    }
+}
+
+impl Optimizer for SignSgd {
+    fn name(&self) -> &'static str {
+        "signsgd"
+    }
+
+    fn step(&mut self, man: &Manifest, params: &mut [f32], grads: &[f32],
+            _mask: Option<&MaskCtx>, s: &StepScalars) -> anyhow::Result<()> {
+        // enforce the trait contract (exactly the params region) —
+        // a silent partial walk over a mis-sliced buffer would train
+        // plausibly but wrongly
+        anyhow::ensure!(params.len() == man.n_params && grads.len() == man.n_params,
+                        "signsgd: params/grads ({}/{}) must be exactly n_params ({})",
+                        params.len(), grads.len(), man.n_params);
+        SignSgd::step(self, params, grads, s.lr_full, s.wd);
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        0
     }
 }
 

@@ -7,6 +7,16 @@
 //! and renders them into the flat f32 mask vector the fused HLO step
 //! consumes. Redefinition (Algorithm 1, `RedefineProjector`) picks new
 //! active blocks per the configured [`Strategy`].
+//!
+//! Rendering writes one disjoint contiguous segment of the flat mask
+//! per maskable parameter (offsets validated by
+//! [`crate::runtime::manifest::Manifest::validate`]), so
+//! [`SubspaceMask::render_into`] fans the segments out across threads
+//! via [`crate::util::par`] — bit-identical to the serial write, and it
+//! keeps the redefinition pause small on large manifests. Host
+//! optimizers consume the mask through
+//! [`crate::optim::MaskCtx`], which pairs this rendered vector with the
+//! block-level view.
 
 use anyhow::{bail, Result};
 
@@ -53,6 +63,8 @@ struct BlockMeta {
     block_size: usize,
     mask_offset: usize,
     score_offset: usize,
+    /// columns of the parameter = length of its rendered mask segment
+    mask_len: usize,
 }
 
 impl SubspaceMask {
@@ -66,6 +78,7 @@ impl SubspaceMask {
                 block_size: man.block_size,
                 mask_offset: p.mask_offset,
                 score_offset: p.score_offset,
+                mask_len: p.mask_len,
             });
         }
         SubspaceMask { active, meta, mask_len: man.mask_len, rr_cursor: 0 }
@@ -155,15 +168,30 @@ impl SubspaceMask {
         out
     }
 
+    /// Parallel over parameters: each maskable param owns the disjoint
+    /// segment `[mask_offset, mask_offset + mask_len)` of `out`, carved
+    /// with `split_at_mut` and written on its own thread. Only block
+    /// ranges are touched (identical to the serial loop).
     pub fn render_into(&self, out: &mut [f32]) {
         assert_eq!(out.len(), self.mask_len);
+        let mut jobs: Vec<(&[bool], &BlockMeta, &mut [f32])> =
+            Vec::with_capacity(self.meta.len());
+        let mut rest = out;
+        let mut consumed = 0usize;
         for (i, m) in self.meta.iter().enumerate() {
-            for (b, &on) in self.active[i].iter().enumerate() {
-                let start = m.mask_offset + b * m.block_size;
-                let val = if on { 1.0 } else { 0.0 };
-                out[start..start + m.block_size].iter_mut().for_each(|x| *x = val);
-            }
+            debug_assert_eq!(m.mask_offset, consumed, "mask offsets must be contiguous");
+            let (seg, r) = rest.split_at_mut(m.mask_len);
+            rest = r;
+            consumed += m.mask_len;
+            jobs.push((&self.active[i], m, seg));
         }
+        crate::util::par::run_for(self.mask_len, jobs, |(active, m, seg)| {
+            for (b, &on) in active.iter().enumerate() {
+                let start = b * m.block_size;
+                let val = if on { 1.0 } else { 0.0 };
+                seg[start..start + m.block_size].iter_mut().for_each(|x| *x = val);
+            }
+        });
     }
 
     /// Count of state-full *elements* (columns × rows) given the params

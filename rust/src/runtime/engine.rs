@@ -2,6 +2,24 @@
 //! plus host↔device transfer helpers. Everything on the hot path works
 //! on `PjRtBuffer`s; the only per-step host traffic is the tokens upload
 //! (a few KB), the 32-byte scalars upload, and a 4-byte loss readback.
+//!
+//! # Backends
+//!
+//! The `xla` dependency is a workspace path-dependency. The vendored
+//! default (`vendor/xla`) is a host-side stub: uploads, literal
+//! round-trips and reads are exact, while executing a compiled graph
+//! returns an error — which is why every integration test and bench
+//! that drives HLO checks for `artifacts/` and skips when absent. To
+//! run the fused device path, point the `xla` dependency at a real PJRT
+//! binding; this module compiles unchanged against either (it only uses
+//! the shared API subset documented in `vendor/xla/src/lib.rs`).
+//!
+//! # Caching
+//!
+//! Clients and compiled executables are cached process-wide (see
+//! [`client`] and the per-HLO-path executable cache) because the
+//! experiment harness constructs many [`Engine`]s for the same
+//! artifacts (per method × task × seed).
 
 use std::collections::BTreeMap;
 use std::path::Path;

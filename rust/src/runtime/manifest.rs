@@ -199,6 +199,80 @@ impl Manifest {
         Ok(man)
     }
 
+    /// Build a synthetic LM-shaped manifest entirely on host: `n_mats`
+    /// maskable `rows × cols` matrices plus one non-maskable bias
+    /// vector. Used by artifact-free benches, examples and property
+    /// tests that exercise the host optimizer registry without AOT
+    /// artifacts.
+    pub fn synthetic_lm(n_mats: usize, rows: usize, cols: usize,
+                        block_size: usize) -> Result<Manifest> {
+        ensure!(n_mats >= 1 && n_mats < 100, "n_mats must be in [1, 100)");
+        ensure!(block_size >= 1 && cols % block_size == 0,
+                "cols {cols} must be a multiple of block_size {block_size}");
+        let mut params = Vec::new();
+        let mut off = 0;
+        let mut moff = 0;
+        let mut soff = 0;
+        for i in 0..n_mats {
+            // zero-padded names keep the manifest's sorted-name invariant
+            params.push(ParamSpec {
+                name: format!("mat{i:02}"),
+                shape: vec![rows, cols],
+                size: rows * cols,
+                offset: off,
+                init_std: 0.02,
+                maskable: true,
+                mask_offset: moff,
+                mask_len: cols,
+                score_offset: soff,
+                n_blocks: cols / block_size,
+            });
+            off += rows * cols;
+            moff += cols;
+            soff += cols / block_size;
+        }
+        params.push(ParamSpec {
+            name: "zz_bias".to_string(),
+            shape: vec![cols],
+            size: cols,
+            offset: off,
+            init_std: 0.0,
+            maskable: false,
+            mask_offset: 0,
+            mask_len: 0,
+            score_offset: 0,
+            n_blocks: 0,
+        });
+        off += cols;
+        let man = Manifest {
+            name: "synthetic".to_string(),
+            task: "lm".to_string(),
+            dir: PathBuf::from("."),
+            model: ModelDims {
+                d_model: cols,
+                n_layers: n_mats,
+                n_heads: 1,
+                d_ffn: cols,
+                vocab: 2 * cols,
+                seq: 8,
+                batch: 2,
+                n_cls: 2,
+                lora_rank: 4,
+                block_size,
+            },
+            n_params: off,
+            state_len: 3 * off + 1,
+            mask_len: moff,
+            score_len: soff,
+            block_size,
+            params,
+            lora_params: Vec::new(),
+            entrypoints: BTreeMap::new(),
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
     pub fn validate(&self) -> Result<()> {
         ensure!(self.state_len == 3 * self.n_params + 1, "state_len mismatch");
         let mut off = 0;
@@ -313,6 +387,16 @@ mod tests {
         let bad = fake_manifest_json().replace("\"offset\":8", "\"offset\":9");
         let v = json::parse(&bad).unwrap();
         assert!(Manifest::from_json(&v, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn synthetic_manifest_validates() {
+        let m = Manifest::synthetic_lm(3, 8, 16, 4).unwrap();
+        assert_eq!(m.n_params, 3 * 8 * 16 + 16);
+        assert_eq!(m.maskable().count(), 3);
+        assert_eq!(m.mask_len, 3 * 16);
+        assert_eq!(m.total_blocks(), 3 * 4);
+        assert!(Manifest::synthetic_lm(1, 4, 10, 4).is_err()); // 10 % 4 != 0
     }
 
     #[test]

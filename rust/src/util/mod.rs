@@ -5,6 +5,7 @@ pub mod bench;
 pub mod csv;
 pub mod json;
 pub mod log;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,188 @@
+//! Data-parallel helpers for the host optimizer hot path.
+//!
+//! The optimizer step loops are embarrassingly parallel: the manifest
+//! partitions the flat parameter vector into disjoint per-`ParamSpec`
+//! regions, so each region (params/grads/moments slice) can be updated
+//! on its own thread with no synchronization. Because no value is ever
+//! written by two threads and the per-element arithmetic is unchanged,
+//! the parallel step is **bit-identical** to the serial one — a property
+//! pinned by `tests/properties.rs::parallel_step_is_bit_identical`.
+//!
+//! The backend is `std::thread::scope` with round-robin job buckets —
+//! zero dependencies, which the offline build requires. A rayon pool is
+//! a drop-in replacement: add `rayon = "1.8"` to `[dependencies]` and
+//! change [`run`]'s body to
+//! `jobs.into_par_iter().for_each(|j| f(j))` (bounds stay the same);
+//! it is not shipped because even an unused crates.io entry would force
+//! network resolution.
+//!
+//! Hot-path steps call [`run_for`] with their element count: workloads
+//! under [`MIN_ELEMS_PER_THREAD`] per worker run inline, so tiny
+//! presets never pay thread spawn/join cost.
+//!
+//! Thread count: [`set_threads`] override > `ADAFRUGAL_THREADS` env var
+//! > `std::thread::available_parallelism()`. `set_threads(1)` forces the
+//! serial path (used by the parity tests and benches); `set_threads(0)`
+//! restores auto.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Per-element work below this (per additional worker) is cheaper to
+/// run inline than to ship to a thread: spawn+join costs tens of
+/// microseconds, ~8k f32 updates cost about the same.
+pub const MIN_ELEMS_PER_THREAD: usize = 8192;
+
+/// Override the worker count (0 = back to automatic).
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::SeqCst);
+}
+
+/// Effective worker count for the next [`run`] call.
+pub fn threads() -> usize {
+    let o = THREAD_OVERRIDE.load(Ordering::SeqCst);
+    if o != 0 {
+        return o;
+    }
+    // env + core count cannot change meaningfully mid-process; resolve
+    // once so the per-step hot path never takes the env lock
+    static AUTO: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *AUTO.get_or_init(|| {
+        if let Ok(v) = std::env::var("ADAFRUGAL_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                if n > 0 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Consume `jobs`, applying `f` to each exactly once, possibly in
+/// parallel. Jobs must be independent (they always are here: each job
+/// owns disjoint `&mut` regions carved with `split_at_mut`).
+pub fn run<T, F>(jobs: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(T) + Sync,
+{
+    run_capped(usize::MAX, jobs, f)
+}
+
+/// As [`run`], but sized by the total per-element work the jobs carry:
+/// the worker count is additionally capped at
+/// `total_elems / MIN_ELEMS_PER_THREAD`, so small workloads run inline
+/// with zero spawn cost. Thread count never changes results (disjoint
+/// regions, unchanged math), only latency.
+pub fn run_for<T, F>(total_elems: usize, jobs: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(T) + Sync,
+{
+    run_capped((total_elems / MIN_ELEMS_PER_THREAD).max(1), jobs, f)
+}
+
+fn run_capped<T, F>(cap: usize, jobs: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(T) + Sync,
+{
+    let n = threads().min(cap).min(jobs.len());
+    if n <= 1 {
+        for j in jobs {
+            f(j);
+        }
+        return;
+    }
+    // Round-robin assignment: manifest param sizes are heavily skewed
+    // (embedding/head vs norm gains), and neighbors in manifest order
+    // tend to be similar sizes, so striding balances better than
+    // contiguous chunking.
+    let mut buckets: Vec<Vec<T>> = (0..n).map(|_| Vec::new()).collect();
+    for (i, j) in jobs.into_iter().enumerate() {
+        buckets[i % n].push(j);
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        for bucket in buckets {
+            s.spawn(move || {
+                for j in bucket {
+                    f(j);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Mutex;
+
+    /// set_threads is process-global; serialize the tests that flip it.
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn runs_every_job_exactly_once() {
+        let _g = lock();
+        for t in [1usize, 2, 4, 7] {
+            set_threads(t);
+            let sum = AtomicU64::new(0);
+            run((1..=100u64).collect::<Vec<_>>(), |j| {
+                sum.fetch_add(j, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 5050, "threads={t}");
+        }
+        set_threads(0);
+    }
+
+    #[test]
+    fn disjoint_mut_regions() {
+        let _g = lock();
+        set_threads(4);
+        let mut data = vec![0u32; 64];
+        let jobs: Vec<&mut [u32]> = data.chunks_mut(8).collect();
+        run(jobs, |chunk| {
+            for x in chunk {
+                *x += 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 1));
+        set_threads(0);
+    }
+
+    #[test]
+    fn run_for_sizes_and_completes() {
+        let _g = lock();
+        set_threads(8);
+        // tiny workload: must still process every job (inline path)
+        let sum = AtomicU64::new(0);
+        run_for(10, (1..=20u64).collect::<Vec<_>>(), |j| {
+            sum.fetch_add(j, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 210);
+        // large workload: same result through the parallel path
+        let sum = AtomicU64::new(0);
+        run_for(1 << 20, (1..=20u64).collect::<Vec<_>>(), |j| {
+            sum.fetch_add(j, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 210);
+        set_threads(0);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        run(Vec::<usize>::new(), |_| panic!("no jobs"));
+        let hit = AtomicU64::new(0);
+        run(vec![9u64], |j| {
+            hit.store(j, Ordering::Relaxed);
+        });
+        assert_eq!(hit.load(Ordering::Relaxed), 9);
+    }
+}

@@ -8,7 +8,10 @@ use adafrugal::coordinator::checkpoint;
 use adafrugal::data::corpus::{CorpusGenerator, CorpusProfile};
 use adafrugal::data::loader::Loader;
 use adafrugal::data::tokenizer::Tokenizer;
-use adafrugal::util::prop;
+use adafrugal::model::init;
+use adafrugal::optim::{self, MaskCtx, OptimBuild, Optimizer, StateMgmt, StepScalars};
+use adafrugal::projection::{Strategy, SubspaceMask};
+use adafrugal::util::{par, prop};
 use adafrugal::util::rng::Rng;
 
 #[test]
@@ -196,6 +199,129 @@ fn config_rejects_inconsistent_paper_params() {
     let mut c = TrainConfig::default();
     c.gamma_increase = 0.5; // would shrink T
     assert!(c.validate().is_err());
+}
+
+#[test]
+fn prop_trait_path_masked_equals_compact() {
+    // The Masked ≡ Compact invariant, driven entirely through the
+    // `Box<dyn Optimizer>` registry path (build by name, step with a
+    // MaskCtx, redefine through on_redefine) under BOTH state policies.
+    let man = test_manifest();
+    prop::forall_with_rng(
+        "trait-masked-eq-compact",
+        10,
+        |r| (r.below(1 << 30) as u64, 0.1 + 0.8 * r.f64(), r.below(2)),
+        |&(seed, rho, mgmt_i), rng| {
+            let mgmt = [StateMgmt::Reset, StateMgmt::Project][mgmt_i];
+            let b = OptimBuild::default();
+            let mut masked: Box<dyn Optimizer> =
+                optim::build("frugal-masked", &man, &b).unwrap();
+            let mut compact: Box<dyn Optimizer> =
+                optim::build("frugal-compact", &man, &b).unwrap();
+            let mut rng_data = Rng::new(seed);
+            let mut p1 = init::init_state(&man, seed)[..man.n_params].to_vec();
+            let mut p2 = p1.clone();
+            let mut mask = SubspaceMask::new(&man);
+            mask.redefine(Strategy::Random, rho, None, rng).unwrap();
+            let mut rendered = mask.render();
+            let mut t_since = 0usize;
+            for step in 0..24 {
+                if step > 0 && step % 8 == 0 {
+                    mask.redefine(Strategy::Random, rho, None, rng).unwrap();
+                    rendered = mask.render();
+                    let ctx = MaskCtx { mask: &mask, rendered: &rendered };
+                    masked.on_redefine(&man, Some(&ctx), mgmt);
+                    compact.on_redefine(&man, Some(&ctx), mgmt);
+                    if mgmt == StateMgmt::Reset {
+                        t_since = 0;
+                    }
+                }
+                t_since += 1;
+                let grads: Vec<f32> =
+                    (0..man.n_params).map(|_| rng_data.normal_f32(1.0)).collect();
+                let s = StepScalars::new(1e-2, 1e-3, 0.01, 0.9, 0.999, 1e-8, t_since);
+                let ctx = MaskCtx { mask: &mask, rendered: &rendered };
+                masked.step(&man, &mut p1, &grads, Some(&ctx), &s).unwrap();
+                compact.step(&man, &mut p2, &grads, Some(&ctx), &s).unwrap();
+                if p1 != p2 {
+                    return false;
+                }
+            }
+            // and the compact backend actually holds less state
+            compact.state_bytes() <= masked.state_bytes()
+        },
+    );
+}
+
+/// The thread-count override in `util::par` is process-global, and the
+/// test harness runs tests concurrently — serialize every test that
+/// flips it so a "serial" baseline really runs serial.
+fn par_override_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn parallel_step_is_bit_identical_to_serial() {
+    // The rayon-style parallel host step must be BIT-identical to the
+    // serial one for every registered optimizer: parallelism only
+    // partitions disjoint regions, it never reorders per-element math.
+    // The manifest must be big enough (~100k elems) that run_for's
+    // work-size gate actually engages multiple threads.
+    let _guard = par_override_lock();
+    let man = adafrugal::runtime::Manifest::synthetic_lm(6, 64, 256, 16).unwrap();
+    assert!(man.n_params / adafrugal::util::par::MIN_ELEMS_PER_THREAD >= 4,
+            "manifest too small to exercise the parallel path");
+
+    let run_steps = |name: &str, threads: usize| -> (Vec<f32>, usize) {
+        par::set_threads(threads);
+        let mut opt: Box<dyn Optimizer> =
+            optim::build(name, &man, &OptimBuild::default()).unwrap();
+        let mut params = init::init_state(&man, 42)[..man.n_params].to_vec();
+        let mut mask_rng = Rng::new(7);
+        let mut mask = SubspaceMask::new(&man);
+        mask.redefine(Strategy::Random, 0.5, None, &mut mask_rng).unwrap();
+        let rendered = mask.render();
+        let mut grad_rng = Rng::new(9);
+        for t in 1..=6 {
+            let grads: Vec<f32> =
+                (0..man.n_params).map(|_| grad_rng.normal_f32(1.0)).collect();
+            let s = StepScalars::new(1e-2, 1e-3, 0.01, 0.9, 0.999, 1e-8, t);
+            let ctx = MaskCtx { mask: &mask, rendered: &rendered };
+            opt.step(&man, &mut params, &grads, Some(&ctx), &s).unwrap();
+        }
+        let bytes = opt.state_bytes();
+        par::set_threads(0);
+        (params, bytes)
+    };
+
+    for name in optim::names() {
+        let (serial, serial_bytes) = run_steps(name, 1);
+        let (parallel, parallel_bytes) = run_steps(name, 4);
+        assert_eq!(serial, parallel, "{name}: parallel step diverged from serial");
+        assert_eq!(serial_bytes, parallel_bytes, "{name}: state bytes diverged");
+        // and the run actually moved the params
+        let init_p = init::init_state(&man, 42)[..man.n_params].to_vec();
+        assert_ne!(serial, init_p, "{name}: step was a no-op");
+    }
+}
+
+#[test]
+fn parallel_mask_render_matches_serial() {
+    let _guard = par_override_lock();
+    // wide mask (24k columns) so rendering crosses the work-size gate
+    let man = adafrugal::runtime::Manifest::synthetic_lm(12, 8, 2048, 16).unwrap();
+    let mut rng = Rng::new(3);
+    let mut mask = SubspaceMask::new(&man);
+    for &rho in &[0.0, 0.3, 0.7, 1.0] {
+        mask.redefine(Strategy::Random, rho, None, &mut rng).unwrap();
+        par::set_threads(1);
+        let serial = mask.render();
+        par::set_threads(4);
+        let parallel = mask.render();
+        par::set_threads(0);
+        assert_eq!(serial, parallel, "rho={rho}");
+    }
 }
 
 /// Small synthetic manifest shared by the memory-model property test.
