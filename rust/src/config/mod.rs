@@ -15,6 +15,10 @@ pub struct TrainConfig {
     pub preset: String,
     /// artifacts directory
     pub artifacts_dir: String,
+    /// execution backend by name: "pjrt" (compiled HLO artifacts) or
+    /// "sim" (host-CPU simulation, no artifacts needed); resolved by
+    /// `runtime::backend`, overridable via `ADAFRUGAL_BACKEND`
+    pub backend: String,
     /// training method by roster name ("adamw", "frugal", "dyn-rho",
     /// "dyn-t", "combined", "galore", "badam" — see
     /// `coordinator::method::Method::parse`)
@@ -68,6 +72,7 @@ impl Default for TrainConfig {
         TrainConfig {
             preset: "micro".into(),
             artifacts_dir: "artifacts".into(),
+            backend: "pjrt".into(),
             method: "combined".into(),
             steps: 2000,
             seed: 0,
@@ -110,6 +115,7 @@ impl TrainConfig {
         }
         set!(preset, as_string);
         set!(artifacts_dir, as_string);
+        set!(backend, as_string);
         set!(method, as_string);
         set!(steps, as_usize);
         set!(seed, as_u64);
@@ -154,6 +160,8 @@ impl TrainConfig {
         );
         // single source of truth for the reset/project vocabulary
         crate::optim::StateMgmt::parse(&self.state_mgmt)?;
+        // ... and for the backend vocabulary (pjrt | sim)
+        crate::runtime::backend::BackendKind::parse(&self.backend)?;
         Ok(())
     }
 
@@ -178,6 +186,7 @@ impl TrainConfig {
         }
         set!(preset, as_string);
         set!(artifacts_dir, as_string);
+        set!(backend, as_string);
         set!(method, as_string);
         set!(steps, as_usize);
         set!(seed, as_u64);
@@ -241,6 +250,18 @@ mod tests {
         assert!(c.set("strategy", "bogus").is_err());
         // failed set must not corrupt state
         assert_eq!(c.rho, 0.25);
+    }
+
+    #[test]
+    fn backend_selected_by_name() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.backend, "pjrt");
+        c.set("backend", "sim").unwrap();
+        assert_eq!(c.backend, "sim");
+        assert!(c.set("backend", "tpu").is_err());
+        assert_eq!(c.backend, "sim"); // failed set must not corrupt state
+        let m = parse_str("[train]\nbackend = \"sim\"\n").unwrap();
+        assert_eq!(TrainConfig::from_map(&m).unwrap().backend, "sim");
     }
 
     #[test]

@@ -31,22 +31,28 @@ impl RhoSchedule {
     }
 
     /// ρ(k) — always clamped to [min(start,end), max(start,end)].
+    ///
+    /// The clamp is two-sided: increasing schedules (`start < end`,
+    /// e.g. warm-up ablations) must hold at `end` past `total_steps`
+    /// rather than extrapolate, exactly like decreasing ones.
     pub fn at(&self, step: usize) -> f64 {
-        match *self {
-            RhoSchedule::Constant { rho } => rho,
+        let (lo, hi, v) = match *self {
+            RhoSchedule::Constant { rho } => return rho,
             RhoSchedule::Linear { start, end, total_steps } => {
-                let k = step as f64 / total_steps.max(1) as f64;
-                (start - (start - end) * k).max(end)
+                let k = (step as f64 / total_steps.max(1) as f64).min(1.0);
+                (start.min(end), start.max(end), start - (start - end) * k)
             }
             RhoSchedule::Cosine { start, end, total_steps } => {
                 let k = (step as f64 / total_steps.max(1) as f64).min(1.0);
-                end + 0.5 * (start - end) * (1.0 + (std::f64::consts::PI * k).cos())
+                (start.min(end), start.max(end),
+                 end + 0.5 * (start - end) * (1.0 + (std::f64::consts::PI * k).cos()))
             }
             RhoSchedule::Step { start, end, every, factor } => {
                 let n = step / every.max(1);
-                (start * factor.powi(n as i32)).max(end)
+                (start.min(end), start.max(end), start * factor.powi(n as i32))
             }
-        }
+        };
+        v.clamp(lo, hi)
     }
 
     /// Final ρ (for memory reporting).
@@ -91,6 +97,22 @@ mod tests {
             assert!(v <= prev + 1e-12, "cosine must be nonincreasing");
             prev = v;
         }
+    }
+
+    #[test]
+    fn increasing_linear_clamps_past_horizon() {
+        // regression: `at` used to clamp only at `end`, so an
+        // increasing schedule extrapolated past total_steps
+        // (at(2K) = start + 2*(end-start) instead of end)
+        let s = RhoSchedule::linear(0.05, 0.25, 100);
+        assert_eq!(s.at(0), 0.05);
+        assert!((s.at(50) - 0.15).abs() < 1e-12);
+        assert!((s.at(100) - 0.25).abs() < 1e-12);
+        assert!((s.at(200) - 0.25).abs() < 1e-12, "got {}", s.at(200));
+        assert!((s.at(1_000_000) - 0.25).abs() < 1e-12);
+        // increasing cosine holds at end too
+        let c = RhoSchedule::cosine(0.05, 0.25, 100);
+        assert!((c.at(200) - 0.25).abs() < 1e-12);
     }
 
     #[test]

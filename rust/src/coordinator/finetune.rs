@@ -6,7 +6,6 @@
 //! naturally adjusted").
 
 use anyhow::{Context, Result};
-use xla::PjRtBuffer;
 
 use crate::config::TrainConfig;
 use crate::controller::AdaFrugalController;
@@ -14,7 +13,7 @@ use crate::data::glue::{self, Example, TaskData, TaskSpec};
 use crate::model::init;
 use crate::optim::{self, OptimBuild, Optimizer, StateMgmt, StepScalars};
 use crate::projection::{Strategy, SubspaceMask};
-use crate::runtime::Engine;
+use crate::runtime::backend::{self, Buffer, ExecBackend};
 use crate::util::rng::Rng;
 
 pub use crate::coordinator::method::FtMethod;
@@ -23,7 +22,7 @@ pub struct FineTuner {
     pub cfg: TrainConfig,
     pub method: FtMethod,
     pub spec: &'static TaskSpec,
-    engine: Engine,
+    engine: Box<dyn ExecBackend>,
     /// LoRA only: frozen backbone params + adapter state
     lora_base: Option<Vec<f32>>,
     data: TaskData,
@@ -49,11 +48,12 @@ impl FineTuner {
         } else {
             format!("{}.cls{}", cfg.preset, spec.n_cls)
         };
-        let engine = Engine::load(&cfg.artifacts_dir, &artifact, &method.entries())?;
-        let dims = engine.manifest.model.clone();
+        let engine = backend::load(&cfg.backend, &cfg.artifacts_dir, &artifact,
+                                   &method.entries())?;
+        let dims = engine.manifest().model.clone();
         let data = glue::generate(spec, dims.vocab, dims.seq, seed ^ 0x61ed);
         let lora_base = if lora {
-            Some(init::init_state(&engine.manifest, seed)[..engine.manifest.n_params].to_vec())
+            Some(init::init_state(engine.manifest(), seed)[..engine.manifest().n_params].to_vec())
         } else {
             None
         };
@@ -69,7 +69,7 @@ impl FineTuner {
     }
 
     fn batchify(&self, examples: &[Example], idx: &[usize]) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
-        let seq = self.engine.manifest.model.seq;
+        let seq = self.engine.manifest().model.seq;
         let mut toks = Vec::with_capacity(idx.len() * seq);
         let mut li = Vec::with_capacity(idx.len());
         let mut lf = Vec::with_capacity(idx.len());
@@ -81,7 +81,7 @@ impl FineTuner {
         (toks, li, lf)
     }
 
-    fn upload_labels(&self, li: &[i32], lf: &[f32]) -> Result<PjRtBuffer> {
+    fn upload_labels(&self, li: &[i32], lf: &[f32]) -> Result<Buffer> {
         if self.spec.n_cls == 1 {
             self.engine.upload_f32(lf, &[lf.len()])
         } else {
@@ -90,8 +90,8 @@ impl FineTuner {
     }
 
     /// Evaluate: returns (score, mean_eval_loss).
-    fn score_eval(&self, state_buf: &PjRtBuffer, lora: bool) -> Result<(f64, f64)> {
-        let man = &self.engine.manifest;
+    fn score_eval(&self, state_buf: &Buffer, lora: bool) -> Result<(f64, f64)> {
+        let man = self.engine.manifest();
         let batch = man.model.batch;
         let n_cls = man.model.n_cls;
         let mut pred_cls = Vec::new();
@@ -100,17 +100,19 @@ impl FineTuner {
         let mut truth_reg = Vec::new();
         let mut losses = Vec::new();
         let n_batches = self.data.eval.len() / batch;
+        // the frozen LoRA base never changes: upload it once, not per batch
+        let bbuf = match (&self.lora_base, lora) {
+            (Some(base), true) => Some(self.engine.upload_f32(base, &[base.len()])?),
+            _ => None,
+        };
         for bi in 0..n_batches {
             let idx: Vec<usize> = (0..batch).map(|j| bi * batch + j).collect();
             let (toks, li, lf) = self.batchify(&self.data.eval, &idx);
             let tbuf = self.engine.upload_i32(&toks, &[batch, man.model.seq])?;
             let lbuf = self.upload_labels(&li, &lf)?;
-            let out = if lora {
-                let base = self.lora_base.as_ref().unwrap();
-                let bbuf = self.engine.upload_f32(base, &[base.len()])?;
-                self.engine.run("lora_eval", &[&bbuf, state_buf, &tbuf, &lbuf])?
-            } else {
-                self.engine.run("eval", &[state_buf, &tbuf, &lbuf])?
+            let out = match &bbuf {
+                Some(b) => self.engine.run("lora_eval", &[b, state_buf, &tbuf, &lbuf])?,
+                None => self.engine.run("eval", &[state_buf, &tbuf, &lbuf])?,
             };
             let v = self.engine.read_f32(&out, 0, 1 + batch * n_cls)?;
             losses.push(v[0] as f64);
@@ -137,7 +139,7 @@ impl FineTuner {
 
     /// Run fine-tuning for `cfg.steps` steps; returns the eval score.
     pub fn run(&mut self) -> Result<FtResult> {
-        let man = &self.engine.manifest;
+        let man = self.engine.manifest().clone();
         let batch = man.model.batch;
         let is_lora = self.method.is_lora();
         let frugal = self.method.is_frugal();
@@ -145,7 +147,7 @@ impl FineTuner {
         // controller + mask (frugal family only)
         let (dyn_rho, dyn_t) = self.method.dynamic();
         let mut controller = AdaFrugalController::from_config(&self.cfg, dyn_rho, dyn_t);
-        let mut mask = SubspaceMask::new(man);
+        let mut mask = SubspaceMask::new(&man);
         let strategy = Strategy::parse(&self.cfg.strategy)?;
         let state_mgmt = StateMgmt::parse(&self.cfg.state_mgmt)?;
         if frugal {
@@ -155,10 +157,10 @@ impl FineTuner {
 
         // state
         let mut state_buf = if is_lora {
-            let lstate = init::init_lora_state(man, self.cfg.seed);
+            let lstate = init::init_lora_state(&man, self.cfg.seed);
             self.engine.upload_f32(&lstate, &[lstate.len()])?
         } else {
-            let state = init::init_state(man, self.cfg.seed);
+            let state = init::init_state(&man, self.cfg.seed);
             self.engine.upload_f32(&state, &[man.state_len])?
         };
         let mut masks_buf = if frugal {
@@ -170,15 +172,20 @@ impl FineTuner {
         let mut host_state: Option<(Vec<f32>, Box<dyn Optimizer>)> =
             match self.method.host_optimizer() {
                 Some(name) => {
-                    let state = init::init_state(man, self.cfg.seed);
+                    let state = init::init_state(&man, self.cfg.seed);
                     Some((
                         state[..man.n_params].to_vec(),
-                        optim::build(name, man, &OptimBuild::from_config(&self.cfg))?,
+                        optim::build(name, &man, &OptimBuild::from_config(&self.cfg))?,
                     ))
                 }
                 None => None,
             };
 
+        // the frozen LoRA base never changes: upload it once for the run
+        let base_buf = match &self.lora_base {
+            Some(base) => Some(self.engine.upload_f32(base, &[base.len()])?),
+            None => None,
+        };
         let mut order: Vec<usize> = (0..self.data.train.len()).collect();
         let mut cursor = 0usize;
         let mut t_since_reset = 0usize;
@@ -231,7 +238,7 @@ impl FineTuner {
                 let out = self.engine.run("grad", &[&pbuf, &tbuf, &lbuf])?;
                 let gl = self.engine.read_all_f32(&out)?;
                 let n = params.len();
-                opt.step(man, params, &gl[..n], None, &s)?;
+                opt.step(&man, params, &gl[..n], None, &s)?;
                 last_loss = gl[n] as f64;
                 // keep state_buf in sync for eval
                 let mut state = vec![0f32; man.state_len];
@@ -241,12 +248,8 @@ impl FineTuner {
                 // fused path: argument shape is method-independent —
                 // [base?] + state + [masks?] + scalars + tokens + labels
                 let out = {
-                    let bbuf = match &self.lora_base {
-                        Some(base) => Some(self.engine.upload_f32(base, &[base.len()])?),
-                        None => None,
-                    };
-                    let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(6);
-                    if let Some(b) = &bbuf {
+                    let mut args: Vec<&Buffer> = Vec::with_capacity(6);
+                    if let Some(b) = &base_buf {
                         args.push(b);
                     }
                     args.push(&state_buf);

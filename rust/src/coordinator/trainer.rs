@@ -16,7 +16,6 @@
 //! no per-method optimizer dispatch.
 
 use anyhow::{bail, Context, Result};
-use xla::PjRtBuffer;
 
 use crate::config::TrainConfig;
 use crate::controller::AdaFrugalController;
@@ -29,7 +28,7 @@ use crate::info;
 use crate::model::init;
 use crate::optim::{self, OptimBuild, Optimizer, StateMgmt, StepScalars};
 use crate::projection::{Strategy, SubspaceMask};
-use crate::runtime::Engine;
+use crate::runtime::backend::{self, Buffer, ExecBackend};
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
 
@@ -83,8 +82,8 @@ impl RunResult {
 }
 
 enum OptState {
-    /// device-resident packed state (fused path)
-    Fused { state_buf: PjRtBuffer, masks_buf: Option<PjRtBuffer> },
+    /// backend-resident packed state (fused path)
+    Fused { state_buf: Buffer, masks_buf: Option<Buffer> },
     /// host-resident params + a registry-built update rule fed by the
     /// `grad` entry (GaLore/BAdam baselines — not the paper's hot path)
     Host { params: Vec<f32>, opt: Box<dyn Optimizer> },
@@ -93,7 +92,7 @@ enum OptState {
 pub struct Trainer {
     pub cfg: TrainConfig,
     pub method: Method,
-    engine: Engine,
+    engine: Box<dyn ExecBackend>,
     controller: AdaFrugalController,
     mask: SubspaceMask,
     strategy: Strategy,
@@ -111,9 +110,10 @@ pub struct Trainer {
 impl Trainer {
     pub fn new(cfg: TrainConfig, method: Method) -> Result<Trainer> {
         cfg.validate()?;
-        let engine = Engine::load(&cfg.artifacts_dir, &cfg.preset, &method.entries())
-            .with_context(|| format!("loading artifacts for {}", cfg.preset))?;
-        let man = &engine.manifest;
+        let engine = backend::load(&cfg.backend, &cfg.artifacts_dir, &cfg.preset,
+                                   &method.entries())
+            .with_context(|| format!("loading backend for {}", cfg.preset))?;
+        let man = engine.manifest();
         anyhow::ensure!(man.task == "lm", "Trainer drives LM presets; use FineTuner for cls");
 
         // --- data pipeline: corpus -> tokenizer -> loaders ---
@@ -180,7 +180,7 @@ impl Trainer {
     }
 
     pub fn manifest(&self) -> &crate::runtime::Manifest {
-        &self.engine.manifest
+        self.engine.manifest()
     }
 
     /// Override the ρ schedule (ablations: cosine/step decay shapes).
@@ -208,17 +208,17 @@ impl Trainer {
                          self.t_since_reset)
     }
 
-    fn upload_batch(&self, b: &Batch) -> Result<PjRtBuffer> {
+    fn upload_batch(&self, b: &Batch) -> Result<Buffer> {
         self.engine.upload_i32(&b.tokens, &[b.batch, b.seq_plus_1])
     }
 
     /// Validation loss over `val_batches` deterministic batches.
     pub fn evaluate(&mut self) -> Result<f64> {
-        let man_state_len = self.engine.manifest.state_len;
-        let n_params = self.engine.manifest.n_params;
+        let man_state_len = self.engine.manifest().state_len;
+        let n_params = self.engine.manifest().n_params;
         // build a state buffer view for eval
         let state_buf_owned;
-        let state_buf: &PjRtBuffer = match &self.opt {
+        let state_buf: &Buffer = match &self.opt {
             OptState::Fused { state_buf, .. } => state_buf,
             OptState::Host { params, .. } => {
                 let mut state = vec![0f32; man_state_len];
@@ -250,7 +250,7 @@ impl Trainer {
             let b = self.train.next_batch();
             let tokens = self.upload_batch(&b)?;
             let out = self.engine.run("scores", &[&pbuf, &tokens])?;
-            Some(self.engine.read_f32(&out, 0, self.engine.manifest.score_len)?)
+            Some(self.engine.read_f32(&out, 0, self.engine.manifest().score_len)?)
         } else {
             None
         };
@@ -259,13 +259,13 @@ impl Trainer {
         if let OptState::Fused { state_buf, masks_buf } = &mut self.opt {
             *masks_buf = Some(
                 self.engine
-                    .upload_f32(&self.mask.render(), &[self.engine.manifest.mask_len])?,
+                    .upload_f32(&self.mask.render(), &[self.engine.manifest().mask_len])?,
             );
             if self.state_mgmt == StateMgmt::Reset {
                 // S = Reset: zero m/v of maskable params. (The fused
                 // kernel re-masks every step, so Project is automatic;
                 // Reset needs an explicit host pass.)
-                let man = &self.engine.manifest;
+                let man = self.engine.manifest().clone();
                 let mut state = self.engine.read_all_f32(state_buf)?;
                 let n = man.n_params;
                 for p in man.maskable() {
@@ -283,7 +283,7 @@ impl Trainer {
 
     /// Download current params (fused path) or clone host params.
     pub fn params_host(&self) -> Result<Vec<f32>> {
-        let n = self.engine.manifest.n_params;
+        let n = self.engine.manifest().n_params;
         match &self.opt {
             OptState::Fused { state_buf, .. } => self.engine.read_f32(state_buf, 0, n),
             OptState::Host { params, .. } => Ok(params.clone()),
@@ -293,7 +293,7 @@ impl Trainer {
     /// Restore params (e.g. from a checkpoint) into the live state,
     /// clearing optimizer moments.
     pub fn restore_params(&mut self, params: &[f32]) -> Result<()> {
-        let man = &self.engine.manifest;
+        let man = self.engine.manifest().clone();
         anyhow::ensure!(params.len() == man.n_params, "param size mismatch");
         match &mut self.opt {
             OptState::Fused { state_buf, .. } => {
@@ -340,7 +340,7 @@ impl Trainer {
                 let n = params.len();
                 let s = StepScalars::new(scal[0], scal[1], scal[2], scal[3], scal[4],
                                          scal[5], step + 1);
-                opt.step(&self.engine.manifest, params, &gl[..n], None, &s)?;
+                opt.step(self.engine.manifest(), params, &gl[..n], None, &s)?;
                 Ok(Some(gl[n]))
             }
         }
@@ -351,7 +351,7 @@ impl Trainer {
     fn train_loss_now(&self) -> Result<f32> {
         match &self.opt {
             OptState::Fused { state_buf, .. } => {
-                let len = self.engine.manifest.state_len;
+                let len = self.engine.manifest().state_len;
                 Ok(self.engine.read_f32(state_buf, len - 1, 1)?[0])
             }
             _ => Ok(f32::NAN), // host paths always return Some(loss)
@@ -424,7 +424,7 @@ impl Trainer {
                     self.controller.observe_val_loss(step + 1, val_loss);
                 }
                 let bytes = MemoryTracker::bytes_now(
-                    &self.engine.manifest,
+                    self.engine.manifest(),
                     self.method,
                     if self.method.is_frugal_family() { Some(&self.mask) } else { None },
                     rho_k,

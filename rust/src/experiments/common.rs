@@ -96,6 +96,7 @@ pub fn summary_json(cfg: &TrainConfig, r: &RunResult) -> Value {
         ("kind", json::s("summary")),
         ("method", json::s(r.method.id())),
         ("preset", json::s(&cfg.preset)),
+        ("backend", json::s(&cfg.backend)),
         ("corpus", json::s(&cfg.corpus)),
         ("steps", json::num(cfg.steps as f64)),
         ("final_ppl", json::num(r.final_ppl())),

@@ -90,6 +90,7 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
         ("seed", "seed"),
         ("corpus", "corpus"),
         ("artifacts", "artifacts_dir"),
+        ("backend", "backend"),
         ("lr", "lr"),
         ("rho", "rho"),
         ("rho-end", "rho_end"),
@@ -241,7 +242,7 @@ fn usage() -> &'static str {
 USAGE:
   adafrugal train    [--method adamw|frugal|dyn-rho|dyn-t|combined|galore|badam]
                      [--preset micro] [--steps N] [--corpus english|vietnamese]
-                     [--config run.toml] [--set train.key=value]...
+                     [--backend pjrt|sim] [--config run.toml] [--set train.key=value]...
                      [--out results/run.jsonl] [--save-checkpoint p] [--from-checkpoint p]
   adafrugal finetune --task CoLA|SST-2|MRPC|STS-B|QQP|MNLI-m|QNLI|RTE
                      [--ft-method full|lora|galore|frugal|dyn-rho|dyn-t|combined]

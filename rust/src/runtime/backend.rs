@@ -1,0 +1,182 @@
+//! Execution-backend abstraction: the surface the coordinator drives.
+//!
+//! [`ExecBackend`] is the contract between the training loops
+//! (`coordinator::trainer`, `coordinator::finetune`) and whatever
+//! executes the model's entry points. Two implementations exist:
+//!
+//! - [`crate::runtime::engine::Engine`] — the PJRT runtime over
+//!   AOT-compiled HLO artifacts (the paper's measured path);
+//! - [`crate::runtime::sim::SimEngine`] — a host-CPU simulation with a
+//!   small deterministic model, used by the always-on integration tests
+//!   and anywhere artifacts/a device runtime are unavailable.
+//!
+//! Buffers are opaque [`Buffer`] handles: device-resident
+//! (`Buffer::Pjrt`) or host vectors (`Buffer::Host`). A backend only
+//! accepts buffers it produced; mixing backends is an error, mirroring
+//! how PJRT rejects foreign device buffers.
+//!
+//! Selection is by name — `TrainConfig.backend` ("pjrt" | "sim"),
+//! overridable with the `ADAFRUGAL_BACKEND` environment variable — via
+//! [`load`], keeping the coordinator free of backend-specific code.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Result};
+use xla::PjRtBuffer;
+
+use super::engine::Engine;
+use super::manifest::Manifest;
+use super::sim::SimEngine;
+
+/// Typed host payload of a [`Buffer::Host`].
+#[derive(Debug, Clone)]
+pub enum HostData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Opaque buffer handle passed between a backend's `upload_*`/`run`/
+/// `read_*` calls.
+pub enum Buffer {
+    /// device-resident PJRT buffer (engine backend)
+    Pjrt(PjRtBuffer),
+    /// host vector + dims (sim backend)
+    Host { data: HostData, dims: Vec<usize> },
+}
+
+impl Buffer {
+    /// Underlying PJRT buffer; errors for host buffers.
+    pub fn pjrt(&self) -> Result<&PjRtBuffer> {
+        match self {
+            Buffer::Pjrt(b) => Ok(b),
+            Buffer::Host { .. } => bail!("expected a PJRT buffer, got a sim host buffer"),
+        }
+    }
+
+    /// Host f32 payload; errors for PJRT or i32 buffers.
+    pub fn host_f32(&self) -> Result<&[f32]> {
+        match self {
+            Buffer::Host { data: HostData::F32(v), .. } => Ok(v),
+            Buffer::Host { data: HostData::I32(_), .. } => {
+                bail!("expected f32 host buffer, got i32")
+            }
+            Buffer::Pjrt(_) => bail!("expected a sim host buffer, got a PJRT buffer"),
+        }
+    }
+
+    /// Host i32 payload; errors for PJRT or f32 buffers.
+    pub fn host_i32(&self) -> Result<&[i32]> {
+        match self {
+            Buffer::Host { data: HostData::I32(v), .. } => Ok(v),
+            Buffer::Host { data: HostData::F32(_), .. } => {
+                bail!("expected i32 host buffer, got f32")
+            }
+            Buffer::Pjrt(_) => bail!("expected a sim host buffer, got a PJRT buffer"),
+        }
+    }
+}
+
+/// The execution surface the coordinator drives. Implementations must
+/// accept the same entry-point names and packed-state ABI the manifest
+/// describes, so the training loops are backend-agnostic.
+pub trait ExecBackend: Send {
+    /// The manifest describing the packed-state ABI being executed.
+    fn manifest(&self) -> &Manifest;
+
+    /// Is this entry point loaded/executable?
+    fn has_entry(&self, entry: &str) -> bool;
+
+    /// Execute an entry point; returns the single output buffer.
+    fn run(&self, entry: &str, args: &[&Buffer]) -> Result<Buffer>;
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer>;
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer>;
+
+    /// Read `len` f32s starting at flat `offset`.
+    fn read_f32(&self, buf: &Buffer, offset: usize, len: usize) -> Result<Vec<f32>> {
+        let all = self.read_all_f32(buf)?;
+        ensure!(offset + len <= all.len(), "read past end: {}+{} > {}",
+                offset, len, all.len());
+        Ok(all[offset..offset + len].to_vec())
+    }
+
+    /// Read a whole f32 buffer.
+    fn read_all_f32(&self, buf: &Buffer) -> Result<Vec<f32>>;
+}
+
+/// Backend selector carried by config as a plain name (the same
+/// pattern as `optim::StateMgmt` / `projection::Strategy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT engine over compiled HLO artifacts
+    Pjrt,
+    /// host-CPU simulation (no artifacts needed, fully deterministic)
+    Sim,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "pjrt" | "device" | "xla" => BackendKind::Pjrt,
+            "sim" | "simulate" | "host" => BackendKind::Sim,
+            _ => bail!("unknown backend {s:?} (expected \"pjrt\" or \"sim\")"),
+        })
+    }
+
+    /// Resolve the configured name, honoring the `ADAFRUGAL_BACKEND`
+    /// environment override (useful to force `sim` in CI or on machines
+    /// without artifacts, without editing configs).
+    pub fn resolve(configured: &str) -> Result<BackendKind> {
+        match std::env::var("ADAFRUGAL_BACKEND") {
+            Ok(s) if !s.is_empty() => Self::parse(&s),
+            _ => Self::parse(configured),
+        }
+    }
+}
+
+/// Construct the backend selected by `backend` (a [`BackendKind`]
+/// name, env-overridable) for the given artifact preset + entry points.
+/// The sim backend ignores `dir` and derives its synthetic manifest
+/// from `name` (see [`SimEngine::from_name`]).
+pub fn load(backend: &str, dir: impl AsRef<Path>, name: &str,
+            entries: &[&str]) -> Result<Box<dyn ExecBackend>> {
+    match BackendKind::resolve(backend)? {
+        BackendKind::Pjrt => Ok(Box::new(Engine::load(dir, name, entries)?)),
+        BackendKind::Sim => Ok(Box::new(SimEngine::from_name(name, entries)?)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses_and_rejects() {
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("SIM").unwrap(), BackendKind::Sim);
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn buffer_accessors_are_typed() {
+        let b = Buffer::Host { data: HostData::F32(vec![1.0, 2.0]), dims: vec![2] };
+        assert_eq!(b.host_f32().unwrap(), &[1.0, 2.0]);
+        assert!(b.host_i32().is_err());
+        assert!(b.pjrt().is_err());
+        let i = Buffer::Host { data: HostData::I32(vec![3]), dims: vec![1] };
+        assert_eq!(i.host_i32().unwrap(), &[3]);
+        assert!(i.host_f32().is_err());
+    }
+
+    #[test]
+    fn factory_builds_sim_for_lm_and_cls() {
+        let lm = load("sim", "artifacts", "nano", &["grad", "eval"]).unwrap();
+        assert_eq!(lm.manifest().task, "lm");
+        assert!(lm.has_entry("grad"));
+        assert!(!lm.has_entry("frugal"));
+        let cls = load("sim", "artifacts", "nano.cls2", &["frugal", "eval"]).unwrap();
+        assert_eq!(cls.manifest().task, "cls");
+        assert_eq!(cls.manifest().model.n_cls, 2);
+    }
+}

@@ -27,6 +27,7 @@ use std::path::Path;
 use anyhow::{ensure, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, XlaComputation};
 
+use super::backend::{Buffer, ExecBackend};
 use super::manifest::Manifest;
 use crate::info;
 
@@ -177,6 +178,40 @@ impl Engine {
         self.client
             .buffer_from_host_literal(None, lit)
             .map_err(|e| anyhow::anyhow!("upload literal: {e}"))
+    }
+}
+
+/// The backend-trait view of the PJRT engine: wrap/unwrap the opaque
+/// [`Buffer`] handles around the inherent `PjRtBuffer` methods (which
+/// remain public for PJRT-specific tests and benches).
+impl ExecBackend for Engine {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn has_entry(&self, entry: &str) -> bool {
+        Engine::has_entry(self, entry)
+    }
+
+    fn run(&self, entry: &str, args: &[&Buffer]) -> Result<Buffer> {
+        let raw: Vec<&PjRtBuffer> = args.iter().map(|b| b.pjrt()).collect::<Result<_>>()?;
+        Ok(Buffer::Pjrt(Engine::run(self, entry, &raw)?))
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        Ok(Buffer::Pjrt(Engine::upload_f32(self, data, dims)?))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        Ok(Buffer::Pjrt(Engine::upload_i32(self, data, dims)?))
+    }
+
+    fn read_f32(&self, buf: &Buffer, offset: usize, len: usize) -> Result<Vec<f32>> {
+        Engine::read_f32(self, buf.pjrt()?, offset, len)
+    }
+
+    fn read_all_f32(&self, buf: &Buffer) -> Result<Vec<f32>> {
+        Engine::read_all_f32(self, buf.pjrt()?)
     }
 }
 

@@ -273,6 +273,43 @@ impl Manifest {
         Ok(man)
     }
 
+    /// Classification-headed sibling of [`Manifest::synthetic_lm`] for
+    /// the sim backend's fine-tuning path: same maskable-matrix + bias
+    /// layout, `task = "cls"`, GLUE-sized data geometry, and (when
+    /// `with_lora`) rank-`lora_rank` adapter pairs per matrix. Logits
+    /// are produced by the sim model's fixed dense readout of the
+    /// `cols`-dim head (see `runtime::sim`); `n_cls <= cols` is a
+    /// conservative sanity bound, not an indexing constraint.
+    pub fn synthetic_cls(n_mats: usize, rows: usize, cols: usize, block_size: usize,
+                         n_cls: usize, with_lora: bool) -> Result<Manifest> {
+        ensure!(n_cls >= 1 && n_cls <= cols, "n_cls {n_cls} must be in [1, cols {cols}]");
+        let mut man = Self::synthetic_lm(n_mats, rows, cols, block_size)?;
+        man.task = "cls".to_string();
+        man.model.n_cls = n_cls;
+        man.model.vocab = 8 * cols;
+        man.model.seq = 16;
+        man.model.batch = 8;
+        if with_lora {
+            let rank = man.model.lora_rank;
+            for i in 0..n_mats {
+                man.lora_params.push(LoraSpec {
+                    name: format!("la{i:02}"),
+                    shape: vec![rows, rank],
+                    size: rows * rank,
+                    init_std: 0.02,
+                });
+                man.lora_params.push(LoraSpec {
+                    name: format!("lb{i:02}"),
+                    shape: vec![rank, cols],
+                    size: rank * cols,
+                    init_std: 0.0,
+                });
+            }
+        }
+        man.validate()?;
+        Ok(man)
+    }
+
     pub fn validate(&self) -> Result<()> {
         ensure!(self.state_len == 3 * self.n_params + 1, "state_len mismatch");
         let mut off = 0;
@@ -397,6 +434,19 @@ mod tests {
         assert_eq!(m.mask_len, 3 * 16);
         assert_eq!(m.total_blocks(), 3 * 4);
         assert!(Manifest::synthetic_lm(1, 4, 10, 4).is_err()); // 10 % 4 != 0
+    }
+
+    #[test]
+    fn synthetic_cls_validates_with_and_without_lora() {
+        let m = Manifest::synthetic_cls(2, 8, 16, 4, 3, false).unwrap();
+        assert_eq!(m.task, "cls");
+        assert_eq!(m.model.n_cls, 3);
+        assert!(m.lora_params.is_empty());
+        let l = Manifest::synthetic_cls(2, 8, 16, 4, 2, true).unwrap();
+        assert_eq!(l.lora_params.len(), 4); // (A, B) per matrix
+        assert_eq!(l.lora_state_len(),
+                   3 * 2 * (8 * l.model.lora_rank + l.model.lora_rank * 16) + 1);
+        assert!(Manifest::synthetic_cls(2, 8, 16, 4, 17, false).is_err()); // n_cls > cols
     }
 
     #[test]

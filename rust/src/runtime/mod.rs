@@ -1,11 +1,17 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them with device-resident
-//! buffers. This is the only module that touches the `xla` crate; the
-//! rest of the coordinator works with [`manifest::Manifest`] metadata
-//! and opaque [`xla::PjRtBuffer`]s.
+//! Execution runtime: the [`backend::ExecBackend`] surface the
+//! coordinator drives, with two implementations — the PJRT [`Engine`]
+//! over AOT-compiled HLO artifacts (produced by
+//! `python/compile/aot.py`) and the host-CPU [`sim::SimEngine`] used by
+//! the always-on integration tests. This is the only module that
+//! touches the `xla` crate; the rest of the coordinator works with
+//! [`manifest::Manifest`] metadata and opaque [`backend::Buffer`]s.
 
+pub mod backend;
 pub mod engine;
 pub mod manifest;
+pub mod sim;
 
+pub use backend::{Buffer, ExecBackend};
 pub use engine::Engine;
 pub use manifest::{EntrySpec, Manifest, ParamSpec};
+pub use sim::SimEngine;

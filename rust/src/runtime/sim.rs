@@ -1,0 +1,828 @@
+//! `SimEngine` — a host-CPU [`ExecBackend`] with a small deterministic
+//! model, so the full AdaFRUGAL training loop (Algorithm 1) runs
+//! end-to-end with no artifacts and no device runtime.
+//!
+//! # The sim model
+//!
+//! The parameter layout is exactly [`Manifest::synthetic_lm`] /
+//! [`Manifest::synthetic_cls`]: `n_mats` maskable `rows × cols`
+//! matrices `W_i` plus a non-maskable `[cols]` bias `b`. Token features
+//! come from fixed embedding tables seeded via [`crate::util::rng::Rng`]
+//! (never trained, so every gradient is analytic):
+//!
+//! - **LM** (`task = "lm"`): for each next-token pair `(t, u)` the model
+//!   predicts `h = b + (1/n_mats) Σᵢ Wᵢᵀ e(t)` against the target
+//!   embedding `y(u)`; the loss is mean squared error — exactly
+//!   quadratic in the parameters, so losses decrease smoothly under
+//!   every optimizer in the roster and gradients are exact.
+//! - **CLS** (`task = "cls"`): features are mean-pooled over the
+//!   sequence and logits are a *fixed* seeded dense readout of `h`
+//!   (`logits = P·h`, so every column block of every matrix carries
+//!   signal and the FRUGAL subspace choice never disconnects the
+//!   head); softmax cross-entropy, or squared error when
+//!   `n_cls == 1`. The LoRA entries train rank-`r` adapter pairs
+//!   `(Aᵢ, Bᵢ)` on a frozen base: `h += (1/n_mats) Σᵢ Bᵢᵀ(Aᵢᵀ x)`.
+//!
+//! The fused step entries (`frugal`, `adamw`, `lora_adamw`) apply the
+//! *reference host optimizers* (`optim::frugal::MaskedFrugal`,
+//! `optim::adamw::AdamW`) to the packed state — the same update rules
+//! the integration suite pins against the real HLO kernels — so a sim
+//! training run exercises the identical packed-state ABI: state in one
+//! buffer, masks consumed per step, loss in the last slot.
+//!
+//! Everything is bit-deterministic for a given manifest + seed: the
+//! RNG is `util::rng`, and the parallel host step is pinned
+//! bit-identical to serial (see `tests/properties.rs`), which is what
+//! makes golden-trajectory tests possible.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::backend::{Buffer, ExecBackend, HostData};
+use super::manifest::Manifest;
+use crate::optim::adamw::AdamW;
+use crate::optim::frugal::MaskedFrugal;
+use crate::optim::StepScalars;
+use crate::util::rng::Rng;
+
+/// Fixed sim-model seed: the golden trajectories depend on it.
+pub const SIM_SEED: u64 = 0x51e5_eed;
+
+// Sim geometry: small enough that a 200-step run is milliseconds, big
+// enough to have several maskable matrices and column blocks.
+const LM_MATS: usize = 3;
+const LM_ROWS: usize = 16;
+const LM_COLS: usize = 32;
+const LM_BLOCK: usize = 8;
+const CLS_MATS: usize = 2;
+const CLS_ROWS: usize = 32;
+const CLS_COLS: usize = 32;
+const CLS_BLOCK: usize = 8;
+
+const LM_ENTRIES: &[&str] = &["grad", "eval", "frugal", "adamw", "scores"];
+const CLS_ENTRIES: &[&str] = &["grad", "eval", "frugal", "adamw", "lora_adamw", "lora_eval"];
+
+/// Task labels as uploaded by the fine-tuner: class ids (i32) or
+/// regression targets (f32, `n_cls == 1`).
+enum Labels<'a> {
+    Class(&'a [i32]),
+    Reg(&'a [f32]),
+}
+
+impl Labels<'_> {
+    fn len(&self) -> usize {
+        match self {
+            Labels::Class(v) => v.len(),
+            Labels::Reg(v) => v.len(),
+        }
+    }
+}
+
+pub struct SimEngine {
+    manifest: Manifest,
+    entries: Vec<String>,
+    rows: usize,
+    cols: usize,
+    n_mats: usize,
+    bias_offset: usize,
+    /// fixed input features, `vocab × rows`
+    embed: Vec<f32>,
+    /// fixed LM target embeddings, `vocab × cols`
+    target: Vec<f32>,
+    /// fixed classification readout `P`, `n_cls × cols` (logits = P·h)
+    readout: Vec<f32>,
+}
+
+impl SimEngine {
+    /// Build the sim backend for an artifact name, mirroring the preset
+    /// naming the coordinator uses with real artifacts:
+    /// `"<preset>"` → LM, `"<preset>.cls<N>"` → N-way classification,
+    /// `"<preset>.cls<N>_lora"` → + LoRA adapters.
+    pub fn from_name(name: &str, entries: &[&str]) -> Result<SimEngine> {
+        let man = match name.split_once(".cls") {
+            Some((_, rest)) => {
+                let (n_cls_s, lora) = match rest.strip_suffix("_lora") {
+                    Some(s) => (s, true),
+                    None => (rest, false),
+                };
+                let n_cls: usize = n_cls_s
+                    .parse()
+                    .with_context(|| format!("parsing n_cls from artifact name {name:?}"))?;
+                Manifest::synthetic_cls(CLS_MATS, CLS_ROWS, CLS_COLS, CLS_BLOCK, n_cls, lora)?
+            }
+            None => Manifest::synthetic_lm(LM_MATS, LM_ROWS, LM_COLS, LM_BLOCK)?,
+        };
+        Self::new(man, entries, SIM_SEED)
+    }
+
+    /// Build over an explicit synthetic manifest (tests that want
+    /// non-default geometry).
+    pub fn new(manifest: Manifest, entries: &[&str], seed: u64) -> Result<SimEngine> {
+        let supported: &[&str] = if manifest.task == "lm" { LM_ENTRIES } else { CLS_ENTRIES };
+        for &e in entries {
+            ensure!(supported.contains(&e),
+                    "sim backend has no entry {e:?} for task {:?} (supported: {supported:?})",
+                    manifest.task);
+        }
+        let mat = manifest
+            .maskable()
+            .next()
+            .context("sim manifest needs at least one maskable matrix")?;
+        let (rows, cols) = (mat.rows(), mat.cols());
+        ensure!(manifest.maskable().all(|p| p.rows() == rows && p.cols() == cols),
+                "sim model needs uniform maskable matrix shapes");
+        let n_mats = manifest.maskable().count();
+        let bias = manifest
+            .params
+            .iter()
+            .find(|p| !p.maskable && p.shape == [cols])
+            .context("sim manifest needs a non-maskable [cols] bias param")?;
+        let vocab = manifest.model.vocab;
+
+        // Fixed feature tables: near-one-hot plus a small dense random
+        // component, so features are well-conditioned but distinct per
+        // token even when vocab > rows.
+        let mut rng = Rng::new(seed ^ 0x5113_0001);
+        let mut embed = vec![0f32; vocab * rows];
+        for t in 0..vocab {
+            for r in 0..rows {
+                let hot = if t % rows == r { 1.0 } else { 0.0 };
+                embed[t * rows + r] = hot + 0.15 * rng.normal_f32(1.0);
+            }
+        }
+        let mut target = vec![0f32; vocab * cols];
+        for t in 0..vocab {
+            for c in 0..cols {
+                let hot = if t % cols == c { 0.6 } else { 0.0 };
+                target[t * cols + c] = hot + 0.1 * rng.normal_f32(1.0);
+            }
+        }
+        let n_cls = manifest.model.n_cls;
+        let rscale = 1.0 / (cols as f32).sqrt();
+        let readout: Vec<f32> =
+            (0..n_cls * cols).map(|_| rng.normal_f32(rscale)).collect();
+        Ok(SimEngine {
+            bias_offset: bias.offset,
+            manifest,
+            entries: entries.iter().map(|s| s.to_string()).collect(),
+            rows,
+            cols,
+            n_mats,
+            embed,
+            target,
+            readout,
+        })
+    }
+
+    fn labels<'a>(&self, buf: &'a Buffer) -> Result<Labels<'a>> {
+        if self.manifest.model.n_cls == 1 {
+            Ok(Labels::Reg(buf.host_f32()?))
+        } else {
+            Ok(Labels::Class(buf.host_i32()?))
+        }
+    }
+
+    /// `h = b + (1/n_mats) Σᵢ Wᵢᵀ x`, written into `h`.
+    fn head_into(&self, params: &[f32], x: &[f32], h: &mut [f32]) {
+        let inv = 1.0 / self.n_mats as f32;
+        h.copy_from_slice(&params[self.bias_offset..self.bias_offset + self.cols]);
+        for spec in self.manifest.maskable() {
+            for (r, &xr) in x.iter().enumerate() {
+                if xr == 0.0 {
+                    continue;
+                }
+                let a = inv * xr;
+                let row = &params[spec.offset + r * self.cols..spec.offset + (r + 1) * self.cols];
+                for (hc, &wc) in h.iter_mut().zip(row) {
+                    *hc += a * wc;
+                }
+            }
+        }
+    }
+
+    /// Accumulate `dL/dW_i += (1/n_mats)·x·dhᵀ` and `dL/db += dh`.
+    fn accum_grads(&self, grads: &mut [f32], x: &[f32], dh: &[f32]) {
+        let inv = 1.0 / self.n_mats as f32;
+        for spec in self.manifest.maskable() {
+            for (r, &xr) in x.iter().enumerate() {
+                if xr == 0.0 {
+                    continue;
+                }
+                let a = inv * xr;
+                let row =
+                    &mut grads[spec.offset + r * self.cols..spec.offset + (r + 1) * self.cols];
+                for (gc, &dc) in row.iter_mut().zip(dh) {
+                    *gc += a * dc;
+                }
+            }
+        }
+        let b = &mut grads[self.bias_offset..self.bias_offset + self.cols];
+        for (gc, &dc) in b.iter_mut().zip(dh) {
+            *gc += dc;
+        }
+    }
+
+    /// Mean-pooled input features of one example.
+    fn pool(&self, toks: &[i32]) -> Vec<f32> {
+        let vocab = self.manifest.model.vocab;
+        let mut x = vec![0f32; self.rows];
+        let inv = 1.0 / toks.len().max(1) as f32;
+        for &t in toks {
+            let t = t.rem_euclid(vocab as i32) as usize;
+            let e = &self.embed[t * self.rows..(t + 1) * self.rows];
+            for (xr, &er) in x.iter_mut().zip(e) {
+                *xr += inv * er;
+            }
+        }
+        x
+    }
+
+    /// Next-token LM pass. Returns `(summed loss, token count)`;
+    /// `grads`, when given, receives mean-normalized gradients.
+    fn lm_pass(&self, params: &[f32], tokens: &[i32],
+               mut grads: Option<&mut [f32]>) -> Result<(f64, usize)> {
+        let man = &self.manifest;
+        ensure!(params.len() >= man.n_params, "params buffer too short");
+        let d = &man.model;
+        let sp1 = d.seq + 1;
+        ensure!(!tokens.is_empty() && tokens.len() % sp1 == 0,
+                "token buffer len {} is not a multiple of seq+1 = {sp1}", tokens.len());
+        let batch = tokens.len() / sp1;
+        let count = batch * d.seq;
+        let scale = 1.0 / count as f32;
+        let mut sum = 0f64;
+        let mut h = vec![0f32; self.cols];
+        let mut dh = vec![0f32; self.cols];
+        for w in 0..batch {
+            for j in 0..d.seq {
+                let t = tokens[w * sp1 + j].rem_euclid(d.vocab as i32) as usize;
+                let u = tokens[w * sp1 + j + 1].rem_euclid(d.vocab as i32) as usize;
+                let x = &self.embed[t * self.rows..(t + 1) * self.rows];
+                let y = &self.target[u * self.cols..(u + 1) * self.cols];
+                self.head_into(params, x, &mut h);
+                for c in 0..self.cols {
+                    let diff = h[c] - y[c];
+                    sum += 0.5 * (diff as f64) * (diff as f64);
+                    dh[c] = diff * scale;
+                }
+                if let Some(g) = grads.as_deref_mut() {
+                    self.accum_grads(g, x, &dh);
+                }
+            }
+        }
+        Ok((sum, count))
+    }
+
+    /// Full-parameter classification pass. Returns the mean loss over
+    /// the batch; optionally accumulates mean-normalized grads and
+    /// collects per-example logits.
+    fn cls_pass(&self, params: &[f32], tokens: &[i32], labels: &Labels,
+                mut grads: Option<&mut [f32]>,
+                mut logits_out: Option<&mut Vec<f32>>) -> Result<f64> {
+        let d = &self.manifest.model;
+        ensure!(!tokens.is_empty() && tokens.len() % d.seq == 0,
+                "token buffer len {} is not a multiple of seq {}", tokens.len(), d.seq);
+        let batch = tokens.len() / d.seq;
+        ensure!(labels.len() == batch, "labels len {} != batch {batch}", labels.len());
+        let scale = 1.0 / batch as f32;
+        let mut sum = 0f64;
+        let mut h = vec![0f32; self.cols];
+        let mut dh = vec![0f32; self.cols];
+        let mut logits = vec![0f32; d.n_cls];
+        let mut dlog = vec![0f32; d.n_cls];
+        for w in 0..batch {
+            let x = self.pool(&tokens[w * d.seq..(w + 1) * d.seq]);
+            self.head_into(params, &x, &mut h);
+            self.readout_into(&h, &mut logits);
+            sum += loss_and_dlogits(labels, w, &logits, &mut dlog)?;
+            if let Some(out) = logits_out.as_deref_mut() {
+                out.extend_from_slice(&logits);
+            }
+            if let Some(g) = grads.as_deref_mut() {
+                self.backprop_readout(&dlog, scale, &mut dh);
+                self.accum_grads(g, &x, &dh);
+            }
+        }
+        Ok(sum / batch as f64)
+    }
+
+    /// `logits = P·h` through the fixed readout.
+    fn readout_into(&self, h: &[f32], logits: &mut [f32]) {
+        for (c, l) in logits.iter_mut().enumerate() {
+            let row = &self.readout[c * self.cols..(c + 1) * self.cols];
+            *l = row.iter().zip(h).map(|(&p, &hv)| p * hv).sum();
+        }
+    }
+
+    /// `dh = scale · Pᵀ·dlogits` (overwrites `dh`).
+    fn backprop_readout(&self, dlog: &[f32], scale: f32, dh: &mut [f32]) {
+        dh.fill(0.0);
+        for (c, &dl) in dlog.iter().enumerate() {
+            let a = scale * dl;
+            if a == 0.0 {
+                continue;
+            }
+            let row = &self.readout[c * self.cols..(c + 1) * self.cols];
+            for (dv, &p) in dh.iter_mut().zip(row) {
+                *dv += a * p;
+            }
+        }
+    }
+
+    /// LoRA classification pass: frozen `base` params + trainable
+    /// adapter vector `lora` (layout: `man.lora_params` order).
+    fn lora_pass(&self, base: &[f32], lora: &[f32], tokens: &[i32], labels: &Labels,
+                 mut grads: Option<&mut [f32]>,
+                 mut logits_out: Option<&mut Vec<f32>>) -> Result<f64> {
+        let man = &self.manifest;
+        let d = &man.model;
+        let rank = d.lora_rank;
+        ensure!(man.lora_params.len() == 2 * self.n_mats,
+                "lora manifest must carry one (A, B) pair per matrix");
+        let mut offs = Vec::with_capacity(man.lora_params.len());
+        let mut off = 0usize;
+        for p in &man.lora_params {
+            offs.push(off);
+            off += p.size;
+        }
+        ensure!(lora.len() >= off, "lora buffer too short: {} < {off}", lora.len());
+        ensure!(!tokens.is_empty() && tokens.len() % d.seq == 0, "bad token buffer");
+        let batch = tokens.len() / d.seq;
+        ensure!(labels.len() == batch, "labels len {} != batch {batch}", labels.len());
+        let inv = 1.0 / self.n_mats as f32;
+        let scale = 1.0 / batch as f32;
+        let mut sum = 0f64;
+        let mut h = vec![0f32; self.cols];
+        let mut dh = vec![0f32; self.cols];
+        let mut logits = vec![0f32; d.n_cls];
+        let mut dlog = vec![0f32; d.n_cls];
+        for w in 0..batch {
+            let x = self.pool(&tokens[w * d.seq..(w + 1) * d.seq]);
+            self.head_into(base, &x, &mut h);
+            // adapter contribution: h += (1/n_mats)·Bᵢᵀ(Aᵢᵀ x)
+            let mut qs: Vec<Vec<f32>> = Vec::with_capacity(self.n_mats);
+            for i in 0..self.n_mats {
+                let a = &lora[offs[2 * i]..offs[2 * i] + self.rows * rank];
+                let b = &lora[offs[2 * i + 1]..offs[2 * i + 1] + rank * self.cols];
+                let mut q = vec![0f32; rank];
+                for (r, &xr) in x.iter().enumerate() {
+                    if xr == 0.0 {
+                        continue;
+                    }
+                    for (qk, &ark) in q.iter_mut().zip(&a[r * rank..(r + 1) * rank]) {
+                        *qk += xr * ark;
+                    }
+                }
+                for (k, &qk) in q.iter().enumerate() {
+                    let aq = inv * qk;
+                    if aq == 0.0 {
+                        continue;
+                    }
+                    for (hc, &bc) in h.iter_mut().zip(&b[k * self.cols..(k + 1) * self.cols]) {
+                        *hc += aq * bc;
+                    }
+                }
+                qs.push(q);
+            }
+            self.readout_into(&h, &mut logits);
+            sum += loss_and_dlogits(labels, w, &logits, &mut dlog)?;
+            if let Some(out) = logits_out.as_deref_mut() {
+                out.extend_from_slice(&logits);
+            }
+            if let Some(g) = grads.as_deref_mut() {
+                self.backprop_readout(&dlog, scale, &mut dh);
+                for i in 0..self.n_mats {
+                    let (aoff, boff) = (offs[2 * i], offs[2 * i + 1]);
+                    let b = &lora[boff..boff + rank * self.cols];
+                    for k in 0..rank {
+                        // dB[k,·] += (1/n_mats)·q[k]·dh ; dq[k] = (1/n_mats)·B[k,·]·dh
+                        let mut dq = 0f32;
+                        let brow = &b[k * self.cols..(k + 1) * self.cols];
+                        let gb = &mut g[boff + k * self.cols..boff + (k + 1) * self.cols];
+                        for c in 0..self.cols {
+                            gb[c] += inv * qs[i][k] * dh[c];
+                            dq += brow[c] * dh[c];
+                        }
+                        let dq = inv * dq;
+                        // dA[·,k] += x·dq[k]
+                        for (r, &xr) in x.iter().enumerate() {
+                            g[aoff + r * rank + k] += xr * dq;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(sum / batch as f64)
+    }
+
+    /// Apply the fused update to a packed state vector: MaskedFrugal
+    /// when a mask is given (the `frugal` entry), AdamW otherwise —
+    /// the exact host reference rules the HLO kernels are pinned to.
+    fn fused_step(&self, state: &[f32], mask: Option<&[f32]>, s: &StepScalars,
+                  grads: &[f32], loss: f32) -> Result<Vec<f32>> {
+        let man = &self.manifest;
+        let n = man.n_params;
+        ensure!(state.len() == man.state_len, "state len {} != {}", state.len(), man.state_len);
+        let mut st = state.to_vec();
+        match mask {
+            Some(mcols) => {
+                ensure!(mcols.len() == man.mask_len,
+                        "mask len {} != {}", mcols.len(), man.mask_len);
+                let mut opt = MaskedFrugal::new(n);
+                opt.m.copy_from_slice(&st[n..2 * n]);
+                opt.v.copy_from_slice(&st[2 * n..3 * n]);
+                opt.step(man, &mut st[..n], grads, mcols, s);
+                st[n..2 * n].copy_from_slice(&opt.m);
+                st[2 * n..3 * n].copy_from_slice(&opt.v);
+                st[3 * n] = loss;
+            }
+            None => adamw_packed(&mut st, n, grads, s, loss),
+        }
+        Ok(st)
+    }
+
+    fn out_f32(&self, data: Vec<f32>) -> Buffer {
+        let dims = vec![data.len()];
+        Buffer::Host { data: HostData::F32(data), dims }
+    }
+
+    fn run_impl(&self, entry: &str, args: &[&Buffer]) -> Result<Buffer> {
+        ensure!(self.has_entry(entry), "entry {entry:?} not loaded in sim backend");
+        let man = &self.manifest;
+        let n = man.n_params;
+        let arity = |want: usize| -> Result<()> {
+            ensure!(args.len() == want, "{entry}: expected {want} args, got {}", args.len());
+            Ok(())
+        };
+        let lm = man.task == "lm";
+        match (lm, entry) {
+            (true, "grad") => {
+                arity(2)?;
+                let (params, tokens) = (args[0].host_f32()?, args[1].host_i32()?);
+                let mut grads = vec![0f32; n];
+                let (sum, count) = self.lm_pass(params, tokens, Some(&mut grads))?;
+                grads.push((sum / count.max(1) as f64) as f32);
+                Ok(self.out_f32(grads))
+            }
+            (true, "eval") => {
+                arity(2)?;
+                let (state, tokens) = (args[0].host_f32()?, args[1].host_i32()?);
+                ensure!(state.len() >= n, "eval state too short");
+                let (sum, count) = self.lm_pass(&state[..n], tokens, None)?;
+                Ok(self.out_f32(vec![sum as f32, count as f32]))
+            }
+            (true, "frugal") => {
+                arity(4)?;
+                let state = args[0].host_f32()?;
+                let mask = args[1].host_f32()?;
+                let s = scalars_of(args[2])?;
+                let tokens = args[3].host_i32()?;
+                let mut grads = vec![0f32; n];
+                let (sum, count) = self.lm_pass(&state[..n.min(state.len())], tokens,
+                                                Some(&mut grads))?;
+                let loss = (sum / count.max(1) as f64) as f32;
+                Ok(self.out_f32(self.fused_step(state, Some(mask), &s, &grads, loss)?))
+            }
+            (true, "adamw") => {
+                arity(3)?;
+                let state = args[0].host_f32()?;
+                let s = scalars_of(args[1])?;
+                let tokens = args[2].host_i32()?;
+                let mut grads = vec![0f32; n];
+                let (sum, count) = self.lm_pass(&state[..n.min(state.len())], tokens,
+                                                Some(&mut grads))?;
+                let loss = (sum / count.max(1) as f64) as f32;
+                Ok(self.out_f32(self.fused_step(state, None, &s, &grads, loss)?))
+            }
+            (true, "scores") => {
+                arity(2)?;
+                let (params, tokens) = (args[0].host_f32()?, args[1].host_i32()?);
+                let mut grads = vec![0f32; n];
+                self.lm_pass(params, tokens, Some(&mut grads))?;
+                // reuse the canonical block-score definition so the sim
+                // entry can never drift from the host reference
+                let mut scores = vec![0f32; man.score_len];
+                for p in man.maskable() {
+                    let g = crate::tensor::Tensor::from_vec(
+                        grads[p.offset..p.offset + p.size].to_vec(),
+                        &[p.rows(), p.cols()],
+                    )?;
+                    for (b, s) in g.block_scores(man.block_size).iter().enumerate() {
+                        scores[p.score_offset + b] = *s as f32;
+                    }
+                }
+                Ok(self.out_f32(scores))
+            }
+            (false, "grad") => {
+                arity(3)?;
+                let (params, tokens) = (args[0].host_f32()?, args[1].host_i32()?);
+                let labels = self.labels(args[2])?;
+                let mut grads = vec![0f32; n];
+                let loss = self.cls_pass(params, tokens, &labels, Some(&mut grads), None)?;
+                grads.push(loss as f32);
+                Ok(self.out_f32(grads))
+            }
+            (false, "eval") => {
+                arity(3)?;
+                let (state, tokens) = (args[0].host_f32()?, args[1].host_i32()?);
+                let labels = self.labels(args[2])?;
+                ensure!(state.len() >= n, "eval state too short");
+                let mut logits = Vec::new();
+                let loss =
+                    self.cls_pass(&state[..n], tokens, &labels, None, Some(&mut logits))?;
+                let mut out = vec![loss as f32];
+                out.extend_from_slice(&logits);
+                Ok(self.out_f32(out))
+            }
+            (false, "frugal") | (false, "adamw") => {
+                let masked = entry == "frugal";
+                arity(if masked { 5 } else { 4 })?;
+                let state = args[0].host_f32()?;
+                let mask = if masked { Some(args[1].host_f32()?) } else { None };
+                let base = if masked { 2 } else { 1 };
+                let s = scalars_of(args[base])?;
+                let tokens = args[base + 1].host_i32()?;
+                let labels = self.labels(args[base + 2])?;
+                ensure!(state.len() == man.state_len, "bad state len");
+                let mut grads = vec![0f32; n];
+                let loss = self.cls_pass(&state[..n], tokens, &labels,
+                                         Some(&mut grads), None)?;
+                Ok(self.out_f32(self.fused_step(state, mask, &s, &grads, loss as f32)?))
+            }
+            (false, "lora_adamw") => {
+                arity(5)?;
+                let base = args[0].host_f32()?;
+                let lstate = args[1].host_f32()?;
+                let s = scalars_of(args[2])?;
+                let tokens = args[3].host_i32()?;
+                let labels = self.labels(args[4])?;
+                let lora_n = (man.lora_state_len() - 1) / 3;
+                ensure!(lstate.len() == man.lora_state_len(),
+                        "lora state len {} != {}", lstate.len(), man.lora_state_len());
+                let mut grads = vec![0f32; lora_n];
+                let loss = self.lora_pass(base, &lstate[..lora_n], tokens, &labels,
+                                          Some(&mut grads), None)?;
+                let mut st = lstate.to_vec();
+                adamw_packed(&mut st, lora_n, &grads, &s, loss as f32);
+                Ok(self.out_f32(st))
+            }
+            (false, "lora_eval") => {
+                arity(4)?;
+                let base = args[0].host_f32()?;
+                let lstate = args[1].host_f32()?;
+                let tokens = args[2].host_i32()?;
+                let labels = self.labels(args[3])?;
+                let lora_n = (man.lora_state_len() - 1) / 3;
+                ensure!(lstate.len() >= lora_n, "lora state too short");
+                let mut logits = Vec::new();
+                let loss = self.lora_pass(base, &lstate[..lora_n], tokens, &labels, None,
+                                          Some(&mut logits))?;
+                let mut out = vec![loss as f32];
+                out.extend_from_slice(&logits);
+                Ok(self.out_f32(out))
+            }
+            _ => bail!("sim backend: no entry {entry:?} for task {:?}", man.task),
+        }
+    }
+}
+
+/// AdamW over a packed `params‖m‖v‖loss` vector of `n` params: copy
+/// the moments out of the packed state, step, copy back, write the
+/// loss slot — shared by the full-model `adamw` and `lora_adamw`
+/// entries so the packed-state convention lives in one place.
+fn adamw_packed(st: &mut [f32], n: usize, grads: &[f32], s: &StepScalars, loss: f32) {
+    let mut opt = AdamW::new(n);
+    opt.m.copy_from_slice(&st[n..2 * n]);
+    opt.v.copy_from_slice(&st[2 * n..3 * n]);
+    opt.step(&mut st[..n], grads, s);
+    st[n..2 * n].copy_from_slice(&opt.m);
+    st[2 * n..3 * n].copy_from_slice(&opt.v);
+    st[3 * n] = loss;
+}
+
+/// Decode the 8-scalar step ABI (order pinned by `StepScalars::to_array`).
+fn scalars_of(buf: &Buffer) -> Result<StepScalars> {
+    let a = buf.host_f32()?;
+    ensure!(a.len() == 8, "scalars buffer must have 8 elements, got {}", a.len());
+    Ok(StepScalars {
+        lr_full: a[0],
+        lr_free: a[1],
+        wd: a[2],
+        beta1: a[3],
+        beta2: a[4],
+        eps: a[5],
+        bc1: a[6],
+        bc2: a[7],
+    })
+}
+
+/// Loss + dL/dlogits for one example.
+fn loss_and_dlogits(labels: &Labels, w: usize, logits: &[f32],
+                    dlog: &mut [f32]) -> Result<f64> {
+    let n_cls = logits.len();
+    match labels {
+        Labels::Reg(lf) => {
+            let diff = logits[0] - lf[w];
+            dlog[0] = diff;
+            Ok(0.5 * (diff as f64) * (diff as f64))
+        }
+        Labels::Class(li) => {
+            let y = li[w];
+            ensure!((0..n_cls as i32).contains(&y),
+                    "label {y} out of range for {n_cls} classes");
+            let y = y as usize;
+            let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut z = 0f64;
+            for &l in logits {
+                z += ((l - mx) as f64).exp();
+            }
+            for c in 0..n_cls {
+                let p = ((logits[c] - mx) as f64).exp() / z;
+                dlog[c] = (p - if c == y { 1.0 } else { 0.0 }) as f32;
+            }
+            Ok(z.ln() - (logits[y] - mx) as f64)
+        }
+    }
+}
+
+impl ExecBackend for SimEngine {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn has_entry(&self, entry: &str) -> bool {
+        self.entries.iter().any(|e| e == entry)
+    }
+
+    fn run(&self, entry: &str, args: &[&Buffer]) -> Result<Buffer> {
+        self.run_impl(entry, args)
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        let n: usize = dims.iter().product();
+        ensure!(dims.is_empty() || n == data.len(),
+                "upload f32: dims {dims:?} product {n} != data len {}", data.len());
+        Ok(Buffer::Host { data: HostData::F32(data.to_vec()), dims: dims.to_vec() })
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        let n: usize = dims.iter().product();
+        ensure!(dims.is_empty() || n == data.len(),
+                "upload i32: dims {dims:?} product {n} != data len {}", data.len());
+        Ok(Buffer::Host { data: HostData::I32(data.to_vec()), dims: dims.to_vec() })
+    }
+
+    fn read_all_f32(&self, buf: &Buffer) -> Result<Vec<f32>> {
+        Ok(buf.host_f32()?.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init;
+
+    fn lm_engine() -> SimEngine {
+        SimEngine::from_name("nano", LM_ENTRIES).unwrap()
+    }
+
+    fn cls_engine(n_cls: usize) -> SimEngine {
+        SimEngine::from_name(&format!("nano.cls{n_cls}"), CLS_ENTRIES).unwrap()
+    }
+
+    fn lm_tokens(e: &SimEngine, seed: u64) -> Vec<i32> {
+        let d = &e.manifest.model;
+        let mut rng = Rng::new(seed);
+        (0..d.batch * (d.seq + 1)).map(|_| rng.below(d.vocab) as i32).collect()
+    }
+
+    #[test]
+    fn deterministic_across_constructions() {
+        let a = lm_engine();
+        let b = lm_engine();
+        let toks = lm_tokens(&a, 1);
+        let params = init::init_state(&a.manifest, 3)[..a.manifest.n_params].to_vec();
+        let ga = a.lm_pass(&params, &toks, None).unwrap();
+        let gb = b.lm_pass(&params, &toks, None).unwrap();
+        assert_eq!(ga, gb);
+    }
+
+    #[test]
+    fn lm_grads_match_finite_differences() {
+        // the LM loss is exactly quadratic in the params, so central
+        // differences agree with the analytic gradient to float noise
+        let e = lm_engine();
+        let man = e.manifest().clone();
+        let toks = lm_tokens(&e, 2);
+        let mut params = init::init_state(&man, 5)[..man.n_params].to_vec();
+        let mut grads = vec![0f32; man.n_params];
+        let (sum, count) = e.lm_pass(&params, &toks, Some(&mut grads)).unwrap();
+        assert!(sum > 0.0 && count == man.model.batch * man.model.seq);
+        let mut rng = Rng::new(11);
+        for _ in 0..12 {
+            let i = rng.below(man.n_params);
+            let eps = 1e-3f32;
+            let orig = params[i];
+            params[i] = orig + eps;
+            let (lp, _) = e.lm_pass(&params, &toks, None).unwrap();
+            params[i] = orig - eps;
+            let (lm_, _) = e.lm_pass(&params, &toks, None).unwrap();
+            params[i] = orig;
+            let fd = ((lp - lm_) / (2.0 * eps as f64) / count as f64) as f32;
+            assert!((fd - grads[i]).abs() < 1e-3 + 1e-2 * grads[i].abs(),
+                    "param {i}: fd {fd} vs analytic {}", grads[i]);
+        }
+    }
+
+    #[test]
+    fn cls_grads_match_finite_differences() {
+        let e = cls_engine(3);
+        let man = e.manifest().clone();
+        let d = man.model.clone();
+        let mut rng = Rng::new(7);
+        let toks: Vec<i32> = (0..d.batch * d.seq).map(|_| rng.below(d.vocab) as i32).collect();
+        let li: Vec<i32> = (0..d.batch).map(|_| rng.below(d.n_cls) as i32).collect();
+        let labels = Labels::Class(&li);
+        let mut params = init::init_state(&man, 9)[..man.n_params].to_vec();
+        let mut grads = vec![0f32; man.n_params];
+        e.cls_pass(&params, &toks, &labels, Some(&mut grads), None).unwrap();
+        for _ in 0..12 {
+            let i = rng.below(man.n_params);
+            let eps = 1e-3f32;
+            let orig = params[i];
+            params[i] = orig + eps;
+            let lp = e.cls_pass(&params, &toks, &labels, None, None).unwrap();
+            params[i] = orig - eps;
+            let lm_ = e.cls_pass(&params, &toks, &labels, None, None).unwrap();
+            params[i] = orig;
+            let fd = ((lp - lm_) / (2.0 * eps as f64)) as f32;
+            assert!((fd - grads[i]).abs() < 1e-3 + 1e-2 * grads[i].abs(),
+                    "param {i}: fd {fd} vs analytic {}", grads[i]);
+        }
+    }
+
+    #[test]
+    fn lora_grads_match_finite_differences() {
+        let e = SimEngine::from_name("nano.cls2_lora", &["lora_adamw", "lora_eval"]).unwrap();
+        let man = e.manifest().clone();
+        let d = man.model.clone();
+        let base = init::init_state(&man, 1)[..man.n_params].to_vec();
+        let lora_n = (man.lora_state_len() - 1) / 3;
+        let mut lora = init::init_lora_state(&man, 2)[..lora_n].to_vec();
+        // B starts zero => dA would vanish; perturb it so both factors
+        // of the adapter product get nonzero finite-difference signal
+        let mut rng = Rng::new(13);
+        for x in lora.iter_mut() {
+            *x += 0.02 * rng.normal_f32(1.0);
+        }
+        let toks: Vec<i32> = (0..d.batch * d.seq).map(|_| rng.below(d.vocab) as i32).collect();
+        let li: Vec<i32> = (0..d.batch).map(|_| rng.below(2) as i32).collect();
+        let labels = Labels::Class(&li);
+        let mut grads = vec![0f32; lora_n];
+        e.lora_pass(&base, &lora, &toks, &labels, Some(&mut grads), None).unwrap();
+        for _ in 0..12 {
+            let i = rng.below(lora_n);
+            let eps = 1e-3f32;
+            let orig = lora[i];
+            lora[i] = orig + eps;
+            let lp = e.lora_pass(&base, &lora, &toks, &labels, None, None).unwrap();
+            lora[i] = orig - eps;
+            let lm_ = e.lora_pass(&base, &lora, &toks, &labels, None, None).unwrap();
+            lora[i] = orig;
+            let fd = ((lp - lm_) / (2.0 * eps as f64)) as f32;
+            assert!((fd - grads[i]).abs() < 1e-3 + 1e-2 * grads[i].abs(),
+                    "lora param {i}: fd {fd} vs analytic {}", grads[i]);
+        }
+    }
+
+    #[test]
+    fn adamw_entry_reduces_lm_loss() {
+        let e = lm_engine();
+        let man = e.manifest().clone();
+        let state = init::init_state(&man, 4);
+        let mut sbuf = e.upload_f32(&state, &[man.state_len]).unwrap();
+        let toks = lm_tokens(&e, 6);
+        let tbuf = e.upload_i32(&toks, &[man.model.batch, man.model.seq + 1]).unwrap();
+        let mut first = None;
+        let mut last = 0f32;
+        for t in 1..=80 {
+            let s = StepScalars::new(5e-2, 0.0, 0.0, 0.9, 0.999, 1e-8, t);
+            let cbuf = e.upload_f32(&s.to_array(), &[8]).unwrap();
+            sbuf = e.run("adamw", &[&sbuf, &cbuf, &tbuf]).unwrap();
+            last = e.read_f32(&sbuf, man.state_len - 1, 1).unwrap()[0];
+            first.get_or_insert(last);
+        }
+        let first = first.unwrap();
+        assert!(last < 0.5 * first, "loss did not drop: {first} -> {last}");
+    }
+
+    #[test]
+    fn entry_validation_and_arity_errors() {
+        assert!(SimEngine::from_name("nano", &["lora_adamw"]).is_err());
+        assert!(SimEngine::from_name("nano.clsX", &["eval"]).is_err());
+        let e = lm_engine();
+        let b = e.upload_f32(&[0.0; 8], &[8]).unwrap();
+        assert!(e.run("grad", &[&b]).is_err()); // wrong arity
+        assert!(e.run("nope", &[&b]).is_err());
+        assert!(e.upload_f32(&[0.0; 3], &[2, 2]).is_err()); // bad dims
+    }
+}

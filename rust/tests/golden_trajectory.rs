@@ -1,0 +1,188 @@
+//! Golden-trajectory regression gate: a fixed-seed 200-step AdaFRUGAL
+//! (combined) run on the sim backend, with the loss curve, ρ/T
+//! trajectories and memory-tracker readings compared against a
+//! checked-in JSON snapshot.
+//!
+//! - Integers in the snapshot (steps, T, memory bytes, redefinition
+//!   count) must match exactly — they are pure `util::rng` + controller
+//!   arithmetic.
+//! - Losses are compared with a small relative tolerance to absorb
+//!   cross-platform libm drift in `exp`/`ln`.
+//!
+//! Blessing: `ADAFRUGAL_BLESS=1 cargo test --test golden_trajectory`
+//! rewrites the snapshot. If the snapshot is missing (fresh checkout
+//! that never ran the suite), the test seeds it and passes after
+//! checking the structural invariants, so the gate is self-installing;
+//! commit the generated file to pin the trajectory.
+
+use adafrugal::config::TrainConfig;
+use adafrugal::controller::RhoSchedule;
+use adafrugal::coordinator::method::Method;
+use adafrugal::coordinator::trainer::{RunResult, Trainer};
+use adafrugal::util::json::{self, Value};
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden/sim_trajectory.json")
+}
+
+fn golden_cfg() -> TrainConfig {
+    TrainConfig {
+        preset: "nano".into(),
+        backend: "sim".into(),
+        steps: 200,
+        warmup_steps: 20,
+        n_eval: 25,
+        t_start: 25,
+        t_max: 100,
+        tau_low: 0.02,
+        log_every: 10,
+        val_batches: 4,
+        lr: 1e-2,
+        seed: 42,
+        ..TrainConfig::default()
+    }
+}
+
+fn run_golden() -> RunResult {
+    let mut t = Trainer::new(golden_cfg(), Method::AdaFrugalCombined).unwrap();
+    t.quiet = true;
+    t.run().unwrap()
+}
+
+fn to_json(r: &RunResult) -> Value {
+    json::obj(vec![
+        (
+            "steps",
+            json::arr(r.steps.iter().map(|s| {
+                json::arr([
+                    json::num(s.step as f64),
+                    json::num(s.train_loss as f64),
+                    json::num(s.rho),
+                    json::num(s.t_current as f64),
+                ])
+            })),
+        ),
+        (
+            "evals",
+            json::arr(r.evals.iter().map(|e| {
+                json::arr([
+                    json::num(e.step as f64),
+                    json::num(e.val_loss),
+                    json::num(e.memory_bytes as f64),
+                ])
+            })),
+        ),
+        (
+            "memory",
+            json::arr(r.memory.samples.iter().map(|m| {
+                json::arr([json::num(m.step as f64), json::num(m.bytes as f64)])
+            })),
+        ),
+        ("redefinitions", json::num(r.redefinitions as f64)),
+        ("peak_bytes", json::num(r.memory.peak_bytes as f64)),
+    ])
+}
+
+fn num_at(row: &Value, i: usize) -> f64 {
+    row.as_arr().unwrap()[i].as_f64().unwrap()
+}
+
+/// `exact` columns must match bit-for-bit; the rest are losses with a
+/// relative tolerance.
+fn compare_rows(name: &str, want: &Value, got: &Value, exact: &[usize]) {
+    let (w, g) = (want.as_arr().unwrap(), got.as_arr().unwrap());
+    assert_eq!(w.len(), g.len(), "{name}: row count {} != {}", w.len(), g.len());
+    for (i, (wr, gr)) in w.iter().zip(g).enumerate() {
+        let cols = wr.as_arr().unwrap().len();
+        assert_eq!(cols, gr.as_arr().unwrap().len(), "{name}[{i}]: arity");
+        for c in 0..cols {
+            let (wv, gv) = (num_at(wr, c), num_at(gr, c));
+            if exact.contains(&c) {
+                assert_eq!(wv, gv, "{name}[{i}] col {c}: {wv} != {gv}");
+            } else {
+                let tol = 1e-5 + 1e-3 * wv.abs();
+                assert!((wv - gv).abs() <= tol,
+                        "{name}[{i}] col {c}: {wv} vs {gv} (tol {tol})");
+            }
+        }
+    }
+}
+
+/// Invariants that must hold regardless of the snapshot — checked on
+/// every run, including the one that seeds the snapshot.
+fn check_structure(r: &RunResult) {
+    let cfg = golden_cfg();
+    assert_eq!(r.steps.len(), cfg.steps / cfg.log_every);
+    let sched = RhoSchedule::linear(cfg.rho, cfg.rho_end, cfg.steps);
+    for s in &r.steps {
+        assert_eq!(s.rho, sched.at(s.step), "rho off Eq. 1 at step {}", s.step);
+        assert!(s.t_current >= cfg.t_start && s.t_current <= cfg.t_max);
+        assert!(s.train_loss.is_finite());
+    }
+    let first = r.evals.first().unwrap().val_loss;
+    let last = r.evals.last().unwrap().val_loss;
+    assert!(last < first, "no learning over 200 steps: {first} -> {last}");
+    // dynamic ρ decays and T grows; with the sim geometry's coarse
+    // block granularity the tracked bytes can only go down (the exact
+    // trajectory is pinned by the snapshot, not re-derived here)
+    assert!(r.memory.last_bytes() <= r.memory.first_bytes());
+    assert!(r.redefinitions >= 1, "expected at least one redefinition");
+}
+
+#[test]
+fn golden_200_step_sim_trajectory() {
+    let r = run_golden();
+    check_structure(&r);
+    let got = to_json(&r);
+    let path = golden_path();
+    let bless = std::env::var("ADAFRUGAL_BLESS").map(|v| v == "1").unwrap_or(false);
+    if bless || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, got.to_string()).unwrap();
+        // The gate only compares once the snapshot is checked in; until
+        // then this run has verified the structural invariants above
+        // plus in-process bit-determinism (companion test), not the
+        // cross-run trajectory. Be loud about it.
+        eprintln!(
+            "WARNING: golden snapshot {} — {}. COMMIT this file to arm the \
+             cross-run regression gate; until it is committed this test only \
+             checks structural invariants.",
+            if bless { "RE-BLESSED" } else { "SEEDED (was missing)" },
+            path.display()
+        );
+        return;
+    }
+    let want = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    // steps rows: [step, train_loss, rho, T] — loss is col 1
+    compare_rows("steps", want.get("steps").unwrap(), got.get("steps").unwrap(),
+                 &[0, 2, 3]);
+    // evals rows: [step, val_loss, memory_bytes]
+    compare_rows("evals", want.get("evals").unwrap(), got.get("evals").unwrap(), &[0, 2]);
+    // memory rows: [step, bytes] — all exact
+    compare_rows("memory", want.get("memory").unwrap(), got.get("memory").unwrap(),
+                 &[0, 1]);
+    assert_eq!(want.get("redefinitions").unwrap().as_f64().unwrap(),
+               got.get("redefinitions").unwrap().as_f64().unwrap());
+    assert_eq!(want.get("peak_bytes").unwrap().as_f64().unwrap(),
+               got.get("peak_bytes").unwrap().as_f64().unwrap());
+}
+
+#[test]
+fn golden_run_is_bit_deterministic_in_process() {
+    // two runs in the same process must agree bit-for-bit — the
+    // stronger precondition behind the cross-run snapshot
+    let a = run_golden();
+    let b = run_golden();
+    assert_eq!(a.steps.len(), b.steps.len());
+    for (x, y) in a.steps.iter().zip(&b.steps) {
+        assert_eq!(x.train_loss, y.train_loss);
+        assert_eq!(x.rho, y.rho);
+        assert_eq!(x.t_current, y.t_current);
+    }
+    for (x, y) in a.evals.iter().zip(&b.evals) {
+        assert_eq!(x.val_loss, y.val_loss);
+        assert_eq!(x.memory_bytes, y.memory_bytes);
+    }
+    assert_eq!(a.redefinitions, b.redefinitions);
+}

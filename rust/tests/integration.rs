@@ -1,18 +1,27 @@
-//! Integration tests over the REAL artifacts (run `make artifacts`
-//! first; tests are skipped with a notice if artifacts are missing).
+//! End-to-end integration tests over the training loop.
 //!
-//! The centerpiece is the cross-language equivalence check: one fused
-//! FRUGAL HLO step (L1 Pallas kernel inside the L2 graph, executed
-//! through the L3 runtime) must match the independent rust reference
-//! optimizer applied to gradients from the `grad` entry.
+//! The always-on suite drives the full Algorithm-1 loop on the
+//! deterministic `SimEngine` backend (`backend = "sim"`), so every
+//! `cargo test` run exercises the trainer, both optimizer paths, the
+//! dynamic controllers and the packed-state ABI end-to-end with zero
+//! artifacts. The ρ and T trajectories are asserted step-by-step
+//! against the controller equations (Eq. 1–3).
+//!
+//! The `pjrt_*` tests are the original artifact-backed suite: they run
+//! the same checks against the real compiled HLO (`make artifacts` +
+//! a real PJRT backend) and are `#[ignore]`d by default; they still
+//! skip gracefully under `--include-ignored` when artifacts are
+//! missing.
 
 use adafrugal::config::TrainConfig;
+use adafrugal::controller::{RhoSchedule, TController};
 use adafrugal::coordinator::method::Method;
 use adafrugal::coordinator::trainer::Trainer;
 use adafrugal::model::init;
 use adafrugal::optim::frugal::MaskedFrugal;
 use adafrugal::optim::StepScalars;
 use adafrugal::projection::{Strategy, SubspaceMask};
+use adafrugal::runtime::backend::{self, ExecBackend};
 use adafrugal::runtime::Engine;
 use adafrugal::util::rng::Rng;
 
@@ -31,41 +40,328 @@ macro_rules! require_artifacts {
     };
 }
 
-fn nano_cfg() -> TrainConfig {
+/// Sim-backed config: a short but complete run with several subspace
+/// redefinitions and eval points.
+fn sim_cfg() -> TrainConfig {
     TrainConfig {
         preset: "nano".into(),
-        artifacts_dir: ART.into(),
+        backend: "sim".into(),
         steps: 60,
         warmup_steps: 10,
         n_eval: 20,
         t_start: 20,
         t_max: 80,
-        log_every: 1000,
+        log_every: 1,
         val_batches: 4,
         seed: 7,
+        // the sim objective is small; a larger lr makes learning
+        // visible well inside 60 steps
+        lr: 1e-2,
         ..TrainConfig::default()
     }
 }
 
-fn random_tokens(man: &adafrugal::runtime::Manifest, rng: &mut Rng) -> Vec<i32> {
+fn sim_backend(entries: &[&str]) -> Box<dyn ExecBackend> {
+    backend::load("sim", ART, "nano", entries).unwrap()
+}
+
+fn random_tokens_for(man: &adafrugal::runtime::Manifest, rng: &mut Rng) -> Vec<i32> {
     let n = man.model.batch * (man.model.seq + 1);
     (0..n).map(|_| rng.below(man.model.vocab) as i32).collect()
 }
 
+// ---------------------------------------------------------------------------
+// Sim backend: ABI-level checks (the same contracts the PJRT suite pins)
+// ---------------------------------------------------------------------------
+
 #[test]
-fn eval_at_init_is_near_uniform() {
+fn sim_eval_entry_reports_sum_and_count() {
+    let e = sim_backend(&["eval"]);
+    let man = e.manifest().clone();
+    let state = init::init_state(&man, 0);
+    let sbuf = e.upload_f32(&state, &[man.state_len]).unwrap();
+    let mut rng = Rng::new(1);
+    let toks = random_tokens_for(&man, &mut rng);
+    let tbuf = e.upload_i32(&toks, &[man.model.batch, man.model.seq + 1]).unwrap();
+    let out = e.run("eval", &[&sbuf, &tbuf]).unwrap();
+    let v = e.read_f32(&out, 0, 2).unwrap();
+    assert_eq!(v[1] as usize, man.model.batch * man.model.seq);
+    assert!(v[0] > 0.0 && v[0].is_finite());
+    // deterministic: same inputs, same loss
+    let out2 = e.run("eval", &[&sbuf, &tbuf]).unwrap();
+    assert_eq!(e.read_f32(&out2, 0, 2).unwrap(), v);
+}
+
+#[test]
+fn sim_fused_frugal_matches_host_reference() {
+    // the sim `frugal` entry must consume the packed-state ABI exactly
+    // like the HLO kernel: state‖m‖v‖loss in one buffer, column mask
+    // applied per step, loss written to the last slot
+    let e = sim_backend(&["frugal", "grad"]);
+    let man = e.manifest().clone();
+    let mut rng = Rng::new(3);
+    let mut state = init::init_state(&man, 3);
+    let n = man.n_params;
+    let mut mask = SubspaceMask::new(&man);
+    mask.redefine(Strategy::Random, 0.4, None, &mut rng).unwrap();
+    let rendered = mask.render();
+    // moments seeded inside the mask (the kernel contains state)
+    for p in &man.params {
+        for i in 0..p.size {
+            let on = if p.maskable {
+                rendered[p.mask_offset + (i % p.cols())] != 0.0
+            } else {
+                true
+            };
+            if on {
+                state[n + p.offset + i] = 0.01 * rng.normal_f32(1.0);
+                state[2 * n + p.offset + i] = (0.01 * rng.normal_f32(1.0)).abs();
+            }
+        }
+    }
+    let toks = random_tokens_for(&man, &mut rng);
+    let scal = StepScalars::new(3e-3, 3e-4, 0.05, 0.9, 0.999, 1e-8, 5);
+
+    let sbuf = e.upload_f32(&state, &[man.state_len]).unwrap();
+    let mbuf = e.upload_f32(&rendered, &[man.mask_len]).unwrap();
+    let cbuf = e.upload_f32(&scal.to_array(), &[8]).unwrap();
+    let tbuf = e.upload_i32(&toks, &[man.model.batch, man.model.seq + 1]).unwrap();
+    let out = e.run("frugal", &[&sbuf, &mbuf, &cbuf, &tbuf]).unwrap();
+    let fused_state = e.read_all_f32(&out).unwrap();
+
+    // host reference: grads from the grad entry + the rust optimizer
+    let pbuf = e.upload_f32(&state[..n], &[n]).unwrap();
+    let gout = e.run("grad", &[&pbuf, &tbuf]).unwrap();
+    let gl = e.read_all_f32(&gout).unwrap();
+    let (grads, loss) = (&gl[..n], gl[n]);
+
+    let mut host_params = state[..n].to_vec();
+    let mut host_opt = MaskedFrugal::new(n);
+    host_opt.m.copy_from_slice(&state[n..2 * n]);
+    host_opt.v.copy_from_slice(&state[2 * n..3 * n]);
+    host_opt.step(&man, &mut host_params, grads, &rendered, &scal);
+
+    assert_eq!(fused_state[3 * n], loss, "loss slot mismatch");
+    assert_eq!(&fused_state[..n], &host_params[..], "params diverged");
+    assert_eq!(&fused_state[n..2 * n], &host_opt.m[..], "m diverged");
+    assert_eq!(&fused_state[2 * n..3 * n], &host_opt.v[..], "v diverged");
+}
+
+#[test]
+fn sim_scores_entry_matches_host_block_scores() {
+    let e = sim_backend(&["scores", "grad"]);
+    let man = e.manifest().clone();
+    let n = man.n_params;
+    let mut rng = Rng::new(11);
+    let state = init::init_state(&man, 11);
+    let toks = random_tokens_for(&man, &mut rng);
+    let pbuf = e.upload_f32(&state[..n], &[n]).unwrap();
+    let tbuf = e.upload_i32(&toks, &[man.model.batch, man.model.seq + 1]).unwrap();
+    let sout = e.run("scores", &[&pbuf, &tbuf]).unwrap();
+    let scores = e.read_all_f32(&sout).unwrap();
+    assert_eq!(scores.len(), man.score_len);
+
+    let gout = e.run("grad", &[&pbuf, &tbuf]).unwrap();
+    let gl = e.read_all_f32(&gout).unwrap();
+    for p in man.maskable() {
+        let g = adafrugal::tensor::Tensor::from_vec(
+            gl[p.offset..p.offset + p.size].to_vec(),
+            &[p.rows(), p.cols()],
+        )
+        .unwrap();
+        let want = g.block_scores(man.block_size);
+        for b in 0..p.n_blocks {
+            let got = scores[p.score_offset + b] as f64;
+            let w = want[b];
+            assert!((got - w).abs() <= 1e-9 + 1e-5 * w.abs(),
+                    "score mismatch {}[{}]: {} vs {}", p.name, b, got, w);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sim backend: the full training loop
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sim_trainer_loss_decreases_frugal() {
+    let mut t = Trainer::new(sim_cfg(), Method::FrugalStatic).unwrap();
+    t.quiet = true;
+    let r = t.run().unwrap();
+    let first = r.evals.first().unwrap().val_loss;
+    let last = r.evals.last().unwrap().val_loss;
+    assert!(last < first - 0.005, "no learning: {first} -> {last}");
+    assert!(r.redefinitions >= 2);
+}
+
+#[test]
+fn sim_trainer_all_methods_step_without_diverging() {
+    for &m in Method::table_roster() {
+        let cfg = TrainConfig { steps: 12, n_eval: 12, t_start: 6, warmup_steps: 4,
+                                val_batches: 2, ..sim_cfg() };
+        let mut t = Trainer::new(cfg, m).unwrap();
+        t.quiet = true;
+        let r = t.run().unwrap();
+        assert!(r.evals.last().unwrap().val_loss.is_finite(), "{m:?}");
+        assert!(!r.steps.is_empty(), "{m:?}: no step logs");
+    }
+}
+
+#[test]
+fn sim_topk_strategy_drives_scores_entry() {
+    let cfg = TrainConfig { strategy: "topk".into(), ..sim_cfg() };
+    let mut t = Trainer::new(cfg, Method::FrugalStatic).unwrap();
+    t.quiet = true;
+    let r = t.run().unwrap();
+    assert!(r.redefinitions >= 2);
+    assert!(r.evals.last().unwrap().val_loss.is_finite());
+}
+
+#[test]
+fn sim_dynamic_rho_reduces_memory_over_run() {
+    let cfg = TrainConfig { rho: 0.5, rho_end: 0.1, ..sim_cfg() };
+    let mut t = Trainer::new(cfg, Method::AdaFrugalDynRho).unwrap();
+    t.quiet = true;
+    let r = t.run().unwrap();
+    assert!(r.memory.last_bytes() < r.memory.first_bytes(),
+            "memory should shrink: {:?}", r.memory.samples);
+}
+
+#[test]
+fn sim_rho_trajectory_matches_eq1_step_by_step() {
+    // log_every = 1 in sim_cfg, so every step of the run is recorded;
+    // each logged ρ_k must equal Eq. 1 exactly
+    let cfg = sim_cfg();
+    let sched = RhoSchedule::linear(cfg.rho, cfg.rho_end, cfg.steps);
+    let mut t = Trainer::new(cfg.clone(), Method::AdaFrugalDynRho).unwrap();
+    t.quiet = true;
+    let r = t.run().unwrap();
+    assert_eq!(r.steps.len(), cfg.steps, "log_every=1 must log every step");
+    for (k, s) in r.steps.iter().enumerate() {
+        assert_eq!(s.step, k);
+        assert_eq!(s.rho, sched.at(k), "rho mismatch at step {k}");
+        // static-T variant: T pinned at t_start throughout
+        assert_eq!(s.t_current, cfg.t_start, "T moved under a fixed controller");
+    }
+    // and the static baseline stays at rho throughout
+    let mut t2 = Trainer::new(cfg.clone(), Method::FrugalStatic).unwrap();
+    t2.quiet = true;
+    let r2 = t2.run().unwrap();
+    assert!(r2.steps.iter().all(|s| s.rho == cfg.rho));
+}
+
+#[test]
+fn sim_t_trajectory_matches_eq2_eq3_replay() {
+    // Dyn-T run on the sim model: the loss plateaus quickly (quadratic
+    // objective), so the loss-aware controller must grow T. Replaying
+    // the observed val losses through a fresh TController must
+    // reproduce the trainer's event log and per-step T exactly.
+    let cfg = TrainConfig {
+        steps: 120,
+        n_eval: 10,
+        t_start: 10,
+        t_max: 60,
+        tau_low: 0.05, // generous plateau threshold -> events fire
+        ..sim_cfg()
+    };
+    let mut t = Trainer::new(cfg.clone(), Method::AdaFrugalDynT).unwrap();
+    t.quiet = true;
+    let r = t.run().unwrap();
+
+    // replay Eq. 2 + Eq. 3 over the run's own val-loss observations
+    let mut replay = TController::loss_aware(cfg.t_start, cfg.t_max, cfg.n_eval,
+                                             cfg.tau_low, cfg.gamma_increase);
+    let mut expected_events = Vec::new();
+    // the trainer observes the val loss at every step+1 ≡ 0 (mod
+    // n_eval) boundary, including the final step; checkpoint-only
+    // evals (2%/10%/… grid) are never observed
+    for e in r.evals.iter().filter(|e| e.step % cfg.n_eval == 0) {
+        if let Some(ev) = replay.observe(e.step, e.val_loss) {
+            expected_events.push(ev);
+        }
+    }
+    assert_eq!(r.t_events, expected_events, "trainer events != Eq.2/3 replay");
+    assert!(!r.t_events.is_empty(), "plateauing loss must grow T");
+    assert!(r.t_events.iter().all(|e| e.new_t > e.old_t && e.new_t <= cfg.t_max));
+
+    // per-step T: t_start until an event at step <= k, then its new_t
+    for s in &r.steps {
+        let want = r
+            .t_events
+            .iter()
+            .filter(|e| e.step <= s.step)
+            .last()
+            .map(|e| e.new_t)
+            .unwrap_or(cfg.t_start);
+        assert_eq!(s.t_current, want, "T mismatch at step {}", s.step);
+    }
+}
+
+#[test]
+fn sim_checkpoint_roundtrip_through_trainer() {
+    let mut t = Trainer::new(sim_cfg(), Method::FrugalStatic).unwrap();
+    t.quiet = true;
+    let params = t.params_host().unwrap();
+    let dir = std::env::temp_dir().join(format!("adafrugal_simit_{}", std::process::id()));
+    let path = dir.join("ck.ckpt");
+    adafrugal::coordinator::checkpoint::save(
+        &path,
+        &adafrugal::coordinator::checkpoint::train_header("nano", "frugal", 0, 0.0),
+        &params,
+    )
+    .unwrap();
+    let ck = adafrugal::coordinator::checkpoint::load(&path).unwrap();
+    let mut t2 = Trainer::new(sim_cfg(), Method::FrugalStatic).unwrap();
+    t2.quiet = true;
+    t2.restore_params(&ck.data).unwrap();
+    assert_eq!(t2.params_host().unwrap(), params);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn sim_backend_name_vocabulary() {
+    // NOTE: the ADAFRUGAL_BACKEND env override in BackendKind::resolve
+    // is deliberately NOT covered here — mutating process env from
+    // inside a parallel test binary races sibling tests' getenv calls
+    // (UB on glibc). It is a thin wrapper over parse(); exercise it
+    // manually with `ADAFRUGAL_BACKEND=sim cargo run -- train ...`.
+    use adafrugal::runtime::backend::BackendKind;
+    assert_eq!(BackendKind::parse("sim").unwrap(), BackendKind::Sim);
+    assert_eq!(BackendKind::parse("host").unwrap(), BackendKind::Sim);
+    assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+    assert!(BackendKind::parse("tpu").is_err());
+}
+
+// ---------------------------------------------------------------------------
+// PJRT suite (real artifacts + device runtime; ignored by default)
+// ---------------------------------------------------------------------------
+
+fn nano_cfg() -> TrainConfig {
+    // reset the sim-tuned knobs (lr 1e-2, log_every 1) back to the
+    // values the artifact suite was originally validated under
+    TrainConfig {
+        backend: "pjrt".into(),
+        artifacts_dir: ART.into(),
+        lr: 1e-3,
+        log_every: 1000,
+        ..sim_cfg()
+    }
+}
+
+#[test]
+#[ignore = "needs real artifacts + a PJRT backend (make artifacts)"]
+fn pjrt_eval_at_init_is_near_uniform() {
     require_artifacts!();
     let engine = Engine::load(ART, "nano", &["eval"]).unwrap();
-    let man = &engine.manifest;
-    let state = init::init_state(man, 0);
-    let sbuf = engine.upload_f32(&state, &[man.state_len]).unwrap();
+    let man = engine.manifest.clone();
+    let state = init::init_state(&man, 0);
+    let sbuf = Engine::upload_f32(&engine, &state, &[man.state_len]).unwrap();
     let mut rng = Rng::new(1);
-    let toks = random_tokens(man, &mut rng);
-    let tbuf = engine
-        .upload_i32(&toks, &[man.model.batch, man.model.seq + 1])
+    let toks = random_tokens_for(&man, &mut rng);
+    let tbuf = Engine::upload_i32(&engine, &toks, &[man.model.batch, man.model.seq + 1])
         .unwrap();
-    let out = engine.run("eval", &[&sbuf, &tbuf]).unwrap();
-    let v = engine.read_f32(&out, 0, 2).unwrap();
+    let out = Engine::run(&engine, "eval", &[&sbuf, &tbuf]).unwrap();
+    let v = Engine::read_f32(&engine, &out, 0, 2).unwrap();
     let mean_nll = v[0] as f64 / v[1] as f64;
     let uniform = (man.model.vocab as f64).ln();
     assert!((mean_nll - uniform).abs() < 0.3,
@@ -74,17 +370,15 @@ fn eval_at_init_is_near_uniform() {
 }
 
 #[test]
-fn fused_frugal_hlo_matches_host_reference() {
+#[ignore = "needs real artifacts + a PJRT backend (make artifacts)"]
+fn pjrt_fused_frugal_hlo_matches_host_reference() {
     require_artifacts!();
     let engine = Engine::load(ART, "nano", &["frugal", "grad"]).unwrap();
-    let man = &engine.manifest;
+    let man = engine.manifest.clone();
     let mut rng = Rng::new(3);
-
-    // random-ish state: params from init, moments small random INSIDE
-    // the mask (the kernel contains state to the subspace each step)
-    let mut state = init::init_state(man, 3);
+    let mut state = init::init_state(&man, 3);
     let n = man.n_params;
-    let mut mask = SubspaceMask::new(man);
+    let mut mask = SubspaceMask::new(&man);
     mask.redefine(Strategy::Random, 0.4, None, &mut rng).unwrap();
     let rendered = mask.render();
     for p in &man.params {
@@ -100,72 +394,63 @@ fn fused_frugal_hlo_matches_host_reference() {
             }
         }
     }
-
-    let toks = random_tokens(man, &mut rng);
+    let toks = random_tokens_for(&man, &mut rng);
     let scal = StepScalars::new(3e-3, 3e-4, 0.05, 0.9, 0.999, 1e-8, 5);
 
-    // --- device step ---
-    let sbuf = engine.upload_f32(&state, &[man.state_len]).unwrap();
-    let mbuf = engine.upload_f32(&rendered, &[man.mask_len]).unwrap();
-    let cbuf = engine.upload_f32(&scal.to_array(), &[8]).unwrap();
-    let tbuf = engine
-        .upload_i32(&toks, &[man.model.batch, man.model.seq + 1])
+    let sbuf = Engine::upload_f32(&engine, &state, &[man.state_len]).unwrap();
+    let mbuf = Engine::upload_f32(&engine, &rendered, &[man.mask_len]).unwrap();
+    let cbuf = Engine::upload_f32(&engine, &scal.to_array(), &[8]).unwrap();
+    let tbuf = Engine::upload_i32(&engine, &toks, &[man.model.batch, man.model.seq + 1])
         .unwrap();
-    let out = engine.run("frugal", &[&sbuf, &mbuf, &cbuf, &tbuf]).unwrap();
-    let device_state = engine.read_all_f32(&out).unwrap();
+    let out = Engine::run(&engine, "frugal", &[&sbuf, &mbuf, &cbuf, &tbuf]).unwrap();
+    let device_state = Engine::read_all_f32(&engine, &out).unwrap();
 
-    // --- host reference: grads from the grad entry + rust optimizer ---
-    let pbuf = engine.upload_f32(&state[..n], &[n]).unwrap();
-    let gout = engine.run("grad", &[&pbuf, &tbuf]).unwrap();
-    let gl = engine.read_all_f32(&gout).unwrap();
+    let pbuf = Engine::upload_f32(&engine, &state[..n], &[n]).unwrap();
+    let gout = Engine::run(&engine, "grad", &[&pbuf, &tbuf]).unwrap();
+    let gl = Engine::read_all_f32(&engine, &gout).unwrap();
     let (grads, loss) = (&gl[..n], gl[n]);
 
     let mut host_params = state[..n].to_vec();
     let mut host_opt = MaskedFrugal::new(n);
     host_opt.m.copy_from_slice(&state[n..2 * n]);
     host_opt.v.copy_from_slice(&state[2 * n..3 * n]);
-    host_opt.step(man, &mut host_params, grads, &rendered, &scal);
+    host_opt.step(&man, &mut host_params, grads, &rendered, &scal);
 
-    // losses agree
     assert!((device_state[3 * n] - loss).abs() < 1e-4,
             "loss mismatch: {} vs {}", device_state[3 * n], loss);
-    // parameters agree element-wise
     let mut max_err = 0f32;
     for i in 0..n {
         max_err = max_err.max((device_state[i] - host_params[i]).abs());
     }
     assert!(max_err < 2e-4, "param max err {max_err}");
-    // moments agree and obey containment
     for i in 0..n {
-        assert!((device_state[n + i] - host_opt.m[i]).abs() < 2e-4,
-                "m mismatch at {i}");
-        assert!((device_state[2 * n + i] - host_opt.v[i]).abs() < 2e-4,
-                "v mismatch at {i}");
+        assert!((device_state[n + i] - host_opt.m[i]).abs() < 2e-4, "m mismatch at {i}");
+        assert!((device_state[2 * n + i] - host_opt.v[i]).abs() < 2e-4, "v mismatch at {i}");
     }
 }
 
 #[test]
-fn adamw_hlo_matches_host_reference() {
+#[ignore = "needs real artifacts + a PJRT backend (make artifacts)"]
+fn pjrt_adamw_hlo_matches_host_reference() {
     require_artifacts!();
     let engine = Engine::load(ART, "nano", &["adamw", "grad"]).unwrap();
-    let man = &engine.manifest;
+    let man = engine.manifest.clone();
     let n = man.n_params;
     let mut rng = Rng::new(9);
-    let state = init::init_state(man, 9);
-    let toks = random_tokens(man, &mut rng);
+    let state = init::init_state(&man, 9);
+    let toks = random_tokens_for(&man, &mut rng);
     let scal = StepScalars::new(1e-3, 0.0, 0.1, 0.9, 0.999, 1e-8, 1);
 
-    let sbuf = engine.upload_f32(&state, &[man.state_len]).unwrap();
-    let cbuf = engine.upload_f32(&scal.to_array(), &[8]).unwrap();
-    let tbuf = engine
-        .upload_i32(&toks, &[man.model.batch, man.model.seq + 1])
+    let sbuf = Engine::upload_f32(&engine, &state, &[man.state_len]).unwrap();
+    let cbuf = Engine::upload_f32(&engine, &scal.to_array(), &[8]).unwrap();
+    let tbuf = Engine::upload_i32(&engine, &toks, &[man.model.batch, man.model.seq + 1])
         .unwrap();
-    let out = engine.run("adamw", &[&sbuf, &cbuf, &tbuf]).unwrap();
-    let device_state = engine.read_all_f32(&out).unwrap();
+    let out = Engine::run(&engine, "adamw", &[&sbuf, &cbuf, &tbuf]).unwrap();
+    let device_state = Engine::read_all_f32(&engine, &out).unwrap();
 
-    let pbuf = engine.upload_f32(&state[..n], &[n]).unwrap();
-    let gout = engine.run("grad", &[&pbuf, &tbuf]).unwrap();
-    let gl = engine.read_all_f32(&gout).unwrap();
+    let pbuf = Engine::upload_f32(&engine, &state[..n], &[n]).unwrap();
+    let gout = Engine::run(&engine, "grad", &[&pbuf, &tbuf]).unwrap();
+    let gl = Engine::read_all_f32(&engine, &gout).unwrap();
 
     let mut host_params = state[..n].to_vec();
     let mut host = adafrugal::optim::adamw::AdamW::new(n);
@@ -178,24 +463,24 @@ fn adamw_hlo_matches_host_reference() {
 }
 
 #[test]
-fn scores_entry_matches_host_block_scores() {
+#[ignore = "needs real artifacts + a PJRT backend (make artifacts)"]
+fn pjrt_scores_entry_matches_host_block_scores() {
     require_artifacts!();
     let engine = Engine::load(ART, "nano", &["scores", "grad"]).unwrap();
-    let man = &engine.manifest;
+    let man = engine.manifest.clone();
     let n = man.n_params;
     let mut rng = Rng::new(11);
-    let state = init::init_state(man, 11);
-    let toks = random_tokens(man, &mut rng);
-    let pbuf = engine.upload_f32(&state[..n], &[n]).unwrap();
-    let tbuf = engine
-        .upload_i32(&toks, &[man.model.batch, man.model.seq + 1])
+    let state = init::init_state(&man, 11);
+    let toks = random_tokens_for(&man, &mut rng);
+    let pbuf = Engine::upload_f32(&engine, &state[..n], &[n]).unwrap();
+    let tbuf = Engine::upload_i32(&engine, &toks, &[man.model.batch, man.model.seq + 1])
         .unwrap();
-    let sout = engine.run("scores", &[&pbuf, &tbuf]).unwrap();
-    let scores = engine.read_all_f32(&sout).unwrap();
+    let sout = Engine::run(&engine, "scores", &[&pbuf, &tbuf]).unwrap();
+    let scores = Engine::read_all_f32(&engine, &sout).unwrap();
     assert_eq!(scores.len(), man.score_len);
 
-    let gout = engine.run("grad", &[&pbuf, &tbuf]).unwrap();
-    let gl = engine.read_all_f32(&gout).unwrap();
+    let gout = Engine::run(&engine, "grad", &[&pbuf, &tbuf]).unwrap();
+    let gl = Engine::read_all_f32(&engine, &gout).unwrap();
     for p in man.maskable() {
         let g = adafrugal::tensor::Tensor::from_vec(
             gl[p.offset..p.offset + p.size].to_vec(),
@@ -213,7 +498,8 @@ fn scores_entry_matches_host_block_scores() {
 }
 
 #[test]
-fn trainer_loss_decreases_frugal() {
+#[ignore = "needs real artifacts + a PJRT backend (make artifacts)"]
+fn pjrt_trainer_loss_decreases_frugal() {
     require_artifacts!();
     let mut t = Trainer::new(nano_cfg(), Method::FrugalStatic).unwrap();
     t.quiet = true;
@@ -225,7 +511,8 @@ fn trainer_loss_decreases_frugal() {
 }
 
 #[test]
-fn trainer_all_methods_step_without_diverging() {
+#[ignore = "needs real artifacts + a PJRT backend (make artifacts)"]
+fn pjrt_trainer_all_methods_step_without_diverging() {
     require_artifacts!();
     for &m in Method::table_roster() {
         let cfg = TrainConfig { steps: 12, n_eval: 12, t_start: 6, warmup_steps: 4,
@@ -238,9 +525,10 @@ fn trainer_all_methods_step_without_diverging() {
 }
 
 #[test]
-fn dynamic_rho_reduces_memory_over_run() {
+#[ignore = "needs real artifacts + a PJRT backend (make artifacts)"]
+fn pjrt_dynamic_rho_reduces_memory_over_run() {
     require_artifacts!();
-    let cfg = TrainConfig { steps: 60, rho: 0.5, rho_end: 0.1, ..nano_cfg() };
+    let cfg = TrainConfig { rho: 0.5, rho_end: 0.1, ..nano_cfg() };
     let mut t = Trainer::new(cfg, Method::AdaFrugalDynRho).unwrap();
     t.quiet = true;
     let r = t.run().unwrap();
@@ -249,7 +537,8 @@ fn dynamic_rho_reduces_memory_over_run() {
 }
 
 #[test]
-fn checkpoint_roundtrip_through_trainer() {
+#[ignore = "needs real artifacts + a PJRT backend (make artifacts)"]
+fn pjrt_checkpoint_roundtrip_through_trainer() {
     require_artifacts!();
     let mut t = Trainer::new(nano_cfg(), Method::FrugalStatic).unwrap();
     t.quiet = true;

@@ -1,5 +1,13 @@
-//! Integration tests for the GLUE fine-tuning path (cls + LoRA
-//! artifacts). Skipped when artifacts are missing.
+//! Integration tests for the GLUE fine-tuning path.
+//!
+//! The always-on suite drives `FineTuner` end-to-end on the
+//! deterministic `SimEngine` backend (classification + LoRA sim
+//! entries) — every method in the Table-3 roster trains, scores with
+//! the task's official metric, and the FRUGAL variants must beat
+//! chance on the separable synthetic tasks. The `pjrt_*` variants run
+//! the same checks against real cls/LoRA artifacts and are
+//! `#[ignore]`d by default (they skip gracefully when artifacts are
+//! missing, so `--include-ignored` is always safe).
 
 use adafrugal::config::TrainConfig;
 use adafrugal::coordinator::finetune::{FineTuner, FtMethod};
@@ -10,16 +18,18 @@ fn have_artifacts() -> bool {
     std::path::Path::new(ART).join("nano.cls2.manifest.json").exists()
 }
 
-fn ft_cfg() -> TrainConfig {
+fn sim_ft_cfg() -> TrainConfig {
     TrainConfig {
         preset: "nano".into(),
-        artifacts_dir: ART.into(),
-        steps: 60,
+        backend: "sim".into(),
+        steps: 80,
         warmup_steps: 6,
         n_eval: 20,
         t_start: 20,
         t_max: 60,
-        lr: 2e-3,
+        // pooled sim features are small-magnitude; a fine-tuning-sized
+        // lr makes the short run land well above chance
+        lr: 2e-2,
         val_batches: 2,
         seed: 5,
         ..TrainConfig::default()
@@ -27,49 +37,154 @@ fn ft_cfg() -> TrainConfig {
 }
 
 #[test]
-fn finetune_beats_chance_frugal() {
-    if !have_artifacts() {
-        eprintln!("SKIP: artifacts missing");
-        return;
-    }
+fn sim_finetune_beats_chance_frugal() {
     let mut ft = FineTuner::new(
-        ft_cfg(),
+        sim_ft_cfg(),
         FtMethod::Frugal { dynamic_rho: false, dynamic_t: false },
         "SST-2",
         0,
     )
     .unwrap();
     let r = ft.run().unwrap();
-    // SST-2-like task is easy; chance is 50
+    // SST-2-like task is easy and separable; chance is 50
+    assert!(r.score > 60.0, "score {}", r.score);
+    assert!(r.final_train_loss.is_finite());
+}
+
+#[test]
+fn sim_finetune_full_adamw_runs() {
+    let mut ft = FineTuner::new(sim_ft_cfg(), FtMethod::FullAdamW, "SST-2", 1).unwrap();
+    let r = ft.run().unwrap();
+    assert!(r.score > 60.0, "score {}", r.score);
+}
+
+#[test]
+fn sim_finetune_lora_runs() {
+    let cfg = TrainConfig { steps: 120, ..sim_ft_cfg() };
+    let mut ft = FineTuner::new(cfg, FtMethod::Lora, "SST-2", 2).unwrap();
+    let r = ft.run().unwrap();
+    assert!(r.score > 55.0, "lora score {}", r.score);
+    assert!(r.final_train_loss.is_finite());
+}
+
+#[test]
+fn sim_finetune_galore_and_dynamic_variants_run() {
+    for m in [
+        FtMethod::GaLore,
+        FtMethod::Frugal { dynamic_rho: true, dynamic_t: true },
+    ] {
+        let cfg = TrainConfig { steps: 24, ..sim_ft_cfg() };
+        let mut ft = FineTuner::new(cfg, m, "SST-2", 3).unwrap();
+        let r = ft.run().unwrap();
+        assert!(r.score.is_finite(), "{m:?}");
+    }
+}
+
+#[test]
+fn sim_finetune_regression_task_runs() {
+    // STS-B is the n_cls == 1 path: f32 labels, squared-error head,
+    // Pearson/Spearman scoring
+    let cfg = TrainConfig { steps: 60, ..sim_ft_cfg() };
+    let mut ft = FineTuner::new(
+        cfg,
+        FtMethod::Frugal { dynamic_rho: false, dynamic_t: false },
+        "STS-B",
+        4,
+    )
+    .unwrap();
+    let r = ft.run().unwrap();
+    assert!(r.score.is_finite());
+    assert!(r.final_train_loss.is_finite());
+}
+
+#[test]
+fn sim_finetune_three_way_task_runs() {
+    // MNLI-m exercises n_cls == 3 logits end-to-end
+    let cfg = TrainConfig { steps: 40, ..sim_ft_cfg() };
+    let mut ft = FineTuner::new(cfg, FtMethod::FullAdamW, "MNLI-m", 6).unwrap();
+    let r = ft.run().unwrap();
+    assert!(r.score.is_finite());
+}
+
+#[test]
+fn sim_finetune_is_deterministic() {
+    let run = || {
+        let mut ft = FineTuner::new(
+            sim_ft_cfg(),
+            FtMethod::Frugal { dynamic_rho: true, dynamic_t: false },
+            "SST-2",
+            7,
+        )
+        .unwrap();
+        ft.run().unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.score, b.score);
+    assert_eq!(a.final_train_loss, b.final_train_loss);
+}
+
+// ---------------------------------------------------------------------------
+// PJRT suite (real cls/LoRA artifacts; ignored by default)
+// ---------------------------------------------------------------------------
+
+fn pjrt_ft_cfg() -> TrainConfig {
+    TrainConfig {
+        backend: "pjrt".into(),
+        artifacts_dir: ART.into(),
+        steps: 60,
+        lr: 2e-3,
+        ..sim_ft_cfg()
+    }
+}
+
+#[test]
+#[ignore = "needs real cls artifacts + a PJRT backend (make artifacts)"]
+fn pjrt_finetune_beats_chance_frugal() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let mut ft = FineTuner::new(
+        pjrt_ft_cfg(),
+        FtMethod::Frugal { dynamic_rho: false, dynamic_t: false },
+        "SST-2",
+        0,
+    )
+    .unwrap();
+    let r = ft.run().unwrap();
     assert!(r.score > 65.0, "score {}", r.score);
     assert!(r.final_train_loss.is_finite());
 }
 
 #[test]
-fn finetune_full_adamw_runs() {
+#[ignore = "needs real cls artifacts + a PJRT backend (make artifacts)"]
+fn pjrt_finetune_full_adamw_runs() {
     if !have_artifacts() {
         eprintln!("SKIP: artifacts missing");
         return;
     }
-    let mut ft = FineTuner::new(ft_cfg(), FtMethod::FullAdamW, "SST-2", 1).unwrap();
+    let mut ft = FineTuner::new(pjrt_ft_cfg(), FtMethod::FullAdamW, "SST-2", 1).unwrap();
     let r = ft.run().unwrap();
     assert!(r.score > 65.0, "score {}", r.score);
 }
 
 #[test]
-fn finetune_lora_runs() {
+#[ignore = "needs real cls artifacts + a PJRT backend (make artifacts)"]
+fn pjrt_finetune_lora_runs() {
     if !have_artifacts() {
         eprintln!("SKIP: artifacts missing");
         return;
     }
-    let cfg = TrainConfig { steps: 80, ..ft_cfg() };
+    let cfg = TrainConfig { steps: 80, ..pjrt_ft_cfg() };
     let mut ft = FineTuner::new(cfg, FtMethod::Lora, "SST-2", 2).unwrap();
     let r = ft.run().unwrap();
     assert!(r.score > 55.0, "lora score {}", r.score);
 }
 
 #[test]
-fn finetune_galore_and_dynamic_variants_run() {
+#[ignore = "needs real cls artifacts + a PJRT backend (make artifacts)"]
+fn pjrt_finetune_galore_and_dynamic_variants_run() {
     if !have_artifacts() {
         eprintln!("SKIP: artifacts missing");
         return;
@@ -78,7 +193,7 @@ fn finetune_galore_and_dynamic_variants_run() {
         FtMethod::GaLore,
         FtMethod::Frugal { dynamic_rho: true, dynamic_t: true },
     ] {
-        let cfg = TrainConfig { steps: 24, ..ft_cfg() };
+        let cfg = TrainConfig { steps: 24, ..pjrt_ft_cfg() };
         let mut ft = FineTuner::new(cfg, m, "SST-2", 3).unwrap();
         let r = ft.run().unwrap();
         assert!(r.score.is_finite(), "{m:?}");

@@ -176,6 +176,120 @@ fn t_controller_is_gap_robust() {
 }
 
 #[test]
+fn prop_rho_all_variants_bounded_and_monotone_toward_end() {
+    // All four RhoSchedule variants, with start/end in EITHER order:
+    // every value is clamped to [min(start,end), max(start,end)],
+    // Linear/Cosine move monotonically toward `end` (and hold there
+    // past the horizon), Step decays monotonically onto its floor.
+    prop::forall(
+        "rho-all-variants",
+        40,
+        |r| {
+            let a = 0.02 + 0.9 * r.f64();
+            let b = 0.02 + 0.9 * r.f64();
+            let total = 10 + r.below(5_000);
+            let every = 1 + r.below(200);
+            let factor = 0.2 + 0.7 * r.f64(); // decay factor in (0.2, 0.9)
+            (a, b, total, every, factor)
+        },
+        |&(a, b, total, every, factor)| {
+            let (lo, hi) = (a.min(b), a.max(b));
+            let horizon = 2 * total + 10 * every;
+            let probe = |k: usize| k % 7 == 0 || k >= total; // dense-ish scan
+            // Constant
+            let c = RhoSchedule::constant(a);
+            if (0..horizon).filter(|&k| probe(k)).any(|k| c.at(k) != a) {
+                return false;
+            }
+            // Linear + Cosine: bounded, monotone toward end, pinned at
+            // end past total_steps
+            for s in [RhoSchedule::linear(a, b, total), RhoSchedule::cosine(a, b, total)] {
+                let mut prev = s.at(0);
+                for k in (0..horizon).filter(|&k| probe(k)) {
+                    let v = s.at(k);
+                    if v < lo - 1e-9 || v > hi + 1e-9 {
+                        return false;
+                    }
+                    let toward_end_ok =
+                        if a >= b { v <= prev + 1e-9 } else { v >= prev - 1e-9 };
+                    if !toward_end_ok {
+                        return false;
+                    }
+                    if k >= total && (v - b).abs() > 1e-9 {
+                        return false;
+                    }
+                    prev = v;
+                }
+            }
+            // Step: decreasing from hi, floored at lo
+            let st = RhoSchedule::Step { start: hi, end: lo, every, factor };
+            let mut prev = st.at(0);
+            for k in (0..horizon).filter(|&k| probe(k)) {
+                let v = st.at(k);
+                if v < lo - 1e-12 || v > hi + 1e-12 || v > prev + 1e-12 {
+                    return false;
+                }
+                prev = v;
+            }
+            (st.at(horizon + 100 * every) - lo).abs() < 1e-12
+        },
+    );
+}
+
+#[test]
+fn prop_t_controller_events_consistent_with_observations() {
+    // Over arbitrary loss sequences (including NaNs and negatives):
+    // T never shrinks, never exceeds t_max, and the TEvent log is
+    // exactly the set of strict T changes, each recorded at its
+    // observation step with delta_l_rel below tau_low.
+    prop::forall_with_rng(
+        "t-events-consistent",
+        40,
+        |r| {
+            let n = 3 + r.below(30);
+            (0..n)
+                .map(|_| match r.below(12) {
+                    0 => f64::NAN,
+                    1 => -1.0,
+                    _ => 0.05 + 10.0 * r.f64(),
+                })
+                .collect::<Vec<f64>>()
+        },
+        |losses, _| {
+            let (t0, tmax, neval, tau, gamma) = (50usize, 400usize, 50usize, 0.01, 1.5);
+            let mut c = TController::loss_aware(t0, tmax, neval, tau, gamma);
+            let mut prev_t = c.current();
+            let mut n_events = 0usize;
+            for (i, &l) in losses.iter().enumerate() {
+                let step = (i + 1) * neval;
+                let ev = c.observe(step, l);
+                let t = c.current();
+                if t < prev_t || t > tmax {
+                    return false; // monotone + bounded
+                }
+                if let Some(e) = ev {
+                    n_events += 1;
+                    if e.step != step || e.new_t != t || e.new_t <= e.old_t
+                        || e.old_t != prev_t || !(e.delta_l_rel < tau)
+                    {
+                        return false;
+                    }
+                } else if t != prev_t {
+                    return false; // silent T change
+                }
+                prev_t = t;
+            }
+            // duplicate re-observation of the last step must be inert
+            let last_step = losses.len() * neval;
+            if c.observe(last_step, 0.123).is_some() || c.current() != prev_t {
+                return false;
+            }
+            c.events().len() == n_events
+        },
+    );
+}
+
+#[test]
 fn rho_schedules_converge_to_end() {
     for sched in [
         RhoSchedule::linear(0.3, 0.05, 1234),
