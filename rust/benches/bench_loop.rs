@@ -1,0 +1,72 @@
+//! End-to-end training-loop throughput on the deterministic sim
+//! backend, one JSON line per method — the perf trajectory future PRs
+//! compare against. Runs WITHOUT artifacts, so it always works offline
+//! (like `bench_optim`).
+//!
+//! Each line reports steps/sec through the full session path (fused
+//! device-resident vs host-baseline), plus the host→device traffic the
+//! buffer-reuse layer is accountable for: fresh allocations, in-place
+//! slot writes, bytes shipped, and full-packed-state syncs (the host
+//! path must pay those only at eval boundaries).
+//!
+//! ```text
+//! cargo bench --bench bench_loop
+//! ```
+
+use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::method::Method;
+use adafrugal::coordinator::session::{Session, SessionOptions};
+use adafrugal::coordinator::task::LmTask;
+use adafrugal::runtime::backend::{self, CountingBackend, ExecBackend};
+use adafrugal::util::json;
+
+fn main() -> anyhow::Result<()> {
+    let steps = 150usize;
+    for m in [Method::AdaFrugalCombined, Method::FrugalStatic, Method::AdamW,
+              Method::GaLore] {
+        let cfg = TrainConfig {
+            preset: "nano".into(),
+            backend: "sim".into(),
+            steps,
+            warmup_steps: 10,
+            n_eval: 50,
+            t_start: 25,
+            t_max: 100,
+            log_every: 10_000, // no per-step logging: isolate the loop cost
+            val_batches: 2,
+            lr: 1e-2,
+            seed: 0,
+            ..TrainConfig::default()
+        };
+        let inner = backend::load("sim", &cfg.artifacts_dir, &cfg.preset, &m.entries())?;
+        let counting = CountingBackend::new(inner);
+        let counts = counting.counts();
+        let task = LmTask::new(&cfg, counting.manifest())?;
+        let mut s = Session::new(cfg, m.profile(), Box::new(counting), Box::new(task),
+                                 SessionOptions::pretraining())?;
+        s.quiet = true;
+        let t = std::time::Instant::now();
+        let r = s.run()?;
+        let wall_s = t.elapsed().as_secs_f64();
+        use std::sync::atomic::Ordering::Relaxed;
+        let line = json::obj(vec![
+            ("bench", json::s("bench_loop")),
+            ("backend", json::s("sim")),
+            ("method", json::s(m.id())),
+            ("steps", json::num(steps as f64)),
+            ("steps_per_sec", json::num(steps as f64 / r.step_time_s.max(1e-9))),
+            ("wall_s", json::num(wall_s)),
+            ("step_time_s", json::num(r.step_time_s)),
+            ("uploads_fresh", json::num(r.uploads.uploads as f64)),
+            ("uploads_reused", json::num(r.uploads.reuses as f64)),
+            ("uploads_per_step",
+             json::num(counts.total_uploads() as f64 / steps as f64)),
+            ("upload_bytes", json::num(r.uploads.bytes as f64)),
+            ("state_syncs", json::num(counts.state_syncs.load(Relaxed) as f64)),
+            ("final_ppl",
+             json::num(r.evals.last().map(|e| e.ppl).unwrap_or(f64::NAN))),
+        ]);
+        println!("{}", line.to_string());
+    }
+    Ok(())
+}

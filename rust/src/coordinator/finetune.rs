@@ -1,20 +1,24 @@
-//! GLUE-style fine-tuning driver (Table 3): short sensitive runs of the
-//! classification model under each optimizer, scored with the task's
-//! official metric. Reuses the same controllers/projection as
-//! pre-training; hyperparameters are scaled to the short duration the
-//! way §4.3 describes ("parameters related to training length were
-//! naturally adjusted").
+//! GLUE-style fine-tuning driver (Table 3) — a thin adapter over the
+//! task-generic [`Session`] (`coordinator::session`). This type
+//! contributes the cls/LoRA artifact-name scheme, the task lookup, and
+//! the [`FtResult`] projection; the training loop itself (controllers,
+//! masks, fused/host dispatch, LR schedule, loss readback cadence) is
+//! the same `Session` code the pre-training `Trainer` runs.
+//!
+//! Hyperparameters are scaled to the short duration the way §4.3
+//! describes ("parameters related to training length were naturally
+//! adjusted"). The host path no longer re-uploads the packed state per
+//! step just to keep eval in sync — the session syncs it once per eval
+//! (pinned by the upload-accounting test in
+//! `tests/integration_finetune.rs`).
 
 use anyhow::{Context, Result};
 
 use crate::config::TrainConfig;
-use crate::controller::AdaFrugalController;
-use crate::data::glue::{self, Example, TaskData, TaskSpec};
-use crate::model::init;
-use crate::optim::{self, OptimBuild, Optimizer, StateMgmt, StepScalars};
-use crate::projection::{Strategy, SubspaceMask};
-use crate::runtime::backend::{self, Buffer, ExecBackend};
-use crate::util::rng::Rng;
+use crate::coordinator::session::{Session, SessionOptions};
+use crate::coordinator::task::{ClsTask, LoraClsTask, Task};
+use crate::data::glue::{self, TaskSpec};
+use crate::runtime::backend;
 
 pub use crate::coordinator::method::FtMethod;
 
@@ -22,11 +26,7 @@ pub struct FineTuner {
     pub cfg: TrainConfig,
     pub method: FtMethod,
     pub spec: &'static TaskSpec,
-    engine: Box<dyn ExecBackend>,
-    /// LoRA only: frozen backbone params + adapter state
-    lora_base: Option<Vec<f32>>,
-    data: TaskData,
-    rng: Rng,
+    session: Session,
 }
 
 /// Result of one (task, method, seed) fine-tune.
@@ -37,8 +37,9 @@ pub struct FtResult {
 }
 
 impl FineTuner {
-    /// `backbone`: optional pre-trained params (from an LM checkpoint
-    /// with matching geometry); fresh init otherwise.
+    /// `seed` steers the task data + LoRA backbone; the optimizer state
+    /// keeps seeding from `cfg.seed` (historical behavior, preserved so
+    /// trajectories match across the session refactor).
     pub fn new(cfg: TrainConfig, method: FtMethod, task_name: &str, seed: u64)
                -> Result<FineTuner> {
         let spec = glue::task(task_name).with_context(|| format!("no task {task_name}"))?;
@@ -50,258 +51,22 @@ impl FineTuner {
         };
         let engine = backend::load(&cfg.backend, &cfg.artifacts_dir, &artifact,
                                    &method.entries())?;
-        let dims = engine.manifest().model.clone();
-        let data = glue::generate(spec, dims.vocab, dims.seq, seed ^ 0x61ed);
-        let lora_base = if lora {
-            Some(init::init_state(engine.manifest(), seed)[..engine.manifest().n_params].to_vec())
+        let task: Box<dyn Task> = if lora {
+            Box::new(LoraClsTask::new(spec, engine.manifest(), seed)?)
         } else {
-            None
+            Box::new(ClsTask::new(spec, engine.manifest(), seed)?)
         };
-        Ok(FineTuner {
-            cfg,
-            method,
-            spec,
-            engine,
-            lora_base,
-            data,
-            rng: Rng::new(seed),
-        })
-    }
-
-    fn batchify(&self, examples: &[Example], idx: &[usize]) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
-        let seq = self.engine.manifest().model.seq;
-        let mut toks = Vec::with_capacity(idx.len() * seq);
-        let mut li = Vec::with_capacity(idx.len());
-        let mut lf = Vec::with_capacity(idx.len());
-        for &i in idx {
-            toks.extend_from_slice(&examples[i].tokens);
-            li.push(examples[i].label_i);
-            lf.push(examples[i].label_f);
-        }
-        (toks, li, lf)
-    }
-
-    fn upload_labels(&self, li: &[i32], lf: &[f32]) -> Result<Buffer> {
-        if self.spec.n_cls == 1 {
-            self.engine.upload_f32(lf, &[lf.len()])
-        } else {
-            self.engine.upload_i32(li, &[li.len()])
-        }
-    }
-
-    /// Evaluate: returns (score, mean_eval_loss).
-    fn score_eval(&self, state_buf: &Buffer, lora: bool) -> Result<(f64, f64)> {
-        let man = self.engine.manifest();
-        let batch = man.model.batch;
-        let n_cls = man.model.n_cls;
-        let mut pred_cls = Vec::new();
-        let mut truth_cls = Vec::new();
-        let mut pred_reg = Vec::new();
-        let mut truth_reg = Vec::new();
-        let mut losses = Vec::new();
-        let n_batches = self.data.eval.len() / batch;
-        // the frozen LoRA base never changes: upload it once, not per batch
-        let bbuf = match (&self.lora_base, lora) {
-            (Some(base), true) => Some(self.engine.upload_f32(base, &[base.len()])?),
-            _ => None,
-        };
-        for bi in 0..n_batches {
-            let idx: Vec<usize> = (0..batch).map(|j| bi * batch + j).collect();
-            let (toks, li, lf) = self.batchify(&self.data.eval, &idx);
-            let tbuf = self.engine.upload_i32(&toks, &[batch, man.model.seq])?;
-            let lbuf = self.upload_labels(&li, &lf)?;
-            let out = match &bbuf {
-                Some(b) => self.engine.run("lora_eval", &[b, state_buf, &tbuf, &lbuf])?,
-                None => self.engine.run("eval", &[state_buf, &tbuf, &lbuf])?,
-            };
-            let v = self.engine.read_f32(&out, 0, 1 + batch * n_cls)?;
-            losses.push(v[0] as f64);
-            for b in 0..batch {
-                let logits = &v[1 + b * n_cls..1 + (b + 1) * n_cls];
-                if n_cls == 1 {
-                    pred_reg.push(logits[0] as f64);
-                    truth_reg.push(lf[b] as f64);
-                } else {
-                    let pred = logits
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .unwrap()
-                        .0;
-                    pred_cls.push(pred);
-                    truth_cls.push(li[b] as usize);
-                }
-            }
-        }
-        let score = glue::score(self.spec, &pred_cls, &truth_cls, &pred_reg, &truth_reg);
-        Ok((score, crate::util::stats::mean(&losses)))
+        let session = Session::new(cfg.clone(), method.profile(), engine, task,
+                                   SessionOptions::finetuning())?;
+        Ok(FineTuner { cfg, method, spec, session })
     }
 
     /// Run fine-tuning for `cfg.steps` steps; returns the eval score.
     pub fn run(&mut self) -> Result<FtResult> {
-        let man = self.engine.manifest().clone();
-        let batch = man.model.batch;
-        let is_lora = self.method.is_lora();
-        let frugal = self.method.is_frugal();
-
-        // controller + mask (frugal family only)
-        let (dyn_rho, dyn_t) = self.method.dynamic();
-        let mut controller = AdaFrugalController::from_config(&self.cfg, dyn_rho, dyn_t);
-        let mut mask = SubspaceMask::new(&man);
-        let strategy = Strategy::parse(&self.cfg.strategy)?;
-        let state_mgmt = StateMgmt::parse(&self.cfg.state_mgmt)?;
-        if frugal {
-            let s0 = if strategy == Strategy::TopK { Strategy::Random } else { strategy };
-            mask.redefine(s0, controller.rho_at(0), None, &mut self.rng)?;
-        }
-
-        // state
-        let mut state_buf = if is_lora {
-            let lstate = init::init_lora_state(&man, self.cfg.seed);
-            self.engine.upload_f32(&lstate, &[lstate.len()])?
-        } else {
-            let state = init::init_state(&man, self.cfg.seed);
-            self.engine.upload_f32(&state, &[man.state_len])?
-        };
-        let mut masks_buf = if frugal {
-            Some(self.engine.upload_f32(&mask.render(), &[man.mask_len])?)
-        } else {
-            None
-        };
-        // host-path state: registry-built update rule fed by `grad`
-        let mut host_state: Option<(Vec<f32>, Box<dyn Optimizer>)> =
-            match self.method.host_optimizer() {
-                Some(name) => {
-                    let state = init::init_state(&man, self.cfg.seed);
-                    Some((
-                        state[..man.n_params].to_vec(),
-                        optim::build(name, &man, &OptimBuild::from_config(&self.cfg))?,
-                    ))
-                }
-                None => None,
-            };
-
-        // the frozen LoRA base never changes: upload it once for the run
-        let base_buf = match &self.lora_base {
-            Some(base) => Some(self.engine.upload_f32(base, &[base.len()])?),
-            None => None,
-        };
-        let mut order: Vec<usize> = (0..self.data.train.len()).collect();
-        let mut cursor = 0usize;
-        let mut t_since_reset = 0usize;
-        let mut last_loss = f64::NAN;
-
-        for step in 0..self.cfg.steps {
-            // dynamic control
-            if frugal && controller.is_redefinition_step(step) && step > 0 {
-                mask.redefine(strategy.no_scores(), controller.rho_at(step), None,
-                              &mut self.rng)?;
-                masks_buf =
-                    Some(self.engine.upload_f32(&mask.render(), &[man.mask_len])?);
-                if state_mgmt == StateMgmt::Reset {
-                    let mut state = self.engine.read_all_f32(&state_buf)?;
-                    let n = man.n_params;
-                    for p in man.maskable() {
-                        state[n + p.offset..n + p.offset + p.size].fill(0.0);
-                        state[2 * n + p.offset..2 * n + p.offset + p.size].fill(0.0);
-                    }
-                    state_buf = self.engine.upload_f32(&state, &[man.state_len])?;
-                    t_since_reset = 0;
-                }
-            }
-            t_since_reset += 1;
-
-            // batch
-            let idx: Vec<usize> = (0..batch)
-                .map(|_| {
-                    if cursor == 0 {
-                        self.rng.shuffle(&mut order);
-                    }
-                    let i = order[cursor];
-                    cursor = (cursor + 1) % order.len();
-                    i
-                })
-                .collect();
-            let (toks, li, lf) = self.batchify(&self.data.train, &idx);
-            let tbuf = self.engine.upload_i32(&toks, &[batch, man.model.seq])?;
-            let lbuf = self.upload_labels(&li, &lf)?;
-
-            let lr = self.lr_at(step);
-            let s = StepScalars::new(lr, self.cfg.lr_free * (lr / self.cfg.lr),
-                                     self.cfg.weight_decay, self.cfg.beta1,
-                                     self.cfg.beta2, self.cfg.eps, t_since_reset);
-            let scal_buf = self.engine.upload_f32(&s.to_array(), &[8])?;
-
-            if let Some((params, opt)) = host_state.as_mut() {
-                // host path: gradients from `grad`, registry-built update
-                let pbuf = self.engine.upload_f32(params, &[params.len()])?;
-                let out = self.engine.run("grad", &[&pbuf, &tbuf, &lbuf])?;
-                let gl = self.engine.read_all_f32(&out)?;
-                let n = params.len();
-                opt.step(&man, params, &gl[..n], None, &s)?;
-                last_loss = gl[n] as f64;
-                // keep state_buf in sync for eval
-                let mut state = vec![0f32; man.state_len];
-                state[..n].copy_from_slice(params);
-                state_buf = self.engine.upload_f32(&state, &[man.state_len])?;
-            } else {
-                // fused path: argument shape is method-independent —
-                // [base?] + state + [masks?] + scalars + tokens + labels
-                let out = {
-                    let mut args: Vec<&Buffer> = Vec::with_capacity(6);
-                    if let Some(b) = &base_buf {
-                        args.push(b);
-                    }
-                    args.push(&state_buf);
-                    if let Some(m) = &masks_buf {
-                        args.push(m);
-                    }
-                    args.push(&scal_buf);
-                    args.push(&tbuf);
-                    args.push(&lbuf);
-                    self.engine.run(self.method.step_entry(), &args)?
-                };
-                state_buf = out;
-            }
-
-            // loss readback only at observation boundaries (reading the
-            // packed state transfers the whole buffer — see engine.rs)
-            let last_step = step + 1 == self.cfg.steps;
-            if (dyn_t && (step + 1) % self.cfg.n_eval == 0) || last_step {
-                let loss_slot = if is_lora { man.lora_state_len() } else { man.state_len } - 1;
-                if host_state.is_none() {
-                    last_loss = self.engine.read_f32(&state_buf, loss_slot, 1)?[0] as f64;
-                }
-                if dyn_t && !last_step {
-                    controller.observe_val_loss(step + 1, last_loss);
-                }
-            }
-        }
-
-        let (score, _eval_loss) = self.score_eval(&state_buf, is_lora)?;
-        Ok(FtResult { score, final_train_loss: last_loss })
-    }
-
-    fn lr_at(&self, step: usize) -> f32 {
-        let c = &self.cfg;
-        if step < c.warmup_steps {
-            return c.lr * (step + 1) as f32 / c.warmup_steps.max(1) as f32;
-        }
-        let progress = (step - c.warmup_steps) as f32
-            / (c.steps.saturating_sub(c.warmup_steps)).max(1) as f32;
-        let min_lr = c.lr * c.lr_min_ratio;
-        min_lr + 0.5 * (c.lr - min_lr) * (1.0 + (std::f32::consts::PI * progress).cos())
-    }
-}
-
-impl Strategy {
-    /// During fine-tuning redefinitions we avoid the extra scores pass
-    /// (short runs); TopK degrades to Random there.
-    fn no_scores(self) -> Strategy {
-        if self == Strategy::TopK {
-            Strategy::Random
-        } else {
-            self
-        }
+        let r = self.session.run()?;
+        Ok(FtResult {
+            score: r.final_score.context("fine-tuning task produced no eval score")?,
+            final_train_loss: r.final_train_loss,
+        })
     }
 }

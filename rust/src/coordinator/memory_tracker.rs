@@ -13,6 +13,21 @@ pub struct MemorySample {
     pub bytes: usize,
 }
 
+/// Which analytic optimizer-memory model a method is accounted under —
+/// the method-agnostic handle the session layer carries (via
+/// `session::MethodProfile`) so memory tracking needs no `Method` enum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoryModel {
+    /// full-rank Adam moments
+    AdamW,
+    /// low-rank projected moments + projector
+    GaLore,
+    /// active-block moments (block coordinate descent)
+    BAdam,
+    /// FRUGAL subspace moments (live mask when available, else ρ bound)
+    Frugal,
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct MemoryTracker {
     pub samples: Vec<MemorySample>,
@@ -24,14 +39,21 @@ impl MemoryTracker {
         Self::default()
     }
 
-    /// Current optimizer-state bytes for the method.
+    /// Current optimizer-state bytes for the method (enum façade over
+    /// [`MemoryTracker::bytes_for`], kept for the experiment harness).
     pub fn bytes_now(man: &Manifest, method: Method, mask: Option<&SubspaceMask>,
                      rho: f64) -> usize {
-        match method {
-            Method::AdamW => memory::adamw_bytes(man),
-            Method::GaLore => memory::galore_bytes(man, rho),
-            Method::BAdam => memory::badam_bytes(man, rho),
-            _ => match mask {
+        Self::bytes_for(man, method.memory_model(), mask, rho)
+    }
+
+    /// Current optimizer-state bytes under a [`MemoryModel`].
+    pub fn bytes_for(man: &Manifest, model: MemoryModel, mask: Option<&SubspaceMask>,
+                     rho: f64) -> usize {
+        match model {
+            MemoryModel::AdamW => memory::adamw_bytes(man),
+            MemoryModel::GaLore => memory::galore_bytes(man, rho),
+            MemoryModel::BAdam => memory::badam_bytes(man, rho),
+            MemoryModel::Frugal => match mask {
                 Some(m) => memory::frugal_bytes(man, m),
                 None => memory::frugal_bytes_at_rho(man, rho),
             },

@@ -11,6 +11,9 @@
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::memory_tracker::MemoryModel;
+use crate::coordinator::session::MethodProfile;
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Method {
     /// full-rank AdamW (performance upper bound, 1.00× memory)
@@ -130,6 +133,34 @@ impl Method {
             vec!["adamw", "eval"]
         }
     }
+
+    /// Analytic memory model this method is accounted under.
+    pub fn memory_model(&self) -> MemoryModel {
+        match self {
+            Method::AdamW => MemoryModel::AdamW,
+            Method::GaLore => MemoryModel::GaLore,
+            Method::BAdam => MemoryModel::BAdam,
+            _ => MemoryModel::Frugal,
+        }
+    }
+
+    /// The session-layer view of this method: everything
+    /// `coordinator::session::Session` needs to drive Algorithm 1,
+    /// decoupled from the roster enum.
+    pub fn profile(&self) -> MethodProfile {
+        MethodProfile {
+            id: self.id(),
+            frugal: self.is_frugal_family(),
+            dynamic_rho: self.dynamic_rho(),
+            dynamic_t: self.dynamic_t(),
+            host_optimizer: self.host_optimizer(),
+            fused_entry: if self.is_frugal_family() { "frugal" } else { "adamw" },
+            eval_entry: "eval",
+            // pre-training redefinitions may run the `scores` pass
+            topk_scores: true,
+            memory: self.memory_model(),
+        }
+    }
 }
 
 /// Fine-tuning method roster for Table 3. LoRA is a distinct path
@@ -227,6 +258,35 @@ impl FtMethod {
             "frugal"
         } else {
             "adamw"
+        }
+    }
+
+    /// Analytic memory model this method is accounted under (LoRA's
+    /// adapter state is AdamW-shaped over the adapter params).
+    pub fn memory_model(&self) -> MemoryModel {
+        match self {
+            FtMethod::GaLore => MemoryModel::GaLore,
+            FtMethod::Frugal { .. } => MemoryModel::Frugal,
+            FtMethod::FullAdamW | FtMethod::Lora => MemoryModel::AdamW,
+        }
+    }
+
+    /// The session-layer view of this method (same contract as
+    /// [`Method::profile`]). Fine-tuning runs are short, so TopK
+    /// redefinitions skip the extra `scores` pass and degrade to
+    /// Random — the session honors that via `topk_scores: false`.
+    pub fn profile(&self) -> MethodProfile {
+        let (dynamic_rho, dynamic_t) = self.dynamic();
+        MethodProfile {
+            id: self.label(),
+            frugal: self.is_frugal(),
+            dynamic_rho,
+            dynamic_t,
+            host_optimizer: self.host_optimizer(),
+            fused_entry: self.step_entry(),
+            eval_entry: if self.is_lora() { "lora_eval" } else { "eval" },
+            topk_scores: false,
+            memory: self.memory_model(),
         }
     }
 }

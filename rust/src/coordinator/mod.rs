@@ -1,5 +1,14 @@
 //! The training coordinator (Algorithm 1).
+//!
+//! Layering: [`session`] holds the single task-generic implementation
+//! of the integrated loop; [`task`] is the workload seam it is
+//! parameterized by; [`trainer`] (LM pre-training) and [`finetune`]
+//! (GLUE fine-tuning) are thin adapters that wire a backend + task +
+//! method profile into a session and project its result onto their
+//! public types.
 pub mod method;
+pub mod session;
+pub mod task;
 pub mod trainer;
 pub mod checkpoint;
 pub mod finetune;

@@ -1,0 +1,847 @@
+//! The task-generic training session: Algorithm 1 of the paper,
+//! implemented exactly once.
+//!
+//! [`Session`] owns everything Algorithm 1 needs that is not
+//! workload-specific: the execution backend, the dynamic controllers
+//! (ρ decay, loss-aware T), the subspace mask and its redefinition
+//! machinery (lines 21–27), the optimizer state (fused device-resident
+//! or registry-built host), the LR schedule and step-scalar ABI, and
+//! the checkpoint/eval cadence. The workload — batches, state layout,
+//! eval scoring — comes in through the [`Task`] trait
+//! (`coordinator::task`), and the method through a [`MethodProfile`]
+//! (built by `Method::profile` / `FtMethod::profile`). `Trainer` and
+//! `FineTuner` are thin adapters over this type.
+//!
+//! # Hot-path traffic
+//!
+//! Per-step uploads go through reusable slots
+//! ([`crate::runtime::backend::ExecBackend::upload_f32_into`]): the 8
+//! step scalars, tokens and labels each rotate through a two-deep pool
+//! (so a backend that is still reading the previous step's inputs
+//! asynchronously never sees them overwritten mid-flight), and
+//! host-path params reuse one slot (the host path is synchronous by
+//! construction: it reads the gradients back before the next step).
+//! The mask buffer is re-uploaded fresh at each redefinition —
+//! amortized over T ≥ 100 steps, and a previous step may still be
+//! consuming the old mask. Eval batches are deterministic, so their
+//! device buffers are uploaded once and cached for every subsequent
+//! eval; the host path syncs the full packed state only at eval
+//! boundaries, never per step. The next batch is prepared on a worker
+//! via [`crate::util::par::join_for`] while the device executes the
+//! current step (work-size-gated, so tiny sim batches never pay a
+//! thread spawn); prefetch is suppressed when it could perturb the
+//! historical trajectories — for frugal runs whose task shares one RNG
+//! stream between sampling and redefinition, and for TopK runs whose
+//! `scores` pass draws from the same batch stream as training — so
+//! every pre-refactor trajectory stays bit-identical.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::controller::AdaFrugalController;
+use crate::coordinator::memory_tracker::{MemoryModel, MemoryTracker};
+use crate::coordinator::task::{EvalOutcome, LabelData, Task, TaskBatch};
+use crate::info;
+use crate::optim::{self, OptimBuild, Optimizer, StateMgmt, StepScalars};
+use crate::projection::{Strategy, SubspaceMask};
+use crate::runtime::backend::{Buffer, ExecBackend};
+use crate::runtime::Manifest;
+use crate::util::par;
+use crate::util::timer::{PhaseTimer, Timer};
+
+/// The session-layer view of a training method: everything the loop
+/// needs, decoupled from the `Method`/`FtMethod` roster enums.
+#[derive(Debug, Clone)]
+pub struct MethodProfile {
+    /// short id for log lines
+    pub id: &'static str,
+    /// uses FRUGAL gradient splitting (masks + redefinition)
+    pub frugal: bool,
+    pub dynamic_rho: bool,
+    pub dynamic_t: bool,
+    /// registry name of the host-side update rule; `None` = fused path
+    pub host_optimizer: Option<&'static str>,
+    /// fused step entry point ("frugal" | "adamw" | "lora_adamw")
+    pub fused_entry: &'static str,
+    /// eval entry point ("eval" | "lora_eval")
+    pub eval_entry: &'static str,
+    /// TopK redefinitions may run the `scores` pass (pre-training);
+    /// otherwise TopK degrades to Random at redefinition time
+    pub topk_scores: bool,
+    /// analytic memory model for the tracker
+    pub memory: MemoryModel,
+}
+
+/// When the session runs the task's full evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalPolicy {
+    /// Full eval every `n_eval` steps, at the checkpoint grid and after
+    /// the final step; val losses feed the T controller and the memory
+    /// tracker samples at each eval (pre-training).
+    Periodic,
+    /// Single eval after the last step; the T controller observes the
+    /// train-loss readback at `n_eval` boundaries instead
+    /// (fine-tuning).
+    FinalOnly,
+}
+
+/// Loop policy knobs that differ between the drivers.
+#[derive(Debug, Clone)]
+pub struct SessionOptions {
+    pub eval: EvalPolicy,
+    /// record + print a `StepLog` every `cfg.log_every` steps
+    pub log_steps: bool,
+    /// error out when a read-back loss is non-finite
+    pub bail_on_divergence: bool,
+    /// prepare the next batch on a worker while the step executes
+    pub prefetch: bool,
+}
+
+impl SessionOptions {
+    /// Pre-training defaults (the historical `Trainer` loop).
+    pub fn pretraining() -> SessionOptions {
+        SessionOptions {
+            eval: EvalPolicy::Periodic,
+            log_steps: true,
+            bail_on_divergence: true,
+            prefetch: true,
+        }
+    }
+
+    /// Fine-tuning defaults (the historical `FineTuner` loop).
+    pub fn finetuning() -> SessionOptions {
+        SessionOptions {
+            eval: EvalPolicy::FinalOnly,
+            log_steps: false,
+            bail_on_divergence: false,
+            prefetch: true,
+        }
+    }
+}
+
+/// One evaluation checkpoint in the run history.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalPoint {
+    pub step: usize,
+    pub val_loss: f64,
+    pub ppl: f64,
+    pub memory_bytes: usize,
+    pub elapsed_s: f64,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepLog {
+    pub step: usize,
+    pub train_loss: f32,
+    pub rho: f64,
+    pub t_current: usize,
+}
+
+/// Host→device upload accounting for one session (maintained by the
+/// session itself, so every backend reports it uniformly).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UploadStats {
+    /// fresh buffer allocations
+    pub uploads: usize,
+    /// slot writes that reused an existing allocation in place
+    pub reuses: usize,
+    /// total bytes shipped host→device
+    pub bytes: usize,
+}
+
+/// Everything a [`Session::run`] produces; the driver adapters project
+/// this onto their public result types.
+#[derive(Debug, Clone)]
+pub struct SessionResult {
+    pub evals: Vec<EvalPoint>,
+    pub steps: Vec<StepLog>,
+    pub memory: MemoryTracker,
+    pub redefinitions: usize,
+    pub total_time_s: f64,
+    pub step_time_s: f64,
+    pub redef_time_s: f64,
+    pub eval_time_s: f64,
+    pub t_events: Vec<crate::controller::TEvent>,
+    /// last observed training loss (host path: every step; fused path:
+    /// last readback boundary)
+    pub final_train_loss: f64,
+    /// task metric from the last evaluation, when the task defines one
+    pub final_score: Option<f64>,
+    pub uploads: UploadStats,
+}
+
+/// Optimizer state: backend-resident packed state (fused path) or
+/// host-resident params + a registry-built update rule over the `grad`
+/// entry (baselines — not the paper's hot path).
+enum OptState {
+    Fused { state_buf: Buffer, masks_buf: Option<Buffer> },
+    Host { params: Vec<f32>, opt: Box<dyn Optimizer> },
+}
+
+/// Cached device buffers for one deterministic eval batch.
+struct EvalBufs {
+    batch: TaskBatch,
+    tokens: Buffer,
+    labels: Option<Buffer>,
+}
+
+/// Everything the device-side step touches, grouped so the hot loop can
+/// split-borrow it away from the task (which may be preparing the next
+/// batch on a prefetch worker at the same time).
+struct DeviceState {
+    engine: Box<dyn ExecBackend>,
+    opt: OptState,
+    /// frozen base params (LoRA backbone), uploaded once
+    base_buf: Option<Buffer>,
+    /// two-deep rotating pool for the 8 step scalars
+    scal_slots: [Option<Buffer>; 2],
+    /// two-deep rotating pool for per-step token uploads
+    token_slots: [Option<Buffer>; 2],
+    /// two-deep rotating pool for per-step label uploads
+    label_slots: [Option<Buffer>; 2],
+    /// reusable slot for host-path param uploads
+    params_slot: Option<Buffer>,
+    /// reusable slot for the host path's eval-time packed-state sync
+    eval_state_slot: Option<Buffer>,
+    /// eval batches are deterministic: uploaded once, reused per eval
+    eval_cache: Vec<EvalBufs>,
+    stats: UploadStats,
+}
+
+pub struct Session {
+    pub cfg: TrainConfig,
+    profile: MethodProfile,
+    opts: SessionOptions,
+    dev: DeviceState,
+    task: Box<dyn Task>,
+    controller: AdaFrugalController,
+    mask: SubspaceMask,
+    strategy: Strategy,
+    state_mgmt: StateMgmt,
+    /// steps since the last optimizer-state reset (bias correction)
+    t_since_reset: usize,
+    timers: PhaseTimer,
+    pub quiet: bool,
+}
+
+/// Learning rate at step `k`: linear warmup then cosine decay to
+/// `lr * lr_min_ratio`. The single implementation behind every driver
+/// (pinned by `trainer::tests::lr_schedule_shape`).
+pub fn lr_at(cfg: &TrainConfig, step: usize) -> f32 {
+    if step < cfg.warmup_steps {
+        return cfg.lr * (step + 1) as f32 / cfg.warmup_steps.max(1) as f32;
+    }
+    let progress = (step - cfg.warmup_steps) as f32
+        / (cfg.steps.saturating_sub(cfg.warmup_steps)).max(1) as f32;
+    let min_lr = cfg.lr * cfg.lr_min_ratio;
+    min_lr + 0.5 * (cfg.lr - min_lr) * (1.0 + (std::f32::consts::PI * progress).cos())
+}
+
+/// The 8-scalar step ABI at step `k`. `lr_free` follows the same
+/// schedule shape as the full LR; bias corrections count from the last
+/// optimizer-state reset (for host-path methods the state never resets,
+/// so this equals `step + 1`).
+pub fn scalars_at(cfg: &TrainConfig, step: usize, t_since_reset: usize) -> StepScalars {
+    let lr = lr_at(cfg, step);
+    let lr_free = cfg.lr_free * (lr / cfg.lr);
+    StepScalars::new(lr, lr_free, cfg.weight_decay, cfg.beta1, cfg.beta2, cfg.eps,
+                     t_since_reset)
+}
+
+/// Table-style checkpoint steps: {2%, 10%, 20%, 50%, 100%} of the run —
+/// the paper's 4k/20k/40k/100k/200k grid at 1:100 scale.
+pub fn eval_checkpoints(cfg: &TrainConfig) -> Vec<usize> {
+    let s = cfg.steps;
+    [0.02, 0.10, 0.20, 0.50, 1.0]
+        .iter()
+        .map(|f| ((s as f64 * f).round() as usize).max(1))
+        .collect()
+}
+
+// --- upload helpers: all host→device traffic is accounted here ---
+
+fn fresh_f32(engine: &dyn ExecBackend, stats: &mut UploadStats, data: &[f32],
+             dims: &[usize]) -> Result<Buffer> {
+    stats.uploads += 1;
+    stats.bytes += 4 * data.len();
+    engine.upload_f32(data, dims)
+}
+
+fn fresh_i32(engine: &dyn ExecBackend, stats: &mut UploadStats, data: &[i32],
+             dims: &[usize]) -> Result<Buffer> {
+    stats.uploads += 1;
+    stats.bytes += 4 * data.len();
+    engine.upload_i32(data, dims)
+}
+
+fn put_f32(engine: &dyn ExecBackend, stats: &mut UploadStats, slot: &mut Option<Buffer>,
+           data: &[f32], dims: &[usize]) -> Result<()> {
+    if engine.upload_f32_into(slot, data, dims)? {
+        stats.reuses += 1;
+    } else {
+        stats.uploads += 1;
+    }
+    stats.bytes += 4 * data.len();
+    Ok(())
+}
+
+fn put_i32(engine: &dyn ExecBackend, stats: &mut UploadStats, slot: &mut Option<Buffer>,
+           data: &[i32], dims: &[usize]) -> Result<()> {
+    if engine.upload_i32_into(slot, data, dims)? {
+        stats.reuses += 1;
+    } else {
+        stats.uploads += 1;
+    }
+    stats.bytes += 4 * data.len();
+    Ok(())
+}
+
+fn put_label(engine: &dyn ExecBackend, stats: &mut UploadStats, slot: &mut Option<Buffer>,
+             labels: &LabelData) -> Result<()> {
+    match labels {
+        LabelData::I32(v) => put_i32(engine, stats, slot, v, &[v.len()]),
+        LabelData::F32(v) => put_f32(engine, stats, slot, v, &[v.len()]),
+    }
+}
+
+/// One optimizer step over an already-prepared batch. A free function
+/// over the split-borrowed [`DeviceState`] so it can run concurrently
+/// with the task's next-batch preparation. On the fused path the loss
+/// stays on device (reading it would transfer the whole state buffer);
+/// returns `None` there and the session samples the loss at readback
+/// boundaries. Host-path methods get the loss for free.
+fn step_once(dev: &mut DeviceState, profile: &MethodProfile, scal: &[f32; 8],
+             step: usize, b: &TaskBatch) -> Result<Option<f32>> {
+    let DeviceState {
+        engine, opt, base_buf, scal_slots, token_slots, label_slots, params_slot,
+        stats, ..
+    } = dev;
+    let engine = &**engine;
+    let slot = step % 2;
+    put_i32(engine, stats, &mut token_slots[slot], &b.tokens, &b.token_dims)?;
+    if let Some(l) = &b.labels {
+        put_label(engine, stats, &mut label_slots[slot], l)?;
+    }
+    match opt {
+        OptState::Fused { state_buf, masks_buf } => {
+            put_f32(engine, stats, &mut scal_slots[slot], scal, &[8])?;
+            // method-independent argument shape:
+            // [base?] + state + [masks?] + scalars + tokens + [labels?]
+            let mut args: Vec<&Buffer> = Vec::with_capacity(6);
+            if let Some(base) = base_buf.as_ref() {
+                args.push(base);
+            }
+            args.push(state_buf);
+            if profile.frugal {
+                args.push(masks_buf.as_ref().context("mask buffer missing")?);
+            }
+            args.push(scal_slots[slot].as_ref().expect("scalar slot populated"));
+            args.push(token_slots[slot].as_ref().expect("token slot populated"));
+            if b.labels.is_some() {
+                args.push(label_slots[slot].as_ref().expect("label slot populated"));
+            }
+            let out = engine.run(profile.fused_entry, &args)?;
+            drop(args);
+            *state_buf = out;
+            Ok(None)
+        }
+        OptState::Host { params, opt: host_opt } => {
+            put_f32(engine, stats, params_slot, params, &[params.len()])?;
+            let mut args: Vec<&Buffer> = Vec::with_capacity(3);
+            args.push(params_slot.as_ref().expect("params slot populated"));
+            args.push(token_slots[slot].as_ref().expect("token slot populated"));
+            if b.labels.is_some() {
+                args.push(label_slots[slot].as_ref().expect("label slot populated"));
+            }
+            let out = engine.run("grad", &args)?;
+            drop(args);
+            let gl = engine.read_all_f32(&out)?;
+            let n = params.len();
+            let s = StepScalars::from_array(*scal);
+            host_opt.step(engine.manifest(), params, &gl[..n], None, &s)?;
+            Ok(Some(gl[n]))
+        }
+    }
+}
+
+impl Session {
+    /// Wire a session over an already-loaded backend. The adapters
+    /// construct the backend (they own the artifact-name scheme) and
+    /// tests inject wrappers like
+    /// [`crate::runtime::backend::CountingBackend`] here.
+    pub fn new(cfg: TrainConfig, profile: MethodProfile, engine: Box<dyn ExecBackend>,
+               mut task: Box<dyn Task>, opts: SessionOptions) -> Result<Session> {
+        cfg.validate()?;
+        let man = engine.manifest().clone();
+        let controller =
+            AdaFrugalController::from_config(&cfg, profile.dynamic_rho, profile.dynamic_t);
+        let mut mask = SubspaceMask::new(&man);
+        let strategy = Strategy::parse(&cfg.strategy)?;
+        let state_mgmt = StateMgmt::parse(&cfg.state_mgmt)?;
+        if profile.frugal {
+            // initial projector (Algorithm 1 line 2); random at step 0
+            // even under TopK (no gradients exist yet)
+            let s0 = if strategy == Strategy::TopK { Strategy::Random } else { strategy };
+            mask.redefine(s0, controller.rho_at(0), None, task.rng())?;
+        }
+
+        let mut stats = UploadStats::default();
+        let state = task.init_state(&man, cfg.seed);
+        let opt = match profile.host_optimizer {
+            Some(name) => OptState::Host {
+                params: state[..man.n_params].to_vec(),
+                opt: optim::build(name, &man, &OptimBuild::from_config(&cfg))?,
+            },
+            None => {
+                let state_buf = fresh_f32(&*engine, &mut stats, &state, &[state.len()])?;
+                let masks_buf = if profile.frugal {
+                    Some(fresh_f32(&*engine, &mut stats, &mask.render(), &[man.mask_len])?)
+                } else {
+                    None
+                };
+                OptState::Fused { state_buf, masks_buf }
+            }
+        };
+        // the frozen base (LoRA backbone) never changes: upload once
+        let base_buf = match task.base_params() {
+            Some(base) => Some(fresh_f32(&*engine, &mut stats, base, &[base.len()])?),
+            None => None,
+        };
+
+        Ok(Session {
+            cfg,
+            profile,
+            opts,
+            dev: DeviceState {
+                engine,
+                opt,
+                base_buf,
+                scal_slots: [None, None],
+                token_slots: [None, None],
+                label_slots: [None, None],
+                params_slot: None,
+                eval_state_slot: None,
+                eval_cache: Vec::new(),
+                stats,
+            },
+            task,
+            controller,
+            mask,
+            strategy,
+            state_mgmt,
+            t_since_reset: 0,
+            timers: PhaseTimer::new(),
+            quiet: false,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.dev.engine.manifest()
+    }
+
+    pub fn profile(&self) -> &MethodProfile {
+        &self.profile
+    }
+
+    pub fn upload_stats(&self) -> UploadStats {
+        self.dev.stats
+    }
+
+    /// Override the ρ schedule (ablations: cosine/step decay shapes).
+    pub fn set_rho_schedule(&mut self, s: crate::controller::RhoSchedule) {
+        self.controller.rho = s;
+    }
+
+    /// Download current params (fused path) or clone host params.
+    /// Adapter-state tasks (LoRA) keep the backbone frozen and have no
+    /// flat param vector to return.
+    pub fn params_host(&self) -> Result<Vec<f32>> {
+        let man = self.dev.engine.manifest();
+        anyhow::ensure!(self.task.state_len(man) == man.state_len,
+                        "params_host unsupported for adapter-state tasks");
+        let n = man.n_params;
+        match &self.dev.opt {
+            OptState::Fused { state_buf, .. } => self.dev.engine.read_f32(state_buf, 0, n),
+            OptState::Host { params, .. } => Ok(params.clone()),
+        }
+    }
+
+    /// Restore params (e.g. from a checkpoint) into the live state,
+    /// clearing optimizer moments.
+    pub fn restore_params(&mut self, params: &[f32]) -> Result<()> {
+        let man = self.dev.engine.manifest().clone();
+        anyhow::ensure!(self.task.state_len(&man) == man.state_len,
+                        "restore_params unsupported for adapter-state tasks");
+        anyhow::ensure!(params.len() == man.n_params, "param size mismatch");
+        let DeviceState { engine, opt, stats, .. } = &mut self.dev;
+        match opt {
+            OptState::Fused { state_buf, .. } => {
+                // the rebuilt state zeroes the moments, so the
+                // bias-correction counter restarts with them
+                let mut state = vec![0f32; man.state_len];
+                state[..man.n_params].copy_from_slice(params);
+                *state_buf = fresh_f32(&**engine, stats, &state, &[man.state_len])?;
+                self.t_since_reset = 0;
+            }
+            OptState::Host { params: p, .. } => {
+                // the registry optimizer keeps its moments (historical
+                // behavior), so the counter must keep running too —
+                // resetting it would amplify the first post-restore
+                // updates by ~1/(1-beta1) against warm moments
+                p.copy_from_slice(params);
+            }
+        }
+        Ok(())
+    }
+
+    /// Last recorded training loss: on the fused path, one read of the
+    /// packed state's loss slot (readback boundaries only).
+    fn train_loss_now(&self) -> Result<f32> {
+        match &self.dev.opt {
+            OptState::Fused { state_buf, .. } => {
+                let len = self.task.state_len(self.dev.engine.manifest());
+                Ok(self.dev.engine.read_f32(state_buf, len - 1, 1)?[0])
+            }
+            _ => Ok(f32::NAN), // host paths always return Some(loss)
+        }
+    }
+
+    /// One full evaluation pass through the task's eval entry. Eval
+    /// batches are deterministic, so their device buffers are uploaded
+    /// once and cached; the host path syncs its packed state into a
+    /// reusable slot here — the only place it ever ships the full
+    /// state.
+    pub fn evaluate(&mut self) -> Result<EvalOutcome> {
+        if self.dev.eval_cache.is_empty() {
+            let nb = self.task.n_eval_batches(&self.cfg);
+            for i in 0..nb {
+                let b = self.task.eval_batch(i);
+                let dev = &mut self.dev;
+                let tokens = fresh_i32(&*dev.engine, &mut dev.stats, &b.tokens,
+                                       &b.token_dims)?;
+                let labels = match &b.labels {
+                    Some(LabelData::I32(v)) => {
+                        Some(fresh_i32(&*dev.engine, &mut dev.stats, v, &[v.len()])?)
+                    }
+                    Some(LabelData::F32(v)) => {
+                        Some(fresh_f32(&*dev.engine, &mut dev.stats, v, &[v.len()])?)
+                    }
+                    None => None,
+                };
+                dev.eval_cache.push(EvalBufs { batch: b, tokens, labels });
+            }
+        }
+
+        // host path: sync the packed state once per eval (not per step)
+        let state_len = self.dev.engine.manifest().state_len;
+        let host_state: Option<Vec<f32>> = match &self.dev.opt {
+            OptState::Host { params, .. } => {
+                let mut st = vec![0f32; state_len];
+                st[..params.len()].copy_from_slice(params);
+                Some(st)
+            }
+            OptState::Fused { .. } => None,
+        };
+        if let Some(st) = &host_state {
+            let dev = &mut self.dev;
+            put_f32(&*dev.engine, &mut dev.stats, &mut dev.eval_state_slot, st,
+                    &[state_len])?;
+        }
+
+        let dev = &self.dev;
+        let engine = &*dev.engine;
+        let state_ref: &Buffer = match &dev.opt {
+            OptState::Fused { state_buf, .. } => state_buf,
+            OptState::Host { .. } => {
+                dev.eval_state_slot.as_ref().expect("host eval state synced")
+            }
+        };
+        let read_len = self.task.eval_read_len(engine.manifest());
+        let mut outputs = Vec::with_capacity(dev.eval_cache.len());
+        for eb in &dev.eval_cache {
+            // same generic shape as the step: [base?] + state + tokens + [labels?]
+            let mut args: Vec<&Buffer> = Vec::with_capacity(4);
+            if let Some(base) = &dev.base_buf {
+                args.push(base);
+            }
+            args.push(state_ref);
+            args.push(&eb.tokens);
+            if let Some(l) = &eb.labels {
+                args.push(l);
+            }
+            let out = engine.run(self.profile.eval_entry, &args)?;
+            outputs.push(engine.read_f32(&out, 0, read_len)?);
+        }
+        let batches: Vec<&TaskBatch> = dev.eval_cache.iter().map(|e| &e.batch).collect();
+        self.task.fold_eval(&outputs, &batches)
+    }
+
+    /// Subspace redefinition (Algorithm 1 lines 21–27).
+    fn redefine(&mut self, step: usize) -> Result<()> {
+        let rho = self.controller.rho_at(step);
+        // TopK needs fresh gradient block scores
+        let use_scores = self.strategy == Strategy::TopK && self.profile.topk_scores
+            && self.dev.engine.has_entry("scores");
+        let scores: Option<Vec<f32>> = if use_scores {
+            let params = self.params_host()?;
+            let b = self.task.next_train();
+            let dev = &mut self.dev;
+            let pbuf = fresh_f32(&*dev.engine, &mut dev.stats, &params, &[params.len()])?;
+            let tbuf =
+                fresh_i32(&*dev.engine, &mut dev.stats, &b.tokens, &b.token_dims)?;
+            let out = dev.engine.run("scores", &[&pbuf, &tbuf])?;
+            Some(dev.engine.read_f32(&out, 0, dev.engine.manifest().score_len)?)
+        } else {
+            None
+        };
+        let strat = if self.strategy == Strategy::TopK && scores.is_none() {
+            // short runs / no scores entry: TopK degrades to Random
+            Strategy::Random
+        } else {
+            self.strategy
+        };
+        self.mask.redefine(strat, rho, scores.as_deref(), self.task.rng())?;
+
+        let man = self.dev.engine.manifest().clone();
+        let rendered = self.mask.render();
+        let DeviceState { engine, opt, stats, .. } = &mut self.dev;
+        if let OptState::Fused { state_buf, masks_buf } = opt {
+            // fresh upload, NOT an in-place overwrite: an async backend
+            // may still be consuming the old mask for an in-flight
+            // step, and this path is amortized over T >= 100 steps
+            *masks_buf = Some(fresh_f32(&**engine, stats, &rendered, &[man.mask_len])?);
+            if self.state_mgmt == StateMgmt::Reset {
+                // S = Reset: zero m/v of maskable params. (The fused
+                // kernel re-masks every step, so Project is automatic;
+                // Reset needs an explicit host pass.)
+                let mut state = engine.read_all_f32(state_buf)?;
+                let n = man.n_params;
+                for p in man.maskable() {
+                    state[n + p.offset..n + p.offset + p.size].fill(0.0);
+                    state[2 * n + p.offset..2 * n + p.offset + p.size].fill(0.0);
+                }
+                *state_buf = fresh_f32(&**engine, stats, &state, &[man.state_len])?;
+                self.t_since_reset = 0;
+            }
+            // S = Project: surviving blocks keep their moments because
+            // the kernel's `state * mask` already drops dead blocks.
+        }
+        Ok(())
+    }
+
+    /// Run the full training loop (Algorithm 1).
+    pub fn run(&mut self) -> Result<SessionResult> {
+        let total = Timer::start();
+        let mut evals = Vec::new();
+        let mut steps_log = Vec::new();
+        let mut memory = MemoryTracker::new();
+        let mut redefinitions = 0usize;
+        let periodic = self.opts.eval == EvalPolicy::Periodic;
+        let checkpoints = if periodic { eval_checkpoints(&self.cfg) } else { Vec::new() };
+        // Prefetch only when it cannot perturb the historical batch/RNG
+        // streams (see the module docs): frugal tasks whose sampling
+        // shares the redefinition RNG, and TopK runs whose `scores`
+        // pass draws from the training batch stream, run unprefetched.
+        let topk_scores_active = self.profile.frugal
+            && self.strategy == Strategy::TopK
+            && self.profile.topk_scores
+            && self.dev.engine.has_entry("scores");
+        let prefetch = self.opts.prefetch
+            && (!self.profile.frugal || self.task.independent_batch_rng())
+            && !topk_scores_active;
+        let mut pending: Option<TaskBatch> = None;
+        let mut last_loss = f64::NAN;
+        let mut final_score = None;
+
+        for step in 0..self.cfg.steps {
+            // --- dynamic control: ρ_k (Eq. 1) + redefinition check ---
+            let rho_k = self.controller.rho_at(step);
+            if self.profile.frugal && self.controller.is_redefinition_step(step) {
+                let t = std::time::Instant::now();
+                if step > 0 {
+                    self.redefine(step)?;
+                    redefinitions += 1;
+                }
+                self.timers.add("redefine", t.elapsed());
+            }
+
+            // --- the hybrid step, overlapped with next-batch prep ---
+            let batch = match pending.take() {
+                Some(b) => b,
+                None => self.task.next_train(),
+            };
+            self.t_since_reset += 1;
+            let scal = scalars_at(&self.cfg, step, self.t_since_reset).to_array();
+            let want_next = prefetch && step + 1 < self.cfg.steps;
+
+            let t = std::time::Instant::now();
+            let (step_res, next) = {
+                let dev = &mut self.dev;
+                let profile = &self.profile;
+                if want_next {
+                    // worker-prefetch only when batch prep is big
+                    // enough to amortize the spawn (join_for's gate);
+                    // below it both halves run serially, same values
+                    let task = &mut *self.task;
+                    par::join_for(
+                        batch.tokens.len(),
+                        || step_once(dev, profile, &scal, step, &batch),
+                        || Some(task.next_train()),
+                    )
+                } else {
+                    // nothing to prefetch: skip the worker spawn/join
+                    (step_once(dev, profile, &scal, step, &batch), None)
+                }
+            };
+            pending = next;
+            self.timers.add("step", t.elapsed());
+            let step_loss = step_res?;
+
+            if let Some(l) = step_loss {
+                last_loss = l as f64;
+                if self.opts.bail_on_divergence && !l.is_finite() {
+                    bail!("loss diverged at step {step}: {l}");
+                }
+            }
+
+            if self.opts.log_steps && step % self.cfg.log_every == 0 {
+                let loss = match step_loss {
+                    Some(l) => l,
+                    None => self.train_loss_now()?,
+                };
+                last_loss = loss as f64;
+                if step > 0 && self.opts.bail_on_divergence && !loss.is_finite() {
+                    bail!("loss diverged by step {step}: {loss}");
+                }
+                steps_log.push(StepLog {
+                    step,
+                    train_loss: loss,
+                    rho: rho_k,
+                    t_current: self.controller.t_current(),
+                });
+                if !self.quiet {
+                    info!(
+                        "[{}] step {:>6} loss {:.4} rho {:.3} T {}",
+                        self.profile.id, step, loss, rho_k, self.controller.t_current()
+                    );
+                }
+            }
+
+            match self.opts.eval {
+                // --- periodic validation: Eq. 2 / Eq. 3 + checkpoints ---
+                EvalPolicy::Periodic => {
+                    let at_eval = (step + 1) % self.cfg.n_eval == 0;
+                    let at_checkpoint = checkpoints.contains(&(step + 1));
+                    if at_eval || at_checkpoint || step + 1 == self.cfg.steps {
+                        let t = std::time::Instant::now();
+                        let out = self.evaluate()?;
+                        self.timers.add("eval", t.elapsed());
+                        if at_eval {
+                            self.controller.observe_val_loss(step + 1, out.val_loss);
+                        }
+                        let bytes = MemoryTracker::bytes_for(
+                            self.dev.engine.manifest(),
+                            self.profile.memory,
+                            if self.profile.frugal { Some(&self.mask) } else { None },
+                            rho_k,
+                        );
+                        memory.record(step + 1, bytes);
+                        final_score = out.score;
+                        evals.push(EvalPoint {
+                            step: step + 1,
+                            val_loss: out.val_loss,
+                            ppl: out.val_loss.exp(),
+                            memory_bytes: bytes,
+                            elapsed_s: total.secs(),
+                        });
+                        if !self.quiet {
+                            info!(
+                                "[{}] eval step {:>6} val_loss {:.4} ppl {:.2} mem {:.3}MB T {}",
+                                self.profile.id, step + 1, out.val_loss,
+                                out.val_loss.exp(), bytes as f64 / 1e6,
+                                self.controller.t_current()
+                            );
+                        }
+                    }
+                }
+                // --- fine-tuning cadence: loss readback only, at
+                // observation boundaries (reading the packed state
+                // transfers the whole buffer — see engine.rs) ---
+                EvalPolicy::FinalOnly => {
+                    let last_step = step + 1 == self.cfg.steps;
+                    if (self.profile.dynamic_t && (step + 1) % self.cfg.n_eval == 0)
+                        || last_step
+                    {
+                        if step_loss.is_none() {
+                            let slot =
+                                self.task.state_len(self.dev.engine.manifest()) - 1;
+                            if let OptState::Fused { state_buf, .. } = &self.dev.opt {
+                                last_loss =
+                                    self.dev.engine.read_f32(state_buf, slot, 1)?[0] as f64;
+                            }
+                        }
+                        if self.profile.dynamic_t && !last_step {
+                            self.controller.observe_val_loss(step + 1, last_loss);
+                        }
+                    }
+                }
+            }
+        }
+
+        if self.opts.eval == EvalPolicy::FinalOnly {
+            let t = std::time::Instant::now();
+            let out = self.evaluate()?;
+            self.timers.add("eval", t.elapsed());
+            final_score = out.score;
+        }
+
+        Ok(SessionResult {
+            evals,
+            steps: steps_log,
+            memory,
+            redefinitions,
+            total_time_s: total.secs(),
+            step_time_s: self.timers.total_secs("step"),
+            redef_time_s: self.timers.total_secs("redefine"),
+            eval_time_s: self.timers.total_secs("eval"),
+            t_events: self.controller.tee.events().to_vec(),
+            final_train_loss: last_loss,
+            final_score,
+            uploads: self.dev.stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_grid_fractions() {
+        let cfg = TrainConfig { steps: 2000, ..TrainConfig::default() };
+        assert_eq!(eval_checkpoints(&cfg), vec![40, 200, 400, 1000, 2000]);
+        let tiny = TrainConfig { steps: 10, ..TrainConfig::default() };
+        assert_eq!(eval_checkpoints(&tiny)[0], 1); // clamped to >= 1
+    }
+
+    #[test]
+    fn scalars_follow_lr_schedule() {
+        let cfg = TrainConfig { steps: 100, warmup_steps: 10, lr: 1e-3, lr_free: 1e-4,
+                                ..TrainConfig::default() };
+        let s = scalars_at(&cfg, 50, 51);
+        assert_eq!(s.lr_full, lr_at(&cfg, 50));
+        // lr_free keeps the schedule shape at 1/10 scale
+        assert!((s.lr_free - 0.1 * s.lr_full).abs() < 1e-9);
+        assert!((s.bc1 - (1.0 - 0.9f32.powi(51))).abs() < 1e-6);
+    }
+
+    #[test]
+    fn options_encode_driver_cadences() {
+        let pre = SessionOptions::pretraining();
+        assert_eq!(pre.eval, EvalPolicy::Periodic);
+        assert!(pre.log_steps && pre.bail_on_divergence && pre.prefetch);
+        let ft = SessionOptions::finetuning();
+        assert_eq!(ft.eval, EvalPolicy::FinalOnly);
+        assert!(!ft.log_steps && !ft.bail_on_divergence && ft.prefetch);
+    }
+}

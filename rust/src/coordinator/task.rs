@@ -1,0 +1,453 @@
+//! The task seam of the session layer: what a workload must supply for
+//! [`crate::coordinator::session::Session`] to drive Algorithm 1 over
+//! it. A task owns the data pipeline (batches + evaluation set), the
+//! trainable-state layout (full packed state vs LoRA adapter state) and
+//! the eval-output scoring; the session owns everything else — the
+//! backend, controllers, subspace mask, optimizer state, LR schedule
+//! and redefinition machinery. Adding a third workload means writing
+//! one `Task` impl, not a third copy of the training loop (pinned by
+//! `tests/session_task.rs`).
+//!
+//! Shipped impls: [`LmTask`] (next-token pre-training over the corpus
+//! pipeline), [`ClsTask`] (GLUE-style classification/regression) and
+//! [`LoraClsTask`] (adapter-only fine-tuning on a frozen backbone).
+
+use anyhow::{ensure, Result};
+
+use crate::config::TrainConfig;
+use crate::data::corpus::{CorpusGenerator, CorpusProfile};
+use crate::data::glue::{self, Example, TaskData, TaskSpec};
+use crate::data::loader::Loader;
+use crate::data::tokenizer::Tokenizer;
+use crate::model::init;
+use crate::runtime::Manifest;
+use crate::util::rng::Rng;
+
+/// Host-side labels of one batch: class ids, or regression targets
+/// when the task head is 1-dimensional.
+#[derive(Debug, Clone)]
+pub enum LabelData {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+/// One prepared host-side batch, ready to upload. Produced by
+/// [`Task::next_train`] / [`Task::eval_batch`] — possibly on a
+/// prefetch worker, overlapping the device step.
+#[derive(Debug, Clone)]
+pub struct TaskBatch {
+    /// row-major token ids
+    pub tokens: Vec<i32>,
+    /// dims of the token upload (e.g. `[batch, seq+1]` for LM)
+    pub token_dims: Vec<usize>,
+    /// labels buffer, absent for next-token tasks
+    pub labels: Option<LabelData>,
+}
+
+/// Aggregated outcome of one full evaluation pass.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOutcome {
+    /// mean validation loss (per token for LM, per batch for cls)
+    pub val_loss: f64,
+    /// task metric (GLUE score) when the task defines one
+    pub score: Option<f64>,
+}
+
+/// A workload the session can train end-to-end. Object-safe so the
+/// drivers can pick the impl at runtime.
+pub trait Task: Send {
+    /// Short name for diagnostics.
+    fn name(&self) -> &str;
+
+    /// Initial packed optimizer state for this task's trainable params
+    /// (`params‖m‖v‖loss`; LoRA tasks return the adapter state).
+    fn init_state(&self, man: &Manifest, seed: u64) -> Vec<f32>;
+
+    /// Frozen base params the step/eval entries take as their leading
+    /// argument (LoRA backbone); uploaded once by the session.
+    fn base_params(&self) -> Option<&[f32]> {
+        None
+    }
+
+    /// Length of the packed state vector (`3n+1`; the loss slot is the
+    /// last element). Defaults to the manifest's full-model state.
+    fn state_len(&self, man: &Manifest) -> usize {
+        man.state_len
+    }
+
+    /// The run's RNG. The session borrows it for subspace
+    /// redefinitions, so a task that samples batches from the same
+    /// stream (the fine-tuning drivers historically did) keeps its
+    /// exact redefine/shuffle interleaving.
+    fn rng(&mut self) -> &mut Rng;
+
+    /// `true` when batch sampling and the session's redefinition draws
+    /// come from independent RNG streams, so batches may be prefetched
+    /// across redefinition boundaries without perturbing either.
+    fn independent_batch_rng(&self) -> bool;
+
+    /// Produce the next training batch.
+    fn next_train(&mut self) -> TaskBatch;
+
+    /// Number of batches in one evaluation pass.
+    fn n_eval_batches(&self, cfg: &TrainConfig) -> usize;
+
+    /// Deterministic evaluation batch `i` (cacheable: the session
+    /// uploads each eval batch once and reuses the device buffers).
+    fn eval_batch(&self, i: usize) -> TaskBatch;
+
+    /// f32s to read back from the eval entry's output buffer.
+    fn eval_read_len(&self, man: &Manifest) -> usize;
+
+    /// Fold the raw per-batch eval outputs into a loss (+ score).
+    /// `batches[i]` is the host batch that produced `outputs[i]`.
+    fn fold_eval(&self, outputs: &[Vec<f32>], batches: &[&TaskBatch]) -> Result<EvalOutcome>;
+}
+
+// ---------------------------------------------------------------------------
+// LM pre-training
+// ---------------------------------------------------------------------------
+
+/// Next-token language modeling over the corpus → tokenizer → loader
+/// pipeline (the pre-training workload of Tables 1–2).
+pub struct LmTask {
+    train: Loader,
+    val: Loader,
+    /// redefinition RNG — deliberately independent of the loaders'
+    /// internal shuffle streams
+    rng: Rng,
+}
+
+impl LmTask {
+    pub fn new(cfg: &TrainConfig, man: &Manifest) -> Result<LmTask> {
+        ensure!(man.task == "lm", "LmTask drives LM presets, got task {:?}", man.task);
+        let profile = CorpusProfile::parse(&cfg.corpus)?;
+        let dims = man.model.clone();
+        // enough windows that eval is held out and epochs are not tiny:
+        // ~ (steps * batch / 4) windows, clamped for test speed
+        let want_windows = (cfg.steps * dims.batch / 4).clamp(64, 4096);
+        let n_words = want_windows * (dims.seq + 1); // ~1 token/word avg
+        let gen = CorpusGenerator::new(profile, (dims.vocab / 2).max(64), cfg.seed);
+        let corpus = gen.generate(n_words, cfg.seed ^ 1);
+        let tok = Tokenizer::train(&corpus.text, dims.vocab);
+        let ids = tok.encode(&corpus.text);
+        let (train, val) = Loader::split(ids, dims.batch, dims.seq, 0.1, cfg.seed);
+        Ok(LmTask { train, val, rng: Rng::new(cfg.seed ^ 0x7a11) })
+    }
+}
+
+impl Task for LmTask {
+    fn name(&self) -> &str {
+        "lm"
+    }
+
+    fn init_state(&self, man: &Manifest, seed: u64) -> Vec<f32> {
+        init::init_state(man, seed)
+    }
+
+    fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    fn independent_batch_rng(&self) -> bool {
+        true
+    }
+
+    fn next_train(&mut self) -> TaskBatch {
+        let b = self.train.next_batch();
+        TaskBatch {
+            tokens: b.tokens,
+            token_dims: vec![b.batch, b.seq_plus_1],
+            labels: None,
+        }
+    }
+
+    fn n_eval_batches(&self, cfg: &TrainConfig) -> usize {
+        cfg.val_batches
+    }
+
+    fn eval_batch(&self, i: usize) -> TaskBatch {
+        let b = self.val.eval_batch(i);
+        TaskBatch {
+            tokens: b.tokens,
+            token_dims: vec![b.batch, b.seq_plus_1],
+            labels: None,
+        }
+    }
+
+    fn eval_read_len(&self, _man: &Manifest) -> usize {
+        2 // (summed nll, token count)
+    }
+
+    fn fold_eval(&self, outputs: &[Vec<f32>], _batches: &[&TaskBatch]) -> Result<EvalOutcome> {
+        let mut sum_nll = 0f64;
+        let mut count = 0f64;
+        for v in outputs {
+            ensure!(v.len() == 2, "lm eval output must be (sum, count)");
+            sum_nll += v[0] as f64;
+            count += v[1] as f64;
+        }
+        Ok(EvalOutcome { val_loss: sum_nll / count.max(1.0), score: None })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GLUE-style classification / regression
+// ---------------------------------------------------------------------------
+
+/// GLUE-style fine-tuning workload (Table 3): fixed train/eval example
+/// sets, shuffled-epoch sampling, scored with the task's official
+/// metric. The sampling RNG doubles as the run RNG, preserving the
+/// fine-tuning driver's historical redefine/shuffle interleaving.
+pub struct ClsTask {
+    spec: &'static TaskSpec,
+    data: TaskData,
+    rng: Rng,
+    order: Vec<usize>,
+    cursor: usize,
+    batch: usize,
+    seq: usize,
+    n_cls: usize,
+}
+
+impl ClsTask {
+    pub fn new(spec: &'static TaskSpec, man: &Manifest, seed: u64) -> Result<ClsTask> {
+        ensure!(man.task == "cls", "ClsTask drives cls presets, got task {:?}", man.task);
+        let dims = man.model.clone();
+        let data = glue::generate(spec, dims.vocab, dims.seq, seed ^ 0x61ed);
+        let order: Vec<usize> = (0..data.train.len()).collect();
+        Ok(ClsTask {
+            spec,
+            data,
+            rng: Rng::new(seed),
+            order,
+            cursor: 0,
+            batch: dims.batch,
+            seq: dims.seq,
+            n_cls: dims.n_cls,
+        })
+    }
+
+    fn batchify(&self, examples: &[Example], idx: &[usize]) -> TaskBatch {
+        let mut toks = Vec::with_capacity(idx.len() * self.seq);
+        let mut li = Vec::with_capacity(idx.len());
+        let mut lf = Vec::with_capacity(idx.len());
+        for &i in idx {
+            toks.extend_from_slice(&examples[i].tokens);
+            li.push(examples[i].label_i);
+            lf.push(examples[i].label_f);
+        }
+        let labels = if self.n_cls == 1 { LabelData::F32(lf) } else { LabelData::I32(li) };
+        TaskBatch {
+            tokens: toks,
+            token_dims: vec![idx.len(), self.seq],
+            labels: Some(labels),
+        }
+    }
+}
+
+impl Task for ClsTask {
+    fn name(&self) -> &str {
+        self.spec.name
+    }
+
+    fn init_state(&self, man: &Manifest, seed: u64) -> Vec<f32> {
+        init::init_state(man, seed)
+    }
+
+    fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    fn independent_batch_rng(&self) -> bool {
+        false // sampling and redefinitions share one stream
+    }
+
+    fn next_train(&mut self) -> TaskBatch {
+        let idx: Vec<usize> = (0..self.batch)
+            .map(|_| {
+                if self.cursor == 0 {
+                    self.rng.shuffle(&mut self.order);
+                }
+                let i = self.order[self.cursor];
+                self.cursor = (self.cursor + 1) % self.order.len();
+                i
+            })
+            .collect();
+        self.batchify(&self.data.train, &idx)
+    }
+
+    fn n_eval_batches(&self, _cfg: &TrainConfig) -> usize {
+        self.data.eval.len() / self.batch
+    }
+
+    fn eval_batch(&self, i: usize) -> TaskBatch {
+        let idx: Vec<usize> = (0..self.batch).map(|j| i * self.batch + j).collect();
+        self.batchify(&self.data.eval, &idx)
+    }
+
+    fn eval_read_len(&self, _man: &Manifest) -> usize {
+        1 + self.batch * self.n_cls // loss + per-example logits
+    }
+
+    fn fold_eval(&self, outputs: &[Vec<f32>], batches: &[&TaskBatch]) -> Result<EvalOutcome> {
+        let mut pred_cls = Vec::new();
+        let mut truth_cls = Vec::new();
+        let mut pred_reg = Vec::new();
+        let mut truth_reg = Vec::new();
+        let mut losses = Vec::new();
+        for (v, tb) in outputs.iter().zip(batches) {
+            ensure!(v.len() == 1 + self.batch * self.n_cls, "bad cls eval output len");
+            losses.push(v[0] as f64);
+            for b in 0..self.batch {
+                let logits = &v[1 + b * self.n_cls..1 + (b + 1) * self.n_cls];
+                match tb.labels.as_ref() {
+                    Some(LabelData::F32(lf)) => {
+                        pred_reg.push(logits[0] as f64);
+                        truth_reg.push(lf[b] as f64);
+                    }
+                    Some(LabelData::I32(li)) => {
+                        let pred = logits
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .unwrap()
+                            .0;
+                        pred_cls.push(pred);
+                        truth_cls.push(li[b] as usize);
+                    }
+                    None => anyhow::bail!("cls eval batch carries no labels"),
+                }
+            }
+        }
+        let score = glue::score(self.spec, &pred_cls, &truth_cls, &pred_reg, &truth_reg);
+        Ok(EvalOutcome {
+            val_loss: crate::util::stats::mean(&losses),
+            score: Some(score),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LoRA fine-tuning
+// ---------------------------------------------------------------------------
+
+/// Adapter-only fine-tuning on a frozen backbone: the classification
+/// workload of [`ClsTask`] with the trainable state swapped for the
+/// rank-`r` adapter pairs and the backbone passed as a frozen base
+/// buffer.
+pub struct LoraClsTask {
+    inner: ClsTask,
+    base: Vec<f32>,
+}
+
+impl LoraClsTask {
+    pub fn new(spec: &'static TaskSpec, man: &Manifest, seed: u64) -> Result<LoraClsTask> {
+        ensure!(!man.lora_params.is_empty(),
+                "LoraClsTask needs a manifest with lora_params (use a *_lora artifact)");
+        let base = init::init_state(man, seed)[..man.n_params].to_vec();
+        Ok(LoraClsTask { inner: ClsTask::new(spec, man, seed)?, base })
+    }
+}
+
+impl Task for LoraClsTask {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn init_state(&self, man: &Manifest, seed: u64) -> Vec<f32> {
+        init::init_lora_state(man, seed)
+    }
+
+    fn base_params(&self) -> Option<&[f32]> {
+        Some(&self.base)
+    }
+
+    fn state_len(&self, man: &Manifest) -> usize {
+        man.lora_state_len()
+    }
+
+    fn rng(&mut self) -> &mut Rng {
+        self.inner.rng()
+    }
+
+    fn independent_batch_rng(&self) -> bool {
+        self.inner.independent_batch_rng()
+    }
+
+    fn next_train(&mut self) -> TaskBatch {
+        self.inner.next_train()
+    }
+
+    fn n_eval_batches(&self, cfg: &TrainConfig) -> usize {
+        self.inner.n_eval_batches(cfg)
+    }
+
+    fn eval_batch(&self, i: usize) -> TaskBatch {
+        self.inner.eval_batch(i)
+    }
+
+    fn eval_read_len(&self, man: &Manifest) -> usize {
+        self.inner.eval_read_len(man)
+    }
+
+    fn fold_eval(&self, outputs: &[Vec<f32>], batches: &[&TaskBatch]) -> Result<EvalOutcome> {
+        self.inner.fold_eval(outputs, batches)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::{self, ExecBackend};
+
+    #[test]
+    fn lm_task_batches_have_lm_shape() {
+        let cfg = TrainConfig {
+            preset: "nano".into(),
+            backend: "sim".into(),
+            steps: 20,
+            ..TrainConfig::default()
+        };
+        let engine = backend::load("sim", "artifacts", "nano", &["eval"]).unwrap();
+        let man = engine.manifest().clone();
+        let mut t = LmTask::new(&cfg, &man).unwrap();
+        let b = t.next_train();
+        assert_eq!(b.token_dims, vec![man.model.batch, man.model.seq + 1]);
+        assert_eq!(b.tokens.len(), man.model.batch * (man.model.seq + 1));
+        assert!(b.labels.is_none());
+        assert!(t.independent_batch_rng());
+        assert_eq!(t.eval_read_len(&man), 2);
+    }
+
+    #[test]
+    fn cls_task_batches_carry_labels() {
+        let engine = backend::load("sim", "artifacts", "nano.cls2", &["eval"]).unwrap();
+        let man = engine.manifest().clone();
+        let spec = glue::task("SST-2").unwrap();
+        let mut t = ClsTask::new(spec, &man, 3).unwrap();
+        let b = t.next_train();
+        assert_eq!(b.token_dims, vec![man.model.batch, man.model.seq]);
+        assert!(matches!(b.labels, Some(LabelData::I32(_))));
+        assert!(!t.independent_batch_rng());
+        // regression task routes f32 labels
+        let spec_r = glue::task("STS-B").unwrap();
+        let engine_r = backend::load("sim", "artifacts", "nano.cls1", &["eval"]).unwrap();
+        let mut tr = ClsTask::new(spec_r, engine_r.manifest(), 3).unwrap();
+        assert!(matches!(tr.next_train().labels, Some(LabelData::F32(_))));
+    }
+
+    #[test]
+    fn lora_task_overrides_state_layout() {
+        let engine = backend::load("sim", "artifacts", "nano.cls2_lora", &["lora_eval"]).unwrap();
+        let man = engine.manifest().clone();
+        let spec = glue::task("SST-2").unwrap();
+        let t = LoraClsTask::new(spec, &man, 1).unwrap();
+        assert_eq!(t.state_len(&man), man.lora_state_len());
+        assert_eq!(t.base_params().unwrap().len(), man.n_params);
+        assert_eq!(t.init_state(&man, 0).len(), man.lora_state_len());
+        // non-lora manifest is rejected
+        let plain = backend::load("sim", "artifacts", "nano.cls2", &["eval"]).unwrap();
+        assert!(LoraClsTask::new(spec, plain.manifest(), 1).is_err());
+    }
+}

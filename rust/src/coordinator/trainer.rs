@@ -1,54 +1,22 @@
-//! The integrated AdaFRUGAL training loop — Algorithm 1 of the paper,
-//! orchestrated from rust with the compute in AOT-compiled HLO.
-//!
-//! Fused path (AdamW + FRUGAL family): the packed state lives in ONE
-//! device buffer that is fed back into the fused step executable every
-//! iteration; per-step host traffic is tokens (KBs), the 8 scalars, and
-//! a 4-byte loss readback. Subspace redefinition (every T_k steps)
-//! re-renders the mask on host, optionally resets/projects Adam state,
-//! and re-uploads — amortized over T ≥ 100 steps.
-//!
-//! Host path (GaLore/BAdam baselines): gradients come from the `grad`
-//! entry, the update runs on host (these baselines are not the paper's
-//! hot path). The update rule is constructed through the optimizer
-//! registry (`optim::build`, keyed by `Method::host_optimizer`) and
-//! driven through the `optim::Optimizer` trait — the trainer itself has
-//! no per-method optimizer dispatch.
+//! Pre-training driver — a thin adapter over the task-generic
+//! [`Session`] (`coordinator::session`), which owns the single
+//! implementation of Algorithm 1. This type contributes exactly three
+//! things: the LM artifact-name scheme, the [`LmTask`] data pipeline,
+//! and the [`RunResult`] projection the experiment harness consumes.
+//! All control logic — dynamic ρ/T, subspace redefinition, fused vs
+//! host optimizer state, LR schedule, eval cadence, buffer reuse and
+//! batch prefetch — lives in the session layer.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::config::TrainConfig;
-use crate::controller::AdaFrugalController;
 use crate::coordinator::memory_tracker::MemoryTracker;
 use crate::coordinator::method::Method;
-use crate::data::corpus::{CorpusGenerator, CorpusProfile};
-use crate::data::loader::{Batch, Loader};
-use crate::data::tokenizer::Tokenizer;
-use crate::info;
-use crate::model::init;
-use crate::optim::{self, OptimBuild, Optimizer, StateMgmt, StepScalars};
-use crate::projection::{Strategy, SubspaceMask};
-use crate::runtime::backend::{self, Buffer, ExecBackend};
-use crate::util::rng::Rng;
-use crate::util::timer::PhaseTimer;
+use crate::coordinator::session::{Session, SessionOptions, UploadStats};
+use crate::coordinator::task::LmTask;
+use crate::runtime::backend;
 
-/// One evaluation checkpoint in the run history.
-#[derive(Debug, Clone, Copy)]
-pub struct EvalPoint {
-    pub step: usize,
-    pub val_loss: f64,
-    pub ppl: f64,
-    pub memory_bytes: usize,
-    pub elapsed_s: f64,
-}
-
-#[derive(Debug, Clone, Copy, Default)]
-pub struct StepLog {
-    pub step: usize,
-    pub train_loss: f32,
-    pub rho: f64,
-    pub t_current: usize,
-}
+pub use crate::coordinator::session::{EvalPoint, StepLog};
 
 /// Result of a full run — everything the experiment harness needs to
 /// print a table row or a figure series.
@@ -64,6 +32,8 @@ pub struct RunResult {
     pub redef_time_s: f64,
     pub eval_time_s: f64,
     pub t_events: Vec<crate::controller::TEvent>,
+    /// host→device upload accounting (buffer-reuse diagnostics)
+    pub uploads: UploadStats,
 }
 
 impl RunResult {
@@ -81,29 +51,10 @@ impl RunResult {
     }
 }
 
-enum OptState {
-    /// backend-resident packed state (fused path)
-    Fused { state_buf: Buffer, masks_buf: Option<Buffer> },
-    /// host-resident params + a registry-built update rule fed by the
-    /// `grad` entry (GaLore/BAdam baselines — not the paper's hot path)
-    Host { params: Vec<f32>, opt: Box<dyn Optimizer> },
-}
-
 pub struct Trainer {
     pub cfg: TrainConfig,
     pub method: Method,
-    engine: Box<dyn ExecBackend>,
-    controller: AdaFrugalController,
-    mask: SubspaceMask,
-    strategy: Strategy,
-    state_mgmt: StateMgmt,
-    opt: OptState,
-    train: Loader,
-    val: Loader,
-    rng: Rng,
-    /// steps since the last optimizer-state reset (bias correction)
-    t_since_reset: usize,
-    timers: PhaseTimer,
+    session: Session,
     pub quiet: bool,
 }
 
@@ -113,362 +64,68 @@ impl Trainer {
         let engine = backend::load(&cfg.backend, &cfg.artifacts_dir, &cfg.preset,
                                    &method.entries())
             .with_context(|| format!("loading backend for {}", cfg.preset))?;
-        let man = engine.manifest();
-        anyhow::ensure!(man.task == "lm", "Trainer drives LM presets; use FineTuner for cls");
-
-        // --- data pipeline: corpus -> tokenizer -> loaders ---
-        let profile = CorpusProfile::parse(&cfg.corpus)?;
-        let dims = man.model.clone();
-        // enough windows that eval is held out and epochs are not tiny:
-        // ~ (steps * batch / 4) windows, clamped for test speed
-        let want_windows = (cfg.steps * dims.batch / 4).clamp(64, 4096);
-        let n_words = want_windows * (dims.seq + 1); // ~1 token/word avg
-        let gen = CorpusGenerator::new(profile, (dims.vocab / 2).max(64), cfg.seed);
-        let corpus = gen.generate(n_words, cfg.seed ^ 1);
-        let tok = Tokenizer::train(&corpus.text, dims.vocab);
-        let ids = tok.encode(&corpus.text);
-        let (train, val) = Loader::split(ids, dims.batch, dims.seq, 0.1, cfg.seed);
-
-        // --- controller + subspace ---
-        let controller =
-            AdaFrugalController::from_config(&cfg, method.dynamic_rho(), method.dynamic_t());
-        let mut rng = Rng::new(cfg.seed ^ 0x7a11);
-        let mut mask = SubspaceMask::new(man);
-        let strategy = Strategy::parse(&cfg.strategy)?;
-        let state_mgmt = StateMgmt::parse(&cfg.state_mgmt)?;
-        if method.is_frugal_family() {
-            // initial projector (Algorithm 1 line 2); random at step 0
-            // even under TopK (no gradients exist yet)
-            let s0 = if strategy == Strategy::TopK { Strategy::Random } else { strategy };
-            mask.redefine(s0, controller.rho_at(0), None, &mut rng)?;
-        }
-
-        // --- optimizer state: fused (device) or registry-built host ---
-        let state = init::init_state(man, cfg.seed);
-        let opt = match method.host_optimizer() {
-            Some(name) => OptState::Host {
-                params: state[..man.n_params].to_vec(),
-                opt: optim::build(name, man, &OptimBuild::from_config(&cfg))?,
-            },
-            None => {
-                let state_buf = engine.upload_f32(&state, &[man.state_len])?;
-                let masks_buf = if method.is_frugal_family() {
-                    Some(engine.upload_f32(&mask.render(), &[man.mask_len])?)
-                } else {
-                    None
-                };
-                OptState::Fused { state_buf, masks_buf }
-            }
-        };
-
-        Ok(Trainer {
-            cfg,
-            method,
-            state_mgmt,
-            engine,
-            controller,
-            mask,
-            strategy,
-            opt,
-            train,
-            val,
-            rng,
-            t_since_reset: 0,
-            timers: PhaseTimer::new(),
-            quiet: false,
-        })
+        anyhow::ensure!(engine.manifest().task == "lm",
+                        "Trainer drives LM presets; use FineTuner for cls");
+        let task = LmTask::new(&cfg, engine.manifest())?;
+        let session = Session::new(cfg.clone(), method.profile(), engine, Box::new(task),
+                                   SessionOptions::pretraining())?;
+        Ok(Trainer { cfg, method, session, quiet: false })
     }
 
     pub fn manifest(&self) -> &crate::runtime::Manifest {
-        self.engine.manifest()
+        self.session.manifest()
     }
 
     /// Override the ρ schedule (ablations: cosine/step decay shapes).
     pub fn set_rho_schedule(&mut self, s: crate::controller::RhoSchedule) {
-        self.controller.rho = s;
+        self.session.set_rho_schedule(s);
     }
 
-    /// Learning rate at step k: linear warmup + cosine decay.
+    /// Learning rate at step k: linear warmup + cosine decay (the
+    /// session layer's single implementation).
     pub fn lr_at(&self, step: usize) -> f32 {
-        let c = &self.cfg;
-        if step < c.warmup_steps {
-            return c.lr * (step + 1) as f32 / c.warmup_steps as f32;
-        }
-        let progress = (step - c.warmup_steps) as f32
-            / (c.steps.saturating_sub(c.warmup_steps)).max(1) as f32;
-        let min_lr = c.lr * c.lr_min_ratio;
-        min_lr + 0.5 * (c.lr - min_lr) * (1.0 + (std::f32::consts::PI * progress).cos())
-    }
-
-    fn scalars_at(&self, step: usize) -> StepScalars {
-        let c = &self.cfg;
-        let lr = self.lr_at(step);
-        let lr_free = c.lr_free * (lr / c.lr); // same schedule shape
-        StepScalars::new(lr, lr_free, c.weight_decay, c.beta1, c.beta2, c.eps,
-                         self.t_since_reset)
-    }
-
-    fn upload_batch(&self, b: &Batch) -> Result<Buffer> {
-        self.engine.upload_i32(&b.tokens, &[b.batch, b.seq_plus_1])
+        crate::coordinator::session::lr_at(&self.cfg, step)
     }
 
     /// Validation loss over `val_batches` deterministic batches.
     pub fn evaluate(&mut self) -> Result<f64> {
-        let man_state_len = self.engine.manifest().state_len;
-        let n_params = self.engine.manifest().n_params;
-        // build a state buffer view for eval
-        let state_buf_owned;
-        let state_buf: &Buffer = match &self.opt {
-            OptState::Fused { state_buf, .. } => state_buf,
-            OptState::Host { params, .. } => {
-                let mut state = vec![0f32; man_state_len];
-                state[..n_params].copy_from_slice(params);
-                state_buf_owned = self.engine.upload_f32(&state, &[man_state_len])?;
-                &state_buf_owned
-            }
-        };
-        let mut sum_nll = 0f64;
-        let mut count = 0f64;
-        for i in 0..self.cfg.val_batches {
-            let b = self.val.eval_batch(i);
-            let tokens = self.upload_batch(&b)?;
-            let out = self.engine.run("eval", &[state_buf, &tokens])?;
-            let v = self.engine.read_f32(&out, 0, 2)?;
-            sum_nll += v[0] as f64;
-            count += v[1] as f64;
-        }
-        Ok(sum_nll / count.max(1.0))
-    }
-
-    /// Subspace redefinition (Algorithm 1 lines 21–27).
-    fn redefine(&mut self, step: usize) -> Result<()> {
-        let rho = self.controller.rho_at(step);
-        // TopK needs fresh gradient block scores
-        let scores: Option<Vec<f32>> = if self.strategy == Strategy::TopK {
-            let params = self.params_host()?;
-            let pbuf = self.engine.upload_f32(&params, &[params.len()])?;
-            let b = self.train.next_batch();
-            let tokens = self.upload_batch(&b)?;
-            let out = self.engine.run("scores", &[&pbuf, &tokens])?;
-            Some(self.engine.read_f32(&out, 0, self.engine.manifest().score_len)?)
-        } else {
-            None
-        };
-        self.mask.redefine(self.strategy, rho, scores.as_deref(), &mut self.rng)?;
-
-        if let OptState::Fused { state_buf, masks_buf } = &mut self.opt {
-            *masks_buf = Some(
-                self.engine
-                    .upload_f32(&self.mask.render(), &[self.engine.manifest().mask_len])?,
-            );
-            if self.state_mgmt == StateMgmt::Reset {
-                // S = Reset: zero m/v of maskable params. (The fused
-                // kernel re-masks every step, so Project is automatic;
-                // Reset needs an explicit host pass.)
-                let man = self.engine.manifest().clone();
-                let mut state = self.engine.read_all_f32(state_buf)?;
-                let n = man.n_params;
-                for p in man.maskable() {
-                    state[n + p.offset..n + p.offset + p.size].fill(0.0);
-                    state[2 * n + p.offset..2 * n + p.offset + p.size].fill(0.0);
-                }
-                *state_buf = self.engine.upload_f32(&state, &[man.state_len])?;
-                self.t_since_reset = 0;
-            }
-            // S = Project: surviving blocks keep their moments because
-            // the kernel's `state * mask` already drops dead blocks.
-        }
-        Ok(())
+        Ok(self.session.evaluate()?.val_loss)
     }
 
     /// Download current params (fused path) or clone host params.
     pub fn params_host(&self) -> Result<Vec<f32>> {
-        let n = self.engine.manifest().n_params;
-        match &self.opt {
-            OptState::Fused { state_buf, .. } => self.engine.read_f32(state_buf, 0, n),
-            OptState::Host { params, .. } => Ok(params.clone()),
-        }
+        self.session.params_host()
     }
 
     /// Restore params (e.g. from a checkpoint) into the live state,
     /// clearing optimizer moments.
     pub fn restore_params(&mut self, params: &[f32]) -> Result<()> {
-        let man = self.engine.manifest().clone();
-        anyhow::ensure!(params.len() == man.n_params, "param size mismatch");
-        match &mut self.opt {
-            OptState::Fused { state_buf, .. } => {
-                let mut state = vec![0f32; man.state_len];
-                state[..man.n_params].copy_from_slice(params);
-                *state_buf = self.engine.upload_f32(&state, &[man.state_len])?;
-            }
-            OptState::Host { params: p, .. } => {
-                p.copy_from_slice(params);
-            }
-        }
-        self.t_since_reset = 0;
-        Ok(())
+        self.session.restore_params(params)
     }
 
-    /// One optimizer step at `step`. On the fused path the loss stays
-    /// on device (reading it would transfer the whole state buffer —
-    /// CopyRawToHost is unimplemented in this PJRT build); returns None
-    /// there and the trainer samples the loss at log boundaries via
-    /// `train_loss_now`. Host-path methods get the loss for free.
-    fn step_once(&mut self, step: usize) -> Result<Option<f32>> {
-        self.t_since_reset += 1;
-        let scal = self.scalars_at(step).to_array();
-        let b = self.train.next_batch();
-        match &mut self.opt {
-            OptState::Fused { state_buf, masks_buf } => {
-                let tokens = self.engine.upload_i32(&b.tokens, &[b.batch, b.seq_plus_1])?;
-                let scal_buf = self.engine.upload_f32(&scal, &[8])?;
-                let out = if self.method.is_frugal_family() {
-                    let masks = masks_buf.as_ref().context("mask buffer missing")?;
-                    self.engine
-                        .run("frugal", &[state_buf, masks, &scal_buf, &tokens])?
-                } else {
-                    self.engine.run("adamw", &[state_buf, &scal_buf, &tokens])?
-                };
-                *state_buf = out;
-                Ok(None)
-            }
-            OptState::Host { params, opt } => {
-                let pbuf = self.engine.upload_f32(params, &[params.len()])?;
-                let tokens = self.engine.upload_i32(&b.tokens, &[b.batch, b.seq_plus_1])?;
-                let out = self.engine.run("grad", &[&pbuf, &tokens])?;
-                let gl = self.engine.read_all_f32(&out)?;
-                let n = params.len();
-                let s = StepScalars::new(scal[0], scal[1], scal[2], scal[3], scal[4],
-                                         scal[5], step + 1);
-                opt.step(self.engine.manifest(), params, &gl[..n], None, &s)?;
-                Ok(Some(gl[n]))
-            }
-        }
-    }
-
-    /// Last recorded training loss: on the fused path, one state
-    /// download (log boundaries only).
-    fn train_loss_now(&self) -> Result<f32> {
-        match &self.opt {
-            OptState::Fused { state_buf, .. } => {
-                let len = self.engine.manifest().state_len;
-                Ok(self.engine.read_f32(state_buf, len - 1, 1)?[0])
-            }
-            _ => Ok(f32::NAN), // host paths always return Some(loss)
-        }
-    }
-
-    /// Run the full training loop (Algorithm 1).
+    /// Run the full training loop (Algorithm 1) through the session.
     pub fn run(&mut self) -> Result<RunResult> {
-        let total = crate::util::timer::Timer::start();
-        let mut evals = Vec::new();
-        let mut steps_log = Vec::new();
-        let mut memory = MemoryTracker::new();
-        let mut redefinitions = 0usize;
-        let eval_checkpoints = self.eval_checkpoints();
-
-        for step in 0..self.cfg.steps {
-            // --- dynamic control: ρ_k (Eq. 1) + redefinition check ---
-            let rho_k = self.controller.rho_at(step);
-            if self.method.is_frugal_family() && self.controller.is_redefinition_step(step)
-            {
-                let t = std::time::Instant::now();
-                if step > 0 {
-                    self.redefine(step)?;
-                    redefinitions += 1;
-                }
-                self.timers.add("redefine", t.elapsed());
-            }
-
-            // --- the hybrid step ---
-            let t = std::time::Instant::now();
-            let step_loss = self.step_once(step)?;
-            self.timers.add("step", t.elapsed());
-
-            if let Some(l) = step_loss {
-                if !l.is_finite() {
-                    bail!("loss diverged at step {step}: {l}");
-                }
-            }
-
-            if step % self.cfg.log_every == 0 {
-                let loss = match step_loss {
-                    Some(l) => l,
-                    None => self.train_loss_now()?,
-                };
-                if step > 0 && !loss.is_finite() {
-                    bail!("loss diverged by step {step}: {loss}");
-                }
-                steps_log.push(StepLog {
-                    step,
-                    train_loss: loss,
-                    rho: rho_k,
-                    t_current: self.controller.t_current(),
-                });
-                if !self.quiet {
-                    info!(
-                        "[{}] step {:>6} loss {:.4} rho {:.3} T {}",
-                        self.method.id(), step, loss, rho_k, self.controller.t_current()
-                    );
-                }
-            }
-
-            // --- periodic validation: Eq. 2 / Eq. 3 + table checkpoints ---
-            let at_eval = (step + 1) % self.cfg.n_eval == 0;
-            let at_checkpoint = eval_checkpoints.contains(&(step + 1));
-            if at_eval || at_checkpoint || step + 1 == self.cfg.steps {
-                let t = std::time::Instant::now();
-                let val_loss = self.evaluate()?;
-                self.timers.add("eval", t.elapsed());
-                if at_eval {
-                    self.controller.observe_val_loss(step + 1, val_loss);
-                }
-                let bytes = MemoryTracker::bytes_now(
-                    self.engine.manifest(),
-                    self.method,
-                    if self.method.is_frugal_family() { Some(&self.mask) } else { None },
-                    rho_k,
-                );
-                memory.record(step + 1, bytes);
-                evals.push(EvalPoint {
-                    step: step + 1,
-                    val_loss,
-                    ppl: val_loss.exp(),
-                    memory_bytes: bytes,
-                    elapsed_s: total.secs(),
-                });
-                if !self.quiet {
-                    info!(
-                        "[{}] eval step {:>6} val_loss {:.4} ppl {:.2} mem {:.3}MB T {}",
-                        self.method.id(), step + 1, val_loss, val_loss.exp(),
-                        bytes as f64 / 1e6, self.controller.t_current()
-                    );
-                }
-            }
-        }
-
+        self.session.quiet = self.quiet;
+        let r = self.session.run()?;
         Ok(RunResult {
             method: self.method,
-            evals,
-            steps: steps_log,
-            memory,
-            redefinitions,
-            total_time_s: total.secs(),
-            step_time_s: self.timers.total_secs("step"),
-            redef_time_s: self.timers.total_secs("redefine"),
-            eval_time_s: self.timers.total_secs("eval"),
-            t_events: self.controller.tee.events().to_vec(),
+            evals: r.evals,
+            steps: r.steps,
+            memory: r.memory,
+            redefinitions: r.redefinitions,
+            total_time_s: r.total_time_s,
+            step_time_s: r.step_time_s,
+            redef_time_s: r.redef_time_s,
+            eval_time_s: r.eval_time_s,
+            t_events: r.t_events,
+            uploads: r.uploads,
         })
     }
 
     /// Table-style checkpoint steps: {2%, 10%, 20%, 50%, 100%} of the
     /// run — the paper's 4k/20k/40k/100k/200k at 1:100 scale.
     pub fn eval_checkpoints(&self) -> Vec<usize> {
-        let s = self.cfg.steps;
-        [0.02, 0.10, 0.20, 0.50, 1.0]
-            .iter()
-            .map(|f| ((s as f64 * f).round() as usize).max(1))
-            .collect()
+        crate::coordinator::session::eval_checkpoints(&self.cfg)
     }
 }
 
@@ -478,20 +135,11 @@ mod tests {
 
     #[test]
     fn lr_schedule_shape() {
-        // exercise the schedule math without loading artifacts
+        // exercise the REAL schedule (session::lr_at, the one the
+        // drivers delegate to) without loading artifacts
         let cfg = TrainConfig { steps: 1000, warmup_steps: 100, lr: 1e-3,
                                 lr_min_ratio: 0.1, ..TrainConfig::default() };
-        // reproduce the formula standalone (Trainer::lr_at is a method;
-        // we inline the same math to pin it)
-        let lr_at = |step: usize| -> f32 {
-            if step < cfg.warmup_steps {
-                return cfg.lr * (step + 1) as f32 / cfg.warmup_steps as f32;
-            }
-            let progress = (step - cfg.warmup_steps) as f32
-                / (cfg.steps - cfg.warmup_steps).max(1) as f32;
-            let min_lr = cfg.lr * cfg.lr_min_ratio;
-            min_lr + 0.5 * (cfg.lr - min_lr) * (1.0 + (std::f32::consts::PI * progress).cos())
-        };
+        let lr_at = |step: usize| crate::coordinator::session::lr_at(&cfg, step);
         assert!(lr_at(0) < lr_at(50));
         assert!((lr_at(99) - 1e-3).abs() < 1e-5);
         assert!(lr_at(500) < lr_at(100));

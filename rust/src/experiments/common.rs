@@ -107,6 +107,12 @@ pub fn summary_json(cfg: &TrainConfig, r: &RunResult) -> Value {
         ("memory_first", json::num(r.memory.first_bytes() as f64)),
         ("memory_last", json::num(r.memory.last_bytes() as f64)),
         ("memory_peak", json::num(r.memory.peak_bytes as f64)),
+        // session-layer traffic accounting (buffer-reuse trajectory)
+        ("uploads", json::num(r.uploads.uploads as f64)),
+        ("upload_reuses", json::num(r.uploads.reuses as f64)),
+        ("upload_bytes", json::num(r.uploads.bytes as f64)),
+        ("steps_per_sec",
+         json::num(cfg.steps as f64 / r.step_time_s.max(1e-9))),
     ])
 }
 

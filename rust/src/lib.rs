@@ -8,7 +8,10 @@
 //! - **Layer 3 (this crate)** — the training coordinator: the paper's
 //!   contribution (dynamic state-full-ratio ρ and loss-aware update
 //!   frequency T, [`controller`]), Algorithm 1's integrated loop
-//!   ([`coordinator`]), the projection subsystem ([`projection`]), the
+//!   implemented once in the task-generic session layer
+//!   ([`coordinator::session`], parameterized by
+//!   [`coordinator::task::Task`]; the `Trainer`/`FineTuner` drivers are
+//!   thin adapters), the projection subsystem ([`projection`]), the
 //!   baseline optimizer zoo ([`optim`]), the data pipeline ([`data`]),
 //!   the optimizer-memory accounting model ([`model`]), and the
 //!   experiment harness ([`experiments`]).

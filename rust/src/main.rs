@@ -135,6 +135,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         result.total_time_s, result.step_time_s, result.redef_time_s, result.eval_time_s,
         result.redefinitions
     );
+    println!(
+        "uploads: {} fresh + {} reused in place ({:.2} MB shipped, {:.1} steps/s)",
+        result.uploads.uploads,
+        result.uploads.reuses,
+        result.uploads.bytes as f64 / 1e6,
+        cfg.steps as f64 / result.step_time_s.max(1e-9)
+    );
     for e in &result.t_events {
         println!("  T event @step {}: {} -> {} (dL_rel {:.5})",
                  e.step, e.old_t, e.new_t, e.delta_l_rel);

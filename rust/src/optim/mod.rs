@@ -78,6 +78,22 @@ impl StepScalars {
         [self.lr_full, self.lr_free, self.wd, self.beta1, self.beta2,
          self.eps, self.bc1, self.bc2]
     }
+
+    /// Inverse of [`StepScalars::to_array`] — decode the 8-scalar step
+    /// ABI (used by the sim backend and the session's host step, so the
+    /// scalar order is pinned in exactly one place).
+    pub fn from_array(a: [f32; 8]) -> Self {
+        StepScalars {
+            lr_full: a[0],
+            lr_free: a[1],
+            wd: a[2],
+            beta1: a[3],
+            beta2: a[4],
+            eps: a[5],
+            bc1: a[6],
+            bc2: a[7],
+        }
+    }
 }
 
 /// Subspace view handed to mask-aware optimizers: the live block mask
@@ -284,6 +300,8 @@ mod tests {
         assert_eq!(a[2], 0.1);
         assert!((a[6] - (1.0 - 0.81)).abs() < 1e-6);
         assert!((a[7] - (1.0 - 0.999f32 * 0.999)).abs() < 1e-6);
+        let r = StepScalars::from_array(a);
+        assert_eq!(r.to_array(), a, "from_array must invert to_array");
     }
 
     #[test]

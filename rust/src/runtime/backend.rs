@@ -20,6 +20,7 @@
 //! [`load`], keeping the coordinator free of backend-specific code.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::{bail, ensure, Result};
 use xla::PjRtBuffer;
@@ -93,6 +94,27 @@ pub trait ExecBackend: Send {
 
     fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer>;
 
+    /// Upload into a reusable slot: when `slot` already holds a
+    /// compatible buffer from this backend (same dtype, length and
+    /// dims), overwrite its contents in place instead of allocating.
+    /// Returns `true` when the existing allocation was reused. The
+    /// default falls back to a fresh upload, so backends without
+    /// in-place writes stay correct — just without the reuse win. The
+    /// session layer routes every per-step upload (scalars, tokens,
+    /// labels, host-path params) through these slots.
+    fn upload_f32_into(&self, slot: &mut Option<Buffer>, data: &[f32],
+                       dims: &[usize]) -> Result<bool> {
+        *slot = Some(self.upload_f32(data, dims)?);
+        Ok(false)
+    }
+
+    /// i32 sibling of [`ExecBackend::upload_f32_into`].
+    fn upload_i32_into(&self, slot: &mut Option<Buffer>, data: &[i32],
+                       dims: &[usize]) -> Result<bool> {
+        *slot = Some(self.upload_i32(data, dims)?);
+        Ok(false)
+    }
+
     /// Read `len` f32s starting at flat `offset`.
     fn read_f32(&self, buf: &Buffer, offset: usize, len: usize) -> Result<Vec<f32>> {
         let all = self.read_all_f32(buf)?;
@@ -147,6 +169,128 @@ pub fn load(backend: &str, dir: impl AsRef<Path>, name: &str,
     }
 }
 
+/// Host→device traffic counters of a [`CountingBackend`], all
+/// monotonically increasing over the wrapped backend's lifetime.
+#[derive(Debug, Default)]
+pub struct TrafficCounts {
+    /// fresh `upload_f32` allocations (direct or via a slot miss)
+    pub uploads_f32: AtomicUsize,
+    /// fresh `upload_i32` allocations (direct or via a slot miss)
+    pub uploads_i32: AtomicUsize,
+    /// slot uploads that reused an existing allocation in place
+    pub slot_reuses: AtomicUsize,
+    /// f32 uploads/writes of exactly `manifest().state_len` elements —
+    /// the full packed optimizer state (the expensive transfer the
+    /// host path must only pay at eval boundaries)
+    pub state_syncs: AtomicUsize,
+    /// total bytes shipped host→device (including in-place writes)
+    pub bytes_uploaded: AtomicUsize,
+    /// entry-point executions
+    pub runs: AtomicUsize,
+}
+
+impl TrafficCounts {
+    fn get(c: &AtomicUsize) -> usize {
+        c.load(Ordering::Relaxed)
+    }
+
+    /// Total upload calls, fresh + in-place.
+    pub fn total_uploads(&self) -> usize {
+        Self::get(&self.uploads_f32) + Self::get(&self.uploads_i32)
+            + Self::get(&self.slot_reuses)
+    }
+}
+
+/// Transparent [`ExecBackend`] wrapper that counts host↔device traffic.
+/// Used by the upload-accounting tests and `bench_loop` to pin the
+/// session layer's buffer-reuse guarantees; not on any production path.
+pub struct CountingBackend {
+    inner: Box<dyn ExecBackend>,
+    counts: std::sync::Arc<TrafficCounts>,
+}
+
+impl CountingBackend {
+    pub fn new(inner: Box<dyn ExecBackend>) -> CountingBackend {
+        CountingBackend { inner, counts: std::sync::Arc::new(TrafficCounts::default()) }
+    }
+
+    /// Shared handle to the counters (survives moving the backend into
+    /// a session).
+    pub fn counts(&self) -> std::sync::Arc<TrafficCounts> {
+        self.counts.clone()
+    }
+
+    fn note_f32(&self, len: usize, reused: bool) {
+        if reused {
+            self.counts.slot_reuses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.counts.uploads_f32.fetch_add(1, Ordering::Relaxed);
+        }
+        if len == self.inner.manifest().state_len {
+            self.counts.state_syncs.fetch_add(1, Ordering::Relaxed);
+        }
+        self.counts.bytes_uploaded.fetch_add(4 * len, Ordering::Relaxed);
+    }
+
+    fn note_i32(&self, len: usize, reused: bool) {
+        if reused {
+            self.counts.slot_reuses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.counts.uploads_i32.fetch_add(1, Ordering::Relaxed);
+        }
+        self.counts.bytes_uploaded.fetch_add(4 * len, Ordering::Relaxed);
+    }
+}
+
+impl ExecBackend for CountingBackend {
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn has_entry(&self, entry: &str) -> bool {
+        self.inner.has_entry(entry)
+    }
+
+    fn run(&self, entry: &str, args: &[&Buffer]) -> Result<Buffer> {
+        self.counts.runs.fetch_add(1, Ordering::Relaxed);
+        self.inner.run(entry, args)
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        let b = self.inner.upload_f32(data, dims)?;
+        self.note_f32(data.len(), false);
+        Ok(b)
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        let b = self.inner.upload_i32(data, dims)?;
+        self.note_i32(data.len(), false);
+        Ok(b)
+    }
+
+    fn upload_f32_into(&self, slot: &mut Option<Buffer>, data: &[f32],
+                       dims: &[usize]) -> Result<bool> {
+        let reused = self.inner.upload_f32_into(slot, data, dims)?;
+        self.note_f32(data.len(), reused);
+        Ok(reused)
+    }
+
+    fn upload_i32_into(&self, slot: &mut Option<Buffer>, data: &[i32],
+                       dims: &[usize]) -> Result<bool> {
+        let reused = self.inner.upload_i32_into(slot, data, dims)?;
+        self.note_i32(data.len(), reused);
+        Ok(reused)
+    }
+
+    fn read_f32(&self, buf: &Buffer, offset: usize, len: usize) -> Result<Vec<f32>> {
+        self.inner.read_f32(buf, offset, len)
+    }
+
+    fn read_all_f32(&self, buf: &Buffer) -> Result<Vec<f32>> {
+        self.inner.read_all_f32(buf)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,6 +311,28 @@ mod tests {
         let i = Buffer::Host { data: HostData::I32(vec![3]), dims: vec![1] };
         assert_eq!(i.host_i32().unwrap(), &[3]);
         assert!(i.host_f32().is_err());
+    }
+
+    #[test]
+    fn slot_upload_reuses_on_sim_and_counts() {
+        let inner = load("sim", "artifacts", "nano", &["grad", "eval"]).unwrap();
+        let cb = CountingBackend::new(inner);
+        let counts = cb.counts();
+        let mut slot: Option<Buffer> = None;
+        // first write allocates, matching writes reuse in place
+        assert!(!cb.upload_f32_into(&mut slot, &[1.0, 2.0], &[2]).unwrap());
+        assert!(cb.upload_f32_into(&mut slot, &[3.0, 4.0], &[2]).unwrap());
+        assert_eq!(cb.read_all_f32(slot.as_ref().unwrap()).unwrap(), vec![3.0, 4.0]);
+        // shape or dtype change falls back to a fresh allocation
+        assert!(!cb.upload_f32_into(&mut slot, &[1.0, 2.0, 3.0], &[3]).unwrap());
+        let mut islot: Option<Buffer> = None;
+        assert!(!cb.upload_i32_into(&mut islot, &[7, 8], &[2]).unwrap());
+        assert!(cb.upload_i32_into(&mut islot, &[9, 10], &[2]).unwrap());
+        assert_eq!(counts.uploads_f32.load(std::sync::atomic::Ordering::Relaxed), 2);
+        assert_eq!(counts.uploads_i32.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(counts.slot_reuses.load(std::sync::atomic::Ordering::Relaxed), 2);
+        assert_eq!(counts.total_uploads(), 5);
+        assert!(counts.bytes_uploaded.load(std::sync::atomic::Ordering::Relaxed) > 0);
     }
 
     #[test]

@@ -206,6 +206,33 @@ impl ExecBackend for Engine {
         Ok(Buffer::Pjrt(Engine::upload_i32(self, data, dims)?))
     }
 
+    // Slot uploads overwrite the existing device buffer through
+    // `PjRtBuffer::copy_from_host` when dims/dtype match; a binding
+    // whose runtime cannot write device memory in place returns an
+    // error from `copy_from_host` and we allocate fresh — same
+    // semantics, no reuse win (see vendor/xla/src/lib.rs).
+    fn upload_f32_into(&self, slot: &mut Option<Buffer>, data: &[f32],
+                       dims: &[usize]) -> Result<bool> {
+        if let Some(Buffer::Pjrt(b)) = slot {
+            if b.dims() == dims && b.copy_from_host(data).is_ok() {
+                return Ok(true);
+            }
+        }
+        *slot = Some(Buffer::Pjrt(Engine::upload_f32(self, data, dims)?));
+        Ok(false)
+    }
+
+    fn upload_i32_into(&self, slot: &mut Option<Buffer>, data: &[i32],
+                       dims: &[usize]) -> Result<bool> {
+        if let Some(Buffer::Pjrt(b)) = slot {
+            if b.dims() == dims && b.copy_from_host(data).is_ok() {
+                return Ok(true);
+            }
+        }
+        *slot = Some(Buffer::Pjrt(Engine::upload_i32(self, data, dims)?));
+        Ok(false)
+    }
+
     fn read_f32(&self, buf: &Buffer, offset: usize, len: usize) -> Result<Vec<f32>> {
         Engine::read_f32(self, buf.pjrt()?, offset, len)
     }

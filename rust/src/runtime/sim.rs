@@ -603,16 +603,9 @@ fn adamw_packed(st: &mut [f32], n: usize, grads: &[f32], s: &StepScalars, loss: 
 fn scalars_of(buf: &Buffer) -> Result<StepScalars> {
     let a = buf.host_f32()?;
     ensure!(a.len() == 8, "scalars buffer must have 8 elements, got {}", a.len());
-    Ok(StepScalars {
-        lr_full: a[0],
-        lr_free: a[1],
-        wd: a[2],
-        beta1: a[3],
-        beta2: a[4],
-        eps: a[5],
-        bc1: a[6],
-        bc2: a[7],
-    })
+    let mut arr = [0f32; 8];
+    arr.copy_from_slice(a);
+    Ok(StepScalars::from_array(arr))
 }
 
 /// Loss + dL/dlogits for one example.
@@ -669,6 +662,30 @@ impl ExecBackend for SimEngine {
         ensure!(dims.is_empty() || n == data.len(),
                 "upload i32: dims {dims:?} product {n} != data len {}", data.len());
         Ok(Buffer::Host { data: HostData::I32(data.to_vec()), dims: dims.to_vec() })
+    }
+
+    fn upload_f32_into(&self, slot: &mut Option<Buffer>, data: &[f32],
+                       dims: &[usize]) -> Result<bool> {
+        if let Some(Buffer::Host { data: HostData::F32(v), dims: d }) = slot {
+            if v.len() == data.len() && d.as_slice() == dims {
+                v.copy_from_slice(data);
+                return Ok(true);
+            }
+        }
+        *slot = Some(ExecBackend::upload_f32(self, data, dims)?);
+        Ok(false)
+    }
+
+    fn upload_i32_into(&self, slot: &mut Option<Buffer>, data: &[i32],
+                       dims: &[usize]) -> Result<bool> {
+        if let Some(Buffer::Host { data: HostData::I32(v), dims: d }) = slot {
+            if v.len() == data.len() && d.as_slice() == dims {
+                v.copy_from_slice(data);
+                return Ok(true);
+            }
+        }
+        *slot = Some(ExecBackend::upload_i32(self, data, dims)?);
+        Ok(false)
     }
 
     fn read_all_f32(&self, buf: &Buffer) -> Result<Vec<f32>> {

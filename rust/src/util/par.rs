@@ -84,6 +84,54 @@ where
     run_capped((total_elems / MIN_ELEMS_PER_THREAD).max(1), jobs, f)
 }
 
+/// Run two closures, potentially in parallel, and return both results
+/// (the `rayon::join` shape). `a` runs on the calling thread; `b` is
+/// shipped to a scoped worker unless the effective worker count is 1,
+/// in which case both run serially (`a` then `b`). Used by the session
+/// layer to overlap next-batch preparation with the device step.
+/// Panics in either closure propagate to the caller.
+pub fn join<A, B, RA, RB>(a: A, b: B) -> (RA, RB)
+where
+    A: FnOnce() -> RA + Send,
+    B: FnOnce() -> RB + Send,
+    RA: Send,
+    RB: Send,
+{
+    if threads() <= 1 {
+        let ra = a();
+        let rb = b();
+        return (ra, rb);
+    }
+    std::thread::scope(|s| {
+        let hb = s.spawn(b);
+        let ra = a();
+        let rb = match hb.join() {
+            Ok(rb) => rb,
+            Err(p) => std::panic::resume_unwind(p),
+        };
+        (ra, rb)
+    })
+}
+
+/// As [`join`], but sized by the element count of the work being
+/// overlapped: below [`MIN_ELEMS_PER_THREAD`] the pair runs serially
+/// (`a` then `b`), so tiny workloads never pay thread spawn/join cost
+/// — the same gate [`run_for`] applies to the fan-out path.
+pub fn join_for<A, B, RA, RB>(total_elems: usize, a: A, b: B) -> (RA, RB)
+where
+    A: FnOnce() -> RA + Send,
+    B: FnOnce() -> RB + Send,
+    RA: Send,
+    RB: Send,
+{
+    if total_elems < MIN_ELEMS_PER_THREAD {
+        let ra = a();
+        let rb = b();
+        return (ra, rb);
+    }
+    join(a, b)
+}
+
 fn run_capped<T, F>(cap: usize, jobs: Vec<T>, f: F)
 where
     T: Send,
@@ -173,6 +221,45 @@ mod tests {
             sum.fetch_add(j, Ordering::Relaxed);
         });
         assert_eq!(sum.load(Ordering::Relaxed), 210);
+        set_threads(0);
+    }
+
+    #[test]
+    fn join_for_gates_on_work_size() {
+        let _g = lock();
+        set_threads(4);
+        // tiny workload: serial path, both closures still run
+        let (a, b) = join_for(1, || 1, || 2);
+        assert_eq!((a, b), (1, 2));
+        // large workload: parallel path, same results
+        let (a, b) = join_for(1 << 20, || 3, || 4);
+        assert_eq!((a, b), (3, 4));
+        set_threads(0);
+    }
+
+    #[test]
+    fn join_returns_both_results_serial_and_parallel() {
+        let _g = lock();
+        for t in [1usize, 4] {
+            set_threads(t);
+            let mut left = vec![0u32; 8];
+            let mut right = vec![0u32; 8];
+            let (a, b) = join(
+                || {
+                    for x in &mut left {
+                        *x += 1;
+                    }
+                    left.iter().sum::<u32>()
+                },
+                || {
+                    for x in &mut right {
+                        *x += 2;
+                    }
+                    right.iter().sum::<u32>()
+                },
+            );
+            assert_eq!((a, b), (8, 16), "threads={t}");
+        }
         set_threads(0);
     }
 

@@ -124,6 +124,52 @@ fn sim_finetune_is_deterministic() {
     assert_eq!(a.final_train_loss, b.final_train_loss);
 }
 
+#[test]
+fn sim_host_path_syncs_state_only_at_eval() {
+    // The historical FineTuner host path re-uploaded the full packed
+    // state EVERY step just to keep eval in sync. The session layer
+    // syncs once, at the eval boundary — pinned here with a counting
+    // backend wrapper: a GaLore run of N steps ships the state-sized
+    // buffer exactly once.
+    use adafrugal::coordinator::session::{Session, SessionOptions};
+    use adafrugal::coordinator::task::ClsTask;
+    use adafrugal::data::glue;
+    use adafrugal::runtime::backend::{self, CountingBackend, ExecBackend};
+    use std::sync::atomic::Ordering;
+
+    let run = |steps: usize| {
+        let cfg = TrainConfig { steps, ..sim_ft_cfg() };
+        let inner = backend::load("sim", ART, "nano.cls2", &["grad", "eval"]).unwrap();
+        let counting = CountingBackend::new(inner);
+        let counts = counting.counts();
+        let spec = glue::task("SST-2").unwrap();
+        let task = ClsTask::new(spec, counting.manifest(), 0).unwrap();
+        let mut s = Session::new(cfg, FtMethod::GaLore.profile(), Box::new(counting),
+                                 Box::new(task), SessionOptions::finetuning())
+            .unwrap();
+        let r = s.run().unwrap();
+        assert!(r.final_score.unwrap().is_finite());
+        assert!(r.final_train_loss.is_finite());
+        let fresh = counts.uploads_f32.load(Ordering::Relaxed)
+            + counts.uploads_i32.load(Ordering::Relaxed);
+        let reuses = counts.slot_reuses.load(Ordering::Relaxed);
+        let syncs = counts.state_syncs.load(Ordering::Relaxed);
+        (fresh, reuses, syncs)
+    };
+    let (fresh_short, reuses_short, syncs_short) = run(8);
+    let (fresh_long, reuses_long, syncs_long) = run(24);
+    assert_eq!(syncs_short, 1,
+               "host path must ship the packed state once (at eval), not per step");
+    assert_eq!(syncs_long, 1);
+    // per-step params/token/label uploads land in reusable slots after
+    // warmup, so FRESH allocations must not scale with the step count
+    // (the one-time eval-batch cache dominates the fresh total)
+    assert_eq!(fresh_long, fresh_short,
+               "fresh uploads scale with steps: {fresh_short} -> {fresh_long}");
+    assert!(reuses_long > reuses_short && reuses_short >= 8,
+            "slot reuse missing: {reuses_short} -> {reuses_long}");
+}
+
 // ---------------------------------------------------------------------------
 // PJRT suite (real cls/LoRA artifacts; ignored by default)
 // ---------------------------------------------------------------------------

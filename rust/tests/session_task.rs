@@ -1,0 +1,196 @@
+//! The `Task` seam, end-to-end: a third workload — defined entirely in
+//! this test file — trains through `coordinator::session::Session` on
+//! the SimEngine backend without touching any Trainer/FineTuner code.
+//! This is the contract the session refactor exists for: adding a
+//! workload is one `Task` impl, not a third copy of Algorithm 1.
+//!
+//! Also pins the session's hot-path buffer-reuse guarantees on the
+//! fused path via the counting backend wrapper.
+
+use anyhow::Result;
+
+use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::method::Method;
+use adafrugal::coordinator::session::{Session, SessionOptions};
+use adafrugal::coordinator::task::{EvalOutcome, Task, TaskBatch};
+use adafrugal::model::init;
+use adafrugal::runtime::backend::{self, CountingBackend, ExecBackend};
+use adafrugal::runtime::Manifest;
+use adafrugal::util::rng::Rng;
+
+/// A synthetic "cycle prediction" LM workload: token `j+1` of window
+/// `w` is an arithmetic progression mod vocab, so the next-token
+/// mapping is deterministic and learnable by the sim model. No corpus,
+/// tokenizer or loader involved — everything the session needs comes
+/// from this impl.
+struct CycleTask {
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    /// monotone counter making successive training batches distinct
+    drawn: usize,
+    rng: Rng,
+}
+
+impl CycleTask {
+    fn new(man: &Manifest, seed: u64) -> CycleTask {
+        CycleTask {
+            batch: man.model.batch,
+            seq: man.model.seq,
+            vocab: man.model.vocab,
+            drawn: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    fn window(&self, salt: usize, w: usize) -> Vec<i32> {
+        let start = (salt * 131 + w * 31) % self.vocab;
+        (0..=self.seq)
+            .map(|j| ((start + 3 * j) % self.vocab) as i32)
+            .collect()
+    }
+
+    fn batch_at(&self, salt: usize) -> TaskBatch {
+        let mut tokens = Vec::with_capacity(self.batch * (self.seq + 1));
+        for w in 0..self.batch {
+            tokens.extend(self.window(salt, w));
+        }
+        TaskBatch {
+            tokens,
+            token_dims: vec![self.batch, self.seq + 1],
+            labels: None,
+        }
+    }
+}
+
+impl Task for CycleTask {
+    fn name(&self) -> &str {
+        "cycle-lm"
+    }
+
+    fn init_state(&self, man: &Manifest, seed: u64) -> Vec<f32> {
+        init::init_state(man, seed)
+    }
+
+    fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    fn independent_batch_rng(&self) -> bool {
+        true // batches are arithmetic; the rng only serves redefinitions
+    }
+
+    fn next_train(&mut self) -> TaskBatch {
+        self.drawn += 1;
+        self.batch_at(self.drawn)
+    }
+
+    fn n_eval_batches(&self, cfg: &TrainConfig) -> usize {
+        cfg.val_batches
+    }
+
+    fn eval_batch(&self, i: usize) -> TaskBatch {
+        self.batch_at(1_000_000 + i) // held-out salts, never drawn in training
+    }
+
+    fn eval_read_len(&self, _man: &Manifest) -> usize {
+        2
+    }
+
+    fn fold_eval(&self, outputs: &[Vec<f32>], _batches: &[&TaskBatch]) -> Result<EvalOutcome> {
+        let mut sum = 0f64;
+        let mut count = 0f64;
+        for v in outputs {
+            sum += v[0] as f64;
+            count += v[1] as f64;
+        }
+        Ok(EvalOutcome { val_loss: sum / count.max(1.0), score: None })
+    }
+}
+
+fn cycle_cfg(steps: usize) -> TrainConfig {
+    TrainConfig {
+        preset: "nano".into(),
+        backend: "sim".into(),
+        steps,
+        warmup_steps: 8,
+        n_eval: 20,
+        t_start: 20,
+        t_max: 80,
+        log_every: 10,
+        val_batches: 2,
+        lr: 5e-2,
+        seed: 11,
+        ..TrainConfig::default()
+    }
+}
+
+fn run_cycle(method: Method, steps: usize) -> (adafrugal::coordinator::session::SessionResult,
+                                               std::sync::Arc<backend::TrafficCounts>) {
+    let cfg = cycle_cfg(steps);
+    let inner = backend::load("sim", &cfg.artifacts_dir, &cfg.preset, &method.entries())
+        .unwrap();
+    let counting = CountingBackend::new(inner);
+    let counts = counting.counts();
+    let task = CycleTask::new(counting.manifest(), cfg.seed);
+    let mut s = Session::new(cfg, method.profile(), Box::new(counting), Box::new(task),
+                             SessionOptions::pretraining())
+        .unwrap();
+    s.quiet = true;
+    (s.run().unwrap(), counts)
+}
+
+#[test]
+fn third_workload_trains_through_session_adamw() {
+    let (r, _) = run_cycle(Method::AdamW, 80);
+    let first = r.evals.first().unwrap().val_loss;
+    let last = r.evals.last().unwrap().val_loss;
+    assert!(first.is_finite() && last.is_finite());
+    assert!(last < 0.9 * first, "cycle task did not learn: {first} -> {last}");
+    assert!(!r.steps.is_empty(), "periodic policy must log steps");
+    assert_eq!(r.redefinitions, 0, "adamw never redefines");
+}
+
+#[test]
+fn third_workload_trains_through_session_combined() {
+    // the full AdaFRUGAL machinery (dynamic rho + T, masks,
+    // redefinition, Reset state management) over the in-test task
+    let (r, _) = run_cycle(Method::AdaFrugalCombined, 80);
+    let first = r.evals.first().unwrap().val_loss;
+    let last = r.evals.last().unwrap().val_loss;
+    assert!(last < first, "no learning under combined: {first} -> {last}");
+    assert!(r.redefinitions >= 2, "expected redefinitions, got {}", r.redefinitions);
+    assert!(r.memory.last_bytes() <= r.memory.first_bytes());
+}
+
+#[test]
+fn third_workload_is_deterministic() {
+    let a = run_cycle(Method::AdaFrugalCombined, 40).0;
+    let b = run_cycle(Method::AdaFrugalCombined, 40).0;
+    for (x, y) in a.steps.iter().zip(&b.steps) {
+        assert_eq!(x.train_loss, y.train_loss);
+        assert_eq!(x.t_current, y.t_current);
+    }
+    for (x, y) in a.evals.iter().zip(&b.evals) {
+        assert_eq!(x.val_loss, y.val_loss);
+        assert_eq!(x.memory_bytes, y.memory_bytes);
+    }
+}
+
+#[test]
+fn fused_path_reuses_per_step_buffers() {
+    use std::sync::atomic::Ordering;
+    let steps = 40usize;
+    let (r, counts) = run_cycle(Method::AdaFrugalCombined, steps);
+    let fresh = counts.uploads_f32.load(Ordering::Relaxed)
+        + counts.uploads_i32.load(Ordering::Relaxed);
+    let reuses = counts.slot_reuses.load(Ordering::Relaxed);
+    // scalars + tokens reuse their slots every step after warmup, so
+    // in-place writes dominate and fresh allocations stay far below
+    // one-per-step (state init, mask, eval cache, Reset re-uploads)
+    assert!(reuses >= steps, "expected >= {steps} in-place writes, got {reuses}");
+    assert!(fresh < steps, "fresh uploads should not scale with steps: {fresh}");
+    // the session's own accounting must agree with the backend's
+    assert_eq!(r.uploads.reuses, reuses);
+    assert_eq!(r.uploads.uploads, fresh);
+}

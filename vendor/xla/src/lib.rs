@@ -56,17 +56,41 @@ impl Data {
 /// Element types accepted by [`PjRtClient::buffer_from_host_buffer`].
 pub trait NativeType: Copy {
     fn wrap(data: &[Self]) -> Data;
+
+    /// Overwrite `dst` in place; `false` when the dtype or length does
+    /// not match (the caller then falls back to a fresh upload).
+    fn write(data: &[Self], dst: &mut Data) -> bool;
 }
 
 impl NativeType for f32 {
     fn wrap(data: &[Self]) -> Data {
         Data::F32(data.to_vec())
     }
+
+    fn write(data: &[Self], dst: &mut Data) -> bool {
+        match dst {
+            Data::F32(v) if v.len() == data.len() => {
+                v.copy_from_slice(data);
+                true
+            }
+            _ => false,
+        }
+    }
 }
 
 impl NativeType for i32 {
     fn wrap(data: &[Self]) -> Data {
         Data::I32(data.to_vec())
+    }
+
+    fn write(data: &[Self], dst: &mut Data) -> bool {
+        match dst {
+            Data::I32(v) if v.len() == data.len() => {
+                v.copy_from_slice(data);
+                true
+            }
+            _ => false,
+        }
     }
 }
 
@@ -127,13 +151,38 @@ impl Literal {
 /// Device buffer. In the stub the "device" is host memory.
 pub struct PjRtBuffer {
     data: Data,
-    #[allow(dead_code)]
     dims: Vec<usize>,
 }
 
 impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal> {
         Ok(Literal { data: self.data.clone() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Overwrite this buffer's contents from host memory, keeping the
+    /// allocation (the buffer-reuse path of `runtime::engine`). Errors
+    /// on dtype/length mismatch so the caller can fall back to a fresh
+    /// upload. A real PJRT binding would map this to a
+    /// `CopyHostToDeviceBuffer`-style transfer into a donated buffer —
+    /// or keep returning `Err` if the device runtime has no in-place
+    /// write, which the engine treats as "allocate fresh".
+    pub fn copy_from_host<T: NativeType>(&mut self, data: &[T]) -> Result<()> {
+        if T::write(data, &mut self.data) {
+            Ok(())
+        } else {
+            Err(XlaError(format!(
+                "copy_from_host: dtype or length mismatch (buffer holds {} elements)",
+                self.data.len()
+            )))
+        }
     }
 }
 
@@ -204,6 +253,19 @@ mod tests {
         let mut out = vec![0f32; 4];
         lit.copy_raw_to(&mut out).unwrap();
         assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn copy_from_host_reuses_or_rejects() {
+        let c = PjRtClient::cpu().unwrap();
+        let mut buf = c.buffer_from_host_buffer(&[1.0f32, 2.0], &[2], None).unwrap();
+        buf.copy_from_host(&[5.0f32, 6.0]).unwrap();
+        let mut out = vec![0f32; 2];
+        buf.to_literal_sync().unwrap().copy_raw_to(&mut out).unwrap();
+        assert_eq!(out, vec![5.0, 6.0]);
+        assert_eq!(buf.dims(), &[2]);
+        assert!(buf.copy_from_host(&[1.0f32]).is_err()); // length mismatch
+        assert!(buf.copy_from_host(&[1i32, 2]).is_err()); // dtype mismatch
     }
 
     #[test]
