@@ -9,18 +9,84 @@
 //! slot writes, bytes shipped, and full-packed-state syncs (the host
 //! path must pay those only at eval boundaries).
 //!
+//! A second section sweeps the data-parallel shard count over the
+//! larger `mid` sim workload (`runtime::shard`): one
+//! `bench_loop_shards` JSON line per shard count with steps/sec, the
+//! speedup over 1 shard, and the FRUGAL-aware sync-traffic split
+//! (state-full packed-state bytes vs state-free gradient bytes).
+//!
 //! ```text
 //! cargo bench --bench bench_loop
 //! ```
 
 use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::memory_tracker::MemoryTracker;
 use adafrugal::coordinator::method::Method;
 use adafrugal::coordinator::session::{Session, SessionOptions};
 use adafrugal::coordinator::task::LmTask;
 use adafrugal::runtime::backend::{self, CountingBackend, ExecBackend};
+use adafrugal::runtime::shard;
 use adafrugal::util::json;
 
-fn main() -> anyhow::Result<()> {
+fn shard_sweep() -> anyhow::Result<()> {
+    // the sim LM workload with enough per-step gradient work for the
+    // fan-out to amortize a thread spawn per shard
+    let steps = 60usize;
+    let method = Method::FrugalStatic;
+    let mut base_sps: Option<f64> = None;
+    for shards in [1usize, 2, 4] {
+        let cfg = TrainConfig {
+            preset: "mid".into(),
+            backend: "sim".into(),
+            shards,
+            steps,
+            warmup_steps: 10,
+            n_eval: 50,
+            t_start: 20,
+            t_max: 80,
+            log_every: 10_000,
+            val_batches: 2,
+            lr: 1e-2,
+            seed: 0,
+            ..TrainConfig::default()
+        };
+        let engine = shard::load("sim", &cfg.artifacts_dir, &cfg.preset,
+                                 &method.entries(), shards)?;
+        let man = engine.manifest().clone();
+        let task = LmTask::new(&cfg, &man)?;
+        let rho = cfg.rho;
+        let mut s = Session::new(cfg, method.profile(), engine, Box::new(task),
+                                 SessionOptions::pretraining())?;
+        s.quiet = true;
+        let r = s.run()?;
+        let sps = steps as f64 / r.step_time_s.max(1e-9);
+        let base = *base_sps.get_or_insert(sps);
+        let sync = r.sync.unwrap_or_default();
+        let sb = MemoryTracker::shard_bytes(&man, method.memory_model(), None, rho,
+                                            shards);
+        let line = json::obj(vec![
+            ("bench", json::s("bench_loop_shards")),
+            ("backend", json::s("sim")),
+            ("preset", json::s("mid")),
+            ("method", json::s(method.id())),
+            ("shards", json::num(shards as f64)),
+            ("steps", json::num(steps as f64)),
+            ("steps_per_sec", json::num(sps)),
+            ("speedup_vs_1shard", json::num(sps / base.max(1e-9))),
+            ("sync_reduces", json::num(sync.reduces as f64)),
+            ("sync_state_bytes", json::num(sync.state_bytes as f64)),
+            ("sync_grad_bytes", json::num(sync.grad_bytes as f64)),
+            ("per_shard_replicated_bytes", json::num(sb.replicated as f64)),
+            ("per_shard_state_bytes", json::num(sb.sharded as f64)),
+            ("final_ppl",
+             json::num(r.evals.last().map(|e| e.ppl).unwrap_or(f64::NAN))),
+        ]);
+        println!("{}", line.to_string());
+    }
+    Ok(())
+}
+
+fn run_methods() -> anyhow::Result<()> {
     let steps = 150usize;
     for m in [Method::AdaFrugalCombined, Method::FrugalStatic, Method::AdamW,
               Method::GaLore] {
@@ -69,4 +135,9 @@ fn main() -> anyhow::Result<()> {
         println!("{}", line.to_string());
     }
     Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    run_methods()?;
+    shard_sweep()
 }

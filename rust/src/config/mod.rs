@@ -23,6 +23,10 @@ pub struct TrainConfig {
     /// "dyn-t", "combined", "galore", "badam" — see
     /// `coordinator::method::Method::parse`)
     pub method: String,
+    /// data-parallel shard count (power of two); 1 = single backend.
+    /// Resolved by `runtime::shard::resolve`, overridable via
+    /// `ADAFRUGAL_SHARDS`; the global batch must divide evenly
+    pub shards: usize,
     pub steps: usize,
     pub seed: u64,
 
@@ -74,6 +78,7 @@ impl Default for TrainConfig {
             artifacts_dir: "artifacts".into(),
             backend: "pjrt".into(),
             method: "combined".into(),
+            shards: 1,
             steps: 2000,
             seed: 0,
             lr: 1e-3,
@@ -117,6 +122,7 @@ impl TrainConfig {
         set!(artifacts_dir, as_string);
         set!(backend, as_string);
         set!(method, as_string);
+        set!(shards, as_usize);
         set!(steps, as_usize);
         set!(seed, as_u64);
         set!(lr, as_f32);
@@ -162,6 +168,10 @@ impl TrainConfig {
         crate::optim::StateMgmt::parse(&self.state_mgmt)?;
         // ... and for the backend vocabulary (pjrt | sim)
         crate::runtime::backend::BackendKind::parse(&self.backend)?;
+        // power-of-two shard counts: the tree-reduce alignment
+        // precondition (runtime::shard)
+        anyhow::ensure!(self.shards >= 1 && self.shards.is_power_of_two(),
+                        "shards must be a power of two >= 1, got {}", self.shards);
         Ok(())
     }
 
@@ -188,6 +198,7 @@ impl TrainConfig {
         set!(artifacts_dir, as_string);
         set!(backend, as_string);
         set!(method, as_string);
+        set!(shards, as_usize);
         set!(steps, as_usize);
         set!(seed, as_u64);
         set!(lr, as_f32);
@@ -262,6 +273,19 @@ mod tests {
         assert_eq!(c.backend, "sim"); // failed set must not corrupt state
         let m = parse_str("[train]\nbackend = \"sim\"\n").unwrap();
         assert_eq!(TrainConfig::from_map(&m).unwrap().backend, "sim");
+    }
+
+    #[test]
+    fn shards_selected_and_validated() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.shards, 1);
+        c.set("shards", "4").unwrap();
+        assert_eq!(c.shards, 4);
+        assert!(c.set("shards", "3").is_err()); // not a power of two
+        assert!(c.set("shards", "0").is_err());
+        assert_eq!(c.shards, 4); // failed set must not corrupt state
+        let m = parse_str("[train]\nshards = 2\n").unwrap();
+        assert_eq!(TrainConfig::from_map(&m).unwrap().shards, 2);
     }
 
     #[test]

@@ -41,7 +41,10 @@ pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
     );
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
-    ensure!(&magic == MAGIC, "bad checkpoint magic");
+    ensure!(&magic == MAGIC,
+            "bad checkpoint magic: expected {:?}, found {:?} (not an AdaFRUGAL \
+             checkpoint, or written by an incompatible version)",
+            String::from_utf8_lossy(MAGIC), String::from_utf8_lossy(&magic));
     let mut len8 = [0u8; 8];
     f.read_exact(&mut len8)?;
     let hlen = u64::from_le_bytes(len8) as usize;
@@ -96,6 +99,64 @@ mod tests {
         let path = dir.join("bad.ckpt");
         std::fs::write(&path, b"NOTMAGIC????????").unwrap();
         assert!(load(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn bad_magic_error_reports_expected_and_found() {
+        let dir = std::env::temp_dir()
+            .join(format!("adafrugal_ckpt_magic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("wrong.ckpt");
+        std::fs::write(&path, b"WRONGMAG\x00\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("ADAFRUG1"), "missing expected magic in: {err}");
+        assert!(err.contains("WRONGMAG"), "missing found magic in: {err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn roundtrip_property_header_payload_and_truncations() {
+        use crate::util::rng::Rng;
+        let dir = std::env::temp_dir()
+            .join(format!("adafrugal_ckpt_prop_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("case.ckpt");
+        crate::util::prop::forall(
+            "checkpoint-roundtrip",
+            12,
+            |r: &mut Rng| {
+                let dlen = r.below(2000);
+                let data: Vec<f32> = (0..dlen).map(|_| r.normal_f32(3.0)).collect();
+                let step = r.below(1_000_000);
+                let val = r.normal_f32(2.0) as f64;
+                (data, step, val)
+            },
+            |(data, step, val)| {
+                let hdr = train_header("nano", "combined", *step, *val);
+                save(&path, &hdr, data).unwrap();
+                let ck = load(&path).unwrap();
+                // payload must survive bit-for-bit; header fields exactly
+                let ok = ck.data == *data
+                    && ck.header.get("step").unwrap().as_usize().unwrap() == *step
+                    && ck.header.get("method").unwrap().as_str().unwrap() == "combined"
+                    && ck.header.get("kind").unwrap().as_str().unwrap() == "packed_state";
+                // every strict prefix of the file must fail to load,
+                // never panic and never silently truncate the payload
+                let bytes = std::fs::read(&path).unwrap();
+                let tpath = dir.join("trunc.ckpt");
+                for cut in [0, 4, 8, 12, 16, bytes.len().saturating_sub(1)] {
+                    if cut >= bytes.len() {
+                        continue;
+                    }
+                    std::fs::write(&tpath, &bytes[..cut]).unwrap();
+                    if load(&tpath).is_ok() {
+                        return false;
+                    }
+                }
+                ok
+            },
+        );
         std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -18,7 +18,7 @@ use crate::config::TrainConfig;
 use crate::coordinator::session::{Session, SessionOptions};
 use crate::coordinator::task::{ClsTask, LoraClsTask, Task};
 use crate::data::glue::{self, TaskSpec};
-use crate::runtime::backend;
+use crate::runtime::shard;
 
 pub use crate::coordinator::method::FtMethod;
 
@@ -49,8 +49,11 @@ impl FineTuner {
         } else {
             format!("{}.cls{}", cfg.preset, spec.n_cls)
         };
-        let engine = backend::load(&cfg.backend, &cfg.artifacts_dir, &artifact,
-                                   &method.entries())?;
+        // sharded fine-tuning fans the full-model step entries out;
+        // LoRA runs whole on shard 0 (adapter state is too small to be
+        // worth splitting — see runtime::shard)
+        let engine = shard::load(&cfg.backend, &cfg.artifacts_dir, &artifact,
+                                 &method.entries(), shard::resolve(cfg.shards)?)?;
         let task: Box<dyn Task> = if lora {
             Box::new(LoraClsTask::new(spec, engine.manifest(), seed)?)
         } else {

@@ -28,6 +28,25 @@ pub enum MemoryModel {
     Frugal,
 }
 
+/// One worker's memory footprint under data parallelism, split into
+/// what replication costs (the weight replica) and what sharding
+/// saves (the optimizer-state slice). Produced by
+/// [`MemoryTracker::shard_bytes`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardBytes {
+    /// bytes held identically on every shard (f32 parameter replica)
+    pub replicated: usize,
+    /// this shard's slice of the partitionable optimizer state
+    pub sharded: usize,
+}
+
+impl ShardBytes {
+    /// Total bytes one worker holds.
+    pub fn per_shard_total(&self) -> usize {
+        self.replicated + self.sharded
+    }
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct MemoryTracker {
     pub samples: Vec<MemorySample>,
@@ -57,6 +76,22 @@ impl MemoryTracker {
                 Some(m) => memory::frugal_bytes(man, m),
                 None => memory::frugal_bytes_at_rho(man, rho),
             },
+        }
+    }
+
+    /// Per-worker footprint under `shards`-way data parallelism: the
+    /// parameter replica every worker holds regardless of the shard
+    /// count, plus this worker's `1/N` slice of the partitionable
+    /// optimizer state (ZeRO-style; [`MemoryTracker::bytes_for`] is
+    /// the partitionable total). `shards = 1` degenerates to the
+    /// single-worker accounting the tables report.
+    pub fn shard_bytes(man: &Manifest, model: MemoryModel, mask: Option<&SubspaceMask>,
+                       rho: f64, shards: usize) -> ShardBytes {
+        let state = Self::bytes_for(man, model, mask, rho);
+        let shards = shards.max(1);
+        ShardBytes {
+            replicated: 4 * man.n_params,
+            sharded: (state + shards - 1) / shards,
         }
     }
 
@@ -116,6 +151,34 @@ mod tests {
         m.record(0, 1_400_000);
         m.record(10, 900_000);
         assert_eq!(m.label(), "1.40M -> 0.90M");
+    }
+
+    #[test]
+    fn shard_bytes_pins_table_counts_at_1_and_4_shards() {
+        // the Table-1 sim manifest: 3 maskable 16x32 matrices + a [32]
+        // bias -> n_params = 1568, AdamW state = 8 * 1568 = 12544 B
+        let man = crate::runtime::Manifest::synthetic_lm(3, 16, 32, 8).unwrap();
+        assert_eq!(man.n_params, 1568);
+
+        let a1 = MemoryTracker::shard_bytes(&man, MemoryModel::AdamW, None, 0.25, 1);
+        assert_eq!(a1, ShardBytes { replicated: 6272, sharded: 12544 });
+        assert_eq!(a1.per_shard_total(), 18816);
+        let a4 = MemoryTracker::shard_bytes(&man, MemoryModel::AdamW, None, 0.25, 4);
+        assert_eq!(a4, ShardBytes { replicated: 6272, sharded: 3136 });
+
+        // FRUGAL at rho = 0.25: state-full = 32 bias + round(0.25*1536)
+        // maskable elems -> (32 + 384) * 8 = 3328 B of state
+        let f1 = MemoryTracker::shard_bytes(&man, MemoryModel::Frugal, None, 0.25, 1);
+        assert_eq!(f1, ShardBytes { replicated: 6272, sharded: 3328 });
+        let f4 = MemoryTracker::shard_bytes(&man, MemoryModel::Frugal, None, 0.25, 4);
+        assert_eq!(f4, ShardBytes { replicated: 6272, sharded: 832 });
+
+        // replication never shrinks with N; the state slice does
+        assert_eq!(a1.replicated, a4.replicated);
+        assert!(a4.sharded < a1.sharded && f4.sharded < f1.sharded);
+        // shards = 0 clamps to 1 instead of dividing by zero
+        assert_eq!(MemoryTracker::shard_bytes(&man, MemoryModel::AdamW, None, 0.25, 0),
+                   a1);
     }
 
     #[test]

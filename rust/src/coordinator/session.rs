@@ -34,6 +34,21 @@
 //! stream between sampling and redefinition, and for TopK runs whose
 //! `scores` pass draws from the same batch stream as training — so
 //! every pre-refactor trajectory stays bit-identical.
+//!
+//! # Shard-aware batching
+//!
+//! The session is oblivious to data parallelism in the best way: the
+//! task keeps drawing **global** batches from its historical RNG
+//! streams, and a sharded backend
+//! ([`crate::runtime::shard::ShardedBackend`]) splits each step's
+//! batch into contiguous per-shard row blocks — so the 1-shard batch
+//! trajectory is the exact concatenation of the shard streams, and no
+//! RNG stream moves when the shard count changes. Construction
+//! validates that the manifest batch divides the backend's
+//! [`crate::runtime::backend::ExecBackend::shard_count`]; the
+//! cross-shard sync totals ([`crate::runtime::shard::SyncTraffic`] —
+//! state-full packed-state bytes vs state-free gradient bytes) are
+//! folded into the [`SessionResult`] next to the upload stats.
 
 use anyhow::{bail, Context, Result};
 
@@ -168,6 +183,9 @@ pub struct SessionResult {
     /// task metric from the last evaluation, when the task defines one
     pub final_score: Option<f64>,
     pub uploads: UploadStats,
+    /// cross-shard sync totals (FRUGAL-aware pricing); `None` when the
+    /// run was not sharded
+    pub sync: Option<crate::runtime::shard::SyncTraffic>,
 }
 
 /// Optimizer state: backend-resident packed state (fused path) or
@@ -373,6 +391,18 @@ impl Session {
                mut task: Box<dyn Task>, opts: SessionOptions) -> Result<Session> {
         cfg.validate()?;
         let man = engine.manifest().clone();
+        // shard-aware batching: a sharded backend splits each global
+        // batch into contiguous row blocks, so the batch must divide
+        let shards = engine.shard_count();
+        if shards > 1 {
+            anyhow::ensure!(
+                man.model.batch % shards == 0,
+                "global batch ({}) must be divisible by the shard count ({}); \
+                 pick a preset whose batch splits evenly (sim: a \".b<B>\" \
+                 suffix, e.g. {}.b{})",
+                man.model.batch, shards, cfg.preset, shards * 2
+            );
+        }
         let controller =
             AdaFrugalController::from_config(&cfg, profile.dynamic_rho, profile.dynamic_t);
         let mut mask = SubspaceMask::new(&man);
@@ -445,6 +475,12 @@ impl Session {
 
     pub fn upload_stats(&self) -> UploadStats {
         self.dev.stats
+    }
+
+    /// The rendered flat column mask of the live subspace (parity
+    /// tests compare it bit-for-bit across shard counts).
+    pub fn mask_render(&self) -> Vec<f32> {
+        self.mask.render()
     }
 
     /// Override the ρ schedule (ablations: cosine/step decay shapes).
@@ -808,6 +844,7 @@ impl Session {
             final_train_loss: last_loss,
             final_score,
             uploads: self.dev.stats,
+            sync: self.dev.engine.sync_stats(),
         })
     }
 }

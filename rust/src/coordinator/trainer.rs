@@ -14,7 +14,7 @@ use crate::coordinator::memory_tracker::MemoryTracker;
 use crate::coordinator::method::Method;
 use crate::coordinator::session::{Session, SessionOptions, UploadStats};
 use crate::coordinator::task::LmTask;
-use crate::runtime::backend;
+use crate::runtime::shard;
 
 pub use crate::coordinator::session::{EvalPoint, StepLog};
 
@@ -34,6 +34,8 @@ pub struct RunResult {
     pub t_events: Vec<crate::controller::TEvent>,
     /// host→device upload accounting (buffer-reuse diagnostics)
     pub uploads: UploadStats,
+    /// cross-shard sync totals (`None` for unsharded runs)
+    pub sync: Option<crate::runtime::shard::SyncTraffic>,
 }
 
 impl RunResult {
@@ -61,8 +63,9 @@ pub struct Trainer {
 impl Trainer {
     pub fn new(cfg: TrainConfig, method: Method) -> Result<Trainer> {
         cfg.validate()?;
-        let engine = backend::load(&cfg.backend, &cfg.artifacts_dir, &cfg.preset,
-                                   &method.entries())
+        let shards = shard::resolve(cfg.shards)?;
+        let engine = shard::load(&cfg.backend, &cfg.artifacts_dir, &cfg.preset,
+                                 &method.entries(), shards)
             .with_context(|| format!("loading backend for {}", cfg.preset))?;
         anyhow::ensure!(engine.manifest().task == "lm",
                         "Trainer drives LM presets; use FineTuner for cls");
@@ -119,6 +122,7 @@ impl Trainer {
             eval_time_s: r.eval_time_s,
             t_events: r.t_events,
             uploads: r.uploads,
+            sync: r.sync,
         })
     }
 

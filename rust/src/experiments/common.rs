@@ -111,6 +111,13 @@ pub fn summary_json(cfg: &TrainConfig, r: &RunResult) -> Value {
         ("uploads", json::num(r.uploads.uploads as f64)),
         ("upload_reuses", json::num(r.uploads.reuses as f64)),
         ("upload_bytes", json::num(r.uploads.bytes as f64)),
+        // cross-shard sync accounting (FRUGAL-aware: state-full packed
+        // state vs state-free averaged gradients; zeros when unsharded)
+        ("shards", json::num(r.sync.map(|s| s.shards).unwrap_or(1) as f64)),
+        ("sync_state_bytes",
+         json::num(r.sync.map(|s| s.state_bytes).unwrap_or(0) as f64)),
+        ("sync_grad_bytes",
+         json::num(r.sync.map(|s| s.grad_bytes).unwrap_or(0) as f64)),
         ("steps_per_sec",
          json::num(cfg.steps as f64 / r.step_time_s.max(1e-9))),
     ])

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! adafrugal train  [--method combined] [--preset micro] [--steps N]
-//!                  [--config run.toml] [--set train.key=value ...]
+//!                  [--shards N] [--config run.toml] [--set train.key=value ...]
 //!                  [--out results/run] [--save-checkpoint path]
 //!                  [--from-checkpoint path] [--corpus english|vietnamese]
 //! adafrugal finetune --task SST-2 [--ft-method frugal] [--seeds 3]
@@ -91,6 +91,7 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
         ("corpus", "corpus"),
         ("artifacts", "artifacts_dir"),
         ("backend", "backend"),
+        ("shards", "shards"),
         ("lr", "lr"),
         ("rho", "rho"),
         ("rho-end", "rho_end"),
@@ -142,6 +143,21 @@ fn cmd_train(args: &Args) -> Result<()> {
         result.uploads.bytes as f64 / 1e6,
         cfg.steps as f64 / result.step_time_s.max(1e-9)
     );
+    if let Some(sync) = result.sync {
+        let sb = adafrugal::coordinator::memory_tracker::MemoryTracker::shard_bytes(
+            trainer.manifest(), method.memory_model(), None, cfg.rho, sync.shards);
+        println!(
+            "shards: {} | sync {:.2} MB state-full + {:.2} MB state-free over {} reduces \
+             | per-shard memory {:.3} MB ({:.3} MB replicated + {:.3} MB sharded state)",
+            sync.shards,
+            sync.state_bytes as f64 / 1e6,
+            sync.grad_bytes as f64 / 1e6,
+            sync.reduces,
+            sb.per_shard_total() as f64 / 1e6,
+            sb.replicated as f64 / 1e6,
+            sb.sharded as f64 / 1e6
+        );
+    }
     for e in &result.t_events {
         println!("  T event @step {}: {} -> {} (dL_rel {:.5})",
                  e.step, e.old_t, e.new_t, e.delta_l_rel);
@@ -249,7 +265,8 @@ fn usage() -> &'static str {
 USAGE:
   adafrugal train    [--method adamw|frugal|dyn-rho|dyn-t|combined|galore|badam]
                      [--preset micro] [--steps N] [--corpus english|vietnamese]
-                     [--backend pjrt|sim] [--config run.toml] [--set train.key=value]...
+                     [--backend pjrt|sim] [--shards N] [--config run.toml]
+                     [--set train.key=value]...
                      [--out results/run.jsonl] [--save-checkpoint p] [--from-checkpoint p]
   adafrugal finetune --task CoLA|SST-2|MRPC|STS-B|QQP|MNLI-m|QNLI|RTE
                      [--ft-method full|lora|galore|frugal|dyn-rho|dyn-t|combined]

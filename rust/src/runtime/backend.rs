@@ -125,6 +125,22 @@ pub trait ExecBackend: Send {
 
     /// Read a whole f32 buffer.
     fn read_all_f32(&self, buf: &Buffer) -> Result<Vec<f32>>;
+
+    /// Data-parallel shard count behind this backend (1 for the
+    /// single-device engines; N for
+    /// [`crate::runtime::shard::ShardedBackend`]). The session layer
+    /// uses it to validate shard-aware batching.
+    fn shard_count(&self) -> usize {
+        1
+    }
+
+    /// Cross-shard synchronization totals under the FRUGAL-aware
+    /// pricing model (see `runtime::shard`); `None` for unsharded
+    /// backends. Wrappers must forward this so the counters survive
+    /// [`CountingBackend`] layering.
+    fn sync_stats(&self) -> Option<crate::runtime::shard::SyncTraffic> {
+        None
+    }
 }
 
 /// Backend selector carried by config as a plain name (the same
@@ -288,6 +304,14 @@ impl ExecBackend for CountingBackend {
 
     fn read_all_f32(&self, buf: &Buffer) -> Result<Vec<f32>> {
         self.inner.read_all_f32(buf)
+    }
+
+    fn shard_count(&self) -> usize {
+        self.inner.shard_count()
+    }
+
+    fn sync_stats(&self) -> Option<crate::runtime::shard::SyncTraffic> {
+        self.inner.sync_stats()
     }
 }
 

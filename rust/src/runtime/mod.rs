@@ -1,17 +1,21 @@
 //! Execution runtime: the [`backend::ExecBackend`] surface the
-//! coordinator drives, with two implementations — the PJRT [`Engine`]
-//! over AOT-compiled HLO artifacts (produced by
+//! coordinator drives, with two single-device implementations — the
+//! PJRT [`Engine`] over AOT-compiled HLO artifacts (produced by
 //! `python/compile/aot.py`) and the host-CPU [`sim::SimEngine`] used by
-//! the always-on integration tests. This is the only module that
-//! touches the `xla` crate; the rest of the coordinator works with
-//! [`manifest::Manifest`] metadata and opaque [`backend::Buffer`]s.
+//! the always-on integration tests — plus the data-parallel
+//! [`shard::ShardedBackend`] that fans any of them out over N workers
+//! with bit-exact FRUGAL-aware gradient sync. This is the only module
+//! that touches the `xla` crate; the rest of the coordinator works
+//! with [`manifest::Manifest`] metadata and opaque [`backend::Buffer`]s.
 
 pub mod backend;
 pub mod engine;
 pub mod manifest;
+pub mod shard;
 pub mod sim;
 
 pub use backend::{Buffer, ExecBackend};
 pub use engine::Engine;
 pub use manifest::{EntrySpec, Manifest, ParamSpec};
+pub use shard::ShardedBackend;
 pub use sim::SimEngine;

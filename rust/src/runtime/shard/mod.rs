@@ -1,0 +1,674 @@
+//! `runtime::shard` — data-parallel sharded execution with
+//! FRUGAL-aware gradient synchronization.
+//!
+//! [`ShardedBackend`] implements [`ExecBackend`] by fanning the batch
+//! dimension of every step entry out to `N` inner backends (its own
+//! [`crate::runtime::sim::SimEngine`] or PJRT engine per worker,
+//! driven through [`crate::util::par`]), reducing the per-shard
+//! partial gradients with the deterministic fixed-order tree in
+//! [`reduce`], and applying the optimizer update once on the reduced
+//! gradient. Because the inner engines compute *raw subtree partials*
+//! (the `grad_part` entry) and both sides of the split share the
+//! reduction tree, an `N`-shard run is **bit-identical** to the
+//! 1-shard run for any power-of-two `N` dividing the batch — on any
+//! thread schedule — which `rust/tests/shard_parity.rs` pins for every
+//! Table-1 method.
+//!
+//! # How a step is sharded
+//!
+//! For the step entries (`frugal`, `adamw`, `grad`) the global batch
+//! is split into `N` contiguous row blocks — shard `i` always receives
+//! rows `[i·B/N, (i+1)·B/N)`, so the 1-shard batch stream is the exact
+//! concatenation of the shard streams. Each shard uploads the current
+//! params plus its sub-batch and runs `grad_part`, which returns
+//! **unnormalized** tree-partial gradients, the f32 tree-partial loss
+//! and its element count. The coordinator-side reduce then:
+//!
+//! 1. tree-sums the shard partials in shard order ([`reduce`] — the
+//!    top `log2(N)` levels of the same tree the engines used inside
+//!    their sub-batches),
+//! 2. normalizes by the *global* count and folds the mean loss —
+//!    through the same [`reduce::normalize`]/[`reduce::mean_loss`] the
+//!    unsharded sim entries call,
+//! 3. applies the fused optimizer update (the reference
+//!    MaskedFrugal/AdamW rules over the packed state — exactly what
+//!    the single-backend fused entries run) or, for `grad`, returns
+//!    the normalized gradient for the host-path optimizers.
+//!
+//! Non-step entries (`eval`, `scores`, `lora_adamw`, `lora_eval`) are
+//! delegated whole to shard 0: evaluation batches are deterministic
+//! and not on the hot path, `scores` feeds redefinition (amortized
+//! over T steps), and LoRA adapter state is small enough that
+//! replicating beats sharding (the ProTrain trade-off) — all are
+//! trivially bit-identical to the unsharded run.
+//!
+//! # FRUGAL-aware synchronization accounting
+//!
+//! FRUGAL's gradient split makes data parallelism unusually cheap:
+//! only the **state-full** subspace (masked-in columns + the
+//! never-masked params) needs full-precision optimizer-state sync
+//! (param‖m‖v, 12 B/elem from the owning shard), while the
+//! **state-free** complement is synced as averaged raw gradients
+//! (4 B/elem). [`ShardedBackend`] prices every reduce under that model
+//! using the live mask and reports the per-category byte totals as
+//! [`SyncTraffic`] through [`ExecBackend::sync_stats`]; the session
+//! layer folds them into its result and `bench_loop` emits them per
+//! shard count. (The numeric reduction itself always covers the full
+//! gradient — the categories change what a distributed transport would
+//! ship, not the math.)
+//!
+//! # Selection
+//!
+//! `TrainConfig.shards` (CLI `--shards`), overridable with the
+//! `ADAFRUGAL_SHARDS` environment variable via [`resolve`]; [`load`]
+//! builds the inner backends and wraps them, returning the bare
+//! backend when `shards == 1`. Shard counts must be powers of two —
+//! the precondition for the tree split to align with contiguous batch
+//! blocks — and the manifest batch must divide evenly (validated again
+//! at session construction). PJRT inner engines additionally need
+//! artifacts that provide the `grad_part` entry point.
+
+pub mod reduce;
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::backend::{self, Buffer, ExecBackend, HostData};
+use super::manifest::Manifest;
+use super::sim;
+use crate::util::par;
+
+/// Bytes shipped per element of state-full packed optimizer state
+/// (param + m + v, f32).
+const STATE_FULL_BYTES: usize = 3 * 4;
+/// Bytes shipped per element of state-free averaged gradient (f32).
+const STATE_FREE_BYTES: usize = 4;
+
+/// Cross-shard synchronization totals of one [`ShardedBackend`] over
+/// its lifetime, priced under the FRUGAL-aware model (see the module
+/// docs). Snapshot via [`ExecBackend::sync_stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SyncTraffic {
+    /// shard count of the backend that produced this snapshot
+    pub shards: usize,
+    /// sharded step reductions performed
+    pub reduces: usize,
+    /// bytes of state-full packed-state sync (masked columns + the
+    /// never-masked params, 12 B/elem per tree edge)
+    pub state_bytes: usize,
+    /// bytes of state-free averaged-gradient sync (4 B/elem per tree
+    /// edge)
+    pub grad_bytes: usize,
+}
+
+impl SyncTraffic {
+    pub fn total_bytes(&self) -> usize {
+        self.state_bytes + self.grad_bytes
+    }
+}
+
+/// Validate a shard count: power-of-two (the tree-alignment
+/// precondition for bit-exact parity) and non-zero.
+fn validate_count(n: usize) -> Result<()> {
+    ensure!(n >= 1 && n.is_power_of_two(),
+            "shard count must be a power of two >= 1, got {n}");
+    Ok(())
+}
+
+/// Resolve the configured shard count, honoring the `ADAFRUGAL_SHARDS`
+/// environment override (same pattern as `ADAFRUGAL_BACKEND`).
+pub fn resolve(configured: usize) -> Result<usize> {
+    match std::env::var("ADAFRUGAL_SHARDS") {
+        Ok(s) if !s.is_empty() => {
+            let n = match s.parse::<usize>() {
+                Ok(n) => n,
+                Err(_) => bail!("ADAFRUGAL_SHARDS must be an integer, got {s:?}"),
+            };
+            validate_count(n)?;
+            Ok(n)
+        }
+        _ => {
+            validate_count(configured)?;
+            Ok(configured)
+        }
+    }
+}
+
+/// Build the execution backend for a shard count: the bare backend for
+/// `shards == 1`, otherwise `shards` inner backends (each loading the
+/// method's entry points plus `grad_part`) behind a [`ShardedBackend`].
+pub fn load(backend_name: &str, dir: impl AsRef<Path>, name: &str, entries: &[&str],
+            shards: usize) -> Result<Box<dyn ExecBackend>> {
+    validate_count(shards)?;
+    if shards == 1 {
+        return backend::load(backend_name, dir, name, entries);
+    }
+    let mut inner_entries: Vec<&str> = entries.to_vec();
+    if !inner_entries.contains(&"grad_part") {
+        inner_entries.push("grad_part");
+    }
+    let mut inners = Vec::with_capacity(shards);
+    for i in 0..shards {
+        inners.push(
+            backend::load(backend_name, dir.as_ref(), name, &inner_entries)
+                .with_context(|| format!("loading shard {i}/{shards} backend"))?,
+        );
+    }
+    Ok(Box::new(ShardedBackend::new(inners)?))
+}
+
+/// Per-shard label slice carried into the fan-out.
+enum LabelSlice<'a> {
+    I(&'a [i32]),
+    F(&'a [f32]),
+}
+
+/// One fan-out job: everything a worker needs to produce shard `i`'s
+/// raw partial (written into its own `out` slot, so the fan-out needs
+/// no synchronization beyond the scope join).
+struct ShardJob<'a> {
+    engine: &'a Mutex<Box<dyn ExecBackend>>,
+    out: &'a mut Option<Result<Vec<f32>>>,
+    params: &'a [f32],
+    tokens: &'a [i32],
+    token_dims: [usize; 2],
+    labels: Option<LabelSlice<'a>>,
+}
+
+/// Data-parallel [`ExecBackend`] over `N` inner backends. See the
+/// module docs for the execution and synchronization model.
+pub struct ShardedBackend {
+    manifest: Manifest,
+    shards: Vec<Mutex<Box<dyn ExecBackend>>>,
+    reduces: AtomicUsize,
+    state_bytes: AtomicUsize,
+    grad_bytes: AtomicUsize,
+}
+
+impl ShardedBackend {
+    /// Wrap `inners` (one per shard, identical manifests, each
+    /// providing `grad_part`). The count must be a power of two.
+    pub fn new(inners: Vec<Box<dyn ExecBackend>>) -> Result<ShardedBackend> {
+        ensure!(!inners.is_empty(), "sharded backend needs at least one inner backend");
+        validate_count(inners.len())?;
+        let man = inners[0].manifest().clone();
+        for (i, e) in inners.iter().enumerate() {
+            let m = e.manifest();
+            ensure!(
+                m.name == man.name && m.task == man.task && m.n_params == man.n_params
+                    && m.state_len == man.state_len && m.model.batch == man.model.batch,
+                "shard {i} manifest ({}/{}) disagrees with shard 0 ({}/{})",
+                m.name, m.task, man.name, man.task
+            );
+            ensure!(e.has_entry("grad_part"),
+                    "shard {i} backend has no 'grad_part' entry: sharded execution \
+                     needs raw partial gradients (sim provides it; PJRT needs \
+                     artifacts compiled with a grad_part entry point)");
+        }
+        Ok(ShardedBackend {
+            manifest: man,
+            shards: inners.into_iter().map(Mutex::new).collect(),
+            reduces: AtomicUsize::new(0),
+            state_bytes: AtomicUsize::new(0),
+            grad_bytes: AtomicUsize::new(0),
+        })
+    }
+
+    fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn lock(&self, i: usize) -> std::sync::MutexGuard<'_, Box<dyn ExecBackend>> {
+        self.shards[i].lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Elements whose optimizer state is live under the current mask:
+    /// every never-masked param plus the masked-in columns of each
+    /// maskable matrix. `None` (no mask: plain AdamW) means everything
+    /// is state-full.
+    fn statefull_elems(&self, mask: Option<&[f32]>) -> usize {
+        let man = &self.manifest;
+        match mask {
+            None => man.n_params,
+            Some(m) => {
+                let mut n: usize =
+                    man.params.iter().filter(|p| !p.maskable).map(|p| p.size).sum();
+                for p in man.maskable() {
+                    let seg = &m[p.mask_offset..p.mask_offset + p.mask_len];
+                    n += seg.iter().filter(|&&x| x != 0.0).count() * p.rows();
+                }
+                n
+            }
+        }
+    }
+
+    /// Price one tree all-reduce under the FRUGAL-aware sync model:
+    /// `statefull` is `Some(mask)` for masked steps, `None` for plain
+    /// AdamW (all state-full), and the host-path `grad` entry passes
+    /// `grads_only = true` (no distributed optimizer state at all).
+    fn note_reduce(&self, mask: Option<&[f32]>, grads_only: bool) {
+        let edges = self.n_shards() - 1;
+        let (sf, sfree) = if grads_only {
+            (0, self.manifest.n_params)
+        } else {
+            let sf = self.statefull_elems(mask);
+            (sf, self.manifest.n_params - sf)
+        };
+        self.reduces.fetch_add(1, Ordering::Relaxed);
+        self.state_bytes.fetch_add(sf * STATE_FULL_BYTES * edges, Ordering::Relaxed);
+        self.grad_bytes.fetch_add(sfree * STATE_FREE_BYTES * edges, Ordering::Relaxed);
+    }
+
+    /// Run `entry` whole on shard 0 (non-step entries). Arguments are
+    /// re-uploaded into the inner backend so PJRT inners receive
+    /// native buffers; the output is read back into this backend's
+    /// host-buffer domain.
+    fn delegate(&self, entry: &str, args: &[&Buffer]) -> Result<Buffer> {
+        let eng = self.lock(0);
+        let mut owned: Vec<Buffer> = Vec::with_capacity(args.len());
+        for a in args {
+            owned.push(match a {
+                Buffer::Host { data: HostData::F32(v), dims } => eng.upload_f32(v, dims)?,
+                Buffer::Host { data: HostData::I32(v), dims } => eng.upload_i32(v, dims)?,
+                Buffer::Pjrt(_) => {
+                    bail!("sharded backend only accepts its own host buffers")
+                }
+            });
+        }
+        let refs: Vec<&Buffer> = owned.iter().collect();
+        let out = eng.run(entry, &refs)?;
+        let v = eng.read_all_f32(&out)?;
+        let dims = vec![v.len()];
+        Ok(Buffer::Host { data: HostData::F32(v), dims })
+    }
+
+    /// Fan `grad_part` out over the shards for contiguous row blocks
+    /// and tree-reduce the raw partials. Returns the **normalized**
+    /// gradient (first `n_params` elements) and the mean loss.
+    fn reduce_grads(&self, params: &[f32], tokens: &[i32], token_dims: &[usize],
+                    labels: Option<&Buffer>) -> Result<(Vec<f32>, f32)> {
+        let man = &self.manifest;
+        let n = man.n_params;
+        ensure!(params.len() >= n, "params buffer too short: {} < {n}", params.len());
+        ensure!(token_dims.len() == 2, "sharded step needs 2-D token dims, got {token_dims:?}");
+        let (rows, width) = (token_dims[0], token_dims[1]);
+        ensure!(rows * width == tokens.len(),
+                "token dims {token_dims:?} disagree with buffer len {}", tokens.len());
+        let nsh = self.n_shards();
+        ensure!(rows % nsh == 0,
+                "global batch of {rows} rows does not split over {nsh} shards \
+                 (shard-aware batching needs batch % shards == 0)");
+        let per = rows / nsh;
+
+        let labels: Option<LabelSlice> = match labels {
+            None => None,
+            Some(Buffer::Host { data: HostData::I32(v), .. }) => {
+                ensure!(v.len() == rows, "labels len {} != batch rows {rows}", v.len());
+                Some(LabelSlice::I(v.as_slice()))
+            }
+            Some(Buffer::Host { data: HostData::F32(v), .. }) => {
+                ensure!(v.len() == rows, "labels len {} != batch rows {rows}", v.len());
+                Some(LabelSlice::F(v.as_slice()))
+            }
+            Some(Buffer::Pjrt(_)) => bail!("sharded backend only accepts host buffers"),
+        };
+
+        let mut outs: Vec<Option<Result<Vec<f32>>>> = (0..nsh).map(|_| None).collect();
+        let jobs: Vec<ShardJob> = self
+            .shards
+            .iter()
+            .zip(outs.iter_mut())
+            .enumerate()
+            .map(|(i, (engine, out))| ShardJob {
+                engine,
+                out,
+                params: &params[..n],
+                tokens: &tokens[i * per * width..(i + 1) * per * width],
+                token_dims: [per, width],
+                labels: labels.as_ref().map(|l| match l {
+                    LabelSlice::I(v) => LabelSlice::I(&v[i * per..(i + 1) * per]),
+                    LabelSlice::F(v) => LabelSlice::F(&v[i * per..(i + 1) * per]),
+                }),
+            })
+            .collect();
+        // one worker per shard; each writes only its own slot, and the
+        // reduce below runs after the scope join, on this thread, in
+        // shard order — so thread scheduling cannot reorder anything
+        par::run(jobs, |job| {
+            *job.out = Some(run_shard(job.engine, job.params, job.tokens,
+                                      &job.token_dims, job.labels.as_ref()));
+        });
+
+        let mut partials = Vec::with_capacity(nsh);
+        for (i, slot) in outs.into_iter().enumerate() {
+            let part = match slot {
+                Some(r) => r.with_context(|| format!("shard {i} grad_part failed"))?,
+                None => bail!("shard {i} produced no output"),
+            };
+            ensure!(part.len() == n + 2,
+                    "shard {i} grad_part returned {} values, want n+2 = {}",
+                    part.len(), n + 2);
+            partials.push(part);
+        }
+        let mut totals = reduce::tree_sum_vecs(partials);
+        let count = totals[n + 1] as usize;
+        // the count crosses the wire as f32 (exact below 2^24); a
+        // global batch large enough to round it must fail loudly, not
+        // normalize by a wrong denominator
+        ensure!(count < reduce::MAX_F32_EXACT_COUNT,
+                "global element count {count} exceeds the exact-f32 range of the \
+                 grad_part count slot");
+        let loss = reduce::mean_loss(totals[n], count);
+        totals.truncate(n);
+        reduce::normalize(&mut totals, count);
+        Ok((totals, loss))
+    }
+}
+
+/// One shard's half of the fan-out: upload the replicated params and
+/// the shard's row block into the inner backend, run `grad_part`, and
+/// read the raw partial back.
+fn run_shard(engine: &Mutex<Box<dyn ExecBackend>>, params: &[f32], tokens: &[i32],
+             token_dims: &[usize; 2], labels: Option<&LabelSlice>) -> Result<Vec<f32>> {
+    let eng = engine.lock().unwrap_or_else(|p| p.into_inner());
+    let pbuf = eng.upload_f32(params, &[params.len()])?;
+    let tbuf = eng.upload_i32(tokens, token_dims)?;
+    let lbuf = match labels {
+        None => None,
+        Some(LabelSlice::I(v)) => Some(eng.upload_i32(v, &[v.len()])?),
+        Some(LabelSlice::F(v)) => Some(eng.upload_f32(v, &[v.len()])?),
+    };
+    let mut args: Vec<&Buffer> = vec![&pbuf, &tbuf];
+    if let Some(l) = &lbuf {
+        args.push(l);
+    }
+    let out = eng.run("grad_part", &args)?;
+    eng.read_all_f32(&out)
+}
+
+impl ExecBackend for ShardedBackend {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn has_entry(&self, entry: &str) -> bool {
+        self.lock(0).has_entry(entry)
+    }
+
+    fn shard_count(&self) -> usize {
+        self.n_shards()
+    }
+
+    fn sync_stats(&self) -> Option<SyncTraffic> {
+        Some(SyncTraffic {
+            shards: self.n_shards(),
+            reduces: self.reduces.load(Ordering::Relaxed),
+            state_bytes: self.state_bytes.load(Ordering::Relaxed),
+            grad_bytes: self.grad_bytes.load(Ordering::Relaxed),
+        })
+    }
+
+    fn run(&self, entry: &str, args: &[&Buffer]) -> Result<Buffer> {
+        let man = &self.manifest;
+        let cls = man.task != "lm";
+        // step entries are sharded; everything else runs whole on
+        // shard 0 (see the module docs for why that is exact)
+        match entry {
+            "frugal" | "adamw" => {
+                let masked = entry == "frugal";
+                let want = 2 + usize::from(masked) + 1 + usize::from(cls);
+                ensure!(args.len() == want,
+                        "{entry}: expected {want} args, got {}", args.len());
+                let state = args[0].host_f32()?;
+                ensure!(state.len() == man.state_len,
+                        "{entry}: state len {} != {}", state.len(), man.state_len);
+                let mask = if masked { Some(args[1].host_f32()?) } else { None };
+                let base = if masked { 2 } else { 1 };
+                let scal = sim::scalars_of(args[base])?;
+                let tokens = args[base + 1].host_i32()?;
+                let tdims = match args[base + 1] {
+                    Buffer::Host { dims, .. } => dims.as_slice(),
+                    Buffer::Pjrt(_) => bail!("sharded backend only accepts host buffers"),
+                };
+                let labels = if cls { Some(args[base + 2]) } else { None };
+                let (grads, loss) =
+                    self.reduce_grads(&state[..man.n_params], tokens, tdims, labels)?;
+                // the update validates the mask length; price the sync
+                // only once the step is known-good
+                let next = sim::fused_step_packed(man, state, mask, &scal, &grads, loss)?;
+                self.note_reduce(mask, false);
+                let dims = vec![next.len()];
+                Ok(Buffer::Host { data: HostData::F32(next), dims })
+            }
+            "grad" => {
+                let want = 2 + usize::from(cls);
+                ensure!(args.len() == want,
+                        "grad: expected {want} args, got {}", args.len());
+                let params = args[0].host_f32()?;
+                let tokens = args[1].host_i32()?;
+                let tdims = match args[1] {
+                    Buffer::Host { dims, .. } => dims.as_slice(),
+                    Buffer::Pjrt(_) => bail!("sharded backend only accepts host buffers"),
+                };
+                let labels = if cls { Some(args[2]) } else { None };
+                let (mut grads, loss) = self.reduce_grads(params, tokens, tdims, labels)?;
+                self.note_reduce(None, true);
+                grads.push(loss);
+                let dims = vec![grads.len()];
+                Ok(Buffer::Host { data: HostData::F32(grads), dims })
+            }
+            _ => self.delegate(entry, args),
+        }
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        let n: usize = dims.iter().product();
+        ensure!(dims.is_empty() || n == data.len(),
+                "upload f32: dims {dims:?} product {n} != data len {}", data.len());
+        Ok(Buffer::Host { data: HostData::F32(data.to_vec()), dims: dims.to_vec() })
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        let n: usize = dims.iter().product();
+        ensure!(dims.is_empty() || n == data.len(),
+                "upload i32: dims {dims:?} product {n} != data len {}", data.len());
+        Ok(Buffer::Host { data: HostData::I32(data.to_vec()), dims: dims.to_vec() })
+    }
+
+    fn upload_f32_into(&self, slot: &mut Option<Buffer>, data: &[f32],
+                       dims: &[usize]) -> Result<bool> {
+        if let Some(Buffer::Host { data: HostData::F32(v), dims: d }) = slot {
+            if v.len() == data.len() && d.as_slice() == dims {
+                v.copy_from_slice(data);
+                return Ok(true);
+            }
+        }
+        *slot = Some(ExecBackend::upload_f32(self, data, dims)?);
+        Ok(false)
+    }
+
+    fn upload_i32_into(&self, slot: &mut Option<Buffer>, data: &[i32],
+                       dims: &[usize]) -> Result<bool> {
+        if let Some(Buffer::Host { data: HostData::I32(v), dims: d }) = slot {
+            if v.len() == data.len() && d.as_slice() == dims {
+                v.copy_from_slice(data);
+                return Ok(true);
+            }
+        }
+        *slot = Some(ExecBackend::upload_i32(self, data, dims)?);
+        Ok(false)
+    }
+
+    fn read_all_f32(&self, buf: &Buffer) -> Result<Vec<f32>> {
+        Ok(buf.host_f32()?.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::StepScalars;
+    use crate::runtime::sim::SimEngine;
+    use crate::util::rng::Rng;
+
+    fn sharded_lm(name: &str, n: usize) -> ShardedBackend {
+        let entries = ["grad", "eval", "frugal", "adamw", "scores", "grad_part"];
+        let inners: Vec<Box<dyn ExecBackend>> = (0..n)
+            .map(|_| Box::new(SimEngine::from_name(name, &entries).unwrap())
+                 as Box<dyn ExecBackend>)
+            .collect();
+        ShardedBackend::new(inners).unwrap()
+    }
+
+    fn lm_tokens(man: &Manifest, seed: u64) -> Vec<i32> {
+        let d = &man.model;
+        let mut rng = Rng::new(seed);
+        (0..d.batch * (d.seq + 1)).map(|_| rng.below(d.vocab) as i32).collect()
+    }
+
+    #[test]
+    fn resolve_validates_and_honors_config() {
+        assert_eq!(resolve(1).unwrap(), 1);
+        assert_eq!(resolve(4).unwrap(), 4);
+        assert!(resolve(0).is_err());
+        assert!(resolve(3).is_err());
+    }
+
+    #[test]
+    fn load_returns_bare_backend_for_one_shard() {
+        let b = load("sim", "artifacts", "nano", &["grad", "eval"], 1).unwrap();
+        assert_eq!(b.shard_count(), 1);
+        assert!(b.sync_stats().is_none());
+        let s = load("sim", "artifacts", "nano.b8", &["grad", "eval"], 4).unwrap();
+        assert_eq!(s.shard_count(), 4);
+        assert_eq!(s.sync_stats().unwrap(), SyncTraffic { shards: 4, ..Default::default() });
+    }
+
+    #[test]
+    fn sharded_grad_matches_single_backend_bitwise() {
+        let single = SimEngine::from_name("nano.b8", &["grad"]).unwrap();
+        let man = single.manifest().clone();
+        let n = man.n_params;
+        let params = crate::model::init::init_state(&man, 5)[..n].to_vec();
+        let toks = lm_tokens(&man, 9);
+        for shards in [2usize, 4] {
+            let sb = sharded_lm("nano.b8", shards);
+            let pb = single.upload_f32(&params, &[n]).unwrap();
+            let tb = single
+                .upload_i32(&toks, &[man.model.batch, man.model.seq + 1])
+                .unwrap();
+            let want = single.read_all_f32(&single.run("grad", &[&pb, &tb]).unwrap()).unwrap();
+            let pb2 = sb.upload_f32(&params, &[n]).unwrap();
+            let tb2 = sb.upload_i32(&toks, &[man.model.batch, man.model.seq + 1]).unwrap();
+            let got = sb.read_all_f32(&sb.run("grad", &[&pb2, &tb2]).unwrap()).unwrap();
+            assert_eq!(want.len(), got.len());
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(w.to_bits(), g.to_bits(), "{shards} shards: elem {i}: {w} vs {g}");
+            }
+            let sync = sb.sync_stats().unwrap();
+            assert_eq!(sync.reduces, 1);
+            assert_eq!(sync.grad_bytes, 4 * n * (shards - 1));
+            assert_eq!(sync.state_bytes, 0);
+        }
+    }
+
+    #[test]
+    fn sharded_adamw_step_matches_single_backend_bitwise() {
+        let single = SimEngine::from_name("nano.b8", &["adamw"]).unwrap();
+        let man = single.manifest().clone();
+        let state = crate::model::init::init_state(&man, 2);
+        let toks = lm_tokens(&man, 3);
+        let scal = StepScalars::new(1e-2, 1e-3, 0.01, 0.9, 0.999, 1e-8, 1).to_array();
+        let sb = sharded_lm("nano.b8", 2);
+        let run = |e: &dyn ExecBackend| -> Vec<f32> {
+            let s = e.upload_f32(&state, &[man.state_len]).unwrap();
+            let c = e.upload_f32(&scal, &[8]).unwrap();
+            let t = e.upload_i32(&toks, &[man.model.batch, man.model.seq + 1]).unwrap();
+            e.read_all_f32(&e.run("adamw", &[&s, &c, &t]).unwrap()).unwrap()
+        };
+        let want = run(&single);
+        let got = run(&sb);
+        assert_eq!(want.len(), got.len());
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.to_bits(), g.to_bits());
+        }
+        // plain AdamW: the whole state is state-full
+        let sync = sb.sync_stats().unwrap();
+        assert_eq!(sync.state_bytes, 12 * man.n_params);
+        assert_eq!(sync.grad_bytes, 0);
+    }
+
+    #[test]
+    fn rejects_indivisible_batch_and_bad_counts() {
+        // nano has batch 2: 4 shards cannot split it
+        let sb = sharded_lm("nano", 4);
+        let man = sb.manifest().clone();
+        let params = vec![0f32; man.n_params];
+        let toks = lm_tokens(&man, 1);
+        let pb = sb.upload_f32(&params, &[man.n_params]).unwrap();
+        let tb = sb.upload_i32(&toks, &[man.model.batch, man.model.seq + 1]).unwrap();
+        let err = format!("{:#}", sb.run("grad", &[&pb, &tb]).unwrap_err());
+        assert!(err.contains("shards"), "{err}");
+        // non-power-of-two inner count is rejected up front
+        let entries = ["grad", "grad_part"];
+        let inners: Vec<Box<dyn ExecBackend>> = (0..3)
+            .map(|_| Box::new(SimEngine::from_name("nano", &entries).unwrap())
+                 as Box<dyn ExecBackend>)
+            .collect();
+        assert!(ShardedBackend::new(inners).is_err());
+        // inner backends without grad_part are rejected up front
+        let inners: Vec<Box<dyn ExecBackend>> = (0..2)
+            .map(|_| Box::new(SimEngine::from_name("nano", &["grad"]).unwrap())
+                 as Box<dyn ExecBackend>)
+            .collect();
+        assert!(ShardedBackend::new(inners).is_err());
+    }
+
+    #[test]
+    fn delegated_entries_match_single_backend() {
+        let single = SimEngine::from_name("nano.b8", &["eval"]).unwrap();
+        let man = single.manifest().clone();
+        let state = crate::model::init::init_state(&man, 7);
+        let toks = lm_tokens(&man, 4);
+        let sb = sharded_lm("nano.b8", 2);
+        let run = |e: &dyn ExecBackend| -> Vec<f32> {
+            let s = e.upload_f32(&state, &[man.state_len]).unwrap();
+            let t = e.upload_i32(&toks, &[man.model.batch, man.model.seq + 1]).unwrap();
+            let out = e.run("eval", &[&s, &t]).unwrap();
+            e.read_f32(&out, 0, 2).unwrap()
+        };
+        assert_eq!(run(&single), run(&sb));
+        // delegation is not a reduce: sync counters stay untouched
+        assert_eq!(sb.sync_stats().unwrap().reduces, 0);
+    }
+
+    #[test]
+    fn frugal_sync_splits_state_full_vs_state_free() {
+        let sb = sharded_lm("nano.b8", 2);
+        let man = sb.manifest().clone();
+        let mut mask = crate::projection::SubspaceMask::new(&man);
+        let mut rng = Rng::new(0);
+        mask.redefine(crate::projection::Strategy::Random, 0.5, None, &mut rng).unwrap();
+        let rendered = mask.render();
+        let state = crate::model::init::init_state(&man, 1);
+        let toks = lm_tokens(&man, 2);
+        let scal = StepScalars::new(1e-2, 1e-3, 0.0, 0.9, 0.999, 1e-8, 1).to_array();
+        let s = sb.upload_f32(&state, &[man.state_len]).unwrap();
+        let m = sb.upload_f32(&rendered, &[man.mask_len]).unwrap();
+        let c = sb.upload_f32(&scal, &[8]).unwrap();
+        let t = sb.upload_i32(&toks, &[man.model.batch, man.model.seq + 1]).unwrap();
+        sb.run("frugal", &[&s, &m, &c, &t]).unwrap();
+        let sync = sb.sync_stats().unwrap();
+        // state-full = never-masked params + rows * masked-in columns
+        let bias: usize = man.params.iter().filter(|p| !p.maskable).map(|p| p.size).sum();
+        let masked_cols: usize = rendered.iter().filter(|&&x| x != 0.0).count();
+        let rows = man.maskable().next().unwrap().rows();
+        let sf = bias + masked_cols * rows;
+        assert_eq!(sync.state_bytes, 12 * sf);
+        assert_eq!(sync.grad_bytes, 4 * (man.n_params - sf));
+        assert!(sync.grad_bytes > 0 && sync.state_bytes > 0);
+    }
+}

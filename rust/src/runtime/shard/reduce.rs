@@ -1,0 +1,175 @@
+//! Deterministic fixed-order tree reduction — the single definition of
+//! "sum over batch elements" that makes data-parallel sharding
+//! bit-exact.
+//!
+//! # Why a tree, and why it must be shared
+//!
+//! Floating-point addition is not associative, so a gradient summed
+//! serially over a batch differs (in the last bits) from the same
+//! gradient assembled out of per-shard partial sums. The usual fix is
+//! to accept the drift; this repo's golden/parity gates instead make
+//! the reduction order *part of the ABI*: every batch reduction —
+//! per-window gradients and losses inside
+//! [`crate::runtime::sim::SimEngine`], and cross-shard partials inside
+//! [`crate::runtime::shard::ShardedBackend`] — goes through the same
+//! fixed balanced binary tree defined here.
+//!
+//! The tree over `len` leaves splits at `ceil(len/2)` and recurses.
+//! The key property (pinned by the tests below): for any power-of-two
+//! shard count `N` dividing `len`, the contiguous blocks of
+//! `len / N` leaves are exact subtrees, so
+//!
+//! ```text
+//! tree(leaves)  ==  tree( [tree(block_0), …, tree(block_{N-1})] )
+//! ```
+//!
+//! *bit-for-bit*. A shard that tree-reduces its own contiguous
+//! sub-batch therefore produces exactly the subtree value the global
+//! reduction needs, and combining the shard partials with the same
+//! function reproduces the single-backend result to the last bit — on
+//! any thread schedule, because reduction happens after the fan-out
+//! barrier, on one thread, in shard order.
+//!
+//! Normalization (`1/count` scaling, mean-loss folding) also lives
+//! here so the sharded and unsharded paths cannot diverge in the final
+//! ops either.
+
+/// The single definition of the tree's split point: the left child of
+/// a node over `len` leaves covers the first `ceil(len/2)`. Everything
+/// that walks the tree — [`tree_sum_vecs`], [`tree_sum_f32`], and the
+/// sim engine's in-place gradient recursion — must call this, so the
+/// shape cannot drift between implementations.
+pub fn split_mid(len: usize) -> usize {
+    (len + 1) / 2
+}
+
+/// Element-wise tree-sum of equally-sized vectors, consuming `parts`
+/// in order (splits per [`split_mid`]). Returns an empty vector for no
+/// parts.
+pub fn tree_sum_vecs(mut parts: Vec<Vec<f32>>) -> Vec<f32> {
+    fn rec(parts: &mut [Vec<f32>]) -> Vec<f32> {
+        if parts.len() == 1 {
+            return std::mem::take(&mut parts[0]);
+        }
+        let mid = split_mid(parts.len());
+        let (lo, hi) = parts.split_at_mut(mid);
+        let mut left = rec(lo);
+        let right = rec(hi);
+        debug_assert_eq!(left.len(), right.len(), "tree_sum_vecs: ragged parts");
+        for (x, y) in left.iter_mut().zip(&right) {
+            *x += *y;
+        }
+        left
+    }
+    if parts.is_empty() {
+        return Vec::new();
+    }
+    rec(&mut parts)
+}
+
+/// Scalar sibling of [`tree_sum_vecs`]: tree-sum of f32 values with
+/// the identical [`split_mid`] split, so per-window losses reduce in
+/// the same shape as per-window gradients.
+pub fn tree_sum_f32(vals: &[f32]) -> f32 {
+    match vals.len() {
+        0 => 0.0,
+        1 => vals[0],
+        len => {
+            let mid = split_mid(len);
+            tree_sum_f32(&vals[..mid]) + tree_sum_f32(&vals[mid..])
+        }
+    }
+}
+
+/// Largest element count whose sums stay exactly representable in the
+/// f32 `count` slot of the `grad_part` ABI (2^24). Producers and the
+/// reducer both guard on it, so a too-large batch fails loudly instead
+/// of silently normalizing by a rounded count.
+pub const MAX_F32_EXACT_COUNT: usize = 1 << 24;
+
+/// Scale a raw (tree-summed) gradient vector to a batch mean. One
+/// multiply per element by the reciprocal — both the sim backend and
+/// the sharded reducer call this, so the normalization op sequence is
+/// identical on every path.
+pub fn normalize(grads: &mut [f32], count: usize) {
+    let inv = 1.0 / count.max(1) as f32;
+    for g in grads.iter_mut() {
+        *g *= inv;
+    }
+}
+
+/// Fold a tree-summed f32 loss total into the mean loss the packed
+/// state's loss slot carries. f64 division, rounded once to f32 —
+/// exactly the historical `(sum / count) as f32` the entries used.
+pub fn mean_loss(sum: f32, count: usize) -> f32 {
+    (sum as f64 / count.max(1) as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn vals(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32(1.0)).collect()
+    }
+
+    /// The composability contract behind shard parity: contiguous
+    /// power-of-two blocks are exact subtrees.
+    #[test]
+    fn scalar_tree_composes_over_aligned_blocks() {
+        for &(len, shards) in &[(8usize, 2usize), (8, 4), (16, 4), (16, 8), (32, 2), (12, 4)] {
+            let v = vals(len, len as u64 * 31 + shards as u64);
+            let whole = tree_sum_f32(&v);
+            let block = len / shards;
+            let partials: Vec<f32> =
+                v.chunks(block).map(tree_sum_f32).collect();
+            let composed = tree_sum_f32(&partials);
+            assert_eq!(whole.to_bits(), composed.to_bits(),
+                       "len {len} shards {shards}: {whole} != {composed}");
+        }
+    }
+
+    #[test]
+    fn vec_tree_composes_over_aligned_blocks() {
+        let dim = 37;
+        for &(len, shards) in &[(8usize, 2usize), (8, 4), (16, 4)] {
+            let parts: Vec<Vec<f32>> =
+                (0..len).map(|i| vals(dim, 1000 + i as u64)).collect();
+            let whole = tree_sum_vecs(parts.clone());
+            let block = len / shards;
+            let partials: Vec<Vec<f32>> = parts
+                .chunks(block)
+                .map(|c| tree_sum_vecs(c.to_vec()))
+                .collect();
+            let composed = tree_sum_vecs(partials);
+            for (a, b) in whole.iter().zip(&composed) {
+                assert_eq!(a.to_bits(), b.to_bits(), "len {len} shards {shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        assert_eq!(tree_sum_f32(&[]), 0.0);
+        assert_eq!(tree_sum_f32(&[3.5]), 3.5);
+        assert_eq!(tree_sum_f32(&[1.0, 2.0, 3.0]), (1.0 + 2.0) + 3.0);
+        assert!(tree_sum_vecs(Vec::new()).is_empty());
+        assert_eq!(tree_sum_vecs(vec![vec![1.0, 2.0]]), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn normalize_and_mean_loss_match_reference_ops() {
+        let mut g = vec![2.0f32, 4.0, -6.0];
+        normalize(&mut g, 4);
+        let inv = 1.0f32 / 4.0;
+        assert_eq!(g, vec![2.0 * inv, 4.0 * inv, -6.0 * inv]);
+        // zero count clamps instead of dividing by zero
+        let mut z = vec![1.0f32];
+        normalize(&mut z, 0);
+        assert_eq!(z, vec![1.0]);
+        assert_eq!(mean_loss(6.0, 4), (6.0f64 / 4.0) as f32);
+        assert_eq!(mean_loss(1.0, 0), 1.0);
+    }
+}

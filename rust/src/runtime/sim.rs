@@ -34,11 +34,24 @@
 //! RNG is `util::rng`, and the parallel host step is pinned
 //! bit-identical to serial (see `tests/properties.rs`), which is what
 //! makes golden-trajectory tests possible.
+//!
+//! # Batch reductions are tree-shaped (the sharding contract)
+//!
+//! Gradients and losses are accumulated **per window/example** and then
+//! combined with the fixed-order binary tree in
+//! [`crate::runtime::shard::reduce`], with normalization applied once
+//! to the tree total. That makes every batch pass *shard-decomposable*:
+//! a contiguous sub-batch's raw pass (the `grad_part` entry —
+//! unnormalized tree-partial gradients ‖ f32 partial loss ‖ count) is
+//! exactly a subtree of the full batch's pass, so
+//! [`crate::runtime::shard::ShardedBackend`] can reassemble the
+//! single-backend result bit-for-bit from per-shard partials.
 
 use anyhow::{bail, ensure, Context, Result};
 
 use super::backend::{Buffer, ExecBackend, HostData};
 use super::manifest::Manifest;
+use super::shard::reduce;
 use crate::optim::adamw::AdamW;
 use crate::optim::frugal::MaskedFrugal;
 use crate::optim::StepScalars;
@@ -58,8 +71,19 @@ const CLS_ROWS: usize = 32;
 const CLS_COLS: usize = 32;
 const CLS_BLOCK: usize = 8;
 
-const LM_ENTRIES: &[&str] = &["grad", "eval", "frugal", "adamw", "scores"];
-const CLS_ENTRIES: &[&str] = &["grad", "eval", "frugal", "adamw", "lora_adamw", "lora_eval"];
+// "mid" preset: a larger LM geometry whose per-step gradient work is
+// big enough to amortize a thread spawn per shard — the workload
+// `bench_loop`'s shard sweep measures throughput on.
+const MID_MATS: usize = 4;
+const MID_ROWS: usize = 64;
+const MID_COLS: usize = 128;
+const MID_BLOCK: usize = 16;
+const MID_BATCH: usize = 32;
+const MID_SEQ: usize = 16;
+
+const LM_ENTRIES: &[&str] = &["grad", "grad_part", "eval", "frugal", "adamw", "scores"];
+const CLS_ENTRIES: &[&str] =
+    &["grad", "grad_part", "eval", "frugal", "adamw", "lora_adamw", "lora_eval"];
 
 /// Task labels as uploaded by the fine-tuner: class ids (i32) or
 /// regression targets (f32, `n_cls == 1`).
@@ -96,7 +120,12 @@ impl SimEngine {
     /// Build the sim backend for an artifact name, mirroring the preset
     /// naming the coordinator uses with real artifacts:
     /// `"<preset>"` → LM, `"<preset>.cls<N>"` → N-way classification,
-    /// `"<preset>.cls<N>_lora"` → + LoRA adapters.
+    /// `"<preset>.cls<N>_lora"` → + LoRA adapters. Two sim-only
+    /// extensions support sharded/bench workloads: a `".b<B>"` suffix
+    /// overrides the LM global batch (e.g. `"nano.b8"` — the
+    /// shard-parity workload, whose 8 windows split over 2 or 4
+    /// shards), and base preset `"mid"` selects a larger LM geometry
+    /// for throughput benchmarking.
     pub fn from_name(name: &str, entries: &[&str]) -> Result<SimEngine> {
         let man = match name.split_once(".cls") {
             Some((_, rest)) => {
@@ -109,7 +138,31 @@ impl SimEngine {
                     .with_context(|| format!("parsing n_cls from artifact name {name:?}"))?;
                 Manifest::synthetic_cls(CLS_MATS, CLS_ROWS, CLS_COLS, CLS_BLOCK, n_cls, lora)?
             }
-            None => Manifest::synthetic_lm(LM_MATS, LM_ROWS, LM_COLS, LM_BLOCK)?,
+            None => {
+                let (base, batch) = match name.split_once(".b") {
+                    Some((b, suffix)) => {
+                        let n: usize = suffix.parse().with_context(|| {
+                            format!("parsing batch from artifact name {name:?}")
+                        })?;
+                        ensure!(n >= 1, "batch suffix must be >= 1 in {name:?}");
+                        (b, Some(n))
+                    }
+                    None => (name, None),
+                };
+                let mut man = if base == "mid" {
+                    let mut m =
+                        Manifest::synthetic_lm(MID_MATS, MID_ROWS, MID_COLS, MID_BLOCK)?;
+                    m.model.batch = MID_BATCH;
+                    m.model.seq = MID_SEQ;
+                    m
+                } else {
+                    Manifest::synthetic_lm(LM_MATS, LM_ROWS, LM_COLS, LM_BLOCK)?
+                };
+                if let Some(b) = batch {
+                    man.model.batch = b;
+                }
+                man
+            }
         };
         Self::new(man, entries, SIM_SEED)
     }
@@ -236,10 +289,64 @@ impl SimEngine {
         x
     }
 
-    /// Next-token LM pass. Returns `(summed loss, token count)`;
-    /// `grads`, when given, receives mean-normalized gradients.
-    fn lm_pass(&self, params: &[f32], tokens: &[i32],
-               mut grads: Option<&mut [f32]>) -> Result<(f64, usize)> {
+    /// Raw next-token LM pass: per-window gradients and f64-accumulated
+    /// window losses (rounded to f32 per window), both combined with
+    /// the fixed-order tree in [`reduce`], **unnormalized**. Because
+    /// the tree over a contiguous sub-batch is an exact subtree of the
+    /// full batch's tree, this is the shard-decomposable canonical
+    /// form the `grad_part` entry exports. Returns
+    /// `(tree-summed loss, token count)`.
+    /// One window's contribution: the f64 loss sum over its `seq`
+    /// positions, with raw (unnormalized) gradients accumulated into
+    /// `g` when given. `h`/`dh` are caller-provided scratch.
+    fn lm_window(&self, params: &[f32], tokens: &[i32], sp1: usize, w: usize,
+                 h: &mut [f32], dh: &mut [f32], mut g: Option<&mut [f32]>) -> f64 {
+        let d = &self.manifest.model;
+        let mut wsum = 0f64;
+        for j in 0..d.seq {
+            let t = tokens[w * sp1 + j].rem_euclid(d.vocab as i32) as usize;
+            let u = tokens[w * sp1 + j + 1].rem_euclid(d.vocab as i32) as usize;
+            let x = &self.embed[t * self.rows..(t + 1) * self.rows];
+            let y = &self.target[u * self.cols..(u + 1) * self.cols];
+            self.head_into(params, x, h);
+            for c in 0..self.cols {
+                let diff = h[c] - y[c];
+                wsum += 0.5 * (diff as f64) * (diff as f64);
+                dh[c] = diff;
+            }
+            if let Some(g) = g.as_deref_mut() {
+                self.accum_grads(g, x, dh);
+            }
+        }
+        wsum
+    }
+
+    /// The [`reduce::split_mid`] gradient subtree over windows
+    /// `[lo, hi)`: leaves are visited in order and children combine in
+    /// place, so this is bit-identical to materializing one vector per
+    /// window and calling [`reduce::tree_sum_vecs`] (pinned by
+    /// `lm_grad_tree_matches_materialized_parts`) while keeping peak
+    /// scratch at O(log batch) gradient vectors instead of O(batch).
+    fn lm_grad_tree(&self, params: &[f32], tokens: &[i32], sp1: usize, lo: usize,
+                    hi: usize, wlosses: &mut [f32], h: &mut [f32],
+                    dh: &mut [f32]) -> Vec<f32> {
+        if hi - lo == 1 {
+            let mut g = vec![0f32; self.manifest.n_params];
+            wlosses[lo] =
+                self.lm_window(params, tokens, sp1, lo, h, dh, Some(&mut g)) as f32;
+            return g;
+        }
+        let mid = lo + reduce::split_mid(hi - lo);
+        let mut left = self.lm_grad_tree(params, tokens, sp1, lo, mid, wlosses, h, dh);
+        let right = self.lm_grad_tree(params, tokens, sp1, mid, hi, wlosses, h, dh);
+        for (x, y) in left.iter_mut().zip(&right) {
+            *x += *y;
+        }
+        left
+    }
+
+    fn lm_pass_raw(&self, params: &[f32], tokens: &[i32],
+                   mut grads: Option<&mut [f32]>) -> Result<(f32, usize)> {
         let man = &self.manifest;
         ensure!(params.len() >= man.n_params, "params buffer too short");
         let d = &man.model;
@@ -248,28 +355,77 @@ impl SimEngine {
                 "token buffer len {} is not a multiple of seq+1 = {sp1}", tokens.len());
         let batch = tokens.len() / sp1;
         let count = batch * d.seq;
-        let scale = 1.0 / count as f32;
-        let mut sum = 0f64;
         let mut h = vec![0f32; self.cols];
         let mut dh = vec![0f32; self.cols];
-        for w in 0..batch {
-            for j in 0..d.seq {
-                let t = tokens[w * sp1 + j].rem_euclid(d.vocab as i32) as usize;
-                let u = tokens[w * sp1 + j + 1].rem_euclid(d.vocab as i32) as usize;
-                let x = &self.embed[t * self.rows..(t + 1) * self.rows];
-                let y = &self.target[u * self.cols..(u + 1) * self.cols];
-                self.head_into(params, x, &mut h);
-                for c in 0..self.cols {
-                    let diff = h[c] - y[c];
-                    sum += 0.5 * (diff as f64) * (diff as f64);
-                    dh[c] = diff * scale;
-                }
-                if let Some(g) = grads.as_deref_mut() {
-                    self.accum_grads(g, x, &dh);
+        let mut wlosses = vec![0f32; batch];
+        match grads.as_deref_mut() {
+            Some(g) => {
+                let total = self.lm_grad_tree(params, tokens, sp1, 0, batch,
+                                              &mut wlosses, &mut h, &mut dh);
+                g.copy_from_slice(&total);
+            }
+            None => {
+                for w in 0..batch {
+                    wlosses[w] =
+                        self.lm_window(params, tokens, sp1, w, &mut h, &mut dh, None)
+                            as f32;
                 }
             }
         }
+        Ok((reduce::tree_sum_f32(&wlosses), count))
+    }
+
+    /// Next-token LM pass. Returns `(tree-summed loss, token count)`;
+    /// `grads`, when given, receives mean-normalized gradients.
+    fn lm_pass(&self, params: &[f32], tokens: &[i32],
+               mut grads: Option<&mut [f32]>) -> Result<(f32, usize)> {
+        let (sum, count) = self.lm_pass_raw(params, tokens, grads.as_deref_mut())?;
+        if let Some(g) = grads {
+            reduce::normalize(g, count);
+        }
         Ok((sum, count))
+    }
+
+    /// Raw classification pass: per-example unnormalized gradients and
+    /// f32-rounded per-example losses, tree-combined like
+    /// [`SimEngine::lm_pass_raw`] (one example = one leaf). Returns
+    /// `(tree-summed loss, batch)`.
+    fn cls_pass_raw(&self, params: &[f32], tokens: &[i32], labels: &Labels,
+                    mut grads: Option<&mut [f32]>,
+                    mut logits_out: Option<&mut Vec<f32>>) -> Result<(f32, usize)> {
+        let d = &self.manifest.model;
+        ensure!(!tokens.is_empty() && tokens.len() % d.seq == 0,
+                "token buffer len {} is not a multiple of seq {}", tokens.len(), d.seq);
+        let batch = tokens.len() / d.seq;
+        ensure!(labels.len() == batch, "labels len {} != batch {batch}", labels.len());
+        let mut h = vec![0f32; self.cols];
+        let mut dh = vec![0f32; self.cols];
+        let mut logits = vec![0f32; d.n_cls];
+        let mut dlog = vec![0f32; d.n_cls];
+        let mut wlosses = Vec::with_capacity(batch);
+        // materialized per-example partials are fine here: sim cls
+        // batches are small by manifest construction (synthetic_cls
+        // pins batch = 8), unlike the LM path's O(log batch) recursion
+        let mut parts: Vec<Vec<f32>> = Vec::new();
+        for w in 0..batch {
+            let x = self.pool(&tokens[w * d.seq..(w + 1) * d.seq]);
+            self.head_into(params, &x, &mut h);
+            self.readout_into(&h, &mut logits);
+            wlosses.push(loss_and_dlogits(labels, w, &logits, &mut dlog)? as f32);
+            if let Some(out) = logits_out.as_deref_mut() {
+                out.extend_from_slice(&logits);
+            }
+            if grads.is_some() {
+                let mut gw = vec![0f32; self.manifest.n_params];
+                self.backprop_readout(&dlog, 1.0, &mut dh);
+                self.accum_grads(&mut gw, &x, &dh);
+                parts.push(gw);
+            }
+        }
+        if let Some(g) = grads.as_deref_mut() {
+            g.copy_from_slice(&reduce::tree_sum_vecs(parts));
+        }
+        Ok((reduce::tree_sum_f32(&wlosses), batch))
     }
 
     /// Full-parameter classification pass. Returns the mean loss over
@@ -277,32 +433,13 @@ impl SimEngine {
     /// collects per-example logits.
     fn cls_pass(&self, params: &[f32], tokens: &[i32], labels: &Labels,
                 mut grads: Option<&mut [f32]>,
-                mut logits_out: Option<&mut Vec<f32>>) -> Result<f64> {
-        let d = &self.manifest.model;
-        ensure!(!tokens.is_empty() && tokens.len() % d.seq == 0,
-                "token buffer len {} is not a multiple of seq {}", tokens.len(), d.seq);
-        let batch = tokens.len() / d.seq;
-        ensure!(labels.len() == batch, "labels len {} != batch {batch}", labels.len());
-        let scale = 1.0 / batch as f32;
-        let mut sum = 0f64;
-        let mut h = vec![0f32; self.cols];
-        let mut dh = vec![0f32; self.cols];
-        let mut logits = vec![0f32; d.n_cls];
-        let mut dlog = vec![0f32; d.n_cls];
-        for w in 0..batch {
-            let x = self.pool(&tokens[w * d.seq..(w + 1) * d.seq]);
-            self.head_into(params, &x, &mut h);
-            self.readout_into(&h, &mut logits);
-            sum += loss_and_dlogits(labels, w, &logits, &mut dlog)?;
-            if let Some(out) = logits_out.as_deref_mut() {
-                out.extend_from_slice(&logits);
-            }
-            if let Some(g) = grads.as_deref_mut() {
-                self.backprop_readout(&dlog, scale, &mut dh);
-                self.accum_grads(g, &x, &dh);
-            }
+                logits_out: Option<&mut Vec<f32>>) -> Result<f64> {
+        let (sum, batch) =
+            self.cls_pass_raw(params, tokens, labels, grads.as_deref_mut(), logits_out)?;
+        if let Some(g) = grads {
+            reduce::normalize(g, batch);
         }
-        Ok(sum / batch as f64)
+        Ok(reduce::mean_loss(sum, batch) as f64)
     }
 
     /// `logits = P·h` through the fixed readout.
@@ -419,25 +556,7 @@ impl SimEngine {
     /// the exact host reference rules the HLO kernels are pinned to.
     fn fused_step(&self, state: &[f32], mask: Option<&[f32]>, s: &StepScalars,
                   grads: &[f32], loss: f32) -> Result<Vec<f32>> {
-        let man = &self.manifest;
-        let n = man.n_params;
-        ensure!(state.len() == man.state_len, "state len {} != {}", state.len(), man.state_len);
-        let mut st = state.to_vec();
-        match mask {
-            Some(mcols) => {
-                ensure!(mcols.len() == man.mask_len,
-                        "mask len {} != {}", mcols.len(), man.mask_len);
-                let mut opt = MaskedFrugal::new(n);
-                opt.m.copy_from_slice(&st[n..2 * n]);
-                opt.v.copy_from_slice(&st[2 * n..3 * n]);
-                opt.step(man, &mut st[..n], grads, mcols, s);
-                st[n..2 * n].copy_from_slice(&opt.m);
-                st[2 * n..3 * n].copy_from_slice(&opt.v);
-                st[3 * n] = loss;
-            }
-            None => adamw_packed(&mut st, n, grads, s, loss),
-        }
-        Ok(st)
+        fused_step_packed(&self.manifest, state, mask, s, grads, loss)
     }
 
     fn out_f32(&self, data: Vec<f32>) -> Buffer {
@@ -460,7 +579,21 @@ impl SimEngine {
                 let (params, tokens) = (args[0].host_f32()?, args[1].host_i32()?);
                 let mut grads = vec![0f32; n];
                 let (sum, count) = self.lm_pass(params, tokens, Some(&mut grads))?;
-                grads.push((sum / count.max(1) as f64) as f32);
+                grads.push(reduce::mean_loss(sum, count));
+                Ok(self.out_f32(grads))
+            }
+            (true, "grad_part") => {
+                // raw subtree partial for the sharded backend:
+                // unnormalized tree-summed grads ‖ f32 loss total ‖ count
+                arity(2)?;
+                let (params, tokens) = (args[0].host_f32()?, args[1].host_i32()?);
+                let mut grads = vec![0f32; n];
+                let (sum, count) = self.lm_pass_raw(params, tokens, Some(&mut grads))?;
+                ensure!(count < reduce::MAX_F32_EXACT_COUNT,
+                        "grad_part count {count} exceeds the exact-f32 range of the \
+                         ABI's count slot; shard the batch smaller");
+                grads.push(sum);
+                grads.push(count as f32);
                 Ok(self.out_f32(grads))
             }
             (true, "eval") => {
@@ -468,7 +601,7 @@ impl SimEngine {
                 let (state, tokens) = (args[0].host_f32()?, args[1].host_i32()?);
                 ensure!(state.len() >= n, "eval state too short");
                 let (sum, count) = self.lm_pass(&state[..n], tokens, None)?;
-                Ok(self.out_f32(vec![sum as f32, count as f32]))
+                Ok(self.out_f32(vec![sum, count as f32]))
             }
             (true, "frugal") => {
                 arity(4)?;
@@ -479,7 +612,7 @@ impl SimEngine {
                 let mut grads = vec![0f32; n];
                 let (sum, count) = self.lm_pass(&state[..n.min(state.len())], tokens,
                                                 Some(&mut grads))?;
-                let loss = (sum / count.max(1) as f64) as f32;
+                let loss = reduce::mean_loss(sum, count);
                 Ok(self.out_f32(self.fused_step(state, Some(mask), &s, &grads, loss)?))
             }
             (true, "adamw") => {
@@ -490,7 +623,7 @@ impl SimEngine {
                 let mut grads = vec![0f32; n];
                 let (sum, count) = self.lm_pass(&state[..n.min(state.len())], tokens,
                                                 Some(&mut grads))?;
-                let loss = (sum / count.max(1) as f64) as f32;
+                let loss = reduce::mean_loss(sum, count);
                 Ok(self.out_f32(self.fused_step(state, None, &s, &grads, loss)?))
             }
             (true, "scores") => {
@@ -519,6 +652,22 @@ impl SimEngine {
                 let mut grads = vec![0f32; n];
                 let loss = self.cls_pass(params, tokens, &labels, Some(&mut grads), None)?;
                 grads.push(loss as f32);
+                Ok(self.out_f32(grads))
+            }
+            (false, "grad_part") => {
+                // raw subtree partial (one example = one leaf), sharded
+                // fine-tuning's fan-out unit
+                arity(3)?;
+                let (params, tokens) = (args[0].host_f32()?, args[1].host_i32()?);
+                let labels = self.labels(args[2])?;
+                let mut grads = vec![0f32; n];
+                let (sum, batch) =
+                    self.cls_pass_raw(params, tokens, &labels, Some(&mut grads), None)?;
+                ensure!(batch < reduce::MAX_F32_EXACT_COUNT,
+                        "grad_part count {batch} exceeds the exact-f32 range of the \
+                         ABI's count slot; shard the batch smaller");
+                grads.push(sum);
+                grads.push(batch as f32);
                 Ok(self.out_f32(grads))
             }
             (false, "eval") => {
@@ -585,6 +734,35 @@ impl SimEngine {
     }
 }
 
+/// Apply the fused update to a packed `params‖m‖v‖loss` state vector:
+/// MaskedFrugal when a mask is given, AdamW otherwise — the reference
+/// host rules the HLO kernels are pinned to. A free function shared by
+/// the sim fused entries and
+/// [`crate::runtime::shard::ShardedBackend`]'s post-reduce update, so
+/// the sharded and unsharded update paths are literally the same code.
+pub(crate) fn fused_step_packed(man: &Manifest, state: &[f32], mask: Option<&[f32]>,
+                                s: &StepScalars, grads: &[f32],
+                                loss: f32) -> Result<Vec<f32>> {
+    let n = man.n_params;
+    ensure!(state.len() == man.state_len, "state len {} != {}", state.len(), man.state_len);
+    let mut st = state.to_vec();
+    match mask {
+        Some(mcols) => {
+            ensure!(mcols.len() == man.mask_len,
+                    "mask len {} != {}", mcols.len(), man.mask_len);
+            let mut opt = MaskedFrugal::new(n);
+            opt.m.copy_from_slice(&st[n..2 * n]);
+            opt.v.copy_from_slice(&st[2 * n..3 * n]);
+            opt.step(man, &mut st[..n], grads, mcols, s);
+            st[n..2 * n].copy_from_slice(&opt.m);
+            st[2 * n..3 * n].copy_from_slice(&opt.v);
+            st[3 * n] = loss;
+        }
+        None => adamw_packed(&mut st, n, grads, s, loss),
+    }
+    Ok(st)
+}
+
 /// AdamW over a packed `params‖m‖v‖loss` vector of `n` params: copy
 /// the moments out of the packed state, step, copy back, write the
 /// loss slot — shared by the full-model `adamw` and `lora_adamw`
@@ -600,7 +778,8 @@ fn adamw_packed(st: &mut [f32], n: usize, grads: &[f32], s: &StepScalars, loss: 
 }
 
 /// Decode the 8-scalar step ABI (order pinned by `StepScalars::to_array`).
-fn scalars_of(buf: &Buffer) -> Result<StepScalars> {
+/// Crate-visible so the sharded backend decodes the same way.
+pub(crate) fn scalars_of(buf: &Buffer) -> Result<StepScalars> {
     let a = buf.host_f32()?;
     ensure!(a.len() == 8, "scalars buffer must have 8 elements, got {}", a.len());
     let mut arr = [0f32; 8];
@@ -744,7 +923,7 @@ mod tests {
             params[i] = orig - eps;
             let (lm_, _) = e.lm_pass(&params, &toks, None).unwrap();
             params[i] = orig;
-            let fd = ((lp - lm_) / (2.0 * eps as f64) / count as f64) as f32;
+            let fd = ((lp as f64 - lm_ as f64) / (2.0 * eps as f64) / count as f64) as f32;
             assert!((fd - grads[i]).abs() < 1e-3 + 1e-2 * grads[i].abs(),
                     "param {i}: fd {fd} vs analytic {}", grads[i]);
         }
@@ -841,5 +1020,80 @@ mod tests {
         assert!(e.run("grad", &[&b]).is_err()); // wrong arity
         assert!(e.run("nope", &[&b]).is_err());
         assert!(e.upload_f32(&[0.0; 3], &[2, 2]).is_err()); // bad dims
+    }
+
+    #[test]
+    fn name_grammar_batch_suffix_and_mid_preset() {
+        let e = SimEngine::from_name("nano.b8", &["grad"]).unwrap();
+        assert_eq!(e.manifest().model.batch, 8);
+        assert_eq!(e.manifest().task, "lm");
+        let m = SimEngine::from_name("mid", &["grad"]).unwrap();
+        assert_eq!(m.manifest().model.batch, 32);
+        assert!(m.manifest().n_params > e.manifest().n_params);
+        let mb = SimEngine::from_name("mid.b16", &["grad"]).unwrap();
+        assert_eq!(mb.manifest().model.batch, 16);
+        assert!(SimEngine::from_name("nano.bX", &["grad"]).is_err());
+        assert!(SimEngine::from_name("nano.b0", &["grad"]).is_err());
+    }
+
+    #[test]
+    fn lm_grad_tree_matches_materialized_parts() {
+        // the O(log batch) in-place recursion must be bit-identical to
+        // materializing one vector per window and tree-summing them —
+        // including on a non-power-of-two batch, where the ceil split
+        // is asymmetric
+        for batch in [5usize, 8] {
+            let e = SimEngine::from_name(&format!("nano.b{batch}"), &["grad"]).unwrap();
+            let man = e.manifest().clone();
+            let n = man.n_params;
+            let sp1 = man.model.seq + 1;
+            let params = init::init_state(&man, 17)[..n].to_vec();
+            let toks = lm_tokens(&e, 33);
+            let mut grads = vec![0f32; n];
+            let (sum, _) = e.lm_pass_raw(&params, &toks, Some(&mut grads)).unwrap();
+            // reference: per-window vectors + the shared tree reducer
+            let mut h = vec![0f32; e.cols];
+            let mut dh = vec![0f32; e.cols];
+            let mut parts = Vec::with_capacity(batch);
+            let mut wlosses = Vec::with_capacity(batch);
+            for w in 0..batch {
+                let mut g = vec![0f32; n];
+                wlosses.push(
+                    e.lm_window(&params, &toks, sp1, w, &mut h, &mut dh, Some(&mut g))
+                        as f32,
+                );
+                parts.push(g);
+            }
+            let want = crate::runtime::shard::reduce::tree_sum_vecs(parts);
+            for (i, (a, b)) in grads.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "batch {batch}: elem {i}");
+            }
+            let want_sum = crate::runtime::shard::reduce::tree_sum_f32(&wlosses);
+            assert_eq!(sum.to_bits(), want_sum.to_bits(), "batch {batch}: loss total");
+        }
+    }
+
+    #[test]
+    fn grad_part_is_the_unnormalized_grad_with_loss_and_count() {
+        // grad == grad_part[..n] / count, loss == mean(grad_part loss)
+        let e = SimEngine::from_name("nano.b8", &["grad", "grad_part"]).unwrap();
+        let man = e.manifest().clone();
+        let n = man.n_params;
+        let params = init::init_state(&man, 8)[..n].to_vec();
+        let toks = lm_tokens(&e, 21);
+        let pb = e.upload_f32(&params, &[n]).unwrap();
+        let tb = e.upload_i32(&toks, &[man.model.batch, man.model.seq + 1]).unwrap();
+        let grad = e.read_all_f32(&e.run("grad", &[&pb, &tb]).unwrap()).unwrap();
+        let part = e.read_all_f32(&e.run("grad_part", &[&pb, &tb]).unwrap()).unwrap();
+        assert_eq!(grad.len(), n + 1);
+        assert_eq!(part.len(), n + 2);
+        let count = part[n + 1] as usize;
+        assert_eq!(count, man.model.batch * man.model.seq);
+        let inv = 1.0f32 / count as f32;
+        for i in 0..n {
+            assert_eq!((part[i] * inv).to_bits(), grad[i].to_bits(), "elem {i}");
+        }
+        assert_eq!(grad[n].to_bits(),
+                   ((part[n] as f64 / count as f64) as f32).to_bits());
     }
 }

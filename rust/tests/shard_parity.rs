@@ -1,0 +1,136 @@
+//! Shard-parity gate: for every Table-1 method on the SimEngine
+//! backend, the N-shard data-parallel run must be **bit-identical** to
+//! the 1-shard run — losses, ρ/T trajectories, eval losses, memory
+//! samples, subspace masks and redefinition events — for N ∈ {2, 4}.
+//!
+//! This is the strong guarantee `runtime::shard` is built around: the
+//! sim engine accumulates batch gradients/losses through the
+//! fixed-order tree in `runtime::shard::reduce`, shards export raw
+//! subtree partials (`grad_part`), and the sharded backend reassembles
+//! the exact global tree — so changing the shard count changes
+//! wall-clock, never one bit of the trajectory. A companion test pins
+//! determinism across repeated sharded runs (the same property the
+//! golden trajectory relies on, under fan-out threading).
+
+use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::method::Method;
+use adafrugal::coordinator::session::{Session, SessionOptions, SessionResult};
+use adafrugal::coordinator::task::LmTask;
+use adafrugal::runtime::backend::ExecBackend;
+use adafrugal::runtime::shard;
+
+/// The parity workload: `nano.b8` is the nano sim LM geometry with a
+/// global batch of 8 windows, so it splits evenly over 2 and 4 shards.
+fn parity_cfg(shards: usize) -> TrainConfig {
+    TrainConfig {
+        preset: "nano.b8".into(),
+        backend: "sim".into(),
+        shards,
+        steps: 60,
+        warmup_steps: 5,
+        n_eval: 20,
+        t_start: 10,
+        t_max: 40,
+        tau_low: 0.02,
+        log_every: 5,
+        val_batches: 2,
+        lr: 1e-2,
+        seed: 7,
+        ..TrainConfig::default()
+    }
+}
+
+fn run_sharded(method: Method, shards: usize) -> (SessionResult, Vec<f32>) {
+    let cfg = parity_cfg(shards);
+    let engine = shard::load("sim", &cfg.artifacts_dir, &cfg.preset, &method.entries(),
+                             shards)
+        .unwrap();
+    assert_eq!(engine.shard_count(), shards);
+    let task = LmTask::new(&cfg, engine.manifest()).unwrap();
+    let mut s = Session::new(cfg, method.profile(), engine, Box::new(task),
+                             SessionOptions::pretraining())
+        .unwrap();
+    s.quiet = true;
+    let r = s.run().unwrap();
+    let mask = s.mask_render();
+    (r, mask)
+}
+
+/// Every observable of the trajectory, compared bit-for-bit.
+fn assert_identical(label: &str, want: &(SessionResult, Vec<f32>),
+                    got: &(SessionResult, Vec<f32>)) {
+    let (rw, mw) = want;
+    let (rg, mg) = got;
+    assert_eq!(rw.steps.len(), rg.steps.len(), "{label}: step-log length");
+    for (a, b) in rw.steps.iter().zip(&rg.steps) {
+        assert_eq!(a.step, b.step, "{label}");
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(),
+                   "{label}: train loss at step {}: {} vs {}", a.step, a.train_loss,
+                   b.train_loss);
+        assert_eq!(a.rho.to_bits(), b.rho.to_bits(), "{label}: rho at step {}", a.step);
+        assert_eq!(a.t_current, b.t_current, "{label}: T at step {}", a.step);
+    }
+    assert_eq!(rw.evals.len(), rg.evals.len(), "{label}: eval count");
+    for (a, b) in rw.evals.iter().zip(&rg.evals) {
+        assert_eq!(a.step, b.step, "{label}");
+        assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits(),
+                   "{label}: val loss at step {}: {} vs {}", a.step, a.val_loss,
+                   b.val_loss);
+        assert_eq!(a.memory_bytes, b.memory_bytes, "{label}: memory at step {}", a.step);
+    }
+    assert_eq!(rw.redefinitions, rg.redefinitions, "{label}: redefinition count");
+    assert_eq!(rw.t_events, rg.t_events, "{label}: T events");
+    assert_eq!(rw.final_train_loss.to_bits(), rg.final_train_loss.to_bits(),
+               "{label}: final train loss");
+    assert_eq!(mw.len(), mg.len(), "{label}: mask length");
+    for (i, (a, b)) in mw.iter().zip(mg.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label}: mask column {i}");
+    }
+}
+
+#[test]
+fn every_table1_method_is_bit_identical_across_shard_counts() {
+    for &m in Method::table_roster() {
+        let single = run_sharded(m, 1);
+        assert!(single.0.sync.is_none(), "{m:?}: unsharded run must report no sync");
+        for shards in [2usize, 4] {
+            let sharded = run_sharded(m, shards);
+            assert_identical(&format!("{m:?} x{shards}"), &single, &sharded);
+            let sync = sharded.0.sync.expect("sharded run must report sync traffic");
+            assert_eq!(sync.shards, shards, "{m:?}");
+            assert_eq!(sync.reduces, parity_cfg(shards).steps, "{m:?}: one reduce per step");
+            assert!(sync.total_bytes() > 0, "{m:?}: sync traffic must be counted");
+            if m.is_frugal_family() {
+                // FRUGAL-aware split: both categories carry traffic
+                assert!(sync.state_bytes > 0 && sync.grad_bytes > 0,
+                        "{m:?}: expected a state-full/state-free split, got {sync:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_runs_are_deterministic_across_repeats() {
+    // fan-out threading must not leak into the trajectory: two 4-shard
+    // runs of the combined method agree bit-for-bit
+    let a = run_sharded(Method::AdaFrugalCombined, 4);
+    let b = run_sharded(Method::AdaFrugalCombined, 4);
+    assert_identical("combined x4 repeat", &a, &b);
+    assert_eq!(a.0.sync, b.0.sync, "sync accounting must be deterministic too");
+}
+
+#[test]
+fn indivisible_batch_is_rejected_at_session_construction() {
+    // plain nano has batch 2: 4 shards cannot split it, and the
+    // session says so up front instead of failing mid-run
+    let mut cfg = parity_cfg(4);
+    cfg.preset = "nano".into();
+    let engine = shard::load("sim", &cfg.artifacts_dir, &cfg.preset,
+                             &Method::AdamW.entries(), 4)
+        .unwrap();
+    let task = LmTask::new(&cfg, engine.manifest()).unwrap();
+    let err = Session::new(cfg, Method::AdamW.profile(), engine, Box::new(task),
+                           SessionOptions::pretraining());
+    let msg = format!("{:#}", err.err().expect("construction must fail"));
+    assert!(msg.contains("divisible"), "{msg}");
+}
