@@ -123,6 +123,13 @@ fn run_methods() -> anyhow::Result<()> {
             ("steps_per_sec", json::num(steps as f64 / r.step_time_s.max(1e-9))),
             ("wall_s", json::num(wall_s)),
             ("step_time_s", json::num(r.step_time_s)),
+            // measured control-plane cost (decide + observe), so the
+            // "negligible overhead" claim is a number, not an assumption
+            ("control_time_s", json::num(r.control_time_s)),
+            ("control_ns_per_step",
+             json::num(r.control_time_s * 1e9 / steps as f64)),
+            ("rho_policy", json::s(&r.rho_policy)),
+            ("t_policy", json::s(&r.t_policy)),
             ("uploads_fresh", json::num(r.uploads.uploads as f64)),
             ("uploads_reused", json::num(r.uploads.reuses as f64)),
             ("uploads_per_step",

@@ -61,6 +61,14 @@ pub struct TrainConfig {
     pub strategy: String,
     /// state management on subspace change: "reset" | "project" (Alg. 1, S)
     pub state_mgmt: String,
+    /// ρ-policy spec through the control registry (`control::spec`),
+    /// e.g. "linear:0.25:0.05" or "budget:3e6:0.05:0.5"; "" derives the
+    /// spec from the flat fields above + the method's dynamic-ρ flag
+    pub rho_policy: String,
+    /// T-policy spec, e.g. "loss:100:800:100:0.008:1.5" or
+    /// "plateau:100:800:2:0.01"; "" derives it from the flat fields +
+    /// the method's dynamic-T flag
+    pub t_policy: String,
 
     // -- data --
     /// corpus profile: "english" | "vietnamese"
@@ -98,6 +106,8 @@ impl Default for TrainConfig {
             gamma_increase: 1.5,
             strategy: "random".into(),
             state_mgmt: "reset".into(),
+            rho_policy: String::new(),
+            t_policy: String::new(),
             corpus: "english".into(),
             val_batches: 8,
             log_every: 20,
@@ -142,6 +152,8 @@ impl TrainConfig {
         set!(gamma_increase, as_f64);
         set!(strategy, as_string);
         set!(state_mgmt, as_string);
+        set!(rho_policy, as_string);
+        set!(t_policy, as_string);
         set!(corpus, as_string);
         set!(val_batches, as_usize);
         set!(log_every, as_usize);
@@ -164,6 +176,18 @@ impl TrainConfig {
             matches!(self.strategy.as_str(), "random" | "topk" | "roundrobin"),
             "unknown strategy {:?}", self.strategy
         );
+        // explicit policy specs are grammar-checked against the control
+        // registry up front, so a typo fails at config time with the
+        // offending segment named, not mid-run
+        let ctx = crate::control::PolicyCtx { steps: self.steps };
+        if !self.rho_policy.is_empty() {
+            crate::control::spec::validate(crate::control::PolicyKind::Rho,
+                                           &self.rho_policy, &ctx)?;
+        }
+        if !self.t_policy.is_empty() {
+            crate::control::spec::validate(crate::control::PolicyKind::Tee,
+                                           &self.t_policy, &ctx)?;
+        }
         // single source of truth for the reset/project vocabulary
         crate::optim::StateMgmt::parse(&self.state_mgmt)?;
         // ... and for the backend vocabulary (pjrt | sim)
@@ -218,6 +242,8 @@ impl TrainConfig {
         set!(gamma_increase, as_f64);
         set!(strategy, as_string);
         set!(state_mgmt, as_string);
+        set!(rho_policy, as_string);
+        set!(t_policy, as_string);
         set!(corpus, as_string);
         set!(val_batches, as_usize);
         set!(log_every, as_usize);
@@ -286,6 +312,23 @@ mod tests {
         assert_eq!(c.shards, 4); // failed set must not corrupt state
         let m = parse_str("[train]\nshards = 2\n").unwrap();
         assert_eq!(TrainConfig::from_map(&m).unwrap().shards, 2);
+    }
+
+    #[test]
+    fn policy_specs_validated_at_config_time() {
+        let mut c = TrainConfig::default();
+        assert!(c.rho_policy.is_empty() && c.t_policy.is_empty());
+        c.set("rho_policy", "cosine:0.4:0.1").unwrap();
+        assert_eq!(c.rho_policy, "cosine:0.4:0.1");
+        c.set("t_policy", "plateau:100:800:2:0.01").unwrap();
+        // a bad spec fails with the offending segment named, and the
+        // failed set must not corrupt state
+        let err = format!("{:#}", c.set("rho_policy", "linear:0.25:oops").unwrap_err());
+        assert!(err.contains("segment 3") && err.contains("oops"), "{err}");
+        assert_eq!(c.rho_policy, "cosine:0.4:0.1");
+        assert!(c.set("t_policy", "linear:0.25:0.05").is_err()); // wrong channel
+        let m = parse_str("[train]\nrho_policy = \"budget:3e6:0.05:0.5\"\n").unwrap();
+        assert_eq!(TrainConfig::from_map(&m).unwrap().rho_policy, "budget:3e6:0.05:0.5");
     }
 
     #[test]

@@ -1,0 +1,220 @@
+//! Policy combinators — `hold` and `chain` — usable on either channel.
+//!
+//! - `hold:<steps>:<inner>` freezes the inner policy's step-0 decision
+//!   for the first `<steps>` steps (observations in that window are
+//!   dropped), then releases it on a shifted clock: at global step `k ≥
+//!   steps` the inner policy sees step `k − steps`.
+//! - `chain:<switch>:<A>/<B>` runs policy `A` for steps `[0, switch)`
+//!   and `B` from `switch` on, with `B` on a shifted clock like `hold`.
+//!   The split is at the **first** `/`, so chains nest to the right:
+//!   `chain:100:const:0.3/chain:200:const:0.2/const:0.1`.
+//!
+//! Both are transparent for checkpointing: their state is exactly their
+//! children's state, and event steps are reported on the global clock.
+
+use anyhow::Result;
+
+use crate::control::spec::PolicyKind;
+use crate::control::{ControlEvent, Decision, Policy, PolicyState, StepObs};
+use crate::util::json;
+
+fn shift_obs(obs: &StepObs, by: usize) -> StepObs {
+    StepObs { step: obs.step - by, ..*obs }
+}
+
+fn unshift_event(ev: ControlEvent, by: usize) -> ControlEvent {
+    ControlEvent { step: ev.step + by, kind: ev.kind }
+}
+
+/// `hold:<steps>:<inner>` — see the module docs.
+pub struct Hold {
+    pub steps: usize,
+    inner: Box<dyn Policy>,
+}
+
+impl Hold {
+    pub fn new(steps: usize, inner: Box<dyn Policy>) -> Hold {
+        Hold { steps, inner }
+    }
+}
+
+impl Policy for Hold {
+    fn kind(&self) -> PolicyKind {
+        self.inner.kind()
+    }
+
+    fn spec(&self) -> String {
+        format!("hold:{}:{}", self.steps, self.inner.spec())
+    }
+
+    fn is_dynamic(&self) -> bool {
+        self.inner.is_dynamic()
+    }
+
+    fn observe(&mut self, obs: &StepObs) -> Option<ControlEvent> {
+        if obs.step < self.steps {
+            return None;
+        }
+        self.inner
+            .observe(&shift_obs(obs, self.steps))
+            .map(|ev| unshift_event(ev, self.steps))
+    }
+
+    fn decide(&self, step: usize) -> Decision {
+        if step < self.steps {
+            self.inner.decide(0)
+        } else {
+            self.inner.decide(step - self.steps)
+        }
+    }
+
+    fn state(&self) -> PolicyState {
+        PolicyState(json::obj(vec![("inner", self.inner.state().0)]))
+    }
+
+    fn restore(&mut self, st: &PolicyState) -> Result<()> {
+        self.inner.restore(&PolicyState(st.0.get("inner")?.clone()))
+    }
+}
+
+/// `chain:<switch>:<A>/<B>` — see the module docs.
+pub struct Chain {
+    pub switch: usize,
+    a: Box<dyn Policy>,
+    b: Box<dyn Policy>,
+}
+
+impl Chain {
+    pub fn new(switch: usize, a: Box<dyn Policy>, b: Box<dyn Policy>) -> Result<Chain> {
+        anyhow::ensure!(a.kind() == b.kind(),
+                        "chain mixes channels: {} is {:?} but {} is {:?}",
+                        a.spec(), a.kind(), b.spec(), b.kind());
+        Ok(Chain { switch, a, b })
+    }
+}
+
+impl Policy for Chain {
+    fn kind(&self) -> PolicyKind {
+        self.a.kind()
+    }
+
+    fn spec(&self) -> String {
+        format!("chain:{}:{}/{}", self.switch, self.a.spec(), self.b.spec())
+    }
+
+    fn is_dynamic(&self) -> bool {
+        // the decision changes at the switch even if both halves are
+        // static, unless they agree everywhere — treat as dynamic
+        true
+    }
+
+    fn observe(&mut self, obs: &StepObs) -> Option<ControlEvent> {
+        if obs.step < self.switch {
+            self.a.observe(obs)
+        } else {
+            self.b
+                .observe(&shift_obs(obs, self.switch))
+                .map(|ev| unshift_event(ev, self.switch))
+        }
+    }
+
+    fn decide(&self, step: usize) -> Decision {
+        if step < self.switch {
+            self.a.decide(step)
+        } else {
+            self.b.decide(step - self.switch)
+        }
+    }
+
+    fn state(&self) -> PolicyState {
+        PolicyState(json::obj(vec![
+            ("a", self.a.state().0),
+            ("b", self.b.state().0),
+        ]))
+    }
+
+    fn restore(&mut self, st: &PolicyState) -> Result<()> {
+        self.a.restore(&PolicyState(st.0.get("a")?.clone()))?;
+        self.b.restore(&PolicyState(st.0.get("b")?.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::rho::{RhoSchedule, SchedulePolicy};
+    use crate::control::tee::TeePolicy;
+
+    fn lin(start: f64, end: f64, total: usize) -> Box<dyn Policy> {
+        Box::new(SchedulePolicy::new(RhoSchedule::linear(start, end, total)))
+    }
+
+    #[test]
+    fn hold_freezes_then_releases_on_shifted_clock() {
+        let h = Hold::new(100, lin(0.4, 0.1, 300));
+        assert_eq!(h.decide(0).as_rho(), 0.4);
+        assert_eq!(h.decide(99).as_rho(), 0.4);
+        // step 100 -> inner step 0; step 250 -> inner step 150 (midpoint)
+        assert_eq!(h.decide(100).as_rho(), 0.4);
+        assert!((h.decide(250).as_rho() - 0.25).abs() < 1e-12);
+        assert!((h.decide(400).as_rho() - 0.1).abs() < 1e-12);
+        assert_eq!(h.spec(), "hold:100:linear:0.4:0.1:300");
+        assert_eq!(h.kind(), PolicyKind::Rho);
+    }
+
+    #[test]
+    fn chain_switches_policies_at_the_boundary() {
+        let c = Chain::new(
+            200,
+            Box::new(SchedulePolicy::new(RhoSchedule::constant(0.3))),
+            lin(0.25, 0.05, 100),
+        )
+        .unwrap();
+        assert_eq!(c.decide(0).as_rho(), 0.3);
+        assert_eq!(c.decide(199).as_rho(), 0.3);
+        assert_eq!(c.decide(200).as_rho(), 0.25); // B's step 0
+        assert!((c.decide(250).as_rho() - 0.15).abs() < 1e-12);
+        assert_eq!(c.spec(), "chain:200:const:0.3/linear:0.25:0.05:100");
+    }
+
+    #[test]
+    fn chain_rejects_mixed_channels() {
+        let err = Chain::new(10, lin(0.3, 0.1, 100), Box::new(TeePolicy::fixed(50)));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn hold_drops_observations_in_the_window_and_remaps_event_steps() {
+        let mut h = Hold::new(100, Box::new(TeePolicy::loss(50, 400, 50, 0.01, 1.5)));
+        let obs = |step, v| StepObs { step, val_loss: Some(v), ..Default::default() };
+        // inside the window: dropped entirely (not even priming)
+        assert!(h.observe(&obs(50, 10.0)).is_none());
+        assert_eq!(h.decide(50).as_t(), 50);
+        // after release: primes, then a plateau fires with the GLOBAL step
+        assert!(h.observe(&obs(150, 10.0)).is_none());
+        let ev = h.observe(&obs(200, 9.9999)).expect("plateau event");
+        assert_eq!(ev.step, 200);
+        assert_eq!(h.decide(200).as_t(), 75);
+    }
+
+    #[test]
+    fn combinator_state_roundtrip() {
+        let mk = || {
+            Chain::new(
+                100,
+                Box::new(TeePolicy::fixed(25)),
+                Box::new(TeePolicy::loss(50, 400, 50, 0.01, 1.5)),
+            )
+            .unwrap()
+        };
+        let mut a = mk();
+        let obs = |step, v| StepObs { step, val_loss: Some(v), ..Default::default() };
+        a.observe(&obs(150, 5.0));
+        a.observe(&obs(200, 4.9999));
+        let mut b = mk();
+        b.restore(&a.state()).unwrap();
+        assert_eq!(a.decide(200), b.decide(200));
+        assert_eq!(a.observe(&obs(250, 4.9998)), b.observe(&obs(250, 4.9998)));
+        assert_eq!(a.decide(250), b.decide(250));
+    }
+}

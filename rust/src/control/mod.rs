@@ -1,0 +1,545 @@
+//! The paper's contribution as a real API: a unified, checkpoint-
+//! resumable dynamic-control plane.
+//!
+//! AdaFRUGAL's whole point is *dynamic control* — the ρ decay (Eq. 1)
+//! and the loss-aware update interval T (Eqs. 2–3). This module turns
+//! those controls from ad-hoc types into one [`Policy`] trait behind a
+//! [`ControlPlane`]:
+//!
+//! ```text
+//!   Session ──StepObs{step, train_loss, val_loss, bytes}──▶ ControlPlane
+//!                                                            ├─ ρ policy   (Eq. 1, budget, …)
+//!                                                            ├─ T policy   (Eqs. 2–3, plateau, …)
+//!                                                            └─ LR schedule
+//!   Session ◀──Decision{rho, t, redefine, lr}──────────────┘
+//! ```
+//!
+//! Policies are selected **by spec string** through the name-keyed
+//! registry in [`spec`] (mirroring `optim::build` and `backend::load`):
+//! `linear:0.25:0.05`, `loss:100:800:100:0.008:1.5`,
+//! `budget:3.0e6:0.05:0.5`, `plateau:100:800:2:0.01`, and the
+//! `hold:`/`chain:` combinators. The historical flat `TrainConfig`
+//! fields map onto specs in [`ControlPlane::from_config`], so
+//! pre-redesign configs produce byte-identical trajectories.
+//!
+//! Every policy serializes its internal state ([`Policy::state`] /
+//! [`Policy::restore`]) into the version-2 checkpoint format, so a
+//! mid-run resume is trajectory-exact (pinned by
+//! `tests/resume_parity.rs`).
+//!
+//! - [`rho::RhoSchedule`] — the schedule shapes behind the ρ policies
+//! - [`rho::BudgetRho`] — feedback ρ targeting a byte ceiling (new)
+//! - [`tee::TController`] — Eqs. 2–3 (fixed / loss-aware)
+//! - [`tee::PlateauT`] — patience-based T doubling (new)
+//! - [`combine`] — `hold` / `chain` combinators over either channel
+//! - [`spec`] — the grammar, the registry, and `--list-policies`
+
+pub mod combine;
+pub mod rho;
+pub mod spec;
+pub mod tee;
+
+pub use rho::RhoSchedule;
+pub use spec::{PolicyCtx, PolicyKind};
+pub use tee::{TController, TEvent};
+
+use anyhow::{ensure, Result};
+
+use crate::config::TrainConfig;
+use crate::util::json::{self, Value};
+
+/// One observation fed to the plane per step (or per eval boundary):
+/// everything the session knows that a policy could react to. Absent
+/// channels are `None` — e.g. `val_loss` only exists at evaluation
+/// boundaries, `memory_bytes` only when the tracker sampled.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepObs {
+    pub step: usize,
+    pub train_loss: Option<f64>,
+    pub val_loss: Option<f64>,
+    /// live optimizer-state bytes from the `MemoryTracker` model
+    pub memory_bytes: Option<usize>,
+}
+
+/// A single policy's per-step output on its channel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    /// state-full ratio ρ(k)
+    Rho(f64),
+    /// update interval T_k
+    T(usize),
+}
+
+impl Decision {
+    pub fn as_rho(&self) -> f64 {
+        match self {
+            Decision::Rho(v) => *v,
+            Decision::T(t) => *t as f64,
+        }
+    }
+
+    pub fn as_t(&self) -> usize {
+        match self {
+            Decision::T(t) => *t,
+            Decision::Rho(v) => *v as usize,
+        }
+    }
+}
+
+/// The plane's assembled verdict for step `k` — what Algorithm 1's loop
+/// consumes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlaneDecision {
+    pub rho: f64,
+    pub t: usize,
+    /// Algorithm 1 line 21: k mod T_k == 0
+    pub redefine: bool,
+    pub lr: f32,
+}
+
+/// One entry of the plane's typed event log (surfaced through
+/// `RunResult`, `summary_json` and the CLI).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlEvent {
+    pub step: usize,
+    pub kind: EventKind,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// the update interval changed (Eq. 3, or a plateau doubling)
+    TChanged { old_t: usize, new_t: usize, delta_l_rel: f64 },
+    /// byte-budget feedback moved the state-full ratio
+    RhoAdjusted { old_rho: f64, new_rho: f64, bytes: usize, budget: usize },
+}
+
+impl ControlEvent {
+    /// Human-readable one-liner for CLI output.
+    pub fn describe(&self) -> String {
+        match &self.kind {
+            EventKind::TChanged { old_t, new_t, delta_l_rel } => format!(
+                "T event @step {}: {} -> {} (dL_rel {:.5})",
+                self.step, old_t, new_t, delta_l_rel
+            ),
+            EventKind::RhoAdjusted { old_rho, new_rho, bytes, budget } => format!(
+                "rho event @step {}: {:.4} -> {:.4} ({} B vs budget {} B)",
+                self.step, old_rho, new_rho, bytes, budget
+            ),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        match &self.kind {
+            EventKind::TChanged { old_t, new_t, delta_l_rel } => json::obj(vec![
+                ("step", json::num(self.step as f64)),
+                ("kind", json::s("t")),
+                ("old", json::num(*old_t as f64)),
+                ("new", json::num(*new_t as f64)),
+                ("delta_l_rel", json::num(*delta_l_rel)),
+            ]),
+            EventKind::RhoAdjusted { old_rho, new_rho, bytes, budget } => json::obj(vec![
+                ("step", json::num(self.step as f64)),
+                ("kind", json::s("rho")),
+                ("old", json::num(*old_rho)),
+                ("new", json::num(*new_rho)),
+                ("bytes", json::num(*bytes as f64)),
+                ("budget", json::num(*budget as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<ControlEvent> {
+        let step = v.get("step")?.as_usize()?;
+        let kind = match v.get("kind")?.as_str()? {
+            "t" => EventKind::TChanged {
+                old_t: v.get("old")?.as_usize()?,
+                new_t: v.get("new")?.as_usize()?,
+                delta_l_rel: v.get("delta_l_rel")?.as_f64()?,
+            },
+            "rho" => EventKind::RhoAdjusted {
+                old_rho: v.get("old")?.as_f64()?,
+                new_rho: v.get("new")?.as_f64()?,
+                bytes: v.get("bytes")?.as_usize()?,
+                budget: v.get("budget")?.as_usize()?,
+            },
+            other => anyhow::bail!("unknown control event kind {other:?}"),
+        };
+        Ok(ControlEvent { step, kind })
+    }
+}
+
+/// A policy's serializable internal state: a JSON value whose schema is
+/// private to the policy (stateless schedules use an empty object).
+/// `f64` fields survive the round trip bit-exactly — the serializer
+/// prints shortest-roundtrip decimal and non-finite values are encoded
+/// as `null` (treated as "unset" on restore).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyState(pub Value);
+
+impl PolicyState {
+    pub fn empty() -> PolicyState {
+        PolicyState(json::obj(vec![]))
+    }
+}
+
+/// Encode an optional float; non-finite collapses to `null` (the JSON
+/// grammar has no NaN/Inf, and every consumer treats them as "unset").
+pub(crate) fn opt_num(x: Option<f64>) -> Value {
+    match x {
+        Some(v) if v.is_finite() => json::num(v),
+        _ => Value::Null,
+    }
+}
+
+pub(crate) fn get_opt_num(v: &Value, key: &str) -> Result<Option<f64>> {
+    match v.get(key)? {
+        Value::Null => Ok(None),
+        other => Ok(Some(other.as_f64()?)),
+    }
+}
+
+/// One dynamic-control policy driving a single channel (ρ or T).
+///
+/// Contract:
+/// - [`Policy::decide`] is pure in `step` between observations: the
+///   session may call it any number of times per step;
+/// - [`Policy::observe`] is the only mutator, called at observation
+///   boundaries with whatever channels are known, and returns an event
+///   when internal state jumped;
+/// - `restore(state())` must reproduce the policy bit-exactly — this is
+///   what makes checkpoints trajectory-exact
+///   (`tests/resume_parity.rs`);
+/// - `parse(spec())` through the registry must rebuild an equivalent
+///   policy (the print side of the grammar; pinned by a property test).
+pub trait Policy: Send {
+    /// Which channel this policy drives.
+    fn kind(&self) -> PolicyKind;
+
+    /// Canonical printed spec (registry grammar, fully explicit).
+    fn spec(&self) -> String;
+
+    /// `false` when the decision can never change (`const`/`fixed`):
+    /// drivers use this to skip observation plumbing.
+    fn is_dynamic(&self) -> bool {
+        true
+    }
+
+    /// Feed one observation; may return an event when state jumps.
+    fn observe(&mut self, obs: &StepObs) -> Option<ControlEvent>;
+
+    /// The channel decision for step `k`.
+    fn decide(&self, step: usize) -> Decision;
+
+    /// Serializable internal state.
+    fn state(&self) -> PolicyState;
+
+    /// Restore internal state (inverse of [`Policy::state`]).
+    fn restore(&mut self, st: &PolicyState) -> Result<()>;
+}
+
+/// The learning-rate schedule, folded into the control plane: linear
+/// warmup then cosine decay to `lr * min_ratio`. The single
+/// implementation behind every driver (`session::lr_at` delegates
+/// here; pinned by `trainer::tests::lr_schedule_shape`).
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub lr: f32,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub min_ratio: f32,
+}
+
+impl LrSchedule {
+    pub fn from_config(cfg: &TrainConfig) -> LrSchedule {
+        LrSchedule {
+            lr: cfg.lr,
+            warmup_steps: cfg.warmup_steps,
+            total_steps: cfg.steps,
+            min_ratio: cfg.lr_min_ratio,
+        }
+    }
+
+    pub fn at(&self, step: usize) -> f32 {
+        if step < self.warmup_steps {
+            return self.lr * (step + 1) as f32 / self.warmup_steps.max(1) as f32;
+        }
+        let progress = (step - self.warmup_steps) as f32
+            / (self.total_steps.saturating_sub(self.warmup_steps)).max(1) as f32;
+        let min_lr = self.lr * self.min_ratio;
+        min_lr + 0.5 * (self.lr - min_lr) * (1.0 + (std::f32::consts::PI * progress).cos())
+    }
+}
+
+/// The integrated control plane: the named ρ policy, the named T
+/// policy, the LR schedule, and the run's typed event log. Owned by the
+/// session; one [`StepObs`] in per boundary, one [`PlaneDecision`] out
+/// per step.
+pub struct ControlPlane {
+    rho: Box<dyn Policy>,
+    tee: Box<dyn Policy>,
+    lr: LrSchedule,
+    events: Vec<ControlEvent>,
+}
+
+impl ControlPlane {
+    /// Wire a plane from already-built policies (the injection point
+    /// for custom policies that bypass the registry). Channel kinds are
+    /// validated here.
+    pub fn new(rho: Box<dyn Policy>, tee: Box<dyn Policy>, lr: LrSchedule)
+               -> Result<ControlPlane> {
+        ensure!(rho.kind() == PolicyKind::Rho,
+                "rho slot got a {:?} policy ({})", rho.kind(), rho.spec());
+        ensure!(tee.kind() == PolicyKind::Tee,
+                "T slot got a {:?} policy ({})", tee.kind(), tee.spec());
+        Ok(ControlPlane { rho, tee, lr, events: Vec::new() })
+    }
+
+    /// Build from config: explicit `rho_policy` / `t_policy` specs win;
+    /// otherwise the historical flat fields map onto specs —
+    /// `dynamic_rho` selects `linear:<rho>:<rho_end>` vs `const:<rho>`,
+    /// `dynamic_t` selects the Eq. 2–3 `loss:` policy vs `fixed:` —
+    /// reproducing the pre-redesign trajectories bit-for-bit.
+    pub fn from_config(cfg: &TrainConfig, dynamic_rho: bool, dynamic_t: bool)
+                       -> Result<ControlPlane> {
+        let ctx = PolicyCtx { steps: cfg.steps };
+        let rho_spec = if !cfg.rho_policy.is_empty() {
+            cfg.rho_policy.clone()
+        } else if dynamic_rho {
+            format!("linear:{}:{}", cfg.rho, cfg.rho_end)
+        } else {
+            format!("const:{}", cfg.rho)
+        };
+        let t_spec = if !cfg.t_policy.is_empty() {
+            cfg.t_policy.clone()
+        } else if dynamic_t {
+            format!("loss:{}:{}:{}:{}:{}", cfg.t_start, cfg.t_max, cfg.n_eval,
+                    cfg.tau_low, cfg.gamma_increase)
+        } else {
+            format!("fixed:{}", cfg.t_start)
+        };
+        let rho = spec::build(PolicyKind::Rho, &rho_spec, &ctx)?;
+        let tee = spec::build(PolicyKind::Tee, &t_spec, &ctx)?;
+        ControlPlane::new(rho, tee, LrSchedule::from_config(cfg))
+    }
+
+    /// The assembled decision for step `k`.
+    pub fn decide(&self, step: usize) -> PlaneDecision {
+        let t = self.tee.decide(step).as_t();
+        PlaneDecision {
+            rho: self.rho.decide(step).as_rho(),
+            t,
+            redefine: step % t.max(1) == 0,
+            lr: self.lr.at(step),
+        }
+    }
+
+    /// Feed one observation to both policies; events land in the log.
+    pub fn observe(&mut self, obs: &StepObs) {
+        if let Some(ev) = self.rho.observe(obs) {
+            self.events.push(ev);
+        }
+        if let Some(ev) = self.tee.observe(obs) {
+            self.events.push(ev);
+        }
+    }
+
+    pub fn lr_at(&self, step: usize) -> f32 {
+        self.lr.at(step)
+    }
+
+    /// Does the T channel react to observations? (Drivers that must pay
+    /// for a loss readback to observe gate on this.)
+    pub fn tee_dynamic(&self) -> bool {
+        self.tee.is_dynamic()
+    }
+
+    pub fn rho_spec(&self) -> String {
+        self.rho.spec()
+    }
+
+    pub fn t_spec(&self) -> String {
+        self.tee.spec()
+    }
+
+    /// The full typed event log, in observation order.
+    pub fn events(&self) -> &[ControlEvent] {
+        &self.events
+    }
+
+    /// The T-change events projected onto the historical [`TEvent`]
+    /// shape (experiment logs, replay tests).
+    pub fn t_events(&self) -> Vec<TEvent> {
+        self.events
+            .iter()
+            .filter_map(|e| match &e.kind {
+                EventKind::TChanged { old_t, new_t, delta_l_rel } => Some(TEvent {
+                    step: e.step,
+                    delta_l_rel: *delta_l_rel,
+                    old_t: *old_t,
+                    new_t: *new_t,
+                }),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Serialize the whole plane (specs + per-policy state + event log)
+    /// for the version-2 checkpoint format.
+    pub fn state(&self) -> Value {
+        json::obj(vec![
+            ("rho_spec", json::s(&self.rho.spec())),
+            ("t_spec", json::s(&self.tee.spec())),
+            ("rho_state", self.rho.state().0),
+            ("t_state", self.tee.state().0),
+            ("events", json::arr(self.events.iter().map(|e| e.to_json()))),
+        ])
+    }
+
+    /// Restore from a serialized plane. The checkpoint's policy specs
+    /// must match the configured ones — resuming under different
+    /// policies would silently diverge from the straight-through
+    /// trajectory, so a mismatch is a loud error instead.
+    pub fn restore(&mut self, v: &Value) -> Result<()> {
+        let want_rho = v.get("rho_spec")?.as_str()?;
+        let want_t = v.get("t_spec")?.as_str()?;
+        ensure!(want_rho == self.rho.spec(),
+                "checkpoint was written under rho policy {:?} but this run is \
+                 configured with {:?}; pass a matching --rho-policy to resume",
+                want_rho, self.rho.spec());
+        ensure!(want_t == self.tee.spec(),
+                "checkpoint was written under T policy {:?} but this run is \
+                 configured with {:?}; pass a matching --t-policy to resume",
+                want_t, self.tee.spec());
+        self.rho.restore(&PolicyState(v.get("rho_state")?.clone()))?;
+        self.tee.restore(&PolicyState(v.get("t_state")?.clone()))?;
+        self.events = v
+            .get("events")?
+            .as_arr()?
+            .iter()
+            .map(ControlEvent::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TrainConfig {
+        TrainConfig { steps: 1000, ..TrainConfig::default() }
+    }
+
+    #[test]
+    fn flat_fields_map_onto_specs() {
+        let plane = ControlPlane::from_config(&cfg(), false, false).unwrap();
+        assert_eq!(plane.rho_spec(), "const:0.25");
+        assert_eq!(plane.t_spec(), "fixed:100");
+        assert!(!plane.tee_dynamic());
+        let dynp = ControlPlane::from_config(&cfg(), true, true).unwrap();
+        assert_eq!(dynp.rho_spec(), "linear:0.25:0.05:1000");
+        assert_eq!(dynp.t_spec(), "loss:100:800:100:0.008:1.5");
+        assert!(dynp.tee_dynamic());
+    }
+
+    #[test]
+    fn static_plane_is_static() {
+        let plane = ControlPlane::from_config(&cfg(), false, false).unwrap();
+        assert_eq!(plane.decide(0).rho, 0.25);
+        assert_eq!(plane.decide(999).rho, 0.25);
+        assert_eq!(plane.decide(0).t, 100);
+        assert!(plane.decide(0).redefine);
+        assert!(!plane.decide(50).redefine);
+        assert!(plane.decide(100).redefine);
+    }
+
+    #[test]
+    fn combined_plane_moves_both_channels() {
+        let mut plane = ControlPlane::from_config(&cfg(), true, true).unwrap();
+        assert_eq!(plane.decide(0).rho, 0.25);
+        assert!(plane.decide(1000).rho <= 0.05 + 1e-12);
+        // two plateaued observations -> T grows (Eq. 3)
+        plane.observe(&StepObs { step: 100, val_loss: Some(10.0), ..Default::default() });
+        plane.observe(&StepObs { step: 200, val_loss: Some(10.0001), ..Default::default() });
+        assert_eq!(plane.decide(200).t, 150);
+        assert_eq!(plane.events().len(), 1);
+        assert_eq!(plane.t_events()[0].new_t, 150);
+    }
+
+    #[test]
+    fn explicit_specs_override_flat_fields() {
+        let mut c = cfg();
+        c.rho_policy = "cosine:0.4:0.1".into();
+        c.t_policy = "plateau:50:400:2:0.01".into();
+        // method flags are ignored when specs are explicit
+        let plane = ControlPlane::from_config(&c, false, false).unwrap();
+        assert_eq!(plane.rho_spec(), "cosine:0.4:0.1:1000");
+        assert_eq!(plane.t_spec(), "plateau:50:400:2:0.01");
+        assert!((plane.decide(0).rho - 0.4).abs() < 1e-12);
+        assert_eq!(plane.decide(0).t, 50);
+    }
+
+    #[test]
+    fn plane_state_roundtrip_preserves_decisions_and_events() {
+        let mut a = ControlPlane::from_config(&cfg(), true, true).unwrap();
+        for (k, l) in [(100, 5.0), (200, 4.99), (300, 4.985)] {
+            a.observe(&StepObs { step: k, val_loss: Some(l), ..Default::default() });
+        }
+        let st = a.state();
+        let mut b = ControlPlane::from_config(&cfg(), true, true).unwrap();
+        b.restore(&st).unwrap();
+        for k in [0, 150, 300, 999] {
+            assert_eq!(a.decide(k), b.decide(k), "decision diverged at {k}");
+        }
+        assert_eq!(a.events(), b.events());
+        // continuing both produces identical futures
+        let obs = StepObs { step: 400, val_loss: Some(4.984), ..Default::default() };
+        a.observe(&obs);
+        b.observe(&obs);
+        assert_eq!(a.decide(400), b.decide(400));
+        assert_eq!(a.events(), b.events());
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_specs() {
+        let a = ControlPlane::from_config(&cfg(), true, true).unwrap();
+        let mut c = cfg();
+        c.rho_policy = "cosine:0.25:0.05".into();
+        let mut b = ControlPlane::from_config(&c, true, true).unwrap();
+        let err = format!("{:#}", b.restore(&a.state()).unwrap_err());
+        assert!(err.contains("linear:0.25:0.05:1000"), "{err}");
+        assert!(err.contains("cosine:0.25:0.05:1000"), "{err}");
+    }
+
+    #[test]
+    fn event_json_roundtrip() {
+        let evs = [
+            ControlEvent {
+                step: 7,
+                kind: EventKind::TChanged { old_t: 100, new_t: 150, delta_l_rel: 0.004 },
+            },
+            ControlEvent {
+                step: 9,
+                kind: EventKind::RhoAdjusted {
+                    old_rho: 0.5, new_rho: 0.25, bytes: 2048, budget: 1024,
+                },
+            },
+        ];
+        for e in &evs {
+            let back = ControlEvent::from_json(&e.to_json()).unwrap();
+            assert_eq!(&back, e);
+            assert!(!e.describe().is_empty());
+        }
+    }
+
+    #[test]
+    fn lr_schedule_matches_historical_shape() {
+        let c = TrainConfig { steps: 1000, warmup_steps: 100, lr: 1e-3,
+                              lr_min_ratio: 0.1, ..TrainConfig::default() };
+        let lr = LrSchedule::from_config(&c);
+        assert!(lr.at(0) < lr.at(50));
+        assert!((lr.at(99) - 1e-3).abs() < 1e-5);
+        assert!(lr.at(500) < lr.at(100));
+        assert!((lr.at(999) - 1e-4).abs() < 2e-5);
+    }
+}

@@ -1,0 +1,371 @@
+//! ρ-channel policies: dynamic state-full ratio control (paper §3.1).
+//!
+//! Eq. 1:  ρ(k) = max(ρ_end, ρ_start − (ρ_start − ρ_end) · k / K_total)
+//!
+//! [`RhoSchedule`] is the pure schedule engine (linear = the paper's
+//! Eq. 1, plus the cosine/step extensions the conclusion calls out as
+//! future work); [`SchedulePolicy`] adapts it to the [`Policy`] trait.
+//! [`BudgetRho`] is new under this API: instead of following a shape it
+//! *targets a byte ceiling*, using the memory-bytes observations the
+//! session feeds the plane — a policy the old schedule-only API could
+//! not express.
+
+use anyhow::Result;
+
+use crate::control::{
+    get_opt_num, ControlEvent, Decision, EventKind, Policy, PolicyState, StepObs,
+};
+use crate::control::spec::PolicyKind;
+use crate::util::json;
+
+#[derive(Debug, Clone)]
+pub enum RhoSchedule {
+    Constant { rho: f64 },
+    /// the paper's Eq. 1
+    Linear { start: f64, end: f64, total_steps: usize },
+    /// extension: cosine from start to end over total_steps
+    Cosine { start: f64, end: f64, total_steps: usize },
+    /// extension: multiply by `factor` every `every` steps, floored at end
+    Step { start: f64, end: f64, every: usize, factor: f64 },
+}
+
+impl RhoSchedule {
+    pub fn constant(rho: f64) -> Self {
+        RhoSchedule::Constant { rho }
+    }
+
+    pub fn linear(start: f64, end: f64, total_steps: usize) -> Self {
+        RhoSchedule::Linear { start, end, total_steps }
+    }
+
+    pub fn cosine(start: f64, end: f64, total_steps: usize) -> Self {
+        RhoSchedule::Cosine { start, end, total_steps }
+    }
+
+    /// ρ(k) — always clamped to [min(start,end), max(start,end)].
+    ///
+    /// The clamp is two-sided: increasing schedules (`start < end`,
+    /// e.g. warm-up ablations) must hold at `end` past `total_steps`
+    /// rather than extrapolate, exactly like decreasing ones.
+    pub fn at(&self, step: usize) -> f64 {
+        let (lo, hi, v) = match *self {
+            RhoSchedule::Constant { rho } => return rho,
+            RhoSchedule::Linear { start, end, total_steps } => {
+                let k = (step as f64 / total_steps.max(1) as f64).min(1.0);
+                (start.min(end), start.max(end), start - (start - end) * k)
+            }
+            RhoSchedule::Cosine { start, end, total_steps } => {
+                let k = (step as f64 / total_steps.max(1) as f64).min(1.0);
+                (start.min(end), start.max(end),
+                 end + 0.5 * (start - end) * (1.0 + (std::f64::consts::PI * k).cos()))
+            }
+            RhoSchedule::Step { start, end, every, factor } => {
+                let n = step / every.max(1);
+                (start.min(end), start.max(end), start * factor.powi(n as i32))
+            }
+        };
+        v.clamp(lo, hi)
+    }
+
+    /// Final ρ (for memory reporting).
+    pub fn end_value(&self) -> f64 {
+        match *self {
+            RhoSchedule::Constant { rho } => rho,
+            RhoSchedule::Linear { end, .. }
+            | RhoSchedule::Cosine { end, .. }
+            | RhoSchedule::Step { end, .. } => end,
+        }
+    }
+
+    pub fn is_dynamic(&self) -> bool {
+        !matches!(self, RhoSchedule::Constant { .. })
+    }
+}
+
+/// [`Policy`] adapter over a [`RhoSchedule`]: a pure function of the
+/// step, so it carries no serializable state and ignores observations.
+pub struct SchedulePolicy {
+    sched: RhoSchedule,
+}
+
+impl SchedulePolicy {
+    pub fn new(sched: RhoSchedule) -> SchedulePolicy {
+        SchedulePolicy { sched }
+    }
+
+    pub fn schedule(&self) -> &RhoSchedule {
+        &self.sched
+    }
+}
+
+impl Policy for SchedulePolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Rho
+    }
+
+    fn spec(&self) -> String {
+        match &self.sched {
+            RhoSchedule::Constant { rho } => format!("const:{rho}"),
+            RhoSchedule::Linear { start, end, total_steps } => {
+                format!("linear:{start}:{end}:{total_steps}")
+            }
+            RhoSchedule::Cosine { start, end, total_steps } => {
+                format!("cosine:{start}:{end}:{total_steps}")
+            }
+            RhoSchedule::Step { start, end, every, factor } => {
+                format!("step:{start}:{end}:{every}:{factor}")
+            }
+        }
+    }
+
+    fn is_dynamic(&self) -> bool {
+        self.sched.is_dynamic()
+    }
+
+    fn observe(&mut self, _obs: &StepObs) -> Option<ControlEvent> {
+        None
+    }
+
+    fn decide(&self, step: usize) -> Decision {
+        Decision::Rho(self.sched.at(step))
+    }
+
+    fn state(&self) -> PolicyState {
+        PolicyState::empty()
+    }
+
+    fn restore(&mut self, _st: &PolicyState) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Memory-budget-driven ρ (`budget:<bytes>:<min>:<max>`): holds ρ at
+/// `max` until the tracker's byte observations arrive, then applies
+/// multiplicative feedback to keep the optimizer state at (or just
+/// under) the byte ceiling — over budget shrinks ρ proportionally
+/// (`ρ ← ρ · budget/bytes`, floored at `min`), comfortably under
+/// (< 85% of budget) grows it by 10% toward `max`. Deterministic pure
+/// f64 arithmetic, so resume stays bit-exact.
+pub struct BudgetRho {
+    pub budget: usize,
+    pub min: f64,
+    pub max: f64,
+    /// current decision (the only mutable state)
+    rho: f64,
+}
+
+impl BudgetRho {
+    pub fn new(budget: usize, min: f64, max: f64) -> BudgetRho {
+        BudgetRho { budget, min, max, rho: max }
+    }
+}
+
+impl Policy for BudgetRho {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Rho
+    }
+
+    fn spec(&self) -> String {
+        format!("budget:{}:{}:{}", self.budget, self.min, self.max)
+    }
+
+    fn observe(&mut self, obs: &StepObs) -> Option<ControlEvent> {
+        let bytes = obs.memory_bytes?;
+        if bytes == 0 {
+            return None;
+        }
+        let old = self.rho;
+        if bytes > self.budget {
+            self.rho = (self.rho * self.budget as f64 / bytes as f64).max(self.min);
+        } else if (bytes as f64) < 0.85 * self.budget as f64 {
+            self.rho = (self.rho * 1.1).min(self.max);
+        }
+        if self.rho != old {
+            return Some(ControlEvent {
+                step: obs.step,
+                kind: EventKind::RhoAdjusted {
+                    old_rho: old,
+                    new_rho: self.rho,
+                    bytes,
+                    budget: self.budget,
+                },
+            });
+        }
+        None
+    }
+
+    fn decide(&self, _step: usize) -> Decision {
+        Decision::Rho(self.rho)
+    }
+
+    fn state(&self) -> PolicyState {
+        PolicyState(json::obj(vec![("rho", json::num(self.rho))]))
+    }
+
+    fn restore(&mut self, st: &PolicyState) -> Result<()> {
+        self.rho = get_opt_num(&st.0, "rho")?
+            .ok_or_else(|| anyhow::anyhow!("budget policy state missing rho"))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn linear_matches_eq1() {
+        let s = RhoSchedule::linear(0.25, 0.05, 200_000);
+        assert_eq!(s.at(0), 0.25);
+        // Eq. 1 at k = K/2: 0.25 - 0.20*0.5 = 0.15
+        assert!((s.at(100_000) - 0.15).abs() < 1e-12);
+        assert!((s.at(200_000) - 0.05).abs() < 1e-12);
+        // clamped beyond the horizon
+        assert_eq!(s.at(400_000), 0.05);
+    }
+
+    #[test]
+    fn cosine_endpoints_and_monotone() {
+        let s = RhoSchedule::cosine(0.25, 0.05, 1000);
+        assert!((s.at(0) - 0.25).abs() < 1e-12);
+        assert!((s.at(1000) - 0.05).abs() < 1e-12);
+        let mut prev = s.at(0);
+        for k in (0..=1000).step_by(50) {
+            let v = s.at(k);
+            assert!(v <= prev + 1e-12, "cosine must be nonincreasing");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn increasing_linear_clamps_past_horizon() {
+        // regression: `at` used to clamp only at `end`, so an
+        // increasing schedule extrapolated past total_steps
+        // (at(2K) = start + 2*(end-start) instead of end)
+        let s = RhoSchedule::linear(0.05, 0.25, 100);
+        assert_eq!(s.at(0), 0.05);
+        assert!((s.at(50) - 0.15).abs() < 1e-12);
+        assert!((s.at(100) - 0.25).abs() < 1e-12);
+        assert!((s.at(200) - 0.25).abs() < 1e-12, "got {}", s.at(200));
+        assert!((s.at(1_000_000) - 0.25).abs() < 1e-12);
+        // increasing cosine holds at end too
+        let c = RhoSchedule::cosine(0.05, 0.25, 100);
+        assert!((c.at(200) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_decay_floors() {
+        let s = RhoSchedule::Step { start: 0.4, end: 0.1, every: 100, factor: 0.5 };
+        assert_eq!(s.at(0), 0.4);
+        assert_eq!(s.at(100), 0.2);
+        assert_eq!(s.at(250), 0.1);
+        assert_eq!(s.at(10_000), 0.1);
+    }
+
+    #[test]
+    fn prop_rho_bounds_and_monotonicity() {
+        prop::forall(
+            "rho-schedule-invariants",
+            60,
+            |r| {
+                let start = 0.05 + 0.9 * r.f64();
+                let end = start * r.f64();
+                let total = 10 + r.below(100_000);
+                (start, end, total)
+            },
+            |&(start, end, total)| {
+                for sched in [
+                    RhoSchedule::linear(start, end, total),
+                    RhoSchedule::cosine(start, end, total),
+                ] {
+                    let mut prev = f64::INFINITY;
+                    for k in 0..=(total + total / 2) {
+                        if k % (total / 10).max(1) != 0 {
+                            continue;
+                        }
+                        let v = sched.at(k);
+                        // bounded
+                        if !(v >= end - 1e-9 && v <= start + 1e-9) {
+                            return false;
+                        }
+                        // nonincreasing
+                        if v > prev + 1e-9 {
+                            return false;
+                        }
+                        prev = v;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn slow_variation_property() {
+        // §5.7: per-step change is O(1/K_total) — required for the
+        // convergence argument.
+        let total = 10_000;
+        let s = RhoSchedule::linear(0.25, 0.05, total);
+        let max_delta = (0..total)
+            .map(|k| (s.at(k) - s.at(k + 1)).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_delta <= 0.2001 / total as f64, "max_delta={max_delta}");
+    }
+
+    #[test]
+    fn budget_rho_tracks_the_ceiling() {
+        // a fake linear bytes-per-rho model: bytes = rho * 1e6
+        let bytes_at = |rho: f64| (rho * 1e6) as usize;
+        let mut p = BudgetRho::new(300_000, 0.05, 0.8);
+        assert_eq!(p.decide(0).as_rho(), 0.8);
+        // over budget: one proportional correction lands at the ceiling
+        let ev = p
+            .observe(&StepObs {
+                step: 10,
+                memory_bytes: Some(bytes_at(0.8)),
+                ..Default::default()
+            })
+            .expect("over-budget must adjust");
+        match ev.kind {
+            EventKind::RhoAdjusted { old_rho, new_rho, .. } => {
+                assert_eq!(old_rho, 0.8);
+                assert!(new_rho < 0.8);
+            }
+            _ => panic!("wrong event kind"),
+        }
+        let rho1 = p.decide(11).as_rho();
+        assert!((bytes_at(rho1) as f64) <= 300_000.0 * 1.001, "rho1={rho1}");
+        // at the ceiling (not < 85%): no further drift
+        assert!(p
+            .observe(&StepObs {
+                step: 20,
+                memory_bytes: Some(bytes_at(rho1)),
+                ..Default::default()
+            })
+            .is_none());
+        // far under budget: grows back toward max, never above it
+        let mut q = BudgetRho::new(300_000, 0.05, 0.8);
+        q.restore(&PolicyState(json::obj(vec![("rho", json::num(0.05))]))).unwrap();
+        for step in 0..40 {
+            q.observe(&StepObs {
+                step,
+                memory_bytes: Some(bytes_at(q.decide(step).as_rho())),
+                ..Default::default()
+            });
+        }
+        let r = q.decide(99).as_rho();
+        assert!(r > 0.05 && r <= 0.8, "rho drifted to {r}");
+        // observations without bytes are inert
+        assert!(q.observe(&StepObs { step: 100, ..Default::default() }).is_none());
+    }
+
+    #[test]
+    fn budget_state_roundtrip_is_exact() {
+        let mut a = BudgetRho::new(12345, 0.03, 0.7);
+        a.observe(&StepObs { step: 1, memory_bytes: Some(99_999), ..Default::default() });
+        let mut b = BudgetRho::new(12345, 0.03, 0.7);
+        b.restore(&a.state()).unwrap();
+        assert_eq!(a.decide(5).as_rho(), b.decide(5).as_rho());
+    }
+}

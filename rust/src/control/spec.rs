@@ -1,0 +1,511 @@
+//! The policy spec grammar and the name-keyed registry — the control
+//! plane's analogue of `optim::build` and `backend::load`.
+//!
+//! A spec is `name:arg:arg:...` with `:`-separated segments; the
+//! combinator `chain` additionally separates its two sub-specs with the
+//! first `/`. Parse errors name the offending segment. The canonical
+//! printed form ([`crate::control::Policy::spec`]) is fully explicit
+//! (optional segments filled in), and `parse(print(p))` rebuilds an
+//! equivalent policy — pinned by a property test.
+//!
+//! Registered ρ policies:  `const` `linear` `cosine` `step` `budget`
+//! Registered T policies:  `fixed` `loss` `plateau`
+//! Combinators (either):   `hold` `chain`
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::control::combine::{Chain, Hold};
+use crate::control::rho::{BudgetRho, RhoSchedule, SchedulePolicy};
+use crate::control::tee::{PlateauT, TeePolicy};
+use crate::control::Policy;
+
+/// Which channel a policy drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// state-full ratio ρ
+    Rho,
+    /// subspace update interval T
+    Tee,
+}
+
+impl PolicyKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyKind::Rho => "rho",
+            PolicyKind::Tee => "T",
+        }
+    }
+}
+
+/// Build-time context a spec may lean on for defaults (e.g. `linear`
+/// without an explicit horizon decays over the whole run, Eq. 1's
+/// K_total).
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyCtx {
+    /// the run length K_total
+    pub steps: usize,
+}
+
+/// One registry row: canonical name, accepted aliases, the channel it
+/// serves, grammar, a one-line doc (surfaced by `--list-policies`), and
+/// a parseable example (exercised by the roundtrip property test).
+pub struct PolicyInfo {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    /// "rho" | "T" | "both"
+    pub channel: &'static str,
+    pub grammar: &'static str,
+    pub summary: &'static str,
+    pub example: &'static str,
+}
+
+/// Every registered policy, in listing order.
+pub fn registered() -> &'static [PolicyInfo] {
+    static REGISTRY: &[PolicyInfo] = &[
+        PolicyInfo {
+            name: "const",
+            aliases: &["constant"],
+            channel: "rho",
+            grammar: "const:<rho>",
+            summary: "static state-full ratio (FRUGAL baseline)",
+            example: "const:0.25",
+        },
+        PolicyInfo {
+            name: "linear",
+            aliases: &[],
+            channel: "rho",
+            grammar: "linear:<start>:<end>[:<total_steps>]",
+            summary: "the paper's Eq. 1 linear decay (horizon defaults to the run length)",
+            example: "linear:0.25:0.05",
+        },
+        PolicyInfo {
+            name: "cosine",
+            aliases: &[],
+            channel: "rho",
+            grammar: "cosine:<start>:<end>[:<total_steps>]",
+            summary: "cosine decay from start to end (the conclusion's non-linear extension)",
+            example: "cosine:0.25:0.05",
+        },
+        PolicyInfo {
+            name: "step",
+            aliases: &[],
+            channel: "rho",
+            grammar: "step:<start>:<end>:<every>:<factor>",
+            summary: "multiply by factor every N steps, floored at end",
+            example: "step:0.4:0.1:100:0.5",
+        },
+        PolicyInfo {
+            name: "budget",
+            aliases: &[],
+            channel: "rho",
+            grammar: "budget:<bytes>[:<min>:<max>]",
+            summary: "feedback rho targeting an optimizer-state byte ceiling",
+            example: "budget:3000000:0.05:0.5",
+        },
+        PolicyInfo {
+            name: "fixed",
+            aliases: &[],
+            channel: "T",
+            grammar: "fixed:<t>",
+            summary: "static update interval (FRUGAL baseline)",
+            example: "fixed:100",
+        },
+        PolicyInfo {
+            name: "loss",
+            aliases: &[],
+            channel: "T",
+            grammar: "loss:<t_start>:<t_max>:<n_eval>:<tau_low>:<gamma>",
+            summary: "the paper's Eq. 2-3 loss-aware interval growth",
+            example: "loss:100:800:100:0.008:1.5",
+        },
+        PolicyInfo {
+            name: "plateau",
+            aliases: &[],
+            channel: "T",
+            grammar: "plateau:<t_start>:<t_max>:<patience>:<min_delta>",
+            summary: "double T after <patience> evals without improving the best loss",
+            example: "plateau:100:800:2:0.01",
+        },
+        PolicyInfo {
+            name: "hold",
+            aliases: &[],
+            channel: "both",
+            grammar: "hold:<steps>:<inner>",
+            summary: "freeze the inner policy's step-0 decision for N steps, then release",
+            example: "hold:200:linear:0.25:0.05",
+        },
+        PolicyInfo {
+            name: "chain",
+            aliases: &[],
+            channel: "both",
+            grammar: "chain:<switch>:<A>/<B>",
+            summary: "policy A before the switch step, B (on a shifted clock) after",
+            example: "chain:500:const:0.3/linear:0.25:0.05",
+        },
+    ];
+    REGISTRY
+}
+
+/// Look up a registry row by canonical name or alias (ASCII
+/// case-insensitive).
+pub fn lookup(name: &str) -> Option<&'static PolicyInfo> {
+    let key = name.to_ascii_lowercase();
+    registered()
+        .iter()
+        .find(|s| s.name == key || s.aliases.contains(&key.as_str()))
+}
+
+/// Registered names serving `kind` (combinators serve both).
+pub fn names_for(kind: PolicyKind) -> Vec<&'static str> {
+    registered()
+        .iter()
+        .filter(|i| i.channel == "both" || i.channel == kind.label())
+        .map(|i| i.name)
+        .collect()
+}
+
+/// Segment accessor with offending-segment error reporting. Segment 1
+/// is the policy name; arguments count from segment 2.
+struct Segs<'a> {
+    spec: &'a str,
+    info: &'static PolicyInfo,
+    segs: Vec<&'a str>,
+}
+
+impl<'a> Segs<'a> {
+    fn new(spec: &'a str, info: &'static PolicyInfo, rest: &'a str) -> Segs<'a> {
+        let segs = if rest.is_empty() { Vec::new() } else { rest.split(':').collect() };
+        Segs { spec, info, segs }
+    }
+
+    fn raw(&self, i: usize, what: &str) -> Result<&'a str> {
+        self.segs.get(i).copied().ok_or_else(|| {
+            anyhow!(
+                "policy spec {:?}: missing segment {} (<{}>) — grammar: {}",
+                self.spec, i + 2, what, self.info.grammar
+            )
+        })
+    }
+
+    fn f64(&self, i: usize, what: &str) -> Result<f64> {
+        let raw = self.raw(i, what)?;
+        raw.parse().map_err(|_| {
+            anyhow!(
+                "policy spec {:?}: segment {} (<{}>) = {:?} is not a number — grammar: {}",
+                self.spec, i + 2, what, raw, self.info.grammar
+            )
+        })
+    }
+
+    fn usize(&self, i: usize, what: &str) -> Result<usize> {
+        let raw = self.raw(i, what)?;
+        raw.parse().map_err(|_| {
+            anyhow!(
+                "policy spec {:?}: segment {} (<{}>) = {:?} is not a non-negative \
+                 integer — grammar: {}",
+                self.spec, i + 2, what, raw, self.info.grammar
+            )
+        })
+    }
+
+    /// Bytes accept scientific notation ("3e6") for convenience.
+    fn bytes(&self, i: usize, what: &str) -> Result<usize> {
+        let v = self.f64(i, what)?;
+        anyhow::ensure!(v >= 1.0 && v.is_finite(),
+                        "policy spec {:?}: segment {} (<{}>) must be >= 1 byte",
+                        self.spec, i + 2, what);
+        Ok(v as usize)
+    }
+
+    /// Reject trailing segments beyond `max` args, naming the first
+    /// extra one.
+    fn expect_at_most(&self, max: usize) -> Result<()> {
+        if self.segs.len() > max {
+            bail!(
+                "policy spec {:?}: unexpected segment {} ({:?}) — grammar: {}",
+                self.spec, max + 2, self.segs[max], self.info.grammar
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Build a policy for `kind` from its spec string through the registry.
+pub fn build(kind: PolicyKind, spec: &str, ctx: &PolicyCtx) -> Result<Box<dyn Policy>> {
+    let spec = spec.trim();
+    let (name, rest) = spec.split_once(':').unwrap_or((spec, ""));
+    let Some(info) = lookup(name) else {
+        bail!(
+            "unknown {} policy {:?} (in spec {:?}); registered: {}",
+            kind.label(), name, spec, names_for(kind).join(", ")
+        );
+    };
+    if info.channel != "both" && info.channel != kind.label() {
+        bail!(
+            "policy {:?} drives the {} channel, not {} (spec {:?}); registered {} \
+             policies: {}",
+            info.name, info.channel, kind.label(), spec, kind.label(),
+            names_for(kind).join(", ")
+        );
+    }
+    let s = Segs::new(spec, info, rest);
+    let p: Box<dyn Policy> = match info.name {
+        "const" => {
+            s.expect_at_most(1)?;
+            let rho = s.f64(0, "rho")?;
+            check_ratio(spec, "rho", rho)?;
+            Box::new(SchedulePolicy::new(RhoSchedule::constant(rho)))
+        }
+        "linear" | "cosine" => {
+            s.expect_at_most(3)?;
+            let start = s.f64(0, "start")?;
+            let end = s.f64(1, "end")?;
+            check_ratio(spec, "start", start)?;
+            check_ratio(spec, "end", end)?;
+            let total = if s.segs.len() > 2 {
+                s.usize(2, "total_steps")?
+            } else {
+                ctx.steps
+            };
+            let sched = if info.name == "linear" {
+                RhoSchedule::linear(start, end, total)
+            } else {
+                RhoSchedule::cosine(start, end, total)
+            };
+            Box::new(SchedulePolicy::new(sched))
+        }
+        "step" => {
+            s.expect_at_most(4)?;
+            let start = s.f64(0, "start")?;
+            let end = s.f64(1, "end")?;
+            check_ratio(spec, "start", start)?;
+            check_ratio(spec, "end", end)?;
+            let every = s.usize(2, "every")?;
+            let factor = s.f64(3, "factor")?;
+            anyhow::ensure!(factor > 0.0 && factor.is_finite(),
+                            "policy spec {spec:?}: <factor> must be > 0");
+            Box::new(SchedulePolicy::new(RhoSchedule::Step { start, end, every, factor }))
+        }
+        "budget" => {
+            s.expect_at_most(3)?;
+            let budget = s.bytes(0, "bytes")?;
+            let min = if s.segs.len() > 1 { s.f64(1, "min")? } else { 0.01 };
+            let max = if s.segs.len() > 2 { s.f64(2, "max")? } else { 1.0 };
+            check_ratio(spec, "min", min)?;
+            check_ratio(spec, "max", max)?;
+            anyhow::ensure!(min <= max,
+                            "policy spec {spec:?}: <min> ({min}) must be <= <max> ({max})");
+            Box::new(BudgetRho::new(budget, min, max))
+        }
+        "fixed" => {
+            s.expect_at_most(1)?;
+            let t = s.usize(0, "t")?;
+            anyhow::ensure!(t > 0, "policy spec {spec:?}: <t> must be > 0");
+            Box::new(TeePolicy::fixed(t))
+        }
+        "loss" => {
+            s.expect_at_most(5)?;
+            let t0 = s.usize(0, "t_start")?;
+            let tmax = s.usize(1, "t_max")?;
+            let neval = s.usize(2, "n_eval")?;
+            let tau = s.f64(3, "tau_low")?;
+            let gamma = s.f64(4, "gamma")?;
+            anyhow::ensure!(t0 > 0, "policy spec {spec:?}: <t_start> must be > 0");
+            anyhow::ensure!(tmax >= t0,
+                            "policy spec {spec:?}: <t_max> ({tmax}) must be >= <t_start> ({t0})");
+            anyhow::ensure!(gamma >= 1.0,
+                            "policy spec {spec:?}: <gamma> must be >= 1 (T never shrinks)");
+            Box::new(TeePolicy::loss(t0, tmax, neval, tau, gamma))
+        }
+        "plateau" => {
+            s.expect_at_most(4)?;
+            let t0 = s.usize(0, "t_start")?;
+            let tmax = s.usize(1, "t_max")?;
+            let patience = s.usize(2, "patience")?;
+            let delta = s.f64(3, "min_delta")?;
+            anyhow::ensure!(t0 > 0, "policy spec {spec:?}: <t_start> must be > 0");
+            anyhow::ensure!(tmax >= t0,
+                            "policy spec {spec:?}: <t_max> ({tmax}) must be >= <t_start> ({t0})");
+            anyhow::ensure!(patience > 0, "policy spec {spec:?}: <patience> must be > 0");
+            Box::new(PlateauT::new(t0, tmax, patience, delta))
+        }
+        "hold" => {
+            // hold:<steps>:<inner...> — everything after the second ':'
+            // is the inner spec, parsed recursively
+            let (steps_raw, inner_spec) = rest.split_once(':').ok_or_else(|| {
+                anyhow!("policy spec {spec:?}: missing segment 3 (<inner>) — grammar: {}",
+                        info.grammar)
+            })?;
+            let steps: usize = steps_raw.parse().map_err(|_| {
+                anyhow!("policy spec {:?}: segment 2 (<steps>) = {:?} is not a \
+                         non-negative integer — grammar: {}", spec, steps_raw, info.grammar)
+            })?;
+            Box::new(Hold::new(steps, build(kind, inner_spec, ctx)?))
+        }
+        "chain" => {
+            let (switch_raw, both) = rest.split_once(':').ok_or_else(|| {
+                anyhow!("policy spec {spec:?}: missing segment 3 (<A>/<B>) — grammar: {}",
+                        info.grammar)
+            })?;
+            let switch: usize = switch_raw.parse().map_err(|_| {
+                anyhow!("policy spec {:?}: segment 2 (<switch>) = {:?} is not a \
+                         non-negative integer — grammar: {}", spec, switch_raw, info.grammar)
+            })?;
+            let (a_spec, b_spec) = both.split_once('/').ok_or_else(|| {
+                anyhow!("policy spec {spec:?}: expected <A>/<B> after the switch step \
+                         (no '/' found in {both:?}) — grammar: {}", info.grammar)
+            })?;
+            Box::new(Chain::new(switch, build(kind, a_spec, ctx)?,
+                                build(kind, b_spec, ctx)?)?)
+        }
+        _ => unreachable!("registry row {:?} not handled", info.name),
+    };
+    debug_assert_eq!(p.kind(), kind);
+    Ok(p)
+}
+
+fn check_ratio(spec: &str, what: &str, v: f64) -> Result<()> {
+    anyhow::ensure!((0.0..=1.0).contains(&v),
+                    "policy spec {spec:?}: <{what}> ({v}) must be in [0, 1]");
+    Ok(())
+}
+
+/// Grammar-check a spec without keeping the policy (config validation).
+pub fn validate(kind: PolicyKind, spec: &str, ctx: &PolicyCtx) -> Result<()> {
+    build(kind, spec, ctx).map(|_| ())
+}
+
+/// The `--list-policies` text: names + grammar + one-line doc per
+/// registered policy, like the optimizer registry's listing.
+pub fn listing() -> String {
+    let mut out = String::new();
+    for (channel, title) in [
+        ("rho", "rho policies (--rho-policy)"),
+        ("T", "T policies (--t-policy)"),
+        ("both", "combinators (either channel)"),
+    ] {
+        out.push_str(title);
+        out.push('\n');
+        for i in registered().iter().filter(|i| i.channel == channel) {
+            out.push_str(&format!("  {:<42} {}\n", i.grammar, i.summary));
+            if !i.aliases.is_empty() {
+                out.push_str(&format!("  {:<42} (aliases: {})\n", "", i.aliases.join(", ")));
+            }
+        }
+        out.push('\n');
+    }
+    out.push_str(
+        "defaults: the flat config fields map onto specs — dynamic-rho methods run\n\
+         linear:<rho>:<rho_end>, dynamic-T methods run loss:<t_start>:<t_max>:\
+         <n_eval>:<tau_low>:<gamma>,\nstatic methods run const:<rho> / fixed:<t_start>.\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> PolicyCtx {
+        PolicyCtx { steps: 2000 }
+    }
+
+    #[test]
+    fn every_registered_example_builds_and_roundtrips() {
+        for info in registered() {
+            let kind = match info.channel {
+                "rho" => PolicyKind::Rho,
+                "T" => PolicyKind::Tee,
+                _ => PolicyKind::Rho, // combinator examples wrap rho specs
+            };
+            let p = build(kind, info.example, &ctx())
+                .unwrap_or_else(|e| panic!("{}: {e:#}", info.name));
+            let printed = p.spec();
+            let q = build(kind, &printed, &ctx())
+                .unwrap_or_else(|e| panic!("{} reprint {printed:?}: {e:#}", info.name));
+            assert_eq!(q.spec(), printed, "{}: print not a fixed point", info.name);
+            for step in [0usize, 1, 99, 1999, 5000] {
+                assert_eq!(p.decide(step), q.decide(step),
+                           "{}: decisions diverge at {step}", info.name);
+            }
+        }
+    }
+
+    #[test]
+    fn horizon_defaults_to_run_length() {
+        let p = build(PolicyKind::Rho, "linear:0.25:0.05", &ctx()).unwrap();
+        assert_eq!(p.spec(), "linear:0.25:0.05:2000");
+        assert!((p.decide(1000).as_rho() - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn errors_name_the_offending_segment() {
+        let e = |kind, s: &str| format!("{:#}", build(kind, s, &ctx()).unwrap_err());
+        // bad number names segment + value
+        let err = e(PolicyKind::Rho, "linear:0.25:bogus");
+        assert!(err.contains("segment 3") && err.contains("bogus"), "{err}");
+        // missing segment names what's expected
+        let err = e(PolicyKind::Tee, "loss:100:800");
+        assert!(err.contains("segment 4") && err.contains("n_eval"), "{err}");
+        // extra segment is named too
+        let err = e(PolicyKind::Rho, "const:0.25:0.05");
+        assert!(err.contains("segment 3") && err.contains("0.05"), "{err}");
+        // unknown name lists the channel's registry
+        let err = e(PolicyKind::Rho, "exponential:0.5");
+        assert!(err.contains("exponential") && err.contains("linear")
+                && err.contains("budget"), "{err}");
+        // wrong channel is called out
+        let err = e(PolicyKind::Tee, "linear:0.25:0.05");
+        assert!(err.contains("rho channel"), "{err}");
+        // chain without a '/' separator
+        let err = e(PolicyKind::Rho, "chain:100:const:0.3");
+        assert!(err.contains('/'), "{err}");
+    }
+
+    #[test]
+    fn domain_validation() {
+        assert!(build(PolicyKind::Rho, "const:1.5", &ctx()).is_err());
+        assert!(build(PolicyKind::Tee, "fixed:0", &ctx()).is_err());
+        assert!(build(PolicyKind::Tee, "loss:100:50:100:0.008:1.5", &ctx()).is_err());
+        assert!(build(PolicyKind::Tee, "loss:100:800:100:0.008:0.5", &ctx()).is_err());
+        assert!(build(PolicyKind::Rho, "budget:0", &ctx()).is_err());
+        assert!(build(PolicyKind::Rho, "budget:1000:0.5:0.2", &ctx()).is_err());
+        assert!(build(PolicyKind::Tee, "plateau:100:800:0:0.01", &ctx()).is_err());
+    }
+
+    #[test]
+    fn aliases_and_case_insensitivity() {
+        assert_eq!(build(PolicyKind::Rho, "constant:0.3", &ctx()).unwrap().spec(),
+                   "const:0.3");
+        assert_eq!(build(PolicyKind::Rho, "LINEAR:0.25:0.05", &ctx()).unwrap().spec(),
+                   "linear:0.25:0.05:2000");
+    }
+
+    #[test]
+    fn nested_combinators_parse_right_associatively() {
+        let p = build(PolicyKind::Rho,
+                      "chain:100:const:0.3/chain:200:const:0.2/const:0.1", &ctx())
+            .unwrap();
+        assert_eq!(p.decide(0).as_rho(), 0.3);
+        assert_eq!(p.decide(150).as_rho(), 0.2);
+        assert_eq!(p.decide(350).as_rho(), 0.1);
+        // and the printed form reparses to the same decisions
+        let q = build(PolicyKind::Rho, &p.spec(), &ctx()).unwrap();
+        for step in [0, 99, 100, 299, 300, 1000] {
+            assert_eq!(p.decide(step), q.decide(step));
+        }
+        // hold wrapping a T policy keeps the T channel
+        let t = build(PolicyKind::Tee, "hold:50:loss:100:800:100:0.008:1.5", &ctx())
+            .unwrap();
+        assert_eq!(t.kind(), PolicyKind::Tee);
+    }
+
+    #[test]
+    fn listing_covers_every_row() {
+        let l = listing();
+        for info in registered() {
+            assert!(l.contains(info.name), "listing missing {}", info.name);
+            assert!(l.contains(info.summary), "listing missing summary for {}", info.name);
+        }
+    }
+}

@@ -1,0 +1,491 @@
+//! T-channel policies: adaptive update-frequency control (paper §3.2).
+//!
+//! Every N_eval steps the session reports the validation loss; the
+//! loss-aware controller computes the relative change (Eq. 2)
+//!
+//!   ΔL_rel = |L(k−N_eval) − L(k)| / L(k−N_eval)
+//!
+//! and, when ΔL_rel < τ_low (training plateaued), grows the interval
+//! (Eq. 3):  T ← min(T_max, T · γ_increase).
+//!
+//! [`TController`] is the pure Eq. 2–3 engine (fixed / loss-aware);
+//! [`TeePolicy`] adapts it to the [`Policy`] trait. [`PlateauT`] is new
+//! under this API: patience-based doubling against the best loss seen,
+//! a policy the old controller could not express.
+
+use anyhow::Result;
+
+use crate::control::{
+    get_opt_num, opt_num, ControlEvent, Decision, EventKind, Policy, PolicyState, StepObs,
+};
+use crate::control::spec::PolicyKind;
+use crate::util::json::{self, Value};
+
+/// A T change, recorded for the experiment logs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TEvent {
+    pub step: usize,
+    pub delta_l_rel: f64,
+    pub old_t: usize,
+    pub new_t: usize,
+}
+
+impl TEvent {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("step", json::num(self.step as f64)),
+            ("delta_l_rel", json::num(self.delta_l_rel)),
+            ("old_t", json::num(self.old_t as f64)),
+            ("new_t", json::num(self.new_t as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<TEvent> {
+        Ok(TEvent {
+            step: v.get("step")?.as_usize()?,
+            delta_l_rel: v.get("delta_l_rel")?.as_f64()?,
+            old_t: v.get("old_t")?.as_usize()?,
+            new_t: v.get("new_t")?.as_usize()?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub enum TController {
+    Fixed { t: usize },
+    LossAware {
+        t: f64,
+        t_max: usize,
+        n_eval: usize,
+        tau_low: f64,
+        gamma: f64,
+        prev_loss: Option<f64>,
+        last_observe_step: Option<usize>,
+        pub_events: Vec<TEvent>,
+    },
+}
+
+impl TController {
+    pub fn fixed(t: usize) -> Self {
+        TController::Fixed { t }
+    }
+
+    pub fn loss_aware(t_start: usize, t_max: usize, n_eval: usize, tau_low: f64,
+                      gamma: f64) -> Self {
+        TController::LossAware {
+            t: t_start as f64,
+            t_max,
+            n_eval,
+            tau_low,
+            gamma,
+            prev_loss: None,
+            last_observe_step: None,
+            pub_events: Vec::new(),
+        }
+    }
+
+    pub fn current(&self) -> usize {
+        match self {
+            TController::Fixed { t } => *t,
+            TController::LossAware { t, .. } => t.round() as usize,
+        }
+    }
+
+    pub fn is_dynamic(&self) -> bool {
+        matches!(self, TController::LossAware { .. })
+    }
+
+    /// Report a validation loss at `step`. Applies Eq. 2 + Eq. 3.
+    /// Observations are expected every `n_eval` steps; irregular gaps
+    /// are tolerated (the ratio is gap-independent).
+    pub fn observe(&mut self, step: usize, val_loss: f64) -> Option<TEvent> {
+        let TController::LossAware {
+            t, t_max, tau_low, gamma, prev_loss, last_observe_step, pub_events, ..
+        } = self
+        else {
+            return None;
+        };
+        // ignore duplicate reports for the same step
+        if *last_observe_step == Some(step) {
+            return None;
+        }
+        *last_observe_step = Some(step);
+        let Some(prev) = *prev_loss else {
+            *prev_loss = Some(val_loss);
+            return None;
+        };
+        *prev_loss = Some(val_loss);
+        if prev <= 0.0 || !val_loss.is_finite() {
+            return None; // degenerate losses never adapt T
+        }
+        let delta_l_rel = (prev - val_loss).abs() / prev;
+        if delta_l_rel < *tau_low {
+            let old_t = t.round() as usize;
+            *t = (*t * *gamma).min(*t_max as f64);
+            let new_t = t.round() as usize;
+            if new_t != old_t {
+                let ev = TEvent { step, delta_l_rel, old_t, new_t };
+                pub_events.push(ev.clone());
+                return Some(ev);
+            }
+        }
+        None
+    }
+
+    pub fn events(&self) -> &[TEvent] {
+        match self {
+            TController::Fixed { .. } => &[],
+            TController::LossAware { pub_events, .. } => pub_events,
+        }
+    }
+}
+
+/// [`Policy`] adapter over a [`TController`] — the `fixed:` and `loss:`
+/// registry entries. Remembers its construction parameters so the
+/// printed spec is the configuration, not the evolved state (state
+/// travels through [`Policy::state`] instead).
+pub struct TeePolicy {
+    /// (t_start, t_max, n_eval, tau_low, gamma); `None` = fixed
+    loss_cfg: Option<(usize, usize, usize, f64, f64)>,
+    ctl: TController,
+}
+
+impl TeePolicy {
+    pub fn fixed(t: usize) -> TeePolicy {
+        TeePolicy { loss_cfg: None, ctl: TController::fixed(t) }
+    }
+
+    pub fn loss(t_start: usize, t_max: usize, n_eval: usize, tau_low: f64, gamma: f64)
+                -> TeePolicy {
+        TeePolicy {
+            loss_cfg: Some((t_start, t_max, n_eval, tau_low, gamma)),
+            ctl: TController::loss_aware(t_start, t_max, n_eval, tau_low, gamma),
+        }
+    }
+
+    pub fn controller(&self) -> &TController {
+        &self.ctl
+    }
+}
+
+impl Policy for TeePolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Tee
+    }
+
+    fn spec(&self) -> String {
+        match (&self.loss_cfg, &self.ctl) {
+            (Some((t0, tmax, neval, tau, gamma)), _) => {
+                format!("loss:{t0}:{tmax}:{neval}:{tau}:{gamma}")
+            }
+            (None, ctl) => format!("fixed:{}", ctl.current()),
+        }
+    }
+
+    fn is_dynamic(&self) -> bool {
+        self.ctl.is_dynamic()
+    }
+
+    fn observe(&mut self, obs: &StepObs) -> Option<ControlEvent> {
+        let v = obs.val_loss?;
+        self.ctl.observe(obs.step, v).map(|ev| ControlEvent {
+            step: ev.step,
+            kind: EventKind::TChanged {
+                old_t: ev.old_t,
+                new_t: ev.new_t,
+                delta_l_rel: ev.delta_l_rel,
+            },
+        })
+    }
+
+    fn decide(&self, _step: usize) -> Decision {
+        Decision::T(self.ctl.current())
+    }
+
+    fn state(&self) -> PolicyState {
+        match &self.ctl {
+            TController::Fixed { .. } => PolicyState::empty(),
+            TController::LossAware { t, prev_loss, last_observe_step, pub_events, .. } => {
+                PolicyState(json::obj(vec![
+                    ("t", json::num(*t)),
+                    ("prev_loss", opt_num(*prev_loss)),
+                    ("last_step", opt_num(last_observe_step.map(|s| s as f64))),
+                    ("events", json::arr(pub_events.iter().map(|e| e.to_json()))),
+                ]))
+            }
+        }
+    }
+
+    fn restore(&mut self, st: &PolicyState) -> Result<()> {
+        if let TController::LossAware { t, prev_loss, last_observe_step, pub_events, .. } =
+            &mut self.ctl
+        {
+            *t = get_opt_num(&st.0, "t")?
+                .ok_or_else(|| anyhow::anyhow!("loss policy state missing t"))?;
+            *prev_loss = get_opt_num(&st.0, "prev_loss")?;
+            *last_observe_step = get_opt_num(&st.0, "last_step")?.map(|s| s as usize);
+            *pub_events = st
+                .0
+                .get("events")?
+                .as_arr()?
+                .iter()
+                .map(TEvent::from_json)
+                .collect::<Result<Vec<_>>>()?;
+        }
+        Ok(())
+    }
+}
+
+/// Plateau-triggered T (`plateau:<t_start>:<t_max>:<patience>:<min_delta>`):
+/// tracks the best loss ever observed; after `patience` consecutive
+/// observations that fail to improve on it by a relative `min_delta`,
+/// the interval doubles (capped at `t_max`) and the patience counter
+/// resets. Unlike the Eq. 2–3 controller — which compares *adjacent*
+/// observations and can be fooled by slow monotone drift — this reacts
+/// to the global best, a policy the old API could not express.
+pub struct PlateauT {
+    pub t_start: usize,
+    pub t_max: usize,
+    pub patience: usize,
+    pub min_delta: f64,
+    t: usize,
+    best: Option<f64>,
+    bad: usize,
+    last_observe_step: Option<usize>,
+}
+
+impl PlateauT {
+    pub fn new(t_start: usize, t_max: usize, patience: usize, min_delta: f64) -> PlateauT {
+        PlateauT {
+            t_start,
+            t_max,
+            patience,
+            min_delta,
+            t: t_start,
+            best: None,
+            bad: 0,
+            last_observe_step: None,
+        }
+    }
+}
+
+impl Policy for PlateauT {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Tee
+    }
+
+    fn spec(&self) -> String {
+        format!("plateau:{}:{}:{}:{}", self.t_start, self.t_max, self.patience,
+                self.min_delta)
+    }
+
+    fn observe(&mut self, obs: &StepObs) -> Option<ControlEvent> {
+        let v = obs.val_loss?;
+        if !v.is_finite() || self.last_observe_step == Some(obs.step) {
+            return None;
+        }
+        self.last_observe_step = Some(obs.step);
+        let Some(best) = self.best else {
+            self.best = Some(v);
+            return None;
+        };
+        if best > 0.0 && v < best * (1.0 - self.min_delta) {
+            self.best = Some(v);
+            self.bad = 0;
+            return None;
+        }
+        self.bad += 1;
+        if self.bad < self.patience {
+            return None;
+        }
+        self.bad = 0;
+        let old_t = self.t;
+        self.t = (self.t * 2).min(self.t_max);
+        if self.t != old_t {
+            return Some(ControlEvent {
+                step: obs.step,
+                kind: EventKind::TChanged {
+                    old_t,
+                    new_t: self.t,
+                    // improvement relative to the best ever seen
+                    // (negative = regression)
+                    delta_l_rel: (best - v) / best,
+                },
+            });
+        }
+        None
+    }
+
+    fn decide(&self, _step: usize) -> Decision {
+        Decision::T(self.t)
+    }
+
+    fn state(&self) -> PolicyState {
+        PolicyState(json::obj(vec![
+            ("t", json::num(self.t as f64)),
+            ("best", opt_num(self.best)),
+            ("bad", json::num(self.bad as f64)),
+            ("last_step", opt_num(self.last_observe_step.map(|s| s as f64))),
+        ]))
+    }
+
+    fn restore(&mut self, st: &PolicyState) -> Result<()> {
+        self.t = st.0.get("t")?.as_usize()?;
+        self.best = get_opt_num(&st.0, "best")?;
+        self.bad = st.0.get("bad")?.as_usize()?;
+        self.last_observe_step = get_opt_num(&st.0, "last_step")?.map(|s| s as usize);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn obs(step: usize, v: f64) -> StepObs {
+        StepObs { step, val_loss: Some(v), ..Default::default() }
+    }
+
+    #[test]
+    fn fixed_never_moves() {
+        let mut c = TController::fixed(200);
+        assert_eq!(c.current(), 200);
+        assert!(c.observe(100, 5.0).is_none());
+        assert!(c.observe(200, 5.0).is_none());
+        assert_eq!(c.current(), 200);
+        assert!(c.events().is_empty());
+    }
+
+    #[test]
+    fn eq2_eq3_sequence() {
+        // paper values: T0=100, Tmax=800, gamma=1.5, tau=0.008
+        let mut c = TController::loss_aware(100, 800, 100, 0.008, 1.5);
+        // first observation only primes the window
+        assert!(c.observe(100, 10.0).is_none());
+        // big improvement: 10 -> 9 is 10% >> tau, no change
+        assert!(c.observe(200, 9.0).is_none());
+        assert_eq!(c.current(), 100);
+        // plateau: |9 - 8.95|/9 = 0.0056 < 0.008 -> T *= 1.5
+        let ev = c.observe(300, 8.95).unwrap();
+        assert_eq!(ev.old_t, 100);
+        assert_eq!(ev.new_t, 150);
+        assert!((ev.delta_l_rel - 0.0056).abs() < 1e-3);
+        // repeated plateaus saturate at T_max
+        for i in 0..10 {
+            c.observe(400 + i * 100, 8.95);
+        }
+        assert_eq!(c.current(), 800);
+        assert_eq!(c.events().last().unwrap().new_t, 800);
+    }
+
+    #[test]
+    fn worsening_loss_also_counts_as_stable_only_if_small() {
+        // Eq. 2 uses |ΔL|: a small regression is still a plateau
+        let mut c = TController::loss_aware(100, 800, 100, 0.008, 1.5);
+        c.observe(100, 5.0);
+        let ev = c.observe(200, 5.001); // |Δ|/5 = 0.0002 < tau
+        assert!(ev.is_some());
+        // a big regression is NOT a plateau
+        let mut c2 = TController::loss_aware(100, 800, 100, 0.008, 1.5);
+        c2.observe(100, 5.0);
+        assert!(c2.observe(200, 6.0).is_none());
+    }
+
+    #[test]
+    fn duplicate_and_degenerate_observations_ignored() {
+        let mut c = TController::loss_aware(100, 800, 100, 0.008, 1.5);
+        c.observe(100, 5.0);
+        assert!(c.observe(100, 5.0).is_none()); // duplicate step
+        assert!(c.observe(200, f64::NAN).is_none()); // NaN ignored
+        assert_eq!(c.current(), 100);
+    }
+
+    #[test]
+    fn prop_t_monotone_and_bounded() {
+        // invariant: T is nondecreasing and never exceeds T_max,
+        // regardless of the loss sequence.
+        prop::forall_with_rng(
+            "t-monotone-bounded",
+            50,
+            |r| {
+                let n = 5 + r.below(40);
+                let losses: Vec<f64> =
+                    (0..n).map(|_| 0.1 + 20.0 * r.f64()).collect();
+                losses
+            },
+            |losses, _| {
+                let mut c = TController::loss_aware(100, 800, 100, 0.008, 1.5);
+                let mut prev_t = c.current();
+                for (i, &l) in losses.iter().enumerate() {
+                    c.observe((i + 1) * 100, l);
+                    let t = c.current();
+                    if t < prev_t || t > 800 {
+                        return false;
+                    }
+                    prev_t = t;
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn loss_policy_state_roundtrip_mid_saturation() {
+        let mut a = TeePolicy::loss(100, 800, 100, 0.008, 1.5);
+        a.observe(&obs(100, 10.0));
+        a.observe(&obs(200, 9.99));
+        a.observe(&obs(300, 9.985));
+        let mut b = TeePolicy::loss(100, 800, 100, 0.008, 1.5);
+        b.restore(&a.state()).unwrap();
+        assert_eq!(a.decide(300), b.decide(300));
+        assert_eq!(a.controller().events(), b.controller().events());
+        // identical futures, including the fractional internal t
+        for (k, l) in [(400, 9.984), (500, 9.98), (600, 9.979)] {
+            assert_eq!(a.observe(&obs(k, l)), b.observe(&obs(k, l)), "step {k}");
+            assert_eq!(a.decide(k), b.decide(k), "step {k}");
+        }
+    }
+
+    #[test]
+    fn plateau_doubles_after_patience() {
+        let mut p = PlateauT::new(50, 400, 2, 0.01);
+        assert_eq!(p.decide(0).as_t(), 50);
+        assert!(p.observe(&obs(50, 10.0)).is_none()); // primes best
+        assert!(p.observe(&obs(100, 9.0)).is_none()); // improved: best=9
+        assert!(p.observe(&obs(150, 8.995)).is_none()); // bad=1
+        let ev = p.observe(&obs(200, 8.992)).expect("patience=2 exhausted");
+        match ev.kind {
+            EventKind::TChanged { old_t, new_t, .. } => {
+                assert_eq!((old_t, new_t), (50, 100));
+            }
+            _ => panic!("wrong event kind"),
+        }
+        assert_eq!(p.decide(200).as_t(), 100);
+        // an improvement resets the counter and moves best
+        assert!(p.observe(&obs(250, 8.0)).is_none());
+        assert!(p.observe(&obs(300, 7.999)).is_none()); // bad=1 again
+        // doubling saturates at t_max
+        for k in 0..10 {
+            p.observe(&obs(350 + 50 * k, 7.999));
+        }
+        assert_eq!(p.decide(999).as_t(), 400);
+        // duplicate + NaN observations are inert
+        let before = p.state();
+        p.observe(&obs(850, f64::NAN));
+        assert_eq!(p.state(), before);
+    }
+
+    #[test]
+    fn plateau_state_roundtrip() {
+        let mut a = PlateauT::new(50, 400, 3, 0.005);
+        for (k, l) in [(50, 5.0), (100, 4.999), (150, 4.998)] {
+            a.observe(&obs(k, l));
+        }
+        let mut b = PlateauT::new(50, 400, 3, 0.005);
+        b.restore(&a.state()).unwrap();
+        // the next observation trips patience in both or neither
+        assert_eq!(a.observe(&obs(200, 4.997)), b.observe(&obs(200, 4.997)));
+        assert_eq!(a.decide(200), b.decide(200));
+    }
+}

@@ -1,7 +1,15 @@
 //! Checkpointing: packed state (or params) + a JSON header, in a simple
-//! length-prefixed binary container. Used by the continued-pretraining
-//! example (train on the C4-like corpus, restore, continue on the
-//! VietVault-like corpus).
+//! length-prefixed binary container. Two header kinds share the
+//! container: `"packed_state"` (params only — the continued-pretraining
+//! example) and `"resume"` (a full mid-run snapshot carrying the
+//! control plane's policy states, the subspace mask and the task RNG
+//! streams — see `Session::resume_state`).
+//!
+//! Format version 2 (`ADAFRUG2`): the version bump that introduced
+//! control-plane state. Version-1 files predate policy state — a
+//! resumed run would silently restart the T controller's loss history
+//! and event log, so loading one is a loud expected-vs-found error
+//! rather than a silent downgrade.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -10,7 +18,8 @@ use anyhow::{ensure, Context, Result};
 
 use crate::util::json::{self, Value};
 
-const MAGIC: &[u8; 8] = b"ADAFRUG1";
+const MAGIC: &[u8; 8] = b"ADAFRUG2";
+const MAGIC_V1: &[u8; 8] = b"ADAFRUG1";
 
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
@@ -41,6 +50,14 @@ pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
     );
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
+    ensure!(&magic != MAGIC_V1,
+            "checkpoint format version mismatch: expected version 2 ({:?}), found \
+             version 1 ({:?}) — a pre-policy-state checkpoint. Version 1 files \
+             carry no control-plane state (T-controller loss history, event log, \
+             mask, RNG streams), so resuming from one would silently diverge from \
+             the straight-through trajectory. Re-create the checkpoint with this \
+             build (train --save-checkpoint / --checkpoint-at).",
+            String::from_utf8_lossy(MAGIC), String::from_utf8_lossy(MAGIC_V1));
     ensure!(&magic == MAGIC,
             "bad checkpoint magic: expected {:?}, found {:?} (not an AdaFRUGAL \
              checkpoint, or written by an incompatible version)",
@@ -110,8 +127,33 @@ mod tests {
         let path = dir.join("wrong.ckpt");
         std::fs::write(&path, b"WRONGMAG\x00\x00\x00\x00\x00\x00\x00\x00").unwrap();
         let err = format!("{:#}", load(&path).unwrap_err());
-        assert!(err.contains("ADAFRUG1"), "missing expected magic in: {err}");
+        assert!(err.contains("ADAFRUG2"), "missing expected magic in: {err}");
         assert!(err.contains("WRONGMAG"), "missing found magic in: {err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn v1_checkpoint_rejected_with_expected_vs_found_versions() {
+        // a well-formed version-1 file (pre-policy-state layout): the
+        // loader must name both versions and say why v1 cannot resume,
+        // never fall through to a generic magic error or parse it
+        let dir = std::env::temp_dir()
+            .join(format!("adafrugal_ckpt_v1_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("old.ckpt");
+        let hdr = br#"{"kind":"packed_state","step":5}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"ADAFRUG1");
+        bytes.extend_from_slice(&(hdr.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(hdr);
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        bytes.extend_from_slice(&2.0f32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("version 2") && err.contains("ADAFRUG2"), "{err}");
+        assert!(err.contains("version 1") && err.contains("ADAFRUG1"), "{err}");
+        assert!(err.contains("control-plane state"), "{err}");
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -11,6 +11,12 @@
 //! step just to keep eval in sync — the session syncs it once per eval
 //! (pinned by the upload-accounting test in
 //! `tests/integration_finetune.rs`).
+//!
+//! Control policies flow through the same spec registry as
+//! pre-training (`cfg.rho_policy` / `cfg.t_policy`): a spec-selected
+//! dynamic T policy (e.g. `plateau:...`) activates the loss-readback
+//! cadence even for methods whose roster flags are static — the
+//! session gates on the plane's `tee_dynamic()`, not the method enum.
 
 use anyhow::{Context, Result};
 
@@ -62,6 +68,12 @@ impl FineTuner {
         let session = Session::new(cfg.clone(), method.profile(), engine, task,
                                    SessionOptions::finetuning())?;
         Ok(FineTuner { cfg, method, spec, session })
+    }
+
+    /// The canonical (ρ, T) policy specs the control plane resolved for
+    /// this run.
+    pub fn control_specs(&self) -> (String, String) {
+        (self.session.control().rho_spec(), self.session.control().t_spec())
     }
 
     /// Run fine-tuning for `cfg.steps` steps; returns the eval score.

@@ -7,13 +7,21 @@
 //! `--method`), and the host-path update rules they use are constructed
 //! through the optimizer registry (`optim::build`) keyed by
 //! [`Method::host_optimizer`] — the trainer and fine-tuner contain no
-//! per-method dispatch of their own.
+//! per-method dispatch of their own. The `dynamic_rho` / `dynamic_t`
+//! flags no longer reach a controller directly: they pick the *default
+//! policy specs* the control plane maps the flat config fields onto
+//! (`control::ControlPlane::from_config`), and explicit
+//! `--rho-policy` / `--t-policy` specs override them entirely.
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::memory_tracker::MemoryModel;
 use crate::coordinator::session::MethodProfile;
 
+/// The pre-training roster. The AdaFRUGAL variants differ only in
+/// which default control policies they select: Dyn-ρ runs
+/// `linear:<rho>:<rho_end>`, Dyn-T runs the Eq. 2–3 `loss:` policy,
+/// Combined runs both, static FRUGAL runs `const:`/`fixed:`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Method {
     /// full-rank AdamW (performance upper bound, 1.00× memory)

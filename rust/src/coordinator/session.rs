@@ -2,11 +2,17 @@
 //! implemented exactly once.
 //!
 //! [`Session`] owns everything Algorithm 1 needs that is not
-//! workload-specific: the execution backend, the dynamic controllers
-//! (ρ decay, loss-aware T), the subspace mask and its redefinition
+//! workload-specific: the execution backend, the dynamic control plane
+//! ([`crate::control::ControlPlane`] — ρ policy, T policy and the LR
+//! schedule, selected by spec through the policy registry and fed one
+//! [`StepObs`] per boundary), the subspace mask and its redefinition
 //! machinery (lines 21–27), the optimizer state (fused device-resident
-//! or registry-built host), the LR schedule and step-scalar ABI, and
-//! the checkpoint/eval cadence. The workload — batches, state layout,
+//! or registry-built host), the step-scalar ABI, and the
+//! checkpoint/eval cadence. [`Session::resume_state`] /
+//! [`Session::restore_resume`] snapshot the whole mutable loop state —
+//! packed device state, mask, task RNG streams, policy states, event
+//! log — so a mid-run checkpoint resumes trajectory-exactly (pinned by
+//! `tests/resume_parity.rs`). The workload — batches, state layout,
 //! eval scoring — comes in through the [`Task`] trait
 //! (`coordinator::task`), and the method through a [`MethodProfile`]
 //! (built by `Method::profile` / `FtMethod::profile`). `Trainer` and
@@ -53,7 +59,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::config::TrainConfig;
-use crate::controller::AdaFrugalController;
+use crate::control::{ControlEvent, ControlPlane, LrSchedule, StepObs, TEvent};
 use crate::coordinator::memory_tracker::{MemoryModel, MemoryTracker};
 use crate::coordinator::task::{EvalOutcome, LabelData, Task, TaskBatch};
 use crate::info;
@@ -61,6 +67,7 @@ use crate::optim::{self, OptimBuild, Optimizer, StateMgmt, StepScalars};
 use crate::projection::{Strategy, SubspaceMask};
 use crate::runtime::backend::{Buffer, ExecBackend};
 use crate::runtime::Manifest;
+use crate::util::json::{self, Value};
 use crate::util::par;
 use crate::util::timer::{PhaseTimer, Timer};
 
@@ -172,11 +179,23 @@ pub struct SessionResult {
     pub steps: Vec<StepLog>,
     pub memory: MemoryTracker,
     pub redefinitions: usize,
+    /// the exact steps at which the subspace was redefined (resume
+    /// parity compares these across checkpoint boundaries)
+    pub redefinition_steps: Vec<usize>,
     pub total_time_s: f64,
     pub step_time_s: f64,
     pub redef_time_s: f64,
     pub eval_time_s: f64,
-    pub t_events: Vec<crate::controller::TEvent>,
+    /// cumulative control-plane decide/observe wall time (bench_loop
+    /// reports this per step so "negligible" is measured, not assumed)
+    pub control_time_s: f64,
+    /// T-change events projected onto the historical shape
+    pub t_events: Vec<TEvent>,
+    /// the plane's full typed event log (T changes, budget-ρ moves)
+    pub control_events: Vec<ControlEvent>,
+    /// canonical resolved policy specs driving this run
+    pub rho_policy: String,
+    pub t_policy: String,
     /// last observed training loss (host path: every step; fused path:
     /// last readback boundary)
     pub final_train_loss: f64,
@@ -232,7 +251,7 @@ pub struct Session {
     opts: SessionOptions,
     dev: DeviceState,
     task: Box<dyn Task>,
-    controller: AdaFrugalController,
+    control: ControlPlane,
     mask: SubspaceMask,
     strategy: Strategy,
     state_mgmt: StateMgmt,
@@ -243,16 +262,11 @@ pub struct Session {
 }
 
 /// Learning rate at step `k`: linear warmup then cosine decay to
-/// `lr * lr_min_ratio`. The single implementation behind every driver
+/// `lr * lr_min_ratio`. Delegates to the control plane's
+/// [`LrSchedule`], the single implementation behind every driver
 /// (pinned by `trainer::tests::lr_schedule_shape`).
 pub fn lr_at(cfg: &TrainConfig, step: usize) -> f32 {
-    if step < cfg.warmup_steps {
-        return cfg.lr * (step + 1) as f32 / cfg.warmup_steps.max(1) as f32;
-    }
-    let progress = (step - cfg.warmup_steps) as f32
-        / (cfg.steps.saturating_sub(cfg.warmup_steps)).max(1) as f32;
-    let min_lr = cfg.lr * cfg.lr_min_ratio;
-    min_lr + 0.5 * (cfg.lr - min_lr) * (1.0 + (std::f32::consts::PI * progress).cos())
+    LrSchedule::from_config(cfg).at(step)
 }
 
 /// The 8-scalar step ABI at step `k`. `lr_free` follows the same
@@ -260,7 +274,14 @@ pub fn lr_at(cfg: &TrainConfig, step: usize) -> f32 {
 /// optimizer-state reset (for host-path methods the state never resets,
 /// so this equals `step + 1`).
 pub fn scalars_at(cfg: &TrainConfig, step: usize, t_since_reset: usize) -> StepScalars {
-    let lr = lr_at(cfg, step);
+    scalars_with_lr(cfg, lr_at(cfg, step), t_since_reset)
+}
+
+/// As [`scalars_at`] but with the learning rate supplied by the caller
+/// — the session passes the control plane's per-step decision here, so
+/// an injected plane's custom `LrSchedule` actually steers the step
+/// (the default plane computes the identical value as [`lr_at`]).
+pub fn scalars_with_lr(cfg: &TrainConfig, lr: f32, t_since_reset: usize) -> StepScalars {
     let lr_free = cfg.lr_free * (lr / cfg.lr);
     StepScalars::new(lr, lr_free, cfg.weight_decay, cfg.beta1, cfg.beta2, cfg.eps,
                      t_since_reset)
@@ -403,8 +424,8 @@ impl Session {
                 man.model.batch, shards, cfg.preset, shards * 2
             );
         }
-        let controller =
-            AdaFrugalController::from_config(&cfg, profile.dynamic_rho, profile.dynamic_t);
+        let control =
+            ControlPlane::from_config(&cfg, profile.dynamic_rho, profile.dynamic_t)?;
         let mut mask = SubspaceMask::new(&man);
         let strategy = Strategy::parse(&cfg.strategy)?;
         let state_mgmt = StateMgmt::parse(&cfg.state_mgmt)?;
@@ -412,7 +433,7 @@ impl Session {
             // initial projector (Algorithm 1 line 2); random at step 0
             // even under TopK (no gradients exist yet)
             let s0 = if strategy == Strategy::TopK { Strategy::Random } else { strategy };
-            mask.redefine(s0, controller.rho_at(0), None, task.rng())?;
+            mask.redefine(s0, control.decide(0).rho, None, task.rng())?;
         }
 
         let mut stats = UploadStats::default();
@@ -455,7 +476,7 @@ impl Session {
                 stats,
             },
             task,
-            controller,
+            control,
             mask,
             strategy,
             state_mgmt,
@@ -483,9 +504,18 @@ impl Session {
         self.mask.render()
     }
 
-    /// Override the ρ schedule (ablations: cosine/step decay shapes).
-    pub fn set_rho_schedule(&mut self, s: crate::controller::RhoSchedule) {
-        self.controller.rho = s;
+    /// The control-plane injection point: swap in a plane built outside
+    /// the config mapping (custom policies that bypass the registry,
+    /// test instrumentation). Replaces the old per-driver
+    /// `set_rho_schedule` setters — registry policies are injected via
+    /// `cfg.rho_policy` / `cfg.t_policy` specs instead.
+    pub fn set_control(&mut self, plane: ControlPlane) {
+        self.control = plane;
+    }
+
+    /// The live control plane (resolved specs, event log).
+    pub fn control(&self) -> &ControlPlane {
+        &self.control
     }
 
     /// Download current params (fused path) or clone host params.
@@ -612,9 +642,9 @@ impl Session {
         self.task.fold_eval(&outputs, &batches)
     }
 
-    /// Subspace redefinition (Algorithm 1 lines 21–27).
-    fn redefine(&mut self, step: usize) -> Result<()> {
-        let rho = self.controller.rho_at(step);
+    /// Subspace redefinition (Algorithm 1 lines 21–27); `rho` is the
+    /// plane's decision for this step.
+    fn redefine(&mut self, rho: f64) -> Result<()> {
         // TopK needs fresh gradient block scores
         let use_scores = self.strategy == Strategy::TopK && self.profile.topk_scores
             && self.dev.engine.has_entry("scores");
@@ -667,11 +697,25 @@ impl Session {
 
     /// Run the full training loop (Algorithm 1).
     pub fn run(&mut self) -> Result<SessionResult> {
+        let steps = self.cfg.steps;
+        self.run_range(0, steps)
+    }
+
+    /// Run steps `[from, to)` of the loop. `run()` is `run_range(0,
+    /// steps)`; a resume checkpoint at step N is taken after
+    /// `run_range(0, N)` and continued with `run_range(N, steps)` —
+    /// every cadence (evals, checkpoints grid, ρ/LR horizons) keys off
+    /// the absolute step, so the stitched trajectory is identical to
+    /// the straight-through run.
+    pub fn run_range(&mut self, from: usize, to: usize) -> Result<SessionResult> {
+        anyhow::ensure!(from <= to && to <= self.cfg.steps,
+                        "bad step range [{from}, {to}) for a {}-step run", self.cfg.steps);
         let total = Timer::start();
         let mut evals = Vec::new();
         let mut steps_log = Vec::new();
         let mut memory = MemoryTracker::new();
         let mut redefinitions = 0usize;
+        let mut redefinition_steps = Vec::new();
         let periodic = self.opts.eval == EvalPolicy::Periodic;
         let checkpoints = if periodic { eval_checkpoints(&self.cfg) } else { Vec::new() };
         // Prefetch only when it cannot perturb the historical batch/RNG
@@ -689,14 +733,18 @@ impl Session {
         let mut last_loss = f64::NAN;
         let mut final_score = None;
 
-        for step in 0..self.cfg.steps {
-            // --- dynamic control: ρ_k (Eq. 1) + redefinition check ---
-            let rho_k = self.controller.rho_at(step);
-            if self.profile.frugal && self.controller.is_redefinition_step(step) {
+        for step in from..to {
+            // --- dynamic control: one plane decision per step (ρ_k,
+            // T_k, redefine?, lr) ---
+            let tc = std::time::Instant::now();
+            let d = self.control.decide(step);
+            self.timers.add("control", tc.elapsed());
+            if self.profile.frugal && d.redefine {
                 let t = std::time::Instant::now();
                 if step > 0 {
-                    self.redefine(step)?;
+                    self.redefine(d.rho)?;
                     redefinitions += 1;
+                    redefinition_steps.push(step);
                 }
                 self.timers.add("redefine", t.elapsed());
             }
@@ -707,8 +755,14 @@ impl Session {
                 None => self.task.next_train(),
             };
             self.t_since_reset += 1;
-            let scal = scalars_at(&self.cfg, step, self.t_since_reset).to_array();
-            let want_next = prefetch && step + 1 < self.cfg.steps;
+            // the plane's lr decision drives the scalars: for the
+            // config-built plane d.lr == lr_at(cfg, step) bit-for-bit,
+            // and an injected plane's custom schedule takes effect here
+            let scal = scalars_with_lr(&self.cfg, d.lr, self.t_since_reset).to_array();
+            // never prefetch past the end of the range: a resume
+            // snapshot at `to` must find the task RNG exactly at the
+            // next undrawn batch
+            let want_next = prefetch && step + 1 < to;
 
             let t = std::time::Instant::now();
             let (step_res, next) = {
@@ -752,13 +806,13 @@ impl Session {
                 steps_log.push(StepLog {
                     step,
                     train_loss: loss,
-                    rho: rho_k,
-                    t_current: self.controller.t_current(),
+                    rho: d.rho,
+                    t_current: d.t,
                 });
                 if !self.quiet {
                     info!(
                         "[{}] step {:>6} loss {:.4} rho {:.3} T {}",
-                        self.profile.id, step, loss, rho_k, self.controller.t_current()
+                        self.profile.id, step, loss, d.rho, d.t
                     );
                 }
             }
@@ -772,15 +826,24 @@ impl Session {
                         let t = std::time::Instant::now();
                         let out = self.evaluate()?;
                         self.timers.add("eval", t.elapsed());
-                        if at_eval {
-                            self.controller.observe_val_loss(step + 1, out.val_loss);
-                        }
                         let bytes = MemoryTracker::bytes_for(
                             self.dev.engine.manifest(),
                             self.profile.memory,
                             if self.profile.frugal { Some(&self.mask) } else { None },
-                            rho_k,
+                            d.rho,
                         );
+                        // one observation per boundary: the T channel
+                        // only sees the val loss on the Eq. 2 cadence
+                        // (never at checkpoint-grid-only evals), while
+                        // byte feedback flows on every sample
+                        let tc = std::time::Instant::now();
+                        self.control.observe(&StepObs {
+                            step: step + 1,
+                            train_loss: Some(last_loss).filter(|l| l.is_finite()),
+                            val_loss: if at_eval { Some(out.val_loss) } else { None },
+                            memory_bytes: Some(bytes),
+                        });
+                        self.timers.add("control", tc.elapsed());
                         memory.record(step + 1, bytes);
                         final_score = out.score;
                         evals.push(EvalPoint {
@@ -794,8 +857,7 @@ impl Session {
                             info!(
                                 "[{}] eval step {:>6} val_loss {:.4} ppl {:.2} mem {:.3}MB T {}",
                                 self.profile.id, step + 1, out.val_loss,
-                                out.val_loss.exp(), bytes as f64 / 1e6,
-                                self.controller.t_current()
+                                out.val_loss.exp(), bytes as f64 / 1e6, d.t
                             );
                         }
                     }
@@ -805,9 +867,12 @@ impl Session {
                 // transfers the whole buffer — see engine.rs) ---
                 EvalPolicy::FinalOnly => {
                     let last_step = step + 1 == self.cfg.steps;
-                    if (self.profile.dynamic_t && (step + 1) % self.cfg.n_eval == 0)
-                        || last_step
-                    {
+                    // the readback costs a full state transfer, so it
+                    // is gated on the T policy actually reacting —
+                    // spec-selected policies (e.g. plateau) count, not
+                    // just the method's dynamic-T flag
+                    let tee_dynamic = self.control.tee_dynamic();
+                    if (tee_dynamic && (step + 1) % self.cfg.n_eval == 0) || last_step {
                         if step_loss.is_none() {
                             let slot =
                                 self.task.state_len(self.dev.engine.manifest()) - 1;
@@ -816,15 +881,26 @@ impl Session {
                                     self.dev.engine.read_f32(state_buf, slot, 1)?[0] as f64;
                             }
                         }
-                        if self.profile.dynamic_t && !last_step {
-                            self.controller.observe_val_loss(step + 1, last_loss);
+                        if tee_dynamic && !last_step {
+                            // historical cadence: the T policy observes
+                            // the train-loss readback on the val_loss
+                            // channel (fine-tuning runs no periodic
+                            // eval)
+                            let tc = std::time::Instant::now();
+                            self.control.observe(&StepObs {
+                                step: step + 1,
+                                train_loss: Some(last_loss).filter(|l| l.is_finite()),
+                                val_loss: Some(last_loss),
+                                memory_bytes: None,
+                            });
+                            self.timers.add("control", tc.elapsed());
                         }
                     }
                 }
             }
         }
 
-        if self.opts.eval == EvalPolicy::FinalOnly {
+        if self.opts.eval == EvalPolicy::FinalOnly && to == self.cfg.steps {
             let t = std::time::Instant::now();
             let out = self.evaluate()?;
             self.timers.add("eval", t.elapsed());
@@ -836,16 +912,118 @@ impl Session {
             steps: steps_log,
             memory,
             redefinitions,
+            redefinition_steps,
             total_time_s: total.secs(),
             step_time_s: self.timers.total_secs("step"),
             redef_time_s: self.timers.total_secs("redefine"),
             eval_time_s: self.timers.total_secs("eval"),
-            t_events: self.controller.tee.events().to_vec(),
+            control_time_s: self.timers.total_secs("control"),
+            t_events: self.control.t_events(),
+            control_events: self.control.events().to_vec(),
+            rho_policy: self.control.rho_spec(),
+            t_policy: self.control.t_spec(),
             final_train_loss: last_loss,
             final_score,
             uploads: self.dev.stats,
             sync: self.dev.engine.sync_stats(),
         })
+    }
+
+    /// Snapshot everything a bit-exact mid-run resume needs, as a
+    /// (header, packed-state payload) pair for the version-2 checkpoint
+    /// container: the device-resident packed state, the live subspace
+    /// mask, the task's RNG/pipeline state, the control plane (policy
+    /// states + event log) and the bias-correction counter. `next_step`
+    /// is the step the resumed run will execute first — take the
+    /// snapshot at a step boundary, i.e. after `run_range(_, N)`.
+    ///
+    /// Host-path methods (galore/badam) hold their moments inside an
+    /// opaque registry optimizer and are not resumable; they keep the
+    /// legacy params-only checkpoint path.
+    pub fn resume_state(&self, next_step: usize) -> Result<(Value, Vec<f32>)> {
+        anyhow::ensure!(next_step <= self.cfg.steps, "next_step beyond the run");
+        let OptState::Fused { state_buf, .. } = &self.dev.opt else {
+            bail!("resume checkpoints need the fused device path; method {:?} \
+                   runs a host optimizer (params-only checkpoints still work)",
+                  self.profile.id)
+        };
+        let data = self.dev.engine.read_all_f32(state_buf)?;
+        let header = json::obj(vec![
+            ("kind", json::s("resume")),
+            ("preset", json::s(&self.cfg.preset)),
+            ("method", json::s(&self.cfg.method)),
+            ("strategy", json::s(&self.cfg.strategy)),
+            ("corpus", json::s(&self.cfg.corpus)),
+            // decimal string: u64 seeds above 2^53 would lose bits as
+            // a JSON number
+            ("seed", json::s(&self.cfg.seed.to_string())),
+            ("step", json::num(next_step as f64)),
+            ("total_steps", json::num(self.cfg.steps as f64)),
+            ("t_since_reset", json::num(self.t_since_reset as f64)),
+            ("control", self.control.state()),
+            ("mask", self.mask.state_json()),
+            ("task", self.task.state_json()?),
+        ]);
+        Ok((header, data))
+    }
+
+    /// Restore a [`Session::resume_state`] snapshot into a freshly
+    /// constructed session; returns the step to continue from (pass it
+    /// to [`Session::run_range`]). The run geometry (preset, total
+    /// steps) and the configured policies must match the checkpoint —
+    /// mismatches are loud errors, because silently diverging from the
+    /// straight-through trajectory is exactly what this API exists to
+    /// prevent.
+    pub fn restore_resume(&mut self, header: &Value, data: &[f32]) -> Result<usize> {
+        let kind = header.get("kind")?.as_str()?;
+        anyhow::ensure!(kind == "resume",
+                        "not a resume checkpoint (kind {kind:?}); params-only \
+                         checkpoints go through restore_params");
+        // every config axis that steers the trajectory must match the
+        // checkpoint — a silent mismatch is exactly the divergence this
+        // API exists to prevent
+        for (key, want) in [
+            ("preset", self.cfg.preset.as_str()),
+            ("method", self.cfg.method.as_str()),
+            ("strategy", self.cfg.strategy.as_str()),
+            ("corpus", self.cfg.corpus.as_str()),
+        ] {
+            let found = header.get(key)?.as_str()?;
+            anyhow::ensure!(found == want,
+                            "checkpoint {key} {found:?} != configured {want:?}; resume \
+                             with the matching --{key} to continue the trajectory");
+        }
+        let seed = header.get("seed")?.as_str()?;
+        anyhow::ensure!(seed == self.cfg.seed.to_string(),
+                        "checkpoint seed {seed} != configured {}; the RNG streams \
+                         would diverge", self.cfg.seed);
+        let total = header.get("total_steps")?.as_usize()?;
+        anyhow::ensure!(total == self.cfg.steps,
+                        "checkpoint was cut from a {total}-step run but this run is \
+                         configured for {} steps; the rho/LR horizons would diverge",
+                        self.cfg.steps);
+        let man = self.dev.engine.manifest().clone();
+        anyhow::ensure!(data.len() == self.task.state_len(&man),
+                        "packed state length {} != expected {}", data.len(),
+                        self.task.state_len(&man));
+        let next_step = header.get("step")?.as_usize()?;
+        anyhow::ensure!(next_step <= self.cfg.steps, "checkpoint step beyond the run");
+
+        self.control.restore(header.get("control")?)?;
+        self.mask.restore_json(header.get("mask")?)?;
+        self.task.restore_json(header.get("task")?)?;
+        self.t_since_reset = header.get("t_since_reset")?.as_usize()?;
+
+        let rendered = self.mask.render();
+        let DeviceState { engine, opt, stats, .. } = &mut self.dev;
+        let OptState::Fused { state_buf, masks_buf } = opt else {
+            bail!("resume checkpoints need the fused device path")
+        };
+        *state_buf = fresh_f32(&**engine, stats, data, &[data.len()])?;
+        if self.profile.frugal {
+            *masks_buf = Some(fresh_f32(&**engine, stats, &rendered, &[man.mask_len])?);
+        }
+        Ok(next_step)
     }
 }
 

@@ -102,6 +102,19 @@ pub trait Task: Send {
     /// Fold the raw per-batch eval outputs into a loss (+ score).
     /// `batches[i]` is the host batch that produced `outputs[i]`.
     fn fold_eval(&self, outputs: &[Vec<f32>], batches: &[&TaskBatch]) -> Result<EvalOutcome>;
+
+    /// Serialize the task's mutable pipeline state (RNG streams,
+    /// shuffle order, cursors) for trajectory-exact mid-run resume.
+    /// Tasks that don't opt in refuse loudly rather than resuming with
+    /// silently restarted streams.
+    fn state_json(&self) -> Result<crate::util::json::Value> {
+        anyhow::bail!("task {:?} does not support resume snapshots", self.name())
+    }
+
+    /// Inverse of [`Task::state_json`].
+    fn restore_json(&mut self, _v: &crate::util::json::Value) -> Result<()> {
+        anyhow::bail!("task {:?} does not support resume snapshots", self.name())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -188,6 +201,22 @@ impl Task for LmTask {
             count += v[1] as f64;
         }
         Ok(EvalOutcome { val_loss: sum_nll / count.max(1.0), score: None })
+    }
+
+    fn state_json(&self) -> Result<crate::util::json::Value> {
+        use crate::util::json::obj;
+        // the val loader is never mutated during training (eval_batch
+        // takes &self), so only the train stream + redefinition RNG
+        // travel in the snapshot
+        Ok(obj(vec![
+            ("rng", self.rng.to_json()),
+            ("train", self.train.state_json()),
+        ]))
+    }
+
+    fn restore_json(&mut self, v: &crate::util::json::Value) -> Result<()> {
+        self.rng = Rng::from_json(v.get("rng")?)?;
+        self.train.restore_json(v.get("train")?)
     }
 }
 
@@ -326,6 +355,31 @@ impl Task for ClsTask {
             score: Some(score),
         })
     }
+
+    fn state_json(&self) -> Result<crate::util::json::Value> {
+        use crate::util::json::{arr, num, obj};
+        Ok(obj(vec![
+            ("rng", self.rng.to_json()),
+            ("order", arr(self.order.iter().map(|&i| num(i as f64)))),
+            ("cursor", num(self.cursor as f64)),
+        ]))
+    }
+
+    fn restore_json(&mut self, v: &crate::util::json::Value) -> Result<()> {
+        let oj = v.get("order")?.as_arr()?;
+        ensure!(oj.len() == self.order.len(),
+                "cls task state has {} examples, this run has {}",
+                oj.len(), self.order.len());
+        let mut order = Vec::with_capacity(oj.len());
+        for o in oj {
+            order.push(o.as_usize()?);
+        }
+        self.order = order;
+        self.cursor = v.get("cursor")?.as_usize()?;
+        ensure!(self.cursor < self.order.len().max(1), "cls task cursor out of range");
+        self.rng = Rng::from_json(v.get("rng")?)?;
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -394,6 +448,16 @@ impl Task for LoraClsTask {
     fn fold_eval(&self, outputs: &[Vec<f32>], batches: &[&TaskBatch]) -> Result<EvalOutcome> {
         self.inner.fold_eval(outputs, batches)
     }
+
+    fn state_json(&self) -> Result<crate::util::json::Value> {
+        // the frozen backbone is deterministic from the seed; only the
+        // inner pipeline state travels
+        self.inner.state_json()
+    }
+
+    fn restore_json(&mut self, v: &crate::util::json::Value) -> Result<()> {
+        self.inner.restore_json(v)
+    }
 }
 
 #[cfg(test)]
@@ -435,6 +499,44 @@ mod tests {
         let engine_r = backend::load("sim", "artifacts", "nano.cls1", &["eval"]).unwrap();
         let mut tr = ClsTask::new(spec_r, engine_r.manifest(), 3).unwrap();
         assert!(matches!(tr.next_train().labels, Some(LabelData::F32(_))));
+    }
+
+    #[test]
+    fn task_state_roundtrip_resumes_exact_streams() {
+        let cfg = TrainConfig {
+            preset: "nano".into(),
+            backend: "sim".into(),
+            steps: 40,
+            ..TrainConfig::default()
+        };
+        let engine = backend::load("sim", "artifacts", "nano", &["eval"]).unwrap();
+        let man = engine.manifest().clone();
+        let mut a = LmTask::new(&cfg, &man).unwrap();
+        for _ in 0..5 {
+            a.next_train();
+        }
+        a.rng().next_u64(); // advance the redefinition stream too
+        let snap = a.state_json().unwrap();
+        let mut b = LmTask::new(&cfg, &man).unwrap();
+        b.restore_json(&snap).unwrap();
+        for _ in 0..10 {
+            assert_eq!(a.next_train().tokens, b.next_train().tokens);
+        }
+        assert_eq!(a.rng().next_u64(), b.rng().next_u64());
+
+        // cls task: the shared sampling/redefinition stream resumes too
+        let engine_c = backend::load("sim", "artifacts", "nano.cls2", &["eval"]).unwrap();
+        let spec = glue::task("SST-2").unwrap();
+        let mut ca = ClsTask::new(spec, engine_c.manifest(), 3).unwrap();
+        for _ in 0..3 {
+            ca.next_train();
+        }
+        let csnap = ca.state_json().unwrap();
+        let mut cb = ClsTask::new(spec, engine_c.manifest(), 3).unwrap();
+        cb.restore_json(&csnap).unwrap();
+        for _ in 0..6 {
+            assert_eq!(ca.next_train().tokens, cb.next_train().tokens);
+        }
     }
 
     #[test]

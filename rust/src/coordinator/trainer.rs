@@ -3,18 +3,24 @@
 //! implementation of Algorithm 1. This type contributes exactly three
 //! things: the LM artifact-name scheme, the [`LmTask`] data pipeline,
 //! and the [`RunResult`] projection the experiment harness consumes.
-//! All control logic — dynamic ρ/T, subspace redefinition, fused vs
-//! host optimizer state, LR schedule, eval cadence, buffer reuse and
-//! batch prefetch — lives in the session layer.
+//! All control logic — the policy-based ρ/T plane, subspace
+//! redefinition, fused vs host optimizer state, LR schedule, eval
+//! cadence, buffer reuse and batch prefetch — lives in the session
+//! layer. Policies are selected through `cfg.rho_policy` /
+//! `cfg.t_policy` specs (the control registry); mid-run resume goes
+//! through [`Trainer::save_resume`] / [`Trainer::restore_resume`].
 
 use anyhow::{Context, Result};
 
 use crate::config::TrainConfig;
+use crate::control::{ControlEvent, TEvent};
+use crate::coordinator::checkpoint;
 use crate::coordinator::memory_tracker::MemoryTracker;
 use crate::coordinator::method::Method;
-use crate::coordinator::session::{Session, SessionOptions, UploadStats};
+use crate::coordinator::session::{Session, SessionOptions, SessionResult, UploadStats};
 use crate::coordinator::task::LmTask;
 use crate::runtime::shard;
+use crate::util::json::Value;
 
 pub use crate::coordinator::session::{EvalPoint, StepLog};
 
@@ -27,11 +33,20 @@ pub struct RunResult {
     pub steps: Vec<StepLog>,
     pub memory: MemoryTracker,
     pub redefinitions: usize,
+    /// exact redefinition steps (resume parity pins these)
+    pub redefinition_steps: Vec<usize>,
     pub total_time_s: f64,
     pub step_time_s: f64,
     pub redef_time_s: f64,
     pub eval_time_s: f64,
-    pub t_events: Vec<crate::controller::TEvent>,
+    /// cumulative control-plane decide/observe wall time
+    pub control_time_s: f64,
+    pub t_events: Vec<TEvent>,
+    /// the control plane's full typed event log
+    pub control_events: Vec<ControlEvent>,
+    /// canonical resolved policy specs
+    pub rho_policy: String,
+    pub t_policy: String,
     /// host→device upload accounting (buffer-reuse diagnostics)
     pub uploads: UploadStats,
     /// cross-shard sync totals (`None` for unsharded runs)
@@ -79,13 +94,14 @@ impl Trainer {
         self.session.manifest()
     }
 
-    /// Override the ρ schedule (ablations: cosine/step decay shapes).
-    pub fn set_rho_schedule(&mut self, s: crate::controller::RhoSchedule) {
-        self.session.set_rho_schedule(s);
+    /// The canonical (ρ, T) policy specs the control plane resolved for
+    /// this run.
+    pub fn control_specs(&self) -> (String, String) {
+        (self.session.control().rho_spec(), self.session.control().t_spec())
     }
 
     /// Learning rate at step k: linear warmup + cosine decay (the
-    /// session layer's single implementation).
+    /// control plane's single implementation).
     pub fn lr_at(&self, step: usize) -> f32 {
         crate::coordinator::session::lr_at(&self.cfg, step)
     }
@@ -100,30 +116,58 @@ impl Trainer {
         self.session.params_host()
     }
 
-    /// Restore params (e.g. from a checkpoint) into the live state,
-    /// clearing optimizer moments.
+    /// Restore params (e.g. from a params-only checkpoint) into the
+    /// live state, clearing optimizer moments.
     pub fn restore_params(&mut self, params: &[f32]) -> Result<()> {
         self.session.restore_params(params)
     }
 
+    /// Save a trajectory-exact mid-run resume checkpoint; take it at a
+    /// step boundary (after `run_span(_, next_step)`).
+    pub fn save_resume(&self, path: &str, next_step: usize) -> Result<()> {
+        let (header, data) = self.session.resume_state(next_step)?;
+        checkpoint::save(path, &header, &data)
+    }
+
+    /// Restore a resume checkpoint into this freshly built trainer;
+    /// returns the step to continue from (pass to [`Trainer::run_span`]).
+    pub fn restore_resume(&mut self, header: &Value, data: &[f32]) -> Result<usize> {
+        self.session.restore_resume(header, data)
+    }
+
     /// Run the full training loop (Algorithm 1) through the session.
     pub fn run(&mut self) -> Result<RunResult> {
+        self.run_span(0, self.cfg.steps)
+    }
+
+    /// Run steps `[from, to)` — the resume-aware entry point (`run()`
+    /// is the full span).
+    pub fn run_span(&mut self, from: usize, to: usize) -> Result<RunResult> {
         self.session.quiet = self.quiet;
-        let r = self.session.run()?;
-        Ok(RunResult {
+        let r = self.session.run_range(from, to)?;
+        Ok(self.project(r))
+    }
+
+    fn project(&self, r: SessionResult) -> RunResult {
+        RunResult {
             method: self.method,
             evals: r.evals,
             steps: r.steps,
             memory: r.memory,
             redefinitions: r.redefinitions,
+            redefinition_steps: r.redefinition_steps,
             total_time_s: r.total_time_s,
             step_time_s: r.step_time_s,
             redef_time_s: r.redef_time_s,
             eval_time_s: r.eval_time_s,
+            control_time_s: r.control_time_s,
             t_events: r.t_events,
+            control_events: r.control_events,
+            rho_policy: r.rho_policy,
+            t_policy: r.t_policy,
             uploads: r.uploads,
             sync: r.sync,
-        })
+        }
     }
 
     /// Table-style checkpoint steps: {2%, 10%, 20%, 50%, 100%} of the
@@ -139,8 +183,9 @@ mod tests {
 
     #[test]
     fn lr_schedule_shape() {
-        // exercise the REAL schedule (session::lr_at, the one the
-        // drivers delegate to) without loading artifacts
+        // exercise the REAL schedule (control::LrSchedule via
+        // session::lr_at, the one the drivers delegate to) without
+        // loading artifacts
         let cfg = TrainConfig { steps: 1000, warmup_steps: 100, lr: 1e-3,
                                 lr_min_ratio: 0.1, ..TrainConfig::default() };
         let lr_at = |step: usize| crate::coordinator::session::lr_at(&cfg, step);

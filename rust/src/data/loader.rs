@@ -72,6 +72,43 @@ impl Loader {
         Batch { tokens, batch: self.batch, seq_plus_1: self.seq_plus_1 }
     }
 
+    /// Serialize the loader's mutable position (shuffled window order,
+    /// cursor, RNG) for resume checkpoints — the token stream itself is
+    /// deterministic from the config and is rebuilt, not stored.
+    pub fn state_json(&self) -> crate::util::json::Value {
+        use crate::util::json::{arr, num, obj};
+        obj(vec![
+            ("windows", arr(self.windows.iter().map(|&w| num(w as f64)))),
+            ("cursor", num(self.cursor as f64)),
+            ("rng", self.rng.to_json()),
+        ])
+    }
+
+    /// Inverse of [`Loader::state_json`]. The stored window order must
+    /// be a permutation of this loader's windows (same split, same
+    /// corpus) — anything else means the checkpoint belongs to a
+    /// different data pipeline and is rejected.
+    pub fn restore_json(&mut self, v: &crate::util::json::Value) -> anyhow::Result<()> {
+        let wj = v.get("windows")?.as_arr()?;
+        let mut windows = Vec::with_capacity(wj.len());
+        for w in wj {
+            windows.push(w.as_usize()?);
+        }
+        let mut a = windows.clone();
+        let mut b = self.windows.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        anyhow::ensure!(a == b,
+                        "loader state mismatch: checkpoint windows are not a \
+                         permutation of this run's {} windows", self.windows.len());
+        let cursor = v.get("cursor")?.as_usize()?;
+        anyhow::ensure!(cursor < windows.len().max(1), "loader cursor out of range");
+        self.windows = windows;
+        self.cursor = cursor;
+        self.rng = Rng::from_json(v.get("rng")?)?;
+        Ok(())
+    }
+
     /// Deterministic batch for evaluation: batch i of a fixed epoch
     /// order (no shuffling), wrapping.
     pub fn eval_batch(&self, i: usize) -> Batch {
@@ -143,6 +180,24 @@ mod tests {
             seen.insert(b.tokens[0]);
         }
         assert_eq!(seen.len(), n, "one epoch must visit every window once");
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_the_exact_batch_stream() {
+        let (mut a, _) = Loader::split(ids(400), 2, 9, 0.1, 5);
+        for _ in 0..7 {
+            a.next_batch(); // park mid-epoch, mid-shuffle
+        }
+        let snap = a.state_json();
+        let (mut b, _) = Loader::split(ids(400), 2, 9, 0.1, 5);
+        b.next_batch(); // deliberately out of sync before restore
+        b.restore_json(&snap).unwrap();
+        for _ in 0..20 {
+            assert_eq!(a.next_batch().tokens, b.next_batch().tokens);
+        }
+        // a foreign window set is rejected
+        let (mut c, _) = Loader::split(ids(200), 2, 9, 0.1, 5);
+        assert!(c.restore_json(&snap).is_err());
     }
 
     #[test]

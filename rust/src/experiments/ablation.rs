@@ -1,12 +1,13 @@
 //! Ablations for the design choices the paper's analysis discusses:
 //! τ_low sensitivity (§5.5 robustness), S ∈ {Reset, Project} (Alg. 1),
-//! block-selection strategy, and non-linear ρ schedules (the
-//! conclusion's future-work direction).
+//! block-selection strategy, and control-policy sweeps (the
+//! conclusion's future-work direction) — policies are swept **as
+//! data**: spec strings through the control registry
+//! (`cfg.rho_policy` / `cfg.t_policy`), not per-shape code paths.
 
 use anyhow::Result;
 
 use crate::config::TrainConfig;
-use crate::controller::RhoSchedule;
 use crate::coordinator::method::Method;
 use crate::coordinator::trainer::Trainer;
 use crate::experiments::common::{self, TablePrinter};
@@ -115,41 +116,105 @@ pub fn strategy_sweep(base: &TrainConfig, quick: bool) -> Result<()> {
     Ok(())
 }
 
-/// Future-work extension: non-linear ρ schedules (cosine vs linear vs
-/// constant), compared at matched end-points.
+/// ρ-policy sweep through the control registry: every run is the same
+/// `FrugalStatic` method with a different `--rho-policy` spec — shapes
+/// (the conclusion's future-work direction), the byte-budget feedback
+/// policy, and a hold/decay combinator, all compared as data.
 pub fn rho_schedules(base: &TrainConfig, quick: bool) -> Result<()> {
     let cfg = quick_cfg(base, quick);
-    println!("\n=== Ablation — rho schedule shape ({} steps) ===\n", cfg.steps);
+    println!("\n=== Ablation — rho policy sweep ({} steps) ===\n", cfg.steps);
     let printer = TablePrinter::new(
-        &["schedule", "final ppl", "mem first", "mem last"], &[12, 12, 12, 12]);
+        &["policy", "final ppl", "mem first", "mem last", "events"],
+        &[34, 12, 12, 12, 8]);
     let mut csv = CsvWriter::create(
         common::results_dir().join("ablation_rho_schedule.csv"),
-        &["schedule", "final_ppl", "memory_first", "memory_last"],
+        &["policy", "final_ppl", "memory_first", "memory_last", "control_events"],
     )?;
-    for shape in ["constant", "linear", "cosine"] {
+    // a byte ceiling between the rho and rho_end footprints, so the
+    // budget policy has real work to do on the sim manifest
+    let budget_specs = sweep_specs(&cfg);
+    for spec in &budget_specs {
         let mut c = cfg.clone();
-        let m = if shape == "constant" { Method::FrugalStatic } else { Method::AdaFrugalDynRho };
-        let mut t = Trainer::new(c.clone(), m)?;
-        if shape == "cosine" {
-            t.set_rho_schedule(RhoSchedule::cosine(c.rho, c.rho_end, c.steps));
-        }
+        c.rho_policy = spec.clone();
+        let mut t = Trainer::new(c, Method::FrugalStatic)?;
         t.quiet = true;
         let r = t.run()?;
         printer.row(&[
-            shape.to_string(),
+            r.rho_policy.clone(),
             format!("{:.2}", r.final_ppl()),
             format!("{:.2}MB", r.memory.first_bytes() as f64 / 1e6),
             format!("{:.2}MB", r.memory.last_bytes() as f64 / 1e6),
+            r.control_events.len().to_string(),
         ]);
         csv.row(&[
-            shape.to_string(),
+            r.rho_policy.clone(),
             format!("{:.4}", r.final_ppl()),
             r.memory.first_bytes().to_string(),
             r.memory.last_bytes().to_string(),
+            r.control_events.len().to_string(),
         ])?;
         csv.flush()?;
-        c.steps = cfg.steps; // silence unused warnings pattern
     }
     println!("\n(written to results/ablation_rho_schedule.csv)");
+    Ok(())
+}
+
+/// The sweep rows: registry specs exercising every ρ-policy family.
+fn sweep_specs(cfg: &TrainConfig) -> Vec<String> {
+    vec![
+        format!("const:{}", cfg.rho),
+        format!("linear:{}:{}", cfg.rho, cfg.rho_end),
+        format!("cosine:{}:{}", cfg.rho, cfg.rho_end),
+        format!("step:{}:{}:{}:0.7", cfg.rho, cfg.rho_end, (cfg.steps / 5).max(1)),
+        // feedback policy: creep up from rho_end under a loose ceiling
+        format!("budget:1e9:{}:{}", cfg.rho_end, cfg.rho),
+        // combinator: hold the start ratio for 25% of the run, then decay
+        format!("hold:{}:linear:{}:{}:{}",
+                cfg.steps / 4, cfg.rho, cfg.rho_end, cfg.steps - cfg.steps / 4),
+    ]
+}
+
+/// T-policy sweep: Eq. 2–3 (`loss:`) vs patience doubling (`plateau:`)
+/// vs a static interval, all through the registry on the same method.
+pub fn t_policies(base: &TrainConfig, quick: bool) -> Result<()> {
+    let cfg = quick_cfg(base, quick);
+    println!("\n=== Ablation — T policy sweep ({} steps) ===\n", cfg.steps);
+    let printer = TablePrinter::new(
+        &["policy", "final ppl", "final T", "#redefs", "events"],
+        &[34, 12, 9, 9, 8]);
+    let mut csv = CsvWriter::create(
+        common::results_dir().join("ablation_t_policy.csv"),
+        &["policy", "final_ppl", "final_t", "redefinitions", "control_events"],
+    )?;
+    let specs = [
+        format!("fixed:{}", cfg.t_start),
+        format!("loss:{}:{}:{}:{}:{}", cfg.t_start, cfg.t_max, cfg.n_eval,
+                cfg.tau_low, cfg.gamma_increase),
+        format!("plateau:{}:{}:2:0.01", cfg.t_start, cfg.t_max),
+    ];
+    for spec in &specs {
+        let mut c = cfg.clone();
+        c.t_policy = spec.clone();
+        let mut t = Trainer::new(c.clone(), Method::FrugalStatic)?;
+        t.quiet = true;
+        let r = t.run()?;
+        let final_t = r.t_events.last().map(|e| e.new_t).unwrap_or(c.t_start);
+        printer.row(&[
+            r.t_policy.clone(),
+            format!("{:.2}", r.final_ppl()),
+            final_t.to_string(),
+            r.redefinitions.to_string(),
+            r.control_events.len().to_string(),
+        ]);
+        csv.row(&[
+            r.t_policy.clone(),
+            format!("{:.4}", r.final_ppl()),
+            final_t.to_string(),
+            r.redefinitions.to_string(),
+            r.control_events.len().to_string(),
+        ])?;
+        csv.flush()?;
+    }
+    println!("\n(written to results/ablation_t_policy.csv)");
     Ok(())
 }

@@ -101,6 +101,13 @@ pub fn summary_json(cfg: &TrainConfig, r: &RunResult) -> Value {
         ("steps", json::num(cfg.steps as f64)),
         ("final_ppl", json::num(r.final_ppl())),
         ("redefinitions", json::num(r.redefinitions as f64)),
+        // the control plane: resolved policy specs, the typed event
+        // log, and the measured per-run decide/observe overhead
+        ("rho_policy", json::s(&r.rho_policy)),
+        ("t_policy", json::s(&r.t_policy)),
+        ("control_events",
+         json::arr(r.control_events.iter().map(|e| e.to_json()))),
+        ("control_time_s", json::num(r.control_time_s)),
         ("total_time_s", json::num(r.total_time_s)),
         ("step_time_s", json::num(r.step_time_s)),
         ("redef_time_s", json::num(r.redef_time_s)),

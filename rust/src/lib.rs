@@ -7,7 +7,9 @@
 //!
 //! - **Layer 3 (this crate)** — the training coordinator: the paper's
 //!   contribution (dynamic state-full-ratio ρ and loss-aware update
-//!   frequency T, [`controller`]), Algorithm 1's integrated loop
+//!   frequency T behind the policy-based [`control`] plane, selected by
+//!   spec string through a name-keyed registry and serialized into
+//!   checkpoints for trajectory-exact resume), Algorithm 1's integrated loop
 //!   implemented once in the task-generic session layer
 //!   ([`coordinator::session`], parameterized by
 //!   [`coordinator::task::Task`]; the `Trainer`/`FineTuner` drivers are
@@ -36,7 +38,7 @@
 //! layer map and `docs/OPTIMIZERS.md` for the registry reference.
 
 pub mod config;
-pub mod controller;
+pub mod control;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
@@ -48,5 +50,5 @@ pub mod tensor;
 pub mod util;
 
 pub use config::TrainConfig;
-pub use controller::{AdaFrugalController, RhoSchedule, TController};
+pub use control::{ControlPlane, Policy, RhoSchedule, StepObs, TController};
 pub use optim::{Optimizer, StepScalars};

@@ -40,7 +40,7 @@ impl Args {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
                 // switch-style flags take no value
-                if matches!(name, "quick" | "quiet" | "verbose") {
+                if matches!(name, "quick" | "quiet" | "verbose" | "list-policies") {
                     switches.push(name.to_string());
                 } else if i + 1 < argv.len() {
                     flags.push((name.to_string(), argv[i + 1].clone()));
@@ -99,6 +99,8 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
         ("t-max", "t_max"),
         ("strategy", "strategy"),
         ("state-mgmt", "state_mgmt"),
+        ("rho-policy", "rho_policy"),
+        ("t-policy", "t_policy"),
     ] {
         if let Some(v) = args.get(flag) {
             cfg.set(key, v).with_context(|| format!("--{flag} {v}"))?;
@@ -121,14 +123,59 @@ fn cmd_train(args: &Args) -> Result<()> {
     info!("training {} on preset {} for {} steps", method.label(), cfg.preset, cfg.steps);
     let mut trainer = Trainer::new(cfg.clone(), method)?;
     trainer.quiet = args.has("quiet");
+    let (rho_spec, t_spec) = trainer.control_specs();
+    info!("control: rho {rho_spec} | T {t_spec}");
+
+    // a "resume" checkpoint restarts the trajectory mid-run, exactly;
+    // a "packed_state" one restores params only (legacy behavior)
+    let mut start_step = 0usize;
     if let Some(ck) = args.get("from-checkpoint") {
         let c = checkpoint::load(ck)?;
-        trainer.restore_params(&c.data)?;
-        info!("restored params from {ck}");
+        let kind = c
+            .header
+            .opt("kind")
+            .and_then(|v| v.as_str().ok())
+            .unwrap_or("packed_state")
+            .to_string();
+        if kind == "resume" {
+            start_step = trainer.restore_resume(&c.header, &c.data)?;
+            info!("resumed trajectory from {ck} at step {start_step}");
+        } else {
+            trainer.restore_params(&c.data)?;
+            info!("restored params from {ck}");
+        }
     }
-    let result = trainer.run()?;
+
+    // --checkpoint-at N: stop at the step boundary and write a resume
+    // checkpoint instead of finishing the run. Both the bound and the
+    // --save-checkpoint pairing are validated BEFORE any training runs,
+    // so a typo fails in milliseconds instead of after the span.
+    let stop_at: Option<usize> = match args.get("checkpoint-at") {
+        Some(v) => {
+            let n: usize = v.parse().context("--checkpoint-at wants a step number")?;
+            anyhow::ensure!(n > start_step && n < cfg.steps,
+                            "--checkpoint-at {n} must lie strictly inside the run \
+                             (resuming at {start_step}, {} steps total)", cfg.steps);
+            anyhow::ensure!(args.get("save-checkpoint").is_some(),
+                            "--checkpoint-at needs --save-checkpoint <path>");
+            Some(n)
+        }
+        None => None,
+    };
+    let result = match stop_at {
+        Some(n) => {
+            let r = trainer.run_span(start_step, n)?;
+            let path = args.get("save-checkpoint").expect("validated above");
+            trainer.save_resume(path, n)?;
+            info!("paused at step {n}; resume checkpoint saved to {path} \
+                   (continue with --from-checkpoint)");
+            r
+        }
+        None => trainer.run_span(start_step, cfg.steps)?,
+    };
 
     println!("\nmethod: {}", method.label());
+    println!("control: rho {} | T {}", result.rho_policy, result.t_policy);
     println!("final val ppl: {:.2}", result.final_ppl());
     println!("memory: {}", result.memory.label());
     println!(
@@ -158,22 +205,24 @@ fn cmd_train(args: &Args) -> Result<()> {
             sb.sharded as f64 / 1e6
         );
     }
-    for e in &result.t_events {
-        println!("  T event @step {}: {} -> {} (dL_rel {:.5})",
-                 e.step, e.old_t, e.new_t, e.delta_l_rel);
+    // the control plane's typed event log (T growth, budget-rho moves)
+    for e in &result.control_events {
+        println!("  {}", e.describe());
     }
 
     if let Some(out) = args.get("out") {
         experiments::common::write_run_jsonl(out, &cfg, &result)?;
         info!("wrote metrics to {out}");
     }
-    if let Some(path) = args.get("save-checkpoint") {
-        let params = trainer.params_host()?;
-        let hdr = checkpoint::train_header(
-            &cfg.preset, method.id(), cfg.steps,
-            result.evals.last().map(|e| e.val_loss).unwrap_or(f64::NAN));
-        checkpoint::save(path, &hdr, &params)?;
-        info!("saved checkpoint to {path}");
+    if stop_at.is_none() {
+        if let Some(path) = args.get("save-checkpoint") {
+            let params = trainer.params_host()?;
+            let hdr = checkpoint::train_header(
+                &cfg.preset, method.id(), cfg.steps,
+                result.evals.last().map(|e| e.val_loss).unwrap_or(f64::NAN));
+            checkpoint::save(path, &hdr, &params)?;
+            info!("saved checkpoint to {path}");
+        }
     }
     Ok(())
 }
@@ -213,7 +262,8 @@ fn cmd_finetune(args: &Args) -> Result<()> {
 fn cmd_exp(args: &Args) -> Result<()> {
     let which = args.positional.get(1).context(
         "usage: adafrugal exp <table1|table2|table3|fig1|fig2|ablation-tau|\
-         ablation-state|ablation-strategy|ablation-rho-schedule|scaling>",
+         ablation-state|ablation-strategy|ablation-rho-schedule|\
+         ablation-t-policy|scaling>",
     )?;
     let quick = args.has("quick");
     let cfg = build_config(args)?;
@@ -227,6 +277,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         "ablation-state" => experiments::ablation::state_mgmt(&cfg, quick)?,
         "ablation-strategy" => experiments::ablation::strategy_sweep(&cfg, quick)?,
         "ablation-rho-schedule" => experiments::ablation::rho_schedules(&cfg, quick)?,
+        "ablation-t-policy" => experiments::ablation::t_policies(&cfg, quick)?,
         "scaling" => experiments::scaling::run()?,
         _ => bail!("unknown experiment {which:?}"),
     }
@@ -266,14 +317,18 @@ USAGE:
   adafrugal train    [--method adamw|frugal|dyn-rho|dyn-t|combined|galore|badam]
                      [--preset micro] [--steps N] [--corpus english|vietnamese]
                      [--backend pjrt|sim] [--shards N] [--config run.toml]
+                     [--rho-policy SPEC] [--t-policy SPEC]   (see --list-policies)
                      [--set train.key=value]...
                      [--out results/run.jsonl] [--save-checkpoint p] [--from-checkpoint p]
+                     [--checkpoint-at N]   (pause at N, write a resume checkpoint)
   adafrugal finetune --task CoLA|SST-2|MRPC|STS-B|QQP|MNLI-m|QNLI|RTE
                      [--ft-method full|lora|galore|frugal|dyn-rho|dyn-t|combined]
                      [--seeds N]
   adafrugal exp      table1|table2|table3|fig1|fig2|ablation-tau|ablation-state|
-                     ablation-strategy|ablation-rho-schedule|scaling [--quick]
+                     ablation-strategy|ablation-rho-schedule|ablation-t-policy|
+                     scaling [--quick]
   adafrugal info     [--preset micro]
+  adafrugal --list-policies      (control-policy registry: names + grammar)
 "
 }
 
@@ -282,6 +337,10 @@ fn main() -> ExitCode {
     let args = Args::parse(&argv);
     if args.has("verbose") {
         adafrugal::util::log::set_level(adafrugal::util::log::Level::Debug);
+    }
+    if args.has("list-policies") {
+        print!("{}", adafrugal::control::spec::listing());
+        return ExitCode::SUCCESS;
     }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let r = match cmd {

@@ -206,6 +206,39 @@ impl SubspaceMask {
             .sum()
     }
 
+    /// Serialize the live subspace (active flags + round-robin cursor)
+    /// for resume checkpoints: one compact '0'/'1' string per maskable
+    /// parameter, in manifest order.
+    pub fn state_json(&self) -> crate::util::json::Value {
+        use crate::util::json::{arr, num, obj, s};
+        obj(vec![
+            ("active", arr(self.active.iter().map(|a| {
+                s(&a.iter().map(|&b| if b { '1' } else { '0' }).collect::<String>())
+            }))),
+            ("rr_cursor", num(self.rr_cursor as f64)),
+        ])
+    }
+
+    /// Inverse of [`SubspaceMask::state_json`]; the per-parameter block
+    /// counts must match this manifest's geometry.
+    pub fn restore_json(&mut self, v: &crate::util::json::Value) -> Result<()> {
+        let rows = v.get("active")?.as_arr()?;
+        anyhow::ensure!(rows.len() == self.active.len(),
+                        "mask state has {} params, manifest has {}",
+                        rows.len(), self.active.len());
+        let mut active = Vec::with_capacity(rows.len());
+        for (i, r) in rows.iter().enumerate() {
+            let flags: Vec<bool> = r.as_str()?.chars().map(|c| c == '1').collect();
+            anyhow::ensure!(flags.len() == self.meta[i].n_blocks,
+                            "mask state param {} has {} blocks, manifest wants {}",
+                            i, flags.len(), self.meta[i].n_blocks);
+            active.push(flags);
+        }
+        self.active = active;
+        self.rr_cursor = v.get("rr_cursor")?.as_usize()?;
+        Ok(())
+    }
+
     /// Blocks that changed (either direction) vs `other` — the Project
     /// strategy keeps state only on blocks active in both.
     pub fn changed_blocks(&self, other: &SubspaceMask) -> usize {
@@ -367,6 +400,28 @@ mod tests {
                 ones == sm.active_blocks() * 4
             },
         );
+    }
+
+    #[test]
+    fn state_roundtrip_reproduces_mask_and_rr_cursor() {
+        let man = test_manifest();
+        let mut a = SubspaceMask::new(&man);
+        let mut rng = Rng::new(5);
+        a.redefine(Strategy::RoundRobin, 0.25, None, &mut rng).unwrap();
+        a.redefine(Strategy::RoundRobin, 0.25, None, &mut rng).unwrap();
+        let snap = a.state_json();
+        let mut b = SubspaceMask::new(&man);
+        b.restore_json(&snap).unwrap();
+        assert_eq!(a.active, b.active);
+        assert_eq!(a.render(), b.render());
+        // the restored round-robin cursor continues the same rotation
+        a.redefine(Strategy::RoundRobin, 0.25, None, &mut Rng::new(0)).unwrap();
+        b.redefine(Strategy::RoundRobin, 0.25, None, &mut Rng::new(0)).unwrap();
+        assert_eq!(a.active, b.active);
+        // foreign geometry is rejected
+        let bad = crate::util::json::parse(
+            r#"{"active":["11"],"rr_cursor":0}"#).unwrap();
+        assert!(b.restore_json(&bad).is_err());
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! commit the generated file to pin the trajectory.
 
 use adafrugal::config::TrainConfig;
-use adafrugal::controller::RhoSchedule;
+use adafrugal::control::RhoSchedule;
 use adafrugal::coordinator::method::Method;
 use adafrugal::coordinator::trainer::{RunResult, Trainer};
 use adafrugal::util::json::{self, Value};

@@ -14,7 +14,7 @@
 //! missing.
 
 use adafrugal::config::TrainConfig;
-use adafrugal::controller::{RhoSchedule, TController};
+use adafrugal::control::{RhoSchedule, TController};
 use adafrugal::coordinator::method::Method;
 use adafrugal::coordinator::trainer::Trainer;
 use adafrugal::model::init;
@@ -295,6 +295,67 @@ fn sim_t_trajectory_matches_eq2_eq3_replay() {
             .unwrap_or(cfg.t_start);
         assert_eq!(s.t_current, want, "T mismatch at step {}", s.step);
     }
+}
+
+#[test]
+fn sim_policy_specs_drive_the_trainer_through_the_registry() {
+    // an explicit cosine rho spec on a *static* method: the spec wins
+    // over the roster flags, and each logged rho matches the cosine
+    // schedule exactly
+    let cfg = TrainConfig { rho_policy: "cosine:0.5:0.1".into(), ..sim_cfg() };
+    let sched = RhoSchedule::cosine(0.5, 0.1, cfg.steps);
+    let mut t = Trainer::new(cfg.clone(), Method::FrugalStatic).unwrap();
+    assert_eq!(t.control_specs().0, format!("cosine:0.5:0.1:{}", cfg.steps));
+    t.quiet = true;
+    let r = t.run().unwrap();
+    assert_eq!(r.rho_policy, format!("cosine:0.5:0.1:{}", cfg.steps));
+    for s in &r.steps {
+        assert_eq!(s.rho, sched.at(s.step), "rho off the cosine spec at {}", s.step);
+    }
+    assert!(r.memory.last_bytes() < r.memory.first_bytes(),
+            "cosine decay must shrink tracked memory");
+
+    // a plateau T spec grows T by doubling on the quickly-plateauing
+    // sim objective; every change is in the typed event log
+    let cfg = TrainConfig {
+        steps: 120,
+        n_eval: 10,
+        t_start: 10,
+        t_max: 60,
+        t_policy: "plateau:10:60:2:0.05".into(),
+        ..sim_cfg()
+    };
+    let mut t = Trainer::new(cfg.clone(), Method::FrugalStatic).unwrap();
+    t.quiet = true;
+    let r = t.run().unwrap();
+    assert!(!r.t_events.is_empty(), "plateauing loss must double T");
+    for e in &r.t_events {
+        assert!(e.new_t == (e.old_t * 2).min(60), "not a doubling: {e:?}");
+    }
+    // per-step T: t_start until an event at step <= k, then its new_t
+    for s in &r.steps {
+        let want = r
+            .t_events
+            .iter()
+            .filter(|e| e.step <= s.step)
+            .last()
+            .map(|e| e.new_t)
+            .unwrap_or(10);
+        assert_eq!(s.t_current, want, "T mismatch at step {}", s.step);
+    }
+
+    // a budget rho spec with an impossibly small ceiling must drive rho
+    // to its floor, logging every adjustment as a typed event
+    let mut cfg = sim_cfg();
+    cfg.rho_policy = "budget:1:0.05:0.5".into(); // 1-byte ceiling
+    let mut t = Trainer::new(cfg, Method::FrugalStatic).unwrap();
+    t.quiet = true;
+    let r = t.run().unwrap();
+    assert!(r.control_events.iter().any(|e| matches!(
+        e.kind, adafrugal::control::EventKind::RhoAdjusted { .. })),
+        "over-budget run must log rho adjustments");
+    // rho was forced to the floor by the impossible budget
+    assert!(r.steps.last().unwrap().rho <= 0.05 + 1e-9);
 }
 
 #[test]

@@ -3,7 +3,8 @@
 //! checkpoint fuzzing, failure injection.
 
 use adafrugal::config::TrainConfig;
-use adafrugal::controller::{AdaFrugalController, RhoSchedule, TController};
+use adafrugal::control::{spec, ControlPlane, PolicyCtx, PolicyKind, RhoSchedule, StepObs,
+                         TController};
 use adafrugal::coordinator::checkpoint;
 use adafrugal::data::corpus::{CorpusGenerator, CorpusProfile};
 use adafrugal::data::loader::Loader;
@@ -19,18 +20,19 @@ fn controller_composition_follows_paper_dynamics() {
     // Simulate Algorithm 1's control flow over a synthetic loss curve:
     // fast improvement then plateau. T must stay at T_start during
     // improvement and grow monotonically during the plateau; rho must
-    // decay linearly throughout.
+    // decay linearly throughout. Driven through the ControlPlane (the
+    // config mapping dynamic_rho + dynamic_t -> linear + loss specs).
     let cfg = TrainConfig { steps: 2000, ..TrainConfig::default() };
-    let mut c = AdaFrugalController::from_config(&cfg, true, true);
+    let mut c = ControlPlane::from_config(&cfg, true, true).unwrap();
     let mut t_history = Vec::new();
     for k in (100..=2000).step_by(100) {
         // loss: 1/k-ish improvement until 1000, then flat
         let loss = if k <= 1000 { 100.0 / (k as f64).sqrt() } else { 3.16 };
-        c.observe_val_loss(k, loss);
-        t_history.push(c.t_current());
-        let rho = c.rho_at(k);
+        c.observe(&StepObs { step: k, val_loss: Some(loss), ..Default::default() });
+        let d = c.decide(k);
+        t_history.push(d.t);
         let expected = (0.25 - 0.20 * k as f64 / 2000.0).max(0.05);
-        assert!((rho - expected).abs() < 1e-12, "rho at {k}");
+        assert!((d.rho - expected).abs() < 1e-12, "rho at {k}");
     }
     // T never decreased
     for w in t_history.windows(2) {
@@ -39,6 +41,9 @@ fn controller_composition_follows_paper_dynamics() {
     // T grew during the plateau and respects T_max
     assert!(*t_history.last().unwrap() > cfg.t_start);
     assert!(*t_history.last().unwrap() <= cfg.t_max);
+    // and every T change is in the typed event log
+    assert!(!c.events().is_empty());
+    assert_eq!(c.t_events().len(), c.events().len());
 }
 
 #[test]
@@ -285,6 +290,148 @@ fn prop_t_controller_events_consistent_with_observations() {
                 return false;
             }
             c.events().len() == n_events
+        },
+    );
+}
+
+#[test]
+fn prop_policy_spec_parse_print_parse_roundtrip() {
+    // For every registered policy family, over randomized parameters:
+    // parse(spec) -> print -> parse must be a fixed point, and the
+    // reparsed policy must decide identically at every probed step.
+    let ctx = PolicyCtx { steps: 2000 };
+    prop::forall_with_rng(
+        "policy-spec-roundtrip",
+        40,
+        |r| {
+            let a = (0.05 + 0.9 * r.f64() * 100.0).round() / 100.0;
+            let b = (0.01 + a * r.f64() * 100.0).round() / 100.0;
+            let t0 = 1 + r.below(200);
+            let tmax = t0 + r.below(600);
+            let every = 1 + r.below(300);
+            let hold = r.below(500);
+            (a.min(1.0), b.min(1.0), t0, tmax, every, hold)
+        },
+        |&(a, b, t0, tmax, every, hold), _| {
+            let (lo, hi) = (a.min(b), a.max(b));
+            let rho_specs = [
+                format!("const:{hi}"),
+                format!("linear:{hi}:{lo}"),
+                format!("cosine:{hi}:{lo}:{every}"),
+                format!("step:{hi}:{lo}:{every}:0.5"),
+                format!("budget:{}:{lo}:{hi}", 1000 + every),
+                format!("hold:{hold}:linear:{hi}:{lo}"),
+                format!("chain:{hold}:const:{hi}/cosine:{hi}:{lo}"),
+            ];
+            let t_specs = [
+                format!("fixed:{t0}"),
+                format!("loss:{t0}:{tmax}:{every}:0.008:1.5"),
+                format!("plateau:{t0}:{tmax}:2:0.01"),
+                format!("hold:{hold}:loss:{t0}:{tmax}:{every}:0.008:1.5"),
+                format!("chain:{hold}:fixed:{t0}/plateau:{t0}:{tmax}:3:0.02"),
+            ];
+            let probe = [0usize, 1, hold.saturating_sub(1), hold, every, 1999, 4000];
+            for (kind, specs) in [(PolicyKind::Rho, &rho_specs[..]),
+                                  (PolicyKind::Tee, &t_specs[..])] {
+                for sp in specs {
+                    let p = match spec::build(kind, sp, &ctx) {
+                        Ok(p) => p,
+                        Err(e) => panic!("{sp:?} failed to build: {e:#}"),
+                    };
+                    let printed = p.spec();
+                    let q = match spec::build(kind, &printed, &ctx) {
+                        Ok(q) => q,
+                        Err(e) => panic!("reprint {printed:?} failed: {e:#}"),
+                    };
+                    if q.spec() != printed {
+                        return false; // print must be a fixed point
+                    }
+                    if probe.iter().any(|&k| p.decide(k) != q.decide(k)) {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_plane_save_restore_decide_equals_never_saved() {
+    // Over adversarial loss sequences (NaNs, negatives, spikes) and a
+    // random save point: serializing the plane mid-run and restoring it
+    // into a fresh plane must reproduce the never-saved plane's
+    // decisions AND event log, observation for observation — the
+    // in-memory core of the resume-parity guarantee (extends the old
+    // TController replay test to every policy family).
+    let mk_cfgs = || {
+        let base = TrainConfig { steps: 2000, ..TrainConfig::default() };
+        let mut plateau = base.clone();
+        plateau.t_policy = "plateau:50:400:2:0.01".into();
+        plateau.rho_policy = "budget:100000:0.05:0.5".into();
+        let mut chained = base.clone();
+        chained.t_policy = "chain:500:fixed:50/loss:50:400:100:0.01:1.5".into();
+        chained.rho_policy = "hold:300:cosine:0.4:0.1".into();
+        [base, plateau, chained]
+    };
+    prop::forall_with_rng(
+        "plane-save-restore-equiv",
+        30,
+        |r| {
+            let n = 4 + r.below(25);
+            let losses: Vec<f64> = (0..n)
+                .map(|_| match r.below(10) {
+                    0 => f64::NAN,
+                    1 => -2.0,
+                    _ => 0.05 + 10.0 * r.f64(),
+                })
+                .collect();
+            let save_at = r.below(n);
+            let bytes = 1000 + r.below(200_000);
+            (losses, save_at, bytes)
+        },
+        |(losses, save_at, bytes), _| {
+            for cfg in mk_cfgs() {
+                let mut live = ControlPlane::from_config(&cfg, true, true).unwrap();
+                // `resumed` idles until the save point, then picks up
+                // the live plane's serialized state and continues in
+                // lockstep — decisions and events must never diverge
+                let mut resumed = ControlPlane::from_config(&cfg, true, true).unwrap();
+                for (i, &l) in losses.iter().enumerate() {
+                    let obs = StepObs {
+                        step: (i + 1) * 100,
+                        val_loss: Some(l),
+                        train_loss: Some(l),
+                        memory_bytes: Some(*bytes),
+                    };
+                    live.observe(&obs);
+                    if i == *save_at {
+                        resumed.restore(&live.state()).unwrap();
+                    } else if i > *save_at {
+                        resumed.observe(&obs);
+                    }
+                    if i >= *save_at {
+                        let step = (i + 1) * 100;
+                        if live.decide(step) != resumed.decide(step) {
+                            return false;
+                        }
+                    }
+                }
+                if live.events() != resumed.events() {
+                    return false;
+                }
+                // the serialized form itself round-trips through text
+                let snap = live.state();
+                let reparsed = adafrugal::util::json::parse(&snap.to_string()).unwrap();
+                let mut from_text = ControlPlane::from_config(&cfg, true, true).unwrap();
+                from_text.restore(&reparsed).unwrap();
+                if from_text.decide(12345) != live.decide(12345)
+                    || from_text.events() != live.events()
+                {
+                    return false;
+                }
+            }
+            true
         },
     );
 }

@@ -1,0 +1,228 @@
+//! Resume parity: the acceptance gate for the checkpoint-resumable
+//! control plane. Running 2N steps straight through must be
+//! bit-identical to running N steps, writing a resume checkpoint,
+//! restoring it into a fresh trainer, and running the remaining N —
+//! losses, ρ(k), T trajectory, T events and redefinition steps all
+//! compare exactly on the deterministic sim backend, for the dynamic
+//! (loss-aware) method and for spec-selected policies (budget ρ,
+//! plateau T) alike.
+
+use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::checkpoint;
+use adafrugal::coordinator::method::Method;
+use adafrugal::coordinator::trainer::{RunResult, Trainer};
+
+fn parity_cfg() -> TrainConfig {
+    TrainConfig {
+        preset: "nano".into(),
+        backend: "sim".into(),
+        steps: 120,
+        warmup_steps: 10,
+        n_eval: 10,
+        t_start: 10,
+        t_max: 60,
+        tau_low: 0.05, // generous plateau threshold -> T events in both halves
+        log_every: 1,  // pin EVERY step of the trajectory
+        val_batches: 4,
+        lr: 1e-2,
+        seed: 7,
+        ..TrainConfig::default()
+    }
+}
+
+fn tmp_ckpt(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir()
+        .join(format!("adafrugal_resume_{}_{}", tag, std::process::id()))
+        .join("resume.ckpt")
+}
+
+/// Straight-through vs (run to N, checkpoint, restore, run the rest):
+/// every observable must match bit-for-bit.
+fn assert_resume_parity(cfg: &TrainConfig, method: Method, split_at: usize, tag: &str) {
+    // --- straight-through reference ---
+    let mut t = Trainer::new(cfg.clone(), method).unwrap();
+    t.quiet = true;
+    let full = t.run().unwrap();
+
+    // --- first half + resume checkpoint ---
+    let path = tmp_ckpt(tag);
+    let mut t1 = Trainer::new(cfg.clone(), method).unwrap();
+    t1.quiet = true;
+    let first = t1.run_span(0, split_at).unwrap();
+    t1.save_resume(path.to_str().unwrap(), split_at).unwrap();
+    drop(t1); // the resumed run must depend on the file alone
+
+    // --- fresh trainer, restore, second half ---
+    let ck = checkpoint::load(&path).unwrap();
+    assert_eq!(ck.header.get("kind").unwrap().as_str().unwrap(), "resume");
+    let mut t2 = Trainer::new(cfg.clone(), method).unwrap();
+    t2.quiet = true;
+    let next = t2.restore_resume(&ck.header, &ck.data).unwrap();
+    assert_eq!(next, split_at, "checkpoint must remember its boundary");
+    let second = t2.run_span(next, cfg.steps).unwrap();
+
+    // --- per-step trajectory: losses, rho(k), T(k), bit-exact ---
+    assert_eq!(full.steps.len(), first.steps.len() + second.steps.len(),
+               "{tag}: step log arity");
+    for (want, got) in full.steps.iter().zip(first.steps.iter().chain(&second.steps)) {
+        assert_eq!(want.step, got.step, "{tag}: step index");
+        assert_eq!(want.train_loss, got.train_loss,
+                   "{tag}: train loss diverged at step {}", want.step);
+        assert_eq!(want.rho, got.rho, "{tag}: rho diverged at step {}", want.step);
+        assert_eq!(want.t_current, got.t_current,
+                   "{tag}: T diverged at step {}", want.step);
+    }
+
+    // --- evals: val losses and tracked memory, bit-exact ---
+    assert_eq!(full.evals.len(), first.evals.len() + second.evals.len(),
+               "{tag}: eval arity");
+    for (want, got) in full.evals.iter().zip(first.evals.iter().chain(&second.evals)) {
+        assert_eq!(want.step, got.step, "{tag}: eval step");
+        assert_eq!(want.val_loss, got.val_loss,
+                   "{tag}: val loss diverged at eval {}", want.step);
+        assert_eq!(want.memory_bytes, got.memory_bytes,
+                   "{tag}: memory diverged at eval {}", want.step);
+    }
+
+    // --- redefinition steps: exact concatenation ---
+    let stitched: Vec<usize> = first
+        .redefinition_steps
+        .iter()
+        .chain(&second.redefinition_steps)
+        .copied()
+        .collect();
+    assert_eq!(full.redefinition_steps, stitched, "{tag}: redefinition steps");
+    assert_eq!(full.redefinitions,
+               first.redefinitions + second.redefinitions, "{tag}");
+
+    // --- events: the restored plane carries the first half's log, so
+    // the resumed run's full event log equals the straight-through one
+    assert_eq!(full.t_events, second.t_events, "{tag}: T event log");
+    assert_eq!(full.control_events, second.control_events, "{tag}: control event log");
+    assert!(first.t_events.len() <= full.t_events.len());
+    assert_eq!(&full.t_events[..first.t_events.len()], &first.t_events[..],
+               "{tag}: first-half events must be a prefix");
+    assert_eq!(full.rho_policy, second.rho_policy, "{tag}");
+    assert_eq!(full.t_policy, second.t_policy, "{tag}");
+
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+#[test]
+fn resume_parity_combined_loss_aware() {
+    // the paper's dynamic method (linear rho + Eq. 2-3 loss-aware T),
+    // with events firing in both halves (sanity-checked below)
+    let cfg = parity_cfg();
+    let mut t = Trainer::new(cfg.clone(), Method::AdaFrugalCombined).unwrap();
+    t.quiet = true;
+    let full = t.run().unwrap();
+    assert!(!full.t_events.is_empty(), "precondition: loss-aware T must move");
+    assert!(full.redefinitions >= 2, "precondition: several redefinitions");
+    assert_resume_parity(&cfg, Method::AdaFrugalCombined, 60, "combined");
+}
+
+#[test]
+fn resume_parity_at_an_unaligned_boundary() {
+    // the checkpoint step need not align with any eval/redefinition
+    // cadence: step 37 falls mid-window for n_eval=10 and T0=10
+    assert_resume_parity(&parity_cfg(), Method::AdaFrugalCombined, 37, "unaligned");
+}
+
+#[test]
+fn resume_parity_spec_selected_policies() {
+    // budget-driven rho + plateau T, both selected by spec on the
+    // static roster method — the policies the old API couldn't express
+    // must resume exactly too
+    let mut cfg = parity_cfg();
+    cfg.rho_policy = "budget:1:0.05:0.5".into(); // 1-byte ceiling: adjusts early
+    cfg.t_policy = "plateau:10:60:2:0.05".into();
+    let mut t = Trainer::new(cfg.clone(), Method::FrugalStatic).unwrap();
+    t.quiet = true;
+    let full = t.run().unwrap();
+    assert!(!full.control_events.is_empty(),
+            "precondition: spec policies must generate events");
+    assert_resume_parity(&cfg, Method::FrugalStatic, 60, "spec");
+}
+
+#[test]
+fn resume_refuses_mismatched_geometry_and_policies() {
+    let cfg = parity_cfg();
+    let path = tmp_ckpt("mismatch");
+    let mut t1 = Trainer::new(cfg.clone(), Method::AdaFrugalCombined).unwrap();
+    t1.quiet = true;
+    t1.run_span(0, 40).unwrap();
+    t1.save_resume(path.to_str().unwrap(), 40).unwrap();
+    let ck = checkpoint::load(&path).unwrap();
+
+    // different run length: the rho/LR horizons would diverge
+    let mut other = cfg.clone();
+    other.steps = 240;
+    let mut t2 = Trainer::new(other, Method::AdaFrugalCombined).unwrap();
+    let err = format!("{:#}", t2.restore_resume(&ck.header, &ck.data).unwrap_err());
+    assert!(err.contains("240") && err.contains("120"), "{err}");
+
+    // different block-selection strategy: the redefinition draws would
+    // silently diverge, so restore names expected-vs-found instead
+    let mut restrat = cfg.clone();
+    restrat.strategy = "roundrobin".into();
+    let mut t2b = Trainer::new(restrat, Method::AdaFrugalCombined).unwrap();
+    let err = format!("{:#}", t2b.restore_resume(&ck.header, &ck.data).unwrap_err());
+    assert!(err.contains("roundrobin") && err.contains("random"), "{err}");
+
+    // different seed: RNG streams named in the error
+    let mut reseed = cfg.clone();
+    reseed.seed = 99;
+    let mut t2c = Trainer::new(reseed, Method::AdaFrugalCombined).unwrap();
+    let err = format!("{:#}", t2c.restore_resume(&ck.header, &ck.data).unwrap_err());
+    assert!(err.contains("99") && err.contains("seed"), "{err}");
+
+    // different T policy: expected-vs-found named in the error
+    let mut repol = cfg.clone();
+    repol.t_policy = "plateau:10:60:2:0.05".into();
+    let mut t3 = Trainer::new(repol, Method::AdaFrugalCombined).unwrap();
+    let err = format!("{:#}", t3.restore_resume(&ck.header, &ck.data).unwrap_err());
+    assert!(err.contains("plateau:10:60:2:0.05") && err.contains("loss:"), "{err}");
+
+    // host-path methods cannot snapshot fused state
+    let mut t4 = Trainer::new(cfg.clone(), Method::GaLore).unwrap();
+    t4.quiet = true;
+    t4.run_span(0, 2).unwrap();
+    let err = format!(
+        "{:#}",
+        t4.save_resume(tmp_ckpt("galore").to_str().unwrap(), 2).unwrap_err()
+    );
+    assert!(err.contains("host optimizer"), "{err}");
+
+    // params-only (kind packed_state) checkpoints don't masquerade as
+    // resume snapshots
+    let hdr = checkpoint::train_header("nano", "combined", 40, 1.0);
+    let mut t5 = Trainer::new(cfg, Method::AdaFrugalCombined).unwrap();
+    let err = format!("{:#}", t5.restore_resume(&hdr, &ck.data).unwrap_err());
+    assert!(err.contains("not a resume checkpoint"), "{err}");
+
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+/// The stitched RunResult-level summary numbers feed the experiment
+/// harness; make sure a resumed run's final perplexity equals the
+/// straight-through one (the user-visible version of the parity gate).
+#[test]
+fn resumed_final_ppl_equals_straight_through() {
+    let cfg = parity_cfg();
+    let mut t = Trainer::new(cfg.clone(), Method::AdaFrugalCombined).unwrap();
+    t.quiet = true;
+    let full: RunResult = t.run().unwrap();
+
+    let path = tmp_ckpt("ppl");
+    let mut t1 = Trainer::new(cfg.clone(), Method::AdaFrugalCombined).unwrap();
+    t1.quiet = true;
+    t1.run_span(0, 90).unwrap();
+    t1.save_resume(path.to_str().unwrap(), 90).unwrap();
+    let ck = checkpoint::load(&path).unwrap();
+    let mut t2 = Trainer::new(cfg.clone(), Method::AdaFrugalCombined).unwrap();
+    t2.quiet = true;
+    let next = t2.restore_resume(&ck.header, &ck.data).unwrap();
+    let second = t2.run_span(next, cfg.steps).unwrap();
+    assert_eq!(full.final_ppl(), second.final_ppl());
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
