@@ -12,8 +12,13 @@
 //! A second section sweeps the data-parallel shard count over the
 //! larger `mid` sim workload (`runtime::shard`): one
 //! `bench_loop_shards` JSON line per shard count with steps/sec, the
-//! speedup over 1 shard, and the FRUGAL-aware sync-traffic split
-//! (state-full packed-state bytes vs state-free gradient bytes).
+//! speedup over 1 shard, the FRUGAL-aware sync-traffic split
+//! (state-full packed-state bytes vs state-free gradient bytes), and
+//! the per-shard memory split under the real partition layout: the
+//! modeled largest owned state slice (`per_shard_state_bytes`, from
+//! the live final mask) next to the backend's measured residency
+//! (`measured_owned_state_bytes`) — the numbers that show per-shard
+//! memory actually dropping as the shard count grows.
 //!
 //! ```text
 //! cargo bench --bench bench_loop
@@ -62,8 +67,12 @@ fn shard_sweep() -> anyhow::Result<()> {
         let sps = steps as f64 / r.step_time_s.max(1e-9);
         let base = *base_sps.get_or_insert(sps);
         let sync = r.sync.unwrap_or_default();
-        let sb = MemoryTracker::shard_bytes(&man, method.memory_model(), None, rho,
-                                            shards);
+        // price the per-shard footprint against the *live* final mask,
+        // so the JSON shows the real partition's largest owned slice
+        // next to the measured residency the backend counted
+        let mask = s.mask_render();
+        let sb = MemoryTracker::shard_bytes(&man, method.memory_model(), Some(&mask),
+                                            rho, shards);
         let line = json::obj(vec![
             ("bench", json::s("bench_loop_shards")),
             ("backend", json::s("sim")),
@@ -78,6 +87,8 @@ fn shard_sweep() -> anyhow::Result<()> {
             ("sync_grad_bytes", json::num(sync.grad_bytes as f64)),
             ("per_shard_replicated_bytes", json::num(sb.replicated as f64)),
             ("per_shard_state_bytes", json::num(sb.sharded as f64)),
+            ("measured_owned_state_bytes",
+             json::num(sync.owned_state_bytes as f64)),
             ("final_ppl",
              json::num(r.evals.last().map(|e| e.ppl).unwrap_or(f64::NAN))),
         ]);

@@ -6,6 +6,7 @@ use crate::coordinator::method::Method;
 use crate::model::memory;
 use crate::projection::SubspaceMask;
 use crate::runtime::manifest::Manifest;
+use crate::runtime::shard::partition::{self, Partition};
 
 #[derive(Debug, Clone, Copy)]
 pub struct MemorySample {
@@ -81,18 +82,45 @@ impl MemoryTracker {
 
     /// Per-worker footprint under `shards`-way data parallelism: the
     /// parameter replica every worker holds regardless of the shard
-    /// count, plus this worker's `1/N` slice of the partitionable
-    /// optimizer state (ZeRO-style; [`MemoryTracker::bytes_for`] is
-    /// the partitionable total). `shards = 1` degenerates to the
-    /// single-worker accounting the tables report.
-    pub fn shard_bytes(man: &Manifest, model: MemoryModel, mask: Option<&SubspaceMask>,
+    /// count, plus the *largest* shard's owned slice of the optimizer
+    /// state under `runtime::shard`'s real partition layout (the
+    /// ZeRO-style split the runtime actually delivers; the measured
+    /// counterpart is `SyncTraffic::owned_state_bytes`). `mask_cols`
+    /// is the rendered flat column mask for the FRUGAL model — with it
+    /// the state term is exact per-range accounting; without it (or
+    /// for the host-path GaLore/BAdam models, whose moments are not
+    /// partitioned by this runtime) the term falls back to the `⌈S/N⌉`
+    /// estimate over [`MemoryTracker::bytes_for`]. `shards = 1`
+    /// degenerates to the single-worker accounting the tables report.
+    pub fn shard_bytes(man: &Manifest, model: MemoryModel, mask_cols: Option<&[f32]>,
                        rho: f64, shards: usize) -> ShardBytes {
-        let state = Self::bytes_for(man, model, mask, rho);
         let shards = shards.max(1);
-        ShardBytes {
-            replicated: 4 * man.n_params,
-            sharded: (state + shards - 1) / shards,
-        }
+        let max_owned = |mc: Option<&[f32]>| -> Option<usize> {
+            let part = Partition::new(man.n_params, shards).ok()?;
+            part.ranges
+                .iter()
+                .map(|r| {
+                    partition::statefull_in_range(man, mc, r)
+                        * memory::BYTES_PER_STATE_ELEM
+                })
+                .max()
+        };
+        let modeled = |m: Option<&SubspaceMask>| {
+            let state = Self::bytes_for(man, model, m, rho);
+            (state + shards - 1) / shards
+        };
+        let sharded = match (model, mask_cols) {
+            // uniform full-rank state: every element is state-full
+            (MemoryModel::AdamW, _) => max_owned(None).unwrap_or_else(|| modeled(None)),
+            // live mask: price each shard's owned range exactly
+            (MemoryModel::Frugal, Some(mc)) => {
+                max_owned(Some(mc)).unwrap_or_else(|| modeled(None))
+            }
+            // no mask yet (ρ bound) or host-path moments the runtime
+            // does not partition: keep the ceil-division model
+            _ => modeled(None),
+        };
+        ShardBytes { replicated: 4 * man.n_params, sharded }
     }
 
     pub fn record(&mut self, step: usize, bytes: usize) {
@@ -179,6 +207,60 @@ mod tests {
         // shards = 0 clamps to 1 instead of dividing by zero
         assert_eq!(MemoryTracker::shard_bytes(&man, MemoryModel::AdamW, None, 0.25, 0),
                    a1);
+    }
+
+    #[test]
+    fn shard_bytes_properties_match_real_partitions() {
+        // satellite of the elastic-sharding PR: the tracker's state
+        // term is no longer a modeled ⌈S/N⌉ — with a live mask it must
+        // equal the largest owned range of the real partition layout,
+        // be non-increasing in the shard count, and degenerate to the
+        // unsharded totals at N = 1
+        let man = crate::runtime::Manifest::synthetic_lm(3, 16, 32, 8).unwrap();
+        crate::util::prop::forall_with_rng(
+            "shard-bytes-real-partition",
+            10,
+            |r| 0.05 + 0.9 * r.f64(),
+            |&rho, rng| {
+                let mut mask = crate::projection::SubspaceMask::new(&man);
+                mask.redefine(crate::projection::Strategy::Random, rho, None, rng)
+                    .unwrap();
+                let rendered = mask.render();
+                for (model, mc) in [(MemoryModel::AdamW, None),
+                                    (MemoryModel::Frugal, Some(rendered.as_slice()))] {
+                    let mut prev = usize::MAX;
+                    for shards in [1usize, 2, 4, 8] {
+                        let sb = MemoryTracker::shard_bytes(&man, model, mc, rho, shards);
+                        if sb.replicated != 4 * man.n_params {
+                            return false;
+                        }
+                        // state term == largest owned range, exactly
+                        let part = Partition::new(man.n_params, shards).unwrap();
+                        let want = part
+                            .ranges
+                            .iter()
+                            .map(|r| partition::statefull_in_range(&man, mc, r) * 8)
+                            .max()
+                            .unwrap();
+                        if sb.sharded != want || sb.sharded > prev {
+                            return false;
+                        }
+                        prev = sb.sharded;
+                        // N = 1: the unsharded totals the tables report
+                        if shards == 1 {
+                            let total = match model {
+                                MemoryModel::AdamW => memory::adamw_bytes(&man),
+                                _ => memory::frugal_bytes(&man, &mask),
+                            };
+                            if sb.sharded != total {
+                                return false;
+                            }
+                        }
+                    }
+                }
+                true
+            },
+        );
     }
 
     #[test]

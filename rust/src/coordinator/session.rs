@@ -66,6 +66,7 @@ use crate::info;
 use crate::optim::{self, OptimBuild, Optimizer, StateMgmt, StepScalars};
 use crate::projection::{Strategy, SubspaceMask};
 use crate::runtime::backend::{Buffer, ExecBackend};
+use crate::runtime::shard::partition::Partition;
 use crate::runtime::Manifest;
 use crate::util::json::{self, Value};
 use crate::util::par;
@@ -948,6 +949,16 @@ impl Session {
                   self.profile.id)
         };
         let data = self.dev.engine.read_all_f32(state_buf)?;
+        // the partition-layout section: which contiguous slice of the
+        // packed state each shard owned when the snapshot was taken.
+        // The payload is always the *full* packed state (the owned
+        // slices all-gathered), so a restore at a different power-of-
+        // two shard count just re-slices it — see restore_resume.
+        let man = self.dev.engine.manifest();
+        let part = match self.dev.engine.partition() {
+            Some(p) => p,
+            None => Partition::new(man.n_params, 1)?,
+        };
         let header = json::obj(vec![
             ("kind", json::s("resume")),
             ("preset", json::s(&self.cfg.preset)),
@@ -960,6 +971,7 @@ impl Session {
             ("step", json::num(next_step as f64)),
             ("total_steps", json::num(self.cfg.steps as f64)),
             ("t_since_reset", json::num(self.t_since_reset as f64)),
+            ("partition", part.to_json()),
             ("control", self.control.state()),
             ("mask", self.mask.state_json()),
             ("task", self.task.state_json()?),
@@ -1008,6 +1020,37 @@ impl Session {
                         self.task.state_len(&man));
         let next_step = header.get("step")?.as_usize()?;
         anyhow::ensure!(next_step <= self.cfg.steps, "checkpoint step beyond the run");
+
+        // the partition-layout section is required: a resume snapshot
+        // without one predates elastic sharding and its state layout
+        // cannot be trusted across shard counts
+        let part_json = header.opt("partition").ok_or_else(|| {
+            anyhow::anyhow!(
+                "resume checkpoint has no partition-layout section (written before \
+                 elastic optimizer-state sharding); re-create it with this build \
+                 (train --checkpoint-at / --save-checkpoint)")
+        })?;
+        let saved = Partition::from_json(part_json)?;
+        anyhow::ensure!(
+            saved.len == man.n_params,
+            "checkpoint partition covers {} elements but preset {:?} has {} params; \
+             the partition-layout section does not match the model geometry",
+            saved.len, self.cfg.preset, man.n_params);
+        // elastic resume: the payload is the full packed state, so any
+        // power-of-two shard count can re-slice it — subtree-aligned
+        // ranges make the re-sliced update bit-identical (the per-
+        // element rule never crosses a slice boundary)
+        let here = match self.dev.engine.partition() {
+            Some(p) => p,
+            None => Partition::new(man.n_params, 1)?,
+        };
+        if saved.shards != here.shards && !self.quiet {
+            info!(
+                "[{}] elastic resume: checkpoint written at {} shard(s), \
+                 re-slicing state for {} shard(s)",
+                self.profile.id, saved.shards, here.shards
+            );
+        }
 
         self.control.restore(header.get("control")?)?;
         self.mask.restore_json(header.get("mask")?)?;

@@ -195,14 +195,16 @@ fn cmd_train(args: &Args) -> Result<()> {
             trainer.manifest(), method.memory_model(), None, cfg.rho, sync.shards);
         println!(
             "shards: {} | sync {:.2} MB state-full + {:.2} MB state-free over {} reduces \
-             | per-shard memory {:.3} MB ({:.3} MB replicated + {:.3} MB sharded state)",
+             | per-shard memory {:.3} MB ({:.3} MB replicated + {:.3} MB sharded state, \
+             measured owned {:.3} MB)",
             sync.shards,
             sync.state_bytes as f64 / 1e6,
             sync.grad_bytes as f64 / 1e6,
             sync.reduces,
             sb.per_shard_total() as f64 / 1e6,
             sb.replicated as f64 / 1e6,
-            sb.sharded as f64 / 1e6
+            sb.sharded as f64 / 1e6,
+            sync.owned_state_bytes as f64 / 1e6
         );
     }
     // the control plane's typed event log (T growth, budget-rho moves)

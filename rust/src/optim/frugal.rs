@@ -46,6 +46,40 @@ fn hybrid_update(p: &mut f32, g: f32, m: &mut f32, v: &mut f32, on: bool,
     }
 }
 
+/// Apply the hybrid update to the contiguous global-index window
+/// `[lo, lo + p.len())` of the flat parameter vector, where `p`, `g`,
+/// `m`, `v` are the window's slices. `mask_cols: None` treats every
+/// element as state-full — exactly the fused AdamW rule — so one
+/// function covers both fused entries. This is the per-shard kernel of
+/// `runtime::shard`'s partitioned optimizer update: each shard calls
+/// it on its owned slice, and because the per-element arithmetic is
+/// byte-for-byte the [`MaskedFrugal::step`]/`AdamW::step` expressions
+/// and no element is visited twice, any tiling of `[0, n)` into
+/// windows produces bit-identical parameters to the unsharded step.
+pub(crate) fn hybrid_update_range(man: &Manifest, lo: usize, p: &mut [f32], g: &[f32],
+                                  m: &mut [f32], v: &mut [f32],
+                                  mask_cols: Option<&[f32]>, s: &StepScalars) {
+    let hi = lo + p.len();
+    for spec in &man.params {
+        let s_lo = lo.max(spec.offset);
+        let s_hi = hi.min(spec.offset + spec.size);
+        if s_lo >= s_hi {
+            continue;
+        }
+        let cols = spec.cols();
+        for gi in s_lo..s_hi {
+            let on = match mask_cols {
+                Some(mc) if spec.maskable => {
+                    mc[spec.mask_offset + ((gi - spec.offset) % cols)] != 0.0
+                }
+                _ => true,
+            };
+            let li = gi - lo;
+            hybrid_update(&mut p[li], g[li], &mut m[li], &mut v[li], on, s);
+        }
+    }
+}
+
 /// Full-size-state backend (mirrors the device representation).
 #[derive(Debug, Clone)]
 pub struct MaskedFrugal {
@@ -364,6 +398,75 @@ mod tests {
                     compact.step(&man, &mut p2, &grads, &mask, &s);
                     if p1 != p2 {
                         return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn range_kernel_tiles_to_the_unsharded_step() {
+        // the partitioned-update contract: any tiling of [0, n) into
+        // contiguous windows reproduces the whole-vector step bitwise,
+        // for both the masked (frugal) and None (adamw) rules
+        let man = test_manifest();
+        let n = man.n_params;
+        prop::forall_with_rng(
+            "range-kernel-tiles",
+            10,
+            |r| (r.below(1 << 30) as u64, 0.1 + 0.8 * r.f64()),
+            |&(seed, rho), rng| {
+                let mut rng_data = Rng::new(seed);
+                let p0 = crate::model::init::init_state(&man, seed)[..n].to_vec();
+                let grads: Vec<f32> = (0..n).map(|_| rng_data.normal_f32(1.0)).collect();
+                let mut mask = SubspaceMask::new(&man);
+                mask.redefine(Strategy::Random, rho, None, rng).unwrap();
+                let rendered = mask.render();
+                let s = scal(3);
+                for mask_cols in [Some(rendered.as_slice()), None] {
+                    // reference: whole vector in one window
+                    let mut p_ref = p0.clone();
+                    let mut m_ref = vec![0.01f32; n];
+                    let mut v_ref = vec![0.02f32; n];
+                    hybrid_update_range(&man, 0, &mut p_ref, &grads, &mut m_ref,
+                                        &mut v_ref, mask_cols, &s);
+                    // arbitrary 3-way tiling at mask-unaligned cuts
+                    let cuts = [0, 1 + rng.below(n - 2), n];
+                    let mid = cuts[1] + rng.below(n - cuts[1]);
+                    let mut p = p0.clone();
+                    let mut m = vec![0.01f32; n];
+                    let mut v = vec![0.02f32; n];
+                    for w in [0..cuts[1], cuts[1]..mid, mid..n] {
+                        hybrid_update_range(&man, w.start, &mut p[w.clone()],
+                                            &grads[w.clone()], &mut m[w.clone()],
+                                            &mut v[w.clone()], mask_cols, &s);
+                    }
+                    if p != p_ref || m != m_ref || v != v_ref {
+                        return false;
+                    }
+                    // and the reference itself matches the named steps
+                    match mask_cols {
+                        Some(mc) => {
+                            let mut p2 = p0.clone();
+                            let mut opt = MaskedFrugal::new(n);
+                            opt.m = vec![0.01; n];
+                            opt.v = vec![0.02; n];
+                            opt.step(&man, &mut p2, &grads, mc, &s);
+                            if p2 != p_ref || opt.m != m_ref || opt.v != v_ref {
+                                return false;
+                            }
+                        }
+                        None => {
+                            let mut p2 = p0.clone();
+                            let mut opt = crate::optim::adamw::AdamW::new(n);
+                            opt.m = vec![0.01; n];
+                            opt.v = vec![0.02; n];
+                            opt.step(&mut p2, &grads, &s);
+                            if p2 != p_ref || opt.m != m_ref || opt.v != v_ref {
+                                return false;
+                            }
+                        }
                     }
                 }
                 true

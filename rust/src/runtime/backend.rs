@@ -141,6 +141,17 @@ pub trait ExecBackend: Send {
     fn sync_stats(&self) -> Option<crate::runtime::shard::SyncTraffic> {
         None
     }
+
+    /// The optimizer-state partition layout behind this backend:
+    /// `Some` for [`crate::runtime::shard::ShardedBackend`] (which
+    /// shard owns which contiguous slice of the packed state), `None`
+    /// for unsharded backends (one owner, the whole state). The
+    /// session layer records it in resume checkpoints so a restore can
+    /// validate the layout and reshard elastically. Wrappers must
+    /// forward it, like [`ExecBackend::sync_stats`].
+    fn partition(&self) -> Option<crate::runtime::shard::partition::Partition> {
+        None
+    }
 }
 
 /// Backend selector carried by config as a plain name (the same
@@ -312,6 +323,10 @@ impl ExecBackend for CountingBackend {
 
     fn sync_stats(&self) -> Option<crate::runtime::shard::SyncTraffic> {
         self.inner.sync_stats()
+    }
+
+    fn partition(&self) -> Option<crate::runtime::shard::partition::Partition> {
+        self.inner.partition()
     }
 }
 

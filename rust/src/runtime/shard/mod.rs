@@ -1,18 +1,23 @@
 //! `runtime::shard` — data-parallel sharded execution with
-//! FRUGAL-aware gradient synchronization.
+//! FRUGAL-aware gradient synchronization and ZeRO-style partitioned
+//! optimizer state.
 //!
 //! [`ShardedBackend`] implements [`ExecBackend`] by fanning the batch
 //! dimension of every step entry out to `N` inner backends (its own
 //! [`crate::runtime::sim::SimEngine`] or PJRT engine per worker,
 //! driven through [`crate::util::par`]), reducing the per-shard
 //! partial gradients with the deterministic fixed-order tree in
-//! [`reduce`], and applying the optimizer update once on the reduced
-//! gradient. Because the inner engines compute *raw subtree partials*
-//! (the `grad_part` entry) and both sides of the split share the
-//! reduction tree, an `N`-shard run is **bit-identical** to the
-//! 1-shard run for any power-of-two `N` dividing the batch — on any
-//! thread schedule — which `rust/tests/shard_parity.rs` pins for every
-//! Table-1 method.
+//! [`reduce`], and applying the fused optimizer update *shard-locally*:
+//! each shard owns a contiguous slice of the packed `params‖m‖v` state
+//! (its [`partition::Partition`] range) and updates only that slice.
+//! Because the inner engines compute *raw subtree partials* (the
+//! `grad_part` entry), both sides of the split share the reduction
+//! tree, and the per-element update rule is untouched by the slicing,
+//! an `N`-shard run is **bit-identical** to the 1-shard run for any
+//! power-of-two `N` dividing the batch — on any thread schedule —
+//! which `rust/tests/shard_parity.rs` pins for every Table-1 method
+//! and `rust/tests/elastic_parity.rs` extends across shard-count
+//! changes at a checkpoint boundary.
 //!
 //! # How a step is sharded
 //!
@@ -30,10 +35,25 @@
 //! 2. normalizes by the *global* count and folds the mean loss —
 //!    through the same [`reduce::normalize`]/[`reduce::mean_loss`] the
 //!    unsharded sim entries call,
-//! 3. applies the fused optimizer update (the reference
-//!    MaskedFrugal/AdamW rules over the packed state — exactly what
-//!    the single-backend fused entries run) or, for `grad`, returns
-//!    the normalized gradient for the host-path optimizers.
+//! 3. applies the fused optimizer update partition-locally: shard `i`
+//!    runs the reference per-element hybrid rule
+//!    (`optim::frugal::hybrid_update_range` — the MaskedFrugal/AdamW
+//!    expressions the single-backend fused entries are pinned to) over
+//!    its owned range only, and the updated slices land disjointly in
+//!    one output state (the all-gather; in-process, slices of a shared
+//!    buffer). For `grad`, the normalized gradient is returned whole
+//!    for the host-path optimizers.
+//!
+//! The partition ranges come from recursively splitting `[0, n_params)`
+//! at [`reduce::split_mid`], so ranges at `2N` shards refine the ranges
+//! at `N` — contiguous blocks are exact subtrees of the split tree.
+//! That is what makes checkpoint resume *elastic*: a run checkpointed
+//! at `N` shards resumes at `M` shards (power-of-two `N → M`) with a
+//! bit-identical trajectory, because the full packed state crosses the
+//! checkpoint boundary and re-slicing it along subtree-aligned ranges
+//! cannot change any per-element update (`Session::restore_resume`
+//! validates the checkpoint's partition-layout section against the
+//! canonical layout before accepting it).
 //!
 //! Non-step entries (`eval`, `scores`, `lora_adamw`, `lora_eval`) are
 //! delegated whole to shard 0: evaluation batches are deterministic
@@ -68,6 +88,7 @@
 //! at session construction). PJRT inner engines additionally need
 //! artifacts that provide the `grad_part` entry point.
 
+pub mod partition;
 pub mod reduce;
 
 use std::path::Path;
@@ -76,9 +97,11 @@ use std::sync::Mutex;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use self::partition::Partition;
 use super::backend::{self, Buffer, ExecBackend, HostData};
 use super::manifest::Manifest;
 use super::sim;
+use crate::optim::StepScalars;
 use crate::util::par;
 
 /// Bytes shipped per element of state-full packed optimizer state
@@ -102,9 +125,17 @@ pub struct SyncTraffic {
     /// bytes of state-free averaged-gradient sync (4 B/elem per tree
     /// edge)
     pub grad_bytes: usize,
+    /// peak optimizer-state residency (m + v, 8 B/elem) of the largest
+    /// shard's owned partition slice under the mask at step time — the
+    /// *measured* per-shard state footprint that
+    /// `MemoryTracker::shard_bytes` models. Residency, not traffic: it
+    /// does not count into [`SyncTraffic::total_bytes`].
+    pub owned_state_bytes: usize,
 }
 
 impl SyncTraffic {
+    /// Total bytes a distributed transport would ship (state-full +
+    /// state-free sync); excludes the resident `owned_state_bytes`.
     pub fn total_bytes(&self) -> usize {
         self.state_bytes + self.grad_bytes
     }
@@ -183,9 +214,12 @@ struct ShardJob<'a> {
 pub struct ShardedBackend {
     manifest: Manifest,
     shards: Vec<Mutex<Box<dyn ExecBackend>>>,
+    /// which contiguous slice of the packed state each shard owns
+    partition: Partition,
     reduces: AtomicUsize,
     state_bytes: AtomicUsize,
     grad_bytes: AtomicUsize,
+    owned_state_bytes: AtomicUsize,
 }
 
 impl ShardedBackend {
@@ -208,12 +242,16 @@ impl ShardedBackend {
                      needs raw partial gradients (sim provides it; PJRT needs \
                      artifacts compiled with a grad_part entry point)");
         }
+        let partition = Partition::new(man.n_params, inners.len())
+            .context("building the optimizer-state partition")?;
         Ok(ShardedBackend {
             manifest: man,
             shards: inners.into_iter().map(Mutex::new).collect(),
+            partition,
             reduces: AtomicUsize::new(0),
             state_bytes: AtomicUsize::new(0),
             grad_bytes: AtomicUsize::new(0),
+            owned_state_bytes: AtomicUsize::new(0),
         })
     }
 
@@ -366,6 +404,78 @@ impl ShardedBackend {
         reduce::normalize(&mut totals, count);
         Ok((totals, loss))
     }
+
+    /// The partitioned fused update: each shard applies the reference
+    /// per-element hybrid rule to its owned contiguous slice of the
+    /// packed `params‖m‖v` state only (reduce-scatter → local update →
+    /// all-gather in a real transport; in-process the "gather" is the
+    /// slices landing disjointly in one output vector). Bit-identical
+    /// to the unsharded fused entries: the per-element expressions are
+    /// `optim::frugal`'s single source of truth, no element is visited
+    /// twice, and the ranges tile `[0, n)` — pinned by
+    /// `frugal::tests::range_kernel_tiles_to_the_unsharded_step` and
+    /// the shard/elastic parity gates.
+    fn sharded_fused_step(&self, state: &[f32], mask: Option<&[f32]>, s: &StepScalars,
+                          grads: &[f32], loss: f32) -> Result<Vec<f32>> {
+        let man = &self.manifest;
+        let n = man.n_params;
+        ensure!(state.len() == man.state_len,
+                "fused step: state len {} != {}", state.len(), man.state_len);
+        ensure!(grads.len() == n, "fused step: grads len {} != {n}", grads.len());
+        if let Some(mc) = mask {
+            ensure!(mc.len() == man.mask_len,
+                    "mask len {} != {}", mc.len(), man.mask_len);
+        }
+        let mut next = state.to_vec();
+        let (params, rest) = next.split_at_mut(n);
+        let (ms, rest) = rest.split_at_mut(n);
+        let (vs, loss_slot) = rest.split_at_mut(n);
+        // carve each shard's owned (p, g, m, v) slices; the partition
+        // ranges tile [0, n) in order, so sequential split_at_mut lands
+        // exactly on the ownership boundaries
+        struct RangeJob<'a> {
+            lo: usize,
+            p: &'a mut [f32],
+            g: &'a [f32],
+            m: &'a mut [f32],
+            v: &'a mut [f32],
+        }
+        let mut jobs: Vec<RangeJob> = Vec::with_capacity(self.partition.ranges.len());
+        let mut p_rest = params;
+        let mut g_rest = &grads[..n];
+        let mut m_rest = ms;
+        let mut v_rest = vs;
+        for r in &self.partition.ranges {
+            let (p, pr) = p_rest.split_at_mut(r.len());
+            let (g, gr) = g_rest.split_at(r.len());
+            let (m, mr) = m_rest.split_at_mut(r.len());
+            let (v, vr) = v_rest.split_at_mut(r.len());
+            p_rest = pr;
+            g_rest = gr;
+            m_rest = mr;
+            v_rest = vr;
+            jobs.push(RangeJob { lo: r.start, p, g, m, v });
+        }
+        par::run_for(n, jobs, |job| {
+            crate::optim::frugal::hybrid_update_range(man, job.lo, job.p, job.g,
+                                                      job.m, job.v, mask, s);
+        });
+        loss_slot[0] = loss;
+        // measured residency: the largest owned m+v slice under the
+        // live mask (what a real worker would actually hold)
+        let peak = self
+            .partition
+            .ranges
+            .iter()
+            .map(|r| {
+                partition::statefull_in_range(man, mask, r)
+                    * crate::model::memory::BYTES_PER_STATE_ELEM
+            })
+            .max()
+            .unwrap_or(0);
+        self.owned_state_bytes.fetch_max(peak, Ordering::Relaxed);
+        Ok(next)
+    }
 }
 
 /// One shard's half of the fan-out: upload the replicated params and
@@ -408,7 +518,12 @@ impl ExecBackend for ShardedBackend {
             reduces: self.reduces.load(Ordering::Relaxed),
             state_bytes: self.state_bytes.load(Ordering::Relaxed),
             grad_bytes: self.grad_bytes.load(Ordering::Relaxed),
+            owned_state_bytes: self.owned_state_bytes.load(Ordering::Relaxed),
         })
+    }
+
+    fn partition(&self) -> Option<Partition> {
+        Some(self.partition.clone())
     }
 
     fn run(&self, entry: &str, args: &[&Buffer]) -> Result<Buffer> {
@@ -438,7 +553,7 @@ impl ExecBackend for ShardedBackend {
                     self.reduce_grads(&state[..man.n_params], tokens, tdims, labels)?;
                 // the update validates the mask length; price the sync
                 // only once the step is known-good
-                let next = sim::fused_step_packed(man, state, mask, &scal, &grads, loss)?;
+                let next = self.sharded_fused_step(state, mask, &scal, &grads, loss)?;
                 self.note_reduce(mask, false);
                 let dims = vec![next.len()];
                 Ok(Buffer::Host { data: HostData::F32(next), dims })
@@ -670,5 +785,49 @@ mod tests {
         assert_eq!(sync.state_bytes, 12 * sf);
         assert_eq!(sync.grad_bytes, 4 * (man.n_params - sf));
         assert!(sync.grad_bytes > 0 && sync.state_bytes > 0);
+    }
+
+    #[test]
+    fn fused_steps_account_owned_partition_residency() {
+        // adamw at 4 shards on nano.b8: the state is uniform and
+        // 1568 % 4 == 0, so the largest owned slice is exactly a
+        // quarter of the moments (8 B/elem)
+        let sb = sharded_lm("nano.b8", 4);
+        let man = sb.manifest().clone();
+        assert_eq!(sb.partition().unwrap(), Partition::new(man.n_params, 4).unwrap());
+        let state = crate::model::init::init_state(&man, 2);
+        let toks = lm_tokens(&man, 3);
+        let scal = StepScalars::new(1e-2, 1e-3, 0.01, 0.9, 0.999, 1e-8, 1).to_array();
+        let s = sb.upload_f32(&state, &[man.state_len]).unwrap();
+        let c = sb.upload_f32(&scal, &[8]).unwrap();
+        let t = sb.upload_i32(&toks, &[man.model.batch, man.model.seq + 1]).unwrap();
+        sb.run("adamw", &[&s, &c, &t]).unwrap();
+        assert_eq!(sb.sync_stats().unwrap().owned_state_bytes, man.n_params / 4 * 8);
+
+        // frugal: the measured owned slice equals the partition
+        // pricing of the live mask, and partitioning actually shrinks
+        // what one worker holds
+        let sb = sharded_lm("nano.b8", 4);
+        let mut mask = crate::projection::SubspaceMask::new(&man);
+        let mut rng = Rng::new(5);
+        mask.redefine(crate::projection::Strategy::Random, 0.5, None, &mut rng).unwrap();
+        let rendered = mask.render();
+        let s = sb.upload_f32(&state, &[man.state_len]).unwrap();
+        let m = sb.upload_f32(&rendered, &[man.mask_len]).unwrap();
+        let c = sb.upload_f32(&scal, &[8]).unwrap();
+        let t = sb.upload_i32(&toks, &[man.model.batch, man.model.seq + 1]).unwrap();
+        sb.run("frugal", &[&s, &m, &c, &t]).unwrap();
+        let part = sb.partition().unwrap();
+        let want = part
+            .ranges
+            .iter()
+            .map(|r| partition::statefull_in_range(&man, Some(&rendered), r) * 8)
+            .max()
+            .unwrap();
+        assert_eq!(sb.sync_stats().unwrap().owned_state_bytes, want);
+        let total =
+            partition::statefull_in_range(&man, Some(&rendered), &(0..man.n_params)) * 8;
+        assert!(want <= total && 4 * want <= 2 * total,
+                "owned {want} vs unsharded {total}: partitioning must shrink state");
     }
 }

@@ -1,0 +1,266 @@
+//! Contiguous optimizer-state partition layout — which slice of the
+//! flat parameter vector each shard *owns*.
+//!
+//! The layout is fully determined by `(len, shards)`: the ranges are
+//! the leaves of recursively splitting `[0, len)` at
+//! [`reduce::split_mid`](super::reduce::split_mid) to depth
+//! `log2(shards)` — the same split rule the gradient reduction tree
+//! uses. That buys two properties the elastic-resume story depends on:
+//!
+//! 1. **Refinement**: the `2N`-shard ranges are obtained by splitting
+//!    each `N`-shard range once, so every `N`-shard range is the exact
+//!    union of contiguous `2N`-shard ranges (and vice versa for
+//!    coarsening). Power-of-two resharding therefore never slices
+//!    through a boundary that another shard count would disagree on —
+//!    contiguous blocks are exact subtrees of the split tree.
+//! 2. **Determinism**: a checkpointed layout can be validated by
+//!    recomputing it; anything else in the partition section of a
+//!    checkpoint is corruption, reported as a named error.
+//!
+//! A [`Partition`] is pure layout: it says who owns what, not what the
+//! state holds. [`statefull_in_range`] prices a range under a rendered
+//! FRUGAL column mask (state-free columns carry no m/v), which is what
+//! the per-shard residency accounting and
+//! `MemoryTracker::shard_bytes` report.
+
+use std::ops::Range;
+
+use anyhow::{ensure, Context, Result};
+
+use super::reduce;
+use crate::runtime::manifest::Manifest;
+use crate::util::json::{self, Value};
+
+/// A contiguous, shard-count-determined partition of `[0, len)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    /// number of shards (power of two)
+    pub shards: usize,
+    /// total element count being partitioned (`manifest.n_params`)
+    pub len: usize,
+    /// shard `i` owns `ranges[i]`; the ranges tile `[0, len)` in order
+    pub ranges: Vec<Range<usize>>,
+}
+
+impl Partition {
+    /// The canonical layout for `shards` shards over `len` elements.
+    pub fn new(len: usize, shards: usize) -> Result<Partition> {
+        ensure!(shards >= 1 && shards.is_power_of_two(),
+                "partition shard count must be a power of two >= 1, got {shards}");
+        ensure!(shards <= len.max(1),
+                "partition shard count {shards} out of range: only {len} elements \
+                 to own, so some shard would hold an empty slice");
+        let mut ranges = Vec::with_capacity(shards);
+        split(&mut ranges, 0, len, shards.trailing_zeros());
+        Ok(Partition { shards, len, ranges })
+    }
+
+    /// Serialize for the checkpoint partition-layout section.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("shards", json::num(self.shards as f64)),
+            ("len", json::num(self.len as f64)),
+            ("ranges",
+             json::arr(self.ranges.iter().map(|r| {
+                 json::arr(vec![json::num(r.start as f64), json::num(r.end as f64)])
+             }))),
+        ])
+    }
+
+    /// Parse and validate a checkpoint partition-layout section. The
+    /// ranges must equal the canonical layout for the recorded
+    /// `(len, shards)` — anything else means the section was corrupted
+    /// (or written by an incompatible split rule) and resuming from it
+    /// could silently misattribute state, so it is a loud named error.
+    pub fn from_json(v: &Value) -> Result<Partition> {
+        let ctx = "checkpoint partition-layout section";
+        let shards = v.get("shards").context(ctx)?.as_usize().context(ctx)?;
+        let len = v.get("len").context(ctx)?.as_usize().context(ctx)?;
+        let want = Partition::new(len, shards)
+            .with_context(|| format!("{ctx}: invalid geometry"))?;
+        let raw = v.get("ranges").context(ctx)?.as_arr().context(ctx)?;
+        ensure!(raw.len() == shards,
+                "{ctx} is corrupted: {} ranges recorded for {shards} shards",
+                raw.len());
+        for (i, (rv, want_r)) in raw.iter().zip(&want.ranges).enumerate() {
+            let pair = rv.as_arr().context(ctx)?;
+            ensure!(pair.len() == 2, "{ctx} is corrupted: range {i} is not a pair");
+            let (s, e) = (pair[0].as_usize().context(ctx)?,
+                          pair[1].as_usize().context(ctx)?);
+            ensure!(s == want_r.start && e == want_r.end,
+                    "{ctx} is corrupted: range {i} is [{s}, {e}) but the canonical \
+                     split-tree layout for {shards} shards over {len} elements has \
+                     [{}, {})", want_r.start, want_r.end);
+        }
+        Ok(want)
+    }
+}
+
+/// Recursive [`reduce::split_mid`] split of `[lo, hi)` to `levels`
+/// more levels — the leaf order is left-to-right, i.e. shard order.
+fn split(out: &mut Vec<Range<usize>>, lo: usize, hi: usize, levels: u32) {
+    if levels == 0 {
+        out.push(lo..hi);
+        return;
+    }
+    let mid = lo + reduce::split_mid(hi - lo);
+    split(out, lo, mid, levels - 1);
+    split(out, mid, hi, levels - 1);
+}
+
+/// Elements of `r` whose optimizer state is live: every element of a
+/// non-maskable param, plus elements of maskable params whose column
+/// is masked in. `mask_cols: None` (plain AdamW) counts everything.
+/// Because a maskable matrix is row-major, element `i`'s column is
+/// `i % cols` — a masked-in column's elements recur at stride `cols`,
+/// so state-full elements spread nearly uniformly over any contiguous
+/// range (the partition can't be starved or flooded by mask layout).
+pub fn statefull_in_range(man: &Manifest, mask_cols: Option<&[f32]>,
+                          r: &Range<usize>) -> usize {
+    let mut n = 0usize;
+    for spec in &man.params {
+        let lo = r.start.max(spec.offset);
+        let hi = r.end.min(spec.offset + spec.size);
+        if lo >= hi {
+            continue;
+        }
+        match mask_cols {
+            Some(mc) if spec.maskable => {
+                let cols = spec.cols();
+                for gi in lo..hi {
+                    if mc[spec.mask_offset + ((gi - spec.offset) % cols)] != 0.0 {
+                        n += 1;
+                    }
+                }
+            }
+            _ => n += hi - lo,
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::{Strategy, SubspaceMask};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn canonical_ranges_tile_in_order() {
+        for &(len, shards) in &[(8usize, 1usize), (8, 2), (8, 4), (12, 4), (1568, 4),
+                                (17, 8), (100, 16)] {
+            let p = Partition::new(len, shards).unwrap();
+            assert_eq!(p.ranges.len(), shards, "len {len} shards {shards}");
+            assert_eq!(p.ranges[0].start, 0);
+            assert_eq!(p.ranges.last().unwrap().end, len);
+            for w in p.ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "gap/overlap at len {len} x{shards}");
+                assert!(!w[0].is_empty() && !w[1].is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn equal_split_when_divisible() {
+        let p = Partition::new(1568, 4).unwrap();
+        assert!(p.ranges.iter().all(|r| r.len() == 392));
+    }
+
+    #[test]
+    fn doubling_refines_each_range_exactly() {
+        // the elastic-resume property: 2N-shard ranges split each
+        // N-shard range in two, so blocks line up across shard counts
+        for len in [8usize, 12, 17, 1568, 1569] {
+            for shards in [1usize, 2, 4, 8] {
+                if shards * 2 > len {
+                    continue; // the finer layout would have empty slices
+                }
+                let coarse = Partition::new(len, shards).unwrap();
+                let fine = Partition::new(len, shards * 2).unwrap();
+                for (i, r) in coarse.ranges.iter().enumerate() {
+                    let (a, b) = (&fine.ranges[2 * i], &fine.ranges[2 * i + 1]);
+                    assert_eq!(a.start, r.start, "len {len} x{shards} range {i}");
+                    assert_eq!(b.end, r.end, "len {len} x{shards} range {i}");
+                    assert_eq!(a.end, b.start);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn max_range_is_non_increasing_in_shards() {
+        for len in [9usize, 100, 1568] {
+            let mut prev = usize::MAX;
+            for shards in [1usize, 2, 4, 8] {
+                let p = Partition::new(len, shards).unwrap();
+                let m = p.ranges.iter().map(|r| r.len()).max().unwrap();
+                assert!(m <= prev, "len {len}: max range grew at {shards} shards");
+                prev = m;
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        let err = format!("{:#}", Partition::new(100, 3).unwrap_err());
+        assert!(err.contains("power of two"), "{err}");
+        let err = format!("{:#}", Partition::new(100, 0).unwrap_err());
+        assert!(err.contains("power of two"), "{err}");
+        let err = format!("{:#}", Partition::new(2, 4).unwrap_err());
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn json_roundtrip_and_corruption_rejection() {
+        let p = Partition::new(1568, 4).unwrap();
+        let v = p.to_json();
+        assert_eq!(Partition::from_json(&v).unwrap(), p);
+
+        // a non-canonical split must be named as corruption
+        let bad = json::obj(vec![
+            ("shards", json::num(2.0)),
+            ("len", json::num(10.0)),
+            ("ranges", json::arr(vec![
+                json::arr(vec![json::num(0.0), json::num(3.0)]),
+                json::arr(vec![json::num(3.0), json::num(10.0)]),
+            ])),
+        ]);
+        let err = format!("{:#}", Partition::from_json(&bad).unwrap_err());
+        assert!(err.contains("partition") && err.contains("corrupted"), "{err}");
+
+        // missing keys and bad geometry are named too
+        let err = format!("{:#}", Partition::from_json(&json::obj(vec![])).unwrap_err());
+        assert!(err.contains("partition"), "{err}");
+        let bad_geom = json::obj(vec![
+            ("shards", json::num(3.0)),
+            ("len", json::num(10.0)),
+            ("ranges", json::arr(Vec::new())),
+        ]);
+        let err = format!("{:#}", Partition::from_json(&bad_geom).unwrap_err());
+        assert!(err.contains("power of two"), "{err}");
+    }
+
+    #[test]
+    fn statefull_counts_sum_to_whole_and_respect_mask() {
+        let man = crate::model::init::test_manifest();
+        let mut mask = SubspaceMask::new(&man);
+        let mut rng = Rng::new(3);
+        mask.redefine(Strategy::Random, 0.5, None, &mut rng).unwrap();
+        let rendered = mask.render();
+        for shards in [1usize, 2, 4] {
+            let p = Partition::new(man.n_params, shards).unwrap();
+            let total: usize = p.ranges.iter()
+                .map(|r| statefull_in_range(&man, Some(&rendered), r))
+                .sum();
+            // ranges tile [0, n): per-range counts must sum to the
+            // whole-vector count, the same quantity the sync pricing
+            // and memory model use
+            assert_eq!(total,
+                       statefull_in_range(&man, Some(&rendered), &(0..man.n_params)));
+            let unmasked: usize = p.ranges.iter()
+                .map(|r| statefull_in_range(&man, None, r))
+                .sum();
+            assert_eq!(unmasked, man.n_params);
+        }
+    }
+}

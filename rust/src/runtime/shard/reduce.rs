@@ -150,6 +150,80 @@ mod tests {
         }
     }
 
+    /// The split rule is ABI: these exact values are baked into every
+    /// recorded reduction shape (and the partition layouts derived
+    /// from it), so a change here is a format break, not a refactor.
+    #[test]
+    fn split_mid_reference_values() {
+        for &(len, want) in &[(0usize, 0usize), (1, 1), (2, 1), (3, 2), (4, 2),
+                              (5, 3), (6, 3), (7, 4), (8, 4), (9, 5)] {
+            assert_eq!(split_mid(len), want, "split_mid({len})");
+        }
+    }
+
+    #[test]
+    fn odd_lengths_compose_at_the_split_boundary() {
+        // odd leaf counts: the children at split_mid are still exact
+        // subtrees, so [tree(left), tree(right)] composes bit-equal
+        for len in [3usize, 5, 7, 9, 13, 27] {
+            let v = vals(len, 77 + len as u64);
+            let mid = split_mid(len);
+            let composed =
+                tree_sum_f32(&[tree_sum_f32(&v[..mid]), tree_sum_f32(&v[mid..])]);
+            assert_eq!(tree_sum_f32(&v).to_bits(), composed.to_bits(), "len {len}");
+
+            let parts: Vec<Vec<f32>> = (0..len).map(|i| vals(5, i as u64)).collect();
+            let whole = tree_sum_vecs(parts.clone());
+            let composed = tree_sum_vecs(vec![
+                tree_sum_vecs(parts[..mid].to_vec()),
+                tree_sum_vecs(parts[mid..].to_vec()),
+            ]);
+            for (a, b) in whole.iter().zip(&composed) {
+                assert_eq!(a.to_bits(), b.to_bits(), "len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_and_empty_parts_pass_through_bitwise() {
+        // length-1 inputs are returned untouched — even exotic bit
+        // patterns (negative zero, subnormals) must survive
+        for bits in [0x8000_0000u32, 0x0000_0001, 0x7f7f_ffff] {
+            let x = f32::from_bits(bits);
+            assert_eq!(tree_sum_f32(&[x]).to_bits(), bits);
+            assert_eq!(tree_sum_vecs(vec![vec![x]])[0].to_bits(), bits);
+        }
+        assert_eq!(tree_sum_f32(&[]), 0.0);
+        assert!(tree_sum_vecs(Vec::new()).is_empty());
+        assert!(tree_sum_vecs(vec![Vec::new()]).is_empty());
+    }
+
+    /// Subtree-exactness pin: a contiguous power-of-two block's sum is
+    /// bit-equal to the corresponding *node* of the full recursion —
+    /// checked against a reference evaluator that walks the tree to
+    /// the block depth, not just against the composed total.
+    #[test]
+    fn contiguous_blocks_are_exact_subtree_nodes() {
+        fn nodes_at_depth(v: &[f32], depth: usize) -> Vec<f32> {
+            if depth == 0 {
+                return vec![tree_sum_f32(v)];
+            }
+            let mid = split_mid(v.len());
+            let mut out = nodes_at_depth(&v[..mid], depth - 1);
+            out.extend(nodes_at_depth(&v[mid..], depth - 1));
+            out
+        }
+        for &(len, shards) in &[(8usize, 2usize), (16, 4), (32, 8), (64, 4), (24, 4)] {
+            let v = vals(len, 123 + len as u64 + shards as u64);
+            let node_vals = nodes_at_depth(&v, shards.trailing_zeros() as usize);
+            let partials: Vec<f32> = v.chunks(len / shards).map(tree_sum_f32).collect();
+            assert_eq!(node_vals.len(), partials.len(), "len {len} x{shards}");
+            for (i, (a, b)) in node_vals.iter().zip(&partials).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "len {len} x{shards} node {i}");
+            }
+        }
+    }
+
     #[test]
     fn degenerate_shapes() {
         assert_eq!(tree_sum_f32(&[]), 0.0);

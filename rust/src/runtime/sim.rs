@@ -736,10 +736,12 @@ impl SimEngine {
 
 /// Apply the fused update to a packed `params‖m‖v‖loss` state vector:
 /// MaskedFrugal when a mask is given, AdamW otherwise — the reference
-/// host rules the HLO kernels are pinned to. A free function shared by
-/// the sim fused entries and
-/// [`crate::runtime::shard::ShardedBackend`]'s post-reduce update, so
-/// the sharded and unsharded update paths are literally the same code.
+/// host rules the HLO kernels are pinned to. Used by the sim fused
+/// entries; [`crate::runtime::shard::ShardedBackend`] applies the same
+/// per-element rule partition-locally through
+/// `optim::frugal::hybrid_update_range`, which both
+/// MaskedFrugal/AdamW steps and the sharded path share, so the update
+/// math cannot diverge between the paths.
 pub(crate) fn fused_step_packed(man: &Manifest, state: &[f32], mask: Option<&[f32]>,
                                 s: &StepScalars, grads: &[f32],
                                 loss: f32) -> Result<Vec<f32>> {

@@ -1,0 +1,349 @@
+//! Elastic-sharding parity: the acceptance gate for ZeRO-style
+//! partitioned optimizer state (`runtime::shard::partition`). Composes
+//! the two existing bit-exactness harnesses — `shard_parity` (N-shard
+//! == 1-shard) and `resume_parity` (straight-through == checkpointed) —
+//! into the strictly stronger claim: for every fused Table-1 method,
+//! training N-sharded to a mid-run checkpoint and resuming it at a
+//! *different* shard count M reproduces the straight-through 1-shard
+//! trajectory **bit-for-bit** — train/val losses, ρ(k), T(k), event
+//! logs, redefinition steps and the final subspace mask.
+//!
+//! Why this can hold exactly: the partition layout is the shard-count
+//! level of the same fixed split-mid tree the gradient reduction uses,
+//! so every N-shard range is a union of 2N-shard ranges (and vice
+//! versa), the per-element fused update is range-oblivious, and the
+//! checkpoint carries the packed state whole — re-slicing it on load
+//! moves bytes, never values. The partition-layout section written by
+//! `Session::resume_state` makes that re-slice checkable instead of
+//! assumed.
+//!
+//! Also pinned here (satellites of the same PR): the measured per-shard
+//! optimizer-state residency dropping ~1/N, checkpoint negative paths
+//! (truncation, corrupted/missing partition section, bad shard counts)
+//! failing with named errors instead of panics, and save→load→save
+//! byte-stability of the v2 container including the new section.
+
+use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::checkpoint;
+use adafrugal::coordinator::memory_tracker::MemoryTracker;
+use adafrugal::coordinator::method::Method;
+use adafrugal::coordinator::session::{Session, SessionOptions, SessionResult};
+use adafrugal::coordinator::task::LmTask;
+use adafrugal::model::memory;
+use adafrugal::runtime::shard;
+use adafrugal::util::json::Value;
+
+/// The shard-parity workload: `nano.b8` splits its batch evenly over
+/// every shard count in the sweep.
+fn parity_cfg(shards: usize) -> TrainConfig {
+    TrainConfig {
+        preset: "nano.b8".into(),
+        backend: "sim".into(),
+        shards,
+        steps: 60,
+        warmup_steps: 5,
+        n_eval: 20,
+        t_start: 10,
+        t_max: 40,
+        tau_low: 0.02,
+        log_every: 5,
+        val_batches: 2,
+        lr: 1e-2,
+        seed: 7,
+        ..TrainConfig::default()
+    }
+}
+
+/// Checkpoint boundary: deliberately unaligned with the eval cadence
+/// (20), T0 (10) and the log cadence (5), like `resume_parity`'s
+/// hardest case.
+const SPLIT_AT: usize = 37;
+
+fn new_session(method: Method, shards: usize) -> Session {
+    let cfg = parity_cfg(shards);
+    let engine = shard::load("sim", &cfg.artifacts_dir, &cfg.preset, &method.entries(),
+                             shards)
+        .unwrap();
+    let task = LmTask::new(&cfg, engine.manifest()).unwrap();
+    let mut s = Session::new(cfg, method.profile(), engine, Box::new(task),
+                             SessionOptions::pretraining())
+        .unwrap();
+    s.quiet = true;
+    s
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("adafrugal_elastic_{}_{}", tag,
+                                      std::process::id()))
+}
+
+/// Straight-through reference vs (first half at N shards, checkpoint,
+/// resume at M shards, second half): every observable bit-for-bit.
+fn assert_elastic_parity(label: &str, reference: &(SessionResult, Vec<f32>),
+                         first: &SessionResult, second: &SessionResult,
+                         final_mask: &[f32]) {
+    let (full, ref_mask) = reference;
+
+    // per-step trajectory: losses, rho(k), T(k)
+    assert_eq!(full.steps.len(), first.steps.len() + second.steps.len(),
+               "{label}: step-log arity");
+    for (want, got) in full.steps.iter().zip(first.steps.iter().chain(&second.steps)) {
+        assert_eq!(want.step, got.step, "{label}: step index");
+        assert_eq!(want.train_loss.to_bits(), got.train_loss.to_bits(),
+                   "{label}: train loss diverged at step {}: {} vs {}", want.step,
+                   want.train_loss, got.train_loss);
+        assert_eq!(want.rho.to_bits(), got.rho.to_bits(),
+                   "{label}: rho diverged at step {}", want.step);
+        assert_eq!(want.t_current, got.t_current,
+                   "{label}: T diverged at step {}", want.step);
+    }
+
+    // evals: val losses and tracked memory
+    assert_eq!(full.evals.len(), first.evals.len() + second.evals.len(),
+               "{label}: eval arity");
+    for (want, got) in full.evals.iter().zip(first.evals.iter().chain(&second.evals)) {
+        assert_eq!(want.step, got.step, "{label}: eval step");
+        assert_eq!(want.val_loss.to_bits(), got.val_loss.to_bits(),
+                   "{label}: val loss diverged at eval {}", want.step);
+        assert_eq!(want.memory_bytes, got.memory_bytes,
+                   "{label}: memory diverged at eval {}", want.step);
+    }
+
+    // redefinitions: exact concatenation of the two halves
+    let stitched: Vec<usize> = first
+        .redefinition_steps
+        .iter()
+        .chain(&second.redefinition_steps)
+        .copied()
+        .collect();
+    assert_eq!(full.redefinition_steps, stitched, "{label}: redefinition steps");
+
+    // events: the restored control plane carries the first half's log,
+    // so the resumed run's event log equals the straight-through one
+    assert_eq!(full.t_events, second.t_events, "{label}: T event log");
+    assert_eq!(full.control_events, second.control_events,
+               "{label}: control event log");
+    assert!(first.t_events.len() <= full.t_events.len(), "{label}");
+    assert_eq!(&full.t_events[..first.t_events.len()], &first.t_events[..],
+               "{label}: first-half events must be a prefix");
+
+    assert_eq!(full.final_train_loss.to_bits(), second.final_train_loss.to_bits(),
+               "{label}: final train loss");
+
+    // the final subspace mask, column by column
+    assert_eq!(ref_mask.len(), final_mask.len(), "{label}: mask length");
+    for (i, (a, b)) in ref_mask.iter().zip(final_mask).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label}: mask column {i}");
+    }
+}
+
+/// The headline: N-shard-train → checkpoint → M-shard-resume is
+/// bit-identical to the straight-through run for every fused Table-1
+/// method and every power-of-two N → M reshard in {1, 2, 4}, N ≠ M.
+/// (GaLore/BAdam keep host optimizer state the fused checkpoint cannot
+/// carry — their exclusion is pinned below.)
+#[test]
+fn elastic_resume_is_bit_identical_for_every_fused_method() {
+    for &m in Method::table_roster().iter().filter(|m| m.is_fused()) {
+        // straight-through 1-shard reference
+        let mut s = new_session(m, 1);
+        let full = s.run_range(0, parity_cfg(1).steps).unwrap();
+        let reference = (full, s.mask_render());
+
+        for n in [1usize, 2, 4] {
+            // first half at N shards, then a resume checkpoint
+            let dir = tmp_dir(&format!("{}_{n}", m.id()));
+            let path = dir.join("resume.ckpt");
+            let mut s1 = new_session(m, n);
+            let first = s1.run_range(0, SPLIT_AT).unwrap();
+            let (header, data) = s1.resume_state(SPLIT_AT).unwrap();
+            checkpoint::save(&path, &header, &data).unwrap();
+            drop(s1); // the resumed runs must depend on the file alone
+
+            let ck = checkpoint::load(&path).unwrap();
+            assert_eq!(ck.header.get("kind").unwrap().as_str().unwrap(), "resume");
+            // the layout section records the writer's shard count
+            let part = ck.header.get("partition").unwrap();
+            assert_eq!(part.get("shards").unwrap().as_usize().unwrap(), n);
+
+            for m_shards in [1usize, 2, 4] {
+                if m_shards == n {
+                    continue; // same-count resume is resume_parity's job
+                }
+                let mut s2 = new_session(m, m_shards);
+                let next = s2.restore_resume(&ck.header, &ck.data).unwrap();
+                assert_eq!(next, SPLIT_AT, "checkpoint must remember its boundary");
+                let second = s2.run_range(SPLIT_AT, parity_cfg(m_shards).steps).unwrap();
+                let mask = s2.mask_render();
+                assert_elastic_parity(&format!("{} {n}→{m_shards}", m.id()),
+                                      &reference, &first, &second, &mask);
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+/// The memory side of the acceptance bar: at N = 4 the *measured*
+/// per-shard optimizer-state residency (`SyncTraffic::owned_state_bytes`)
+/// is ≤ ~1/4 of the unsharded state, and it matches what
+/// `MemoryTracker::shard_bytes` models from the real partition layout.
+#[test]
+fn four_shard_owned_state_is_a_quarter_of_unsharded() {
+    // AdamW: every element is state-full, so the quarter is exact
+    let mut s4 = new_session(Method::AdamW, 4);
+    let man = s4.manifest().clone();
+    assert_eq!(man.n_params % 4, 0, "precondition: equal quarters");
+    let r4 = s4.run_range(0, parity_cfg(4).steps).unwrap();
+    let sync = r4.sync.expect("sharded run must report sync stats");
+    let rho = parity_cfg(1).rho;
+    let model = Method::AdamW.memory_model();
+    let sb1 = MemoryTracker::shard_bytes(&man, model, None, rho, 1);
+    let sb4 = MemoryTracker::shard_bytes(&man, model, None, rho, 4);
+    assert_eq!(sync.owned_state_bytes, sb4.sharded,
+               "measured residency must equal the modeled largest owned range");
+    assert_eq!(4 * sb4.sharded, sb1.sharded, "AdamW quarters exactly");
+    // the replicated-param floor is what sharding can never remove
+    assert_eq!(sb4.replicated, 4 * man.n_params);
+
+    // FRUGAL (static ρ): the owned slice prices only the masked-in
+    // columns that land in the shard's range. Column-strided masks
+    // spread near-uniformly over contiguous ranges, so the peak owned
+    // slice stays within one column-stride of active elements of a
+    // perfect quarter — and well under the unsharded state.
+    let mut f4 = new_session(Method::FrugalStatic, 4);
+    let rf = f4.run_range(0, parity_cfg(4).steps).unwrap();
+    let fsync = rf.sync.expect("sharded run must report sync stats");
+    let mask = f4.mask_render();
+    let fsb1 = MemoryTracker::shard_bytes(&man, Method::FrugalStatic.memory_model(),
+                                          Some(&mask), rho, 1);
+    let slack: usize = man.params.iter()
+        .map(|p| p.cols() * memory::BYTES_PER_STATE_ELEM)
+        .sum();
+    assert!(fsync.owned_state_bytes > 0, "frugal shards must own some state");
+    assert!(fsync.owned_state_bytes <= fsb1.sharded / 4 + slack,
+            "frugal owned residency {} exceeds quarter {} + slack {}",
+            fsync.owned_state_bytes, fsb1.sharded / 4, slack);
+    // and the frugal slice never exceeds the AdamW slice of the same range
+    assert!(fsync.owned_state_bytes <= sb4.sharded);
+}
+
+/// Table-1 coverage note, pinned: the two host-path methods cannot
+/// write a fused resume snapshot at all — the refusal is a named error,
+/// so elastic parity over the five fused methods is the whole roster
+/// that *can* checkpoint.
+#[test]
+fn host_path_methods_refuse_resume_snapshots_by_name() {
+    for m in [Method::GaLore, Method::BAdam] {
+        let mut s = new_session(m, 1);
+        s.run_range(0, 2).unwrap();
+        let err = format!("{:#}", s.resume_state(2).unwrap_err());
+        assert!(err.contains("host optimizer"), "{}: {err}", m.id());
+    }
+}
+
+#[test]
+fn truncated_checkpoints_fail_loudly_not_silently() {
+    let dir = tmp_dir("trunc");
+    let path = dir.join("resume.ckpt");
+    let mut s = new_session(Method::AdaFrugalCombined, 2);
+    s.run_range(0, SPLIT_AT).unwrap();
+    let (header, data) = s.resume_state(SPLIT_AT).unwrap();
+    checkpoint::save(&path, &header, &data).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let tpath = dir.join("cut.ckpt");
+    // every strict prefix must fail to load — header cuts, payload
+    // cuts, and the last-byte cut — never panic, never truncate
+    for cut in [0usize, 3, 8, 17, bytes.len() / 2, bytes.len() - 1] {
+        std::fs::write(&tpath, &bytes[..cut]).unwrap();
+        assert!(checkpoint::load(&tpath).is_err(), "prefix of {cut} bytes loaded");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupted_or_missing_partition_section_is_a_named_error() {
+    let dir = tmp_dir("corrupt");
+    let path = dir.join("resume.ckpt");
+    let mut s = new_session(Method::AdaFrugalCombined, 4);
+    s.run_range(0, SPLIT_AT).unwrap();
+    let (header, data) = s.resume_state(SPLIT_AT).unwrap();
+    checkpoint::save(&path, &header, &data).unwrap();
+    let ck = checkpoint::load(&path).unwrap();
+
+    // missing section: pre-elastic snapshots must be named, not panic
+    let mut no_part = ck.header.clone();
+    if let Value::Obj(m) = &mut no_part {
+        m.remove("partition").expect("section must exist to remove");
+    }
+    let mut s2 = new_session(Method::AdaFrugalCombined, 2);
+    let err = format!("{:#}", s2.restore_resume(&no_part, &ck.data).unwrap_err());
+    assert!(err.contains("partition-layout"), "{err}");
+
+    // corrupted ranges: recorded layout disagrees with the canonical
+    // split tree for its own (len, shards)
+    let mut bad_ranges = ck.header.clone();
+    if let Value::Obj(m) = &mut bad_ranges {
+        if let Some(Value::Obj(pm)) = m.get_mut("partition") {
+            let n = pm.get("len").unwrap().as_usize().unwrap();
+            pm.insert("ranges".into(),
+                      adafrugal::util::json::arr(vec![adafrugal::util::json::arr(vec![
+                          adafrugal::util::json::num(0.0),
+                          adafrugal::util::json::num(n as f64),
+                      ])]));
+        }
+    }
+    let mut s3 = new_session(Method::AdaFrugalCombined, 2);
+    let err = format!("{:#}", s3.restore_resume(&bad_ranges, &ck.data).unwrap_err());
+    assert!(err.contains("partition") && err.contains("corrupted"), "{err}");
+
+    // non-power-of-two shard count inside the section
+    let mut bad_count = ck.header.clone();
+    if let Value::Obj(m) = &mut bad_count {
+        if let Some(Value::Obj(pm)) = m.get_mut("partition") {
+            pm.insert("shards".into(), adafrugal::util::json::num(3.0));
+        }
+    }
+    let mut s4 = new_session(Method::AdaFrugalCombined, 2);
+    let err = format!("{:#}", s4.restore_resume(&bad_count, &ck.data).unwrap_err());
+    assert!(err.contains("power of two"), "{err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bad_shard_counts_on_resume_are_named_errors() {
+    // --shards 3: rejected before any backend is built
+    let err = format!("{:#}", shard::resolve(3).unwrap_err());
+    assert!(err.contains("power of two"), "{err}");
+    // --shards 16 on nano.b8: batch 8 cannot split 16 ways; the session
+    // names the divisibility problem instead of failing mid-run
+    let cfg = parity_cfg(16);
+    let engine = shard::load("sim", &cfg.artifacts_dir, &cfg.preset,
+                             &Method::AdamW.entries(), 16)
+        .unwrap();
+    let task = LmTask::new(&cfg, engine.manifest()).unwrap();
+    let err = Session::new(cfg, Method::AdamW.profile(), engine, Box::new(task),
+                           SessionOptions::pretraining());
+    let msg = format!("{:#}", err.err().expect("construction must fail"));
+    assert!(msg.contains("divisible"), "{msg}");
+}
+
+/// The v2 container (now including the partition-layout section) is
+/// byte-stable: save → load → save reproduces the identical file, so
+/// re-saving a restored checkpoint cannot drift.
+#[test]
+fn save_load_save_roundtrips_byte_identically() {
+    let dir = tmp_dir("roundtrip");
+    let a = dir.join("a.ckpt");
+    let b = dir.join("b.ckpt");
+    let mut s = new_session(Method::AdaFrugalCombined, 4);
+    s.run_range(0, SPLIT_AT).unwrap();
+    let (header, data) = s.resume_state(SPLIT_AT).unwrap();
+    checkpoint::save(&a, &header, &data).unwrap();
+    let ck = checkpoint::load(&a).unwrap();
+    assert!(ck.header.opt("partition").is_some(), "v2 resume carries the layout");
+    checkpoint::save(&b, &ck.header, &ck.data).unwrap();
+    let (ba, bb) = (std::fs::read(&a).unwrap(), std::fs::read(&b).unwrap());
+    assert_eq!(ba, bb, "save→load→save must be byte-identical");
+    std::fs::remove_dir_all(&dir).ok();
+}
