@@ -23,7 +23,7 @@ use super::signsgd::sign;
 use super::{MaskCtx, Optimizer, StateMgmt, StepScalars};
 use crate::projection::SubspaceMask;
 use crate::runtime::manifest::{Manifest, ParamSpec};
-use crate::util::par;
+use crate::util::{lanes, par};
 
 /// Per-element FRUGAL update given the column's mask bit; single source
 /// of truth shared by both backends (and mirrored by kernels/ref.py).
@@ -46,6 +46,92 @@ fn hybrid_update(p: &mut f32, g: f32, m: &mut f32, v: &mut f32, on: bool,
     }
 }
 
+/// Lane width for the slice kernels below (`util::lanes` docs explain
+/// why lane evaluation is bit-exact by construction).
+const LANES: usize = lanes::WIDTH;
+
+/// Lane-wide hybrid update over a slice whose every element is
+/// state-full — the fused AdamW rule. Bit-identical to calling
+/// [`hybrid_update`] with `on = true` per element: the arithmetic per
+/// element is the same expression tree and nothing crosses lanes
+/// (pinned by `slice_kernels_bit_equal_per_element`). The fixed-width
+/// inner loop is branch-free so LLVM auto-vectorizes it.
+fn hybrid_update_slice_on(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32],
+                          s: &StepScalars) {
+    let n = p.len() - p.len() % LANES;
+    for ((pc, gc), (mc, vc)) in p[..n]
+        .chunks_exact_mut(LANES)
+        .zip(g[..n].chunks_exact(LANES))
+        .zip(m[..n].chunks_exact_mut(LANES).zip(v[..n].chunks_exact_mut(LANES)))
+    {
+        for i in 0..LANES {
+            let m_new = s.beta1 * mc[i] + (1.0 - s.beta1) * gc[i];
+            let v_new = s.beta2 * vc[i] + (1.0 - s.beta2) * gc[i] * gc[i];
+            let mhat = m_new / s.bc1;
+            let vhat = v_new / s.bc2;
+            pc[i] -= s.lr_full * mhat / (vhat.sqrt() + s.eps) + s.lr_full * s.wd * pc[i];
+            mc[i] = m_new;
+            vc[i] = v_new;
+        }
+    }
+    for i in n..p.len() {
+        hybrid_update(&mut p[i], g[i], &mut m[i], &mut v[i], true, s);
+    }
+}
+
+/// Lane-wide hybrid update over a slice that lies inside ONE row of a
+/// maskable param: `mask_row[i]` is the rendered mask bit for element
+/// `i`'s column. Both the on-path and off-path results are computed
+/// per lane and selected branchlessly — each lane still evaluates
+/// exactly the scalar [`hybrid_update`] expressions for its own branch
+/// (the discarded branch's values are never observable; `sqrt` of a
+/// dead lane is a value, not a trap), so the result is bit-identical
+/// to the per-element loop.
+fn hybrid_update_slice_masked(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32],
+                              mask_row: &[f32], s: &StepScalars) {
+    debug_assert_eq!(p.len(), mask_row.len());
+    let n = p.len() - p.len() % LANES;
+    for (((pc, gc), (mc, vc)), kc) in p[..n]
+        .chunks_exact_mut(LANES)
+        .zip(g[..n].chunks_exact(LANES))
+        .zip(m[..n].chunks_exact_mut(LANES).zip(v[..n].chunks_exact_mut(LANES)))
+        .zip(mask_row[..n].chunks_exact(LANES))
+    {
+        for i in 0..LANES {
+            let on = kc[i] != 0.0;
+            let m_new = s.beta1 * mc[i] + (1.0 - s.beta1) * gc[i];
+            let v_new = s.beta2 * vc[i] + (1.0 - s.beta2) * gc[i] * gc[i];
+            let mhat = m_new / s.bc1;
+            let vhat = v_new / s.bc2;
+            let d_on = s.lr_full * mhat / (vhat.sqrt() + s.eps) + s.lr_full * s.wd * pc[i];
+            let d_off = s.lr_free * sign(gc[i]) + s.lr_free * s.wd * pc[i];
+            pc[i] -= if on { d_on } else { d_off };
+            mc[i] = if on { m_new } else { 0.0 };
+            vc[i] = if on { v_new } else { 0.0 };
+        }
+    }
+    for i in n..p.len() {
+        hybrid_update(&mut p[i], g[i], &mut m[i], &mut v[i], mask_row[i] != 0.0, s);
+    }
+}
+
+/// Lane-wide stateless (off-path) update — what [`hybrid_update`] does
+/// with `on = false` and dead moment slots: SignSGD plus decoupled
+/// weight decay, no state written. Used by [`CompactFrugal`] for
+/// inactive blocks, where m/v genuinely do not exist.
+fn hybrid_update_slice_off(p: &mut [f32], g: &[f32], s: &StepScalars) {
+    let n = p.len() - p.len() % LANES;
+    for (pc, gc) in p[..n].chunks_exact_mut(LANES).zip(g[..n].chunks_exact(LANES)) {
+        for i in 0..LANES {
+            pc[i] -= s.lr_free * sign(gc[i]) + s.lr_free * s.wd * pc[i];
+        }
+    }
+    for i in n..p.len() {
+        let (mut dead_m, mut dead_v) = (0.0, 0.0);
+        hybrid_update(&mut p[i], g[i], &mut dead_m, &mut dead_v, false, s);
+    }
+}
+
 /// Apply the hybrid update to the contiguous global-index window
 /// `[lo, lo + p.len())` of the flat parameter vector, where `p`, `g`,
 /// `m`, `v` are the window's slices. `mask_cols: None` treats every
@@ -56,6 +142,10 @@ fn hybrid_update(p: &mut f32, g: f32, m: &mut f32, v: &mut f32, on: bool,
 /// byte-for-byte the [`MaskedFrugal::step`]/`AdamW::step` expressions
 /// and no element is visited twice, any tiling of `[0, n)` into
 /// windows produces bit-identical parameters to the unsharded step.
+///
+/// Internally the window is walked row-segment by row-segment so each
+/// segment sees one contiguous slice of the rendered mask row and runs
+/// through the lane-wide slice kernels above.
 pub(crate) fn hybrid_update_range(man: &Manifest, lo: usize, p: &mut [f32], g: &[f32],
                                   m: &mut [f32], v: &mut [f32],
                                   mask_cols: Option<&[f32]>, s: &StepScalars) {
@@ -66,16 +156,27 @@ pub(crate) fn hybrid_update_range(man: &Manifest, lo: usize, p: &mut [f32], g: &
         if s_lo >= s_hi {
             continue;
         }
-        let cols = spec.cols();
-        for gi in s_lo..s_hi {
-            let on = match mask_cols {
-                Some(mc) if spec.maskable => {
-                    mc[spec.mask_offset + ((gi - spec.offset) % cols)] != 0.0
+        match mask_cols {
+            Some(mc) if spec.maskable => {
+                let cols = spec.cols();
+                let mrow = &mc[spec.mask_offset..spec.mask_offset + cols];
+                // walk row segments: [gi, end) never crosses a row
+                // boundary, so its mask bits are mrow[c0..c0+len]
+                let mut gi = s_lo;
+                while gi < s_hi {
+                    let c0 = (gi - spec.offset) % cols;
+                    let end = (gi + (cols - c0)).min(s_hi);
+                    let (la, lb) = (gi - lo, end - lo);
+                    hybrid_update_slice_masked(&mut p[la..lb], &g[la..lb], &mut m[la..lb],
+                                               &mut v[la..lb], &mrow[c0..c0 + (end - gi)], s);
+                    gi = end;
                 }
-                _ => true,
-            };
-            let li = gi - lo;
-            hybrid_update(&mut p[li], g[li], &mut m[li], &mut v[li], on, s);
+            }
+            _ => {
+                let (la, lb) = (s_lo - lo, s_hi - lo);
+                hybrid_update_slice_on(&mut p[la..lb], &g[la..lb], &mut m[la..lb],
+                                       &mut v[la..lb], s);
+            }
         }
     }
 }
@@ -118,15 +219,9 @@ impl MaskedFrugal {
             jobs.push((spec, p, g, m, v));
         }
         par::run_for(man.n_params, jobs, |(spec, p, g, m, v)| {
-            let cols = spec.cols();
-            for i in 0..spec.size {
-                let on = if spec.maskable {
-                    mask_cols[spec.mask_offset + (i % cols)] != 0.0
-                } else {
-                    true
-                };
-                hybrid_update(&mut p[i], g[i], &mut m[i], &mut v[i], on, s);
-            }
+            // the spec's window only intersects the spec itself, so
+            // this is exactly the old per-spec loop, lane-wide
+            hybrid_update_range(man, spec.offset, p, g, m, v, Some(mask_cols), s);
         });
     }
 
@@ -283,9 +378,7 @@ impl CompactFrugal {
         par::run_for(man.n_params, jobs, |job| match job {
             // always-state-full params
             CompactJob::Full { p, g, m, v } => {
-                for i in 0..p.len() {
-                    hybrid_update(&mut p[i], g[i], &mut m[i], &mut v[i], true, s);
-                }
+                hybrid_update_slice_on(p, g, m, v, s);
             }
             // maskable params: active blocks via compact storage,
             // inactive via stateless SignSGD
@@ -299,23 +392,18 @@ impl CompactFrugal {
                             .entry(b)
                             .or_insert_with(|| (vec![0.0; rows * bs], vec![0.0; rows * bs]));
                         for r in 0..rows {
-                            for c in 0..bs {
-                                let idx = r * cols + c0 + c;
-                                let si = r * bs + c;
-                                hybrid_update(&mut p[idx], g[idx], &mut m[si], &mut v[si],
-                                              true, s);
-                            }
+                            let idx = r * cols + c0;
+                            let si = r * bs;
+                            hybrid_update_slice_on(&mut p[idx..idx + bs], &g[idx..idx + bs],
+                                                   &mut m[si..si + bs], &mut v[si..si + bs],
+                                                   s);
                         }
                     } else {
                         bm.remove(&b);
-                        let mut dead_m = 0.0;
-                        let mut dead_v = 0.0;
                         for r in 0..rows {
-                            for c in 0..bs {
-                                let idx = r * cols + c0 + c;
-                                hybrid_update(&mut p[idx], g[idx], &mut dead_m, &mut dead_v,
-                                              false, s);
-                            }
+                            let idx = r * cols + c0;
+                            hybrid_update_slice_off(&mut p[idx..idx + bs], &g[idx..idx + bs],
+                                                    s);
                         }
                     }
                 }
@@ -472,6 +560,68 @@ mod tests {
                 true
             },
         );
+    }
+
+    #[test]
+    fn slice_kernels_bit_equal_per_element() {
+        // the vectorized leaf kernels must reproduce the scalar
+        // hybrid_update expressions to the last bit at every
+        // lane-remainder length (empty, sub-width, exact multiples,
+        // and every tail in between), for all three path mixes
+        for len in 0..2 * LANES {
+            for seed in 0..4u64 {
+                let mut rng = Rng::new(seed * 1000 + len as u64);
+                let s = scal(1 + (seed as usize % 5));
+                let p0: Vec<f32> = (0..len).map(|_| rng.normal_f32(1.0)).collect();
+                let g: Vec<f32> = (0..len)
+                    .map(|i| if i % 7 == 0 { 0.0 } else { rng.normal_f32(2.0) })
+                    .collect();
+                let m0: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.1)).collect();
+                let v0: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.1).abs()).collect();
+                let mask: Vec<f32> =
+                    (0..len).map(|_| if rng.below(2) == 0 { 0.0 } else { 1.0 }).collect();
+
+                // all-on kernel vs per-element on=true
+                let (mut p, mut m, mut v) = (p0.clone(), m0.clone(), v0.clone());
+                hybrid_update_slice_on(&mut p, &g, &mut m, &mut v, &s);
+                let (mut pr, mut mr, mut vr) = (p0.clone(), m0.clone(), v0.clone());
+                for i in 0..len {
+                    hybrid_update(&mut pr[i], g[i], &mut mr[i], &mut vr[i], true, &s);
+                }
+                assert_bits_eq(&p, &pr, "on.p", len, seed);
+                assert_bits_eq(&m, &mr, "on.m", len, seed);
+                assert_bits_eq(&v, &vr, "on.v", len, seed);
+
+                // masked kernel vs per-element with the mask bit
+                let (mut p, mut m, mut v) = (p0.clone(), m0.clone(), v0.clone());
+                hybrid_update_slice_masked(&mut p, &g, &mut m, &mut v, &mask, &s);
+                let (mut pr, mut mr, mut vr) = (p0.clone(), m0.clone(), v0.clone());
+                for i in 0..len {
+                    hybrid_update(&mut pr[i], g[i], &mut mr[i], &mut vr[i],
+                                  mask[i] != 0.0, &s);
+                }
+                assert_bits_eq(&p, &pr, "masked.p", len, seed);
+                assert_bits_eq(&m, &mr, "masked.m", len, seed);
+                assert_bits_eq(&v, &vr, "masked.v", len, seed);
+
+                // all-off kernel vs per-element on=false (dead moments)
+                let mut p = p0.clone();
+                hybrid_update_slice_off(&mut p, &g, &s);
+                let mut pr = p0.clone();
+                for i in 0..len {
+                    let (mut dm, mut dv) = (0.0, 0.0);
+                    hybrid_update(&mut pr[i], g[i], &mut dm, &mut dv, false, &s);
+                }
+                assert_bits_eq(&p, &pr, "off.p", len, seed);
+            }
+        }
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str, len: usize, seed: u64) {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "{what} len={len} seed={seed} i={i}: {x} != {y}");
+        }
     }
 
     #[test]

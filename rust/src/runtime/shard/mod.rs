@@ -201,7 +201,7 @@ enum LabelSlice<'a> {
 /// raw partial (written into its own `out` slot, so the fan-out needs
 /// no synchronization beyond the scope join).
 struct ShardJob<'a> {
-    engine: &'a Mutex<Box<dyn ExecBackend>>,
+    worker: &'a Mutex<ShardWorker>,
     out: &'a mut Option<Result<Vec<f32>>>,
     params: &'a [f32],
     tokens: &'a [i32],
@@ -209,11 +209,22 @@ struct ShardJob<'a> {
     labels: Option<LabelSlice<'a>>,
 }
 
+/// One shard's engine plus its persistent upload slots: the replicated
+/// params and the shard's sub-batch have the same shape every step, so
+/// `upload_*_into` rewrites the same buffers in place instead of
+/// allocating three fresh ones per shard per step.
+struct ShardWorker {
+    engine: Box<dyn ExecBackend>,
+    params: Option<Buffer>,
+    tokens: Option<Buffer>,
+    labels: Option<Buffer>,
+}
+
 /// Data-parallel [`ExecBackend`] over `N` inner backends. See the
 /// module docs for the execution and synchronization model.
 pub struct ShardedBackend {
     manifest: Manifest,
-    shards: Vec<Mutex<Box<dyn ExecBackend>>>,
+    shards: Vec<Mutex<ShardWorker>>,
     /// which contiguous slice of the packed state each shard owns
     partition: Partition,
     reduces: AtomicUsize,
@@ -246,7 +257,13 @@ impl ShardedBackend {
             .context("building the optimizer-state partition")?;
         Ok(ShardedBackend {
             manifest: man,
-            shards: inners.into_iter().map(Mutex::new).collect(),
+            shards: inners
+                .into_iter()
+                .map(|engine| {
+                    Mutex::new(ShardWorker { engine, params: None, tokens: None,
+                                             labels: None })
+                })
+                .collect(),
             partition,
             reduces: AtomicUsize::new(0),
             state_bytes: AtomicUsize::new(0),
@@ -259,7 +276,7 @@ impl ShardedBackend {
         self.shards.len()
     }
 
-    fn lock(&self, i: usize) -> std::sync::MutexGuard<'_, Box<dyn ExecBackend>> {
+    fn lock(&self, i: usize) -> std::sync::MutexGuard<'_, ShardWorker> {
         self.shards[i].lock().unwrap_or_else(|p| p.into_inner())
     }
 
@@ -305,7 +322,8 @@ impl ShardedBackend {
     /// native buffers; the output is read back into this backend's
     /// host-buffer domain.
     fn delegate(&self, entry: &str, args: &[&Buffer]) -> Result<Buffer> {
-        let eng = self.lock(0);
+        let w = self.lock(0);
+        let eng = &w.engine;
         let mut owned: Vec<Buffer> = Vec::with_capacity(args.len());
         for a in args {
             owned.push(match a {
@@ -360,8 +378,8 @@ impl ShardedBackend {
             .iter()
             .zip(outs.iter_mut())
             .enumerate()
-            .map(|(i, (engine, out))| ShardJob {
-                engine,
+            .map(|(i, (worker, out))| ShardJob {
+                worker,
                 out,
                 params: &params[..n],
                 tokens: &tokens[i * per * width..(i + 1) * per * width],
@@ -376,7 +394,7 @@ impl ShardedBackend {
         // reduce below runs after the scope join, on this thread, in
         // shard order — so thread scheduling cannot reorder anything
         par::run(jobs, |job| {
-            *job.out = Some(run_shard(job.engine, job.params, job.tokens,
+            *job.out = Some(run_shard(job.worker, job.params, job.tokens,
                                       &job.token_dims, job.labels.as_ref()));
         });
 
@@ -478,25 +496,34 @@ impl ShardedBackend {
     }
 }
 
-/// One shard's half of the fan-out: upload the replicated params and
-/// the shard's row block into the inner backend, run `grad_part`, and
-/// read the raw partial back.
-fn run_shard(engine: &Mutex<Box<dyn ExecBackend>>, params: &[f32], tokens: &[i32],
+/// One shard's half of the fan-out: rewrite the worker's persistent
+/// upload slots with the replicated params and the shard's row block
+/// (same shapes every step, so after the first step this allocates
+/// nothing), run `grad_part`, and read the raw partial back.
+fn run_shard(worker: &Mutex<ShardWorker>, params: &[f32], tokens: &[i32],
              token_dims: &[usize; 2], labels: Option<&LabelSlice>) -> Result<Vec<f32>> {
-    let eng = engine.lock().unwrap_or_else(|p| p.into_inner());
-    let pbuf = eng.upload_f32(params, &[params.len()])?;
-    let tbuf = eng.upload_i32(tokens, token_dims)?;
-    let lbuf = match labels {
-        None => None,
-        Some(LabelSlice::I(v)) => Some(eng.upload_i32(v, &[v.len()])?),
-        Some(LabelSlice::F(v)) => Some(eng.upload_f32(v, &[v.len()])?),
-    };
-    let mut args: Vec<&Buffer> = vec![&pbuf, &tbuf];
-    if let Some(l) = &lbuf {
+    let mut w = worker.lock().unwrap_or_else(|p| p.into_inner());
+    let w = &mut *w;
+    w.engine.upload_f32_into(&mut w.params, params, &[params.len()])?;
+    w.engine.upload_i32_into(&mut w.tokens, tokens, token_dims)?;
+    match labels {
+        None => w.labels = None,
+        Some(LabelSlice::I(v)) => {
+            w.engine.upload_i32_into(&mut w.labels, v, &[v.len()])?;
+        }
+        Some(LabelSlice::F(v)) => {
+            w.engine.upload_f32_into(&mut w.labels, v, &[v.len()])?;
+        }
+    }
+    let mut args: Vec<&Buffer> = vec![
+        w.params.as_ref().expect("params slot filled"),
+        w.tokens.as_ref().expect("tokens slot filled"),
+    ];
+    if let Some(l) = w.labels.as_ref() {
         args.push(l);
     }
-    let out = eng.run("grad_part", &args)?;
-    eng.read_all_f32(&out)
+    let out = w.engine.run("grad_part", &args)?;
+    w.engine.read_all_f32(&out)
 }
 
 impl ExecBackend for ShardedBackend {
@@ -505,7 +532,7 @@ impl ExecBackend for ShardedBackend {
     }
 
     fn has_entry(&self, entry: &str) -> bool {
-        self.lock(0).has_entry(entry)
+        self.lock(0).engine.has_entry(entry)
     }
 
     fn shard_count(&self) -> usize {

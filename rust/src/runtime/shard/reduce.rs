@@ -34,6 +34,8 @@
 //! here so the sharded and unsharded paths cannot diverge in the final
 //! ops either.
 
+use crate::util::{lanes, par};
+
 /// The single definition of the tree's split point: the left child of
 /// a node over `len` leaves covers the first `ceil(len/2)`. Everything
 /// that walks the tree — [`tree_sum_vecs`], [`tree_sum_f32`], and the
@@ -43,9 +45,43 @@ pub fn split_mid(len: usize) -> usize {
     (len + 1) / 2
 }
 
+/// The frontier of the [`split_mid`] tree over `len` leaves after
+/// `levels` binary splits: contiguous leaf ranges, in leaf order, each
+/// of which is an exact subtree of the full recursion. Reducing each
+/// range independently and then reducing the partials *as a list* (the
+/// same recursion, over `frontier.len()` leaves) reproduces the full
+/// tree bit-for-bit — the partials are literally the tree's depth-
+/// `levels` node values, and the recursion over them replays the upper
+/// levels. This is what lets [`tree_sum_vecs`] fan subtrees out to
+/// worker threads (and the sim engine fan its per-window gradient tree
+/// out across the batch) without touching the reduction order.
+pub fn subtree_frontier(len: usize, levels: usize) -> Vec<std::ops::Range<usize>> {
+    fn rec(lo: usize, hi: usize, levels: usize, out: &mut Vec<std::ops::Range<usize>>) {
+        if levels == 0 || hi - lo <= 1 {
+            out.push(lo..hi);
+            return;
+        }
+        let mid = lo + split_mid(hi - lo);
+        rec(lo, mid, levels - 1, out);
+        rec(mid, hi, levels - 1, out);
+    }
+    let mut out = Vec::new();
+    if len > 0 {
+        rec(0, len, levels, &mut out);
+    }
+    out
+}
+
 /// Element-wise tree-sum of equally-sized vectors, consuming `parts`
 /// in order (splits per [`split_mid`]). Returns an empty vector for no
 /// parts.
+///
+/// Large reductions fan the depth-`levels` subtrees out to worker
+/// threads; each worker reduces its contiguous block serially and the
+/// partials are combined on the calling thread, in order, with the
+/// same recursion — so the result is bit-identical to the serial walk
+/// on every thread count (see [`subtree_frontier`]; pinned by
+/// `parallel_tree_sum_is_bit_identical_to_serial`).
 pub fn tree_sum_vecs(mut parts: Vec<Vec<f32>>) -> Vec<f32> {
     fn rec(parts: &mut [Vec<f32>]) -> Vec<f32> {
         if parts.len() == 1 {
@@ -56,13 +92,36 @@ pub fn tree_sum_vecs(mut parts: Vec<Vec<f32>>) -> Vec<f32> {
         let mut left = rec(lo);
         let right = rec(hi);
         debug_assert_eq!(left.len(), right.len(), "tree_sum_vecs: ragged parts");
-        for (x, y) in left.iter_mut().zip(&right) {
-            *x += *y;
-        }
+        lanes::add_assign(&mut left, &right);
         left
     }
     if parts.is_empty() {
         return Vec::new();
+    }
+    let dim = parts[0].len();
+    let k = parts.len();
+    // fan out only when each worker gets >= 2 parts AND the add work
+    // ((k-1) * dim element-adds) clears the scoped-thread threshold
+    let workers = par::threads().min(k / 2).max(1);
+    if workers > 1 && (k - 1) * dim >= 2 * par::MIN_ELEMS_PER_THREAD {
+        let levels = usize::BITS as usize - 1 - workers.leading_zeros() as usize;
+        let ranges = subtree_frontier(k, levels);
+        if ranges.len() > 1 {
+            let mut slots: Vec<Option<Vec<f32>>> = Vec::new();
+            slots.resize_with(ranges.len(), || None);
+            let mut jobs: Vec<(&mut Option<Vec<f32>>, &mut [Vec<f32>])> =
+                Vec::with_capacity(ranges.len());
+            let mut rest = &mut parts[..];
+            for (slot, r) in slots.iter_mut().zip(&ranges) {
+                let (chunk, rr) = rest.split_at_mut(r.end - r.start);
+                rest = rr;
+                jobs.push((slot, chunk));
+            }
+            par::run(jobs, |(slot, chunk)| *slot = Some(rec(chunk)));
+            let mut partials: Vec<Vec<f32>> =
+                slots.into_iter().map(|s| s.expect("subtree partial")).collect();
+            return rec(&mut partials);
+        }
     }
     rec(&mut parts)
 }
@@ -93,9 +152,7 @@ pub const MAX_F32_EXACT_COUNT: usize = 1 << 24;
 /// identical on every path.
 pub fn normalize(grads: &mut [f32], count: usize) {
     let inv = 1.0 / count.max(1) as f32;
-    for g in grads.iter_mut() {
-        *g *= inv;
-    }
+    lanes::scale(grads, inv);
 }
 
 /// Fold a tree-summed f32 loss total into the mean loss the packed
@@ -222,6 +279,75 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "len {len} x{shards} node {i}");
             }
         }
+    }
+
+    /// The fan-out contract: the depth-l frontier covers [0, len) in
+    /// order with contiguous ranges, and reducing the per-range
+    /// subtrees then the partials-as-a-list equals the full tree
+    /// bitwise — for every length, including odd and non-power-of-two.
+    #[test]
+    fn subtree_frontier_composes_bit_exactly() {
+        for len in [1usize, 2, 3, 4, 5, 7, 8, 12, 13, 16, 27, 32, 60] {
+            for levels in 0..5 {
+                let ranges = subtree_frontier(len, levels);
+                // contiguous cover in order
+                assert_eq!(ranges.first().unwrap().start, 0);
+                assert_eq!(ranges.last().unwrap().end, len);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].end, w[1].start, "len {len} l{levels}");
+                }
+                assert_eq!(ranges.len(), (1usize << levels).min(len),
+                           "frontier size len {len} l{levels}");
+                // scalar compose check
+                let v = vals(len, 7 + len as u64 + levels as u64);
+                let partials: Vec<f32> =
+                    ranges.iter().map(|r| tree_sum_f32(&v[r.clone()])).collect();
+                assert_eq!(tree_sum_f32(&partials).to_bits(),
+                           tree_sum_f32(&v).to_bits(),
+                           "len {len} levels {levels}");
+            }
+        }
+    }
+
+    /// Serial reference walk of tree_sum_vecs (the pre-fan-out
+    /// implementation), used to pin the parallel path bit-exactly.
+    fn tree_sum_vecs_serial(parts: Vec<Vec<f32>>) -> Vec<f32> {
+        fn rec(parts: &[Vec<f32>]) -> Vec<f32> {
+            if parts.len() == 1 {
+                return parts[0].clone();
+            }
+            let mid = split_mid(parts.len());
+            let mut left = rec(&parts[..mid]);
+            let right = rec(&parts[mid..]);
+            for (x, y) in left.iter_mut().zip(&right) {
+                *x += *y;
+            }
+            left
+        }
+        if parts.is_empty() { Vec::new() } else { rec(&parts) }
+    }
+
+    #[test]
+    fn parallel_tree_sum_is_bit_identical_to_serial() {
+        use crate::util::par;
+        // dim large enough to trip the fan-out threshold at k >= 4
+        let dim = 2 * par::MIN_ELEMS_PER_THREAD;
+        let saved = par::threads();
+        for threads in [1usize, 2, 3, 4, 8] {
+            par::set_threads(threads);
+            for k in [2usize, 3, 4, 5, 7, 8, 12] {
+                let parts: Vec<Vec<f32>> =
+                    (0..k).map(|i| vals(dim, 5000 + i as u64)).collect();
+                let want = tree_sum_vecs_serial(parts.clone());
+                let got = tree_sum_vecs(parts);
+                assert_eq!(got.len(), want.len());
+                for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "threads {threads} k {k} elem {i}");
+                }
+            }
+        }
+        par::set_threads(saved);
     }
 
     #[test]

@@ -53,9 +53,10 @@ use super::backend::{Buffer, ExecBackend, HostData};
 use super::manifest::Manifest;
 use super::shard::reduce;
 use crate::optim::adamw::AdamW;
-use crate::optim::frugal::MaskedFrugal;
+use crate::optim::frugal::hybrid_update_range;
 use crate::optim::StepScalars;
 use crate::util::rng::Rng;
+use crate::util::{lanes, par, pool};
 
 /// Fixed sim-model seed: the golden trajectories depend on it.
 pub const SIM_SEED: u64 = 0x51e5_eed;
@@ -245,9 +246,7 @@ impl SimEngine {
                 }
                 let a = inv * xr;
                 let row = &params[spec.offset + r * self.cols..spec.offset + (r + 1) * self.cols];
-                for (hc, &wc) in h.iter_mut().zip(row) {
-                    *hc += a * wc;
-                }
+                lanes::axpy(h, a, row);
             }
         }
     }
@@ -263,15 +262,11 @@ impl SimEngine {
                 let a = inv * xr;
                 let row =
                     &mut grads[spec.offset + r * self.cols..spec.offset + (r + 1) * self.cols];
-                for (gc, &dc) in row.iter_mut().zip(dh) {
-                    *gc += a * dc;
-                }
+                lanes::axpy(row, a, dh);
             }
         }
         let b = &mut grads[self.bias_offset..self.bias_offset + self.cols];
-        for (gc, &dc) in b.iter_mut().zip(dh) {
-            *gc += dc;
-        }
+        lanes::add_assign(b, dh);
     }
 
     /// Mean-pooled input features of one example.
@@ -309,10 +304,11 @@ impl SimEngine {
             let x = &self.embed[t * self.rows..(t + 1) * self.rows];
             let y = &self.target[u * self.cols..(u + 1) * self.cols];
             self.head_into(params, x, h);
+            // residual via the lane kernel; the f64 loss accumulation
+            // stays a scalar loop in ascending order (order-dependent)
+            lanes::sub_into(dh, h, y);
             for c in 0..self.cols {
-                let diff = h[c] - y[c];
-                wsum += 0.5 * (diff as f64) * (diff as f64);
-                dh[c] = diff;
+                wsum += 0.5 * (dh[c] as f64) * (dh[c] as f64);
             }
             if let Some(g) = g.as_deref_mut() {
                 self.accum_grads(g, x, dh);
@@ -326,22 +322,28 @@ impl SimEngine {
     /// place, so this is bit-identical to materializing one vector per
     /// window and calling [`reduce::tree_sum_vecs`] (pinned by
     /// `lm_grad_tree_matches_materialized_parts`) while keeping peak
-    /// scratch at O(log batch) gradient vectors instead of O(batch).
+    /// scratch at O(log batch) gradient vectors instead of O(batch) —
+    /// and those come from the thread-local scratch pool, so the
+    /// steady-state step allocates nothing here. `wlosses` is the
+    /// window-loss slice for `[wbase, wbase + wlosses.len())`, so a
+    /// parallel caller can hand each subtree its own disjoint
+    /// sub-slice.
     fn lm_grad_tree(&self, params: &[f32], tokens: &[i32], sp1: usize, lo: usize,
-                    hi: usize, wlosses: &mut [f32], h: &mut [f32],
+                    hi: usize, wbase: usize, wlosses: &mut [f32], h: &mut [f32],
                     dh: &mut [f32]) -> Vec<f32> {
         if hi - lo == 1 {
-            let mut g = vec![0f32; self.manifest.n_params];
-            wlosses[lo] =
+            let mut g = pool::take_zeroed(self.manifest.n_params);
+            wlosses[lo - wbase] =
                 self.lm_window(params, tokens, sp1, lo, h, dh, Some(&mut g)) as f32;
             return g;
         }
         let mid = lo + reduce::split_mid(hi - lo);
-        let mut left = self.lm_grad_tree(params, tokens, sp1, lo, mid, wlosses, h, dh);
-        let right = self.lm_grad_tree(params, tokens, sp1, mid, hi, wlosses, h, dh);
-        for (x, y) in left.iter_mut().zip(&right) {
-            *x += *y;
-        }
+        let mut left =
+            self.lm_grad_tree(params, tokens, sp1, lo, mid, wbase, wlosses, h, dh);
+        let right =
+            self.lm_grad_tree(params, tokens, sp1, mid, hi, wbase, wlosses, h, dh);
+        lanes::add_assign(&mut left, &right);
+        pool::put(right);
         left
     }
 
@@ -355,16 +357,16 @@ impl SimEngine {
                 "token buffer len {} is not a multiple of seq+1 = {sp1}", tokens.len());
         let batch = tokens.len() / sp1;
         let count = batch * d.seq;
-        let mut h = vec![0f32; self.cols];
-        let mut dh = vec![0f32; self.cols];
         let mut wlosses = vec![0f32; batch];
         match grads.as_deref_mut() {
             Some(g) => {
-                let total = self.lm_grad_tree(params, tokens, sp1, 0, batch,
-                                              &mut wlosses, &mut h, &mut dh);
+                let total = self.lm_grad_fanout(params, tokens, sp1, batch, &mut wlosses);
                 g.copy_from_slice(&total);
+                pool::put(total);
             }
             None => {
+                let mut h = vec![0f32; self.cols];
+                let mut dh = vec![0f32; self.cols];
                 for w in 0..batch {
                     wlosses[w] =
                         self.lm_window(params, tokens, sp1, w, &mut h, &mut dh, None)
@@ -373,6 +375,51 @@ impl SimEngine {
             }
         }
         Ok((reduce::tree_sum_f32(&wlosses), count))
+    }
+
+    /// The full-batch gradient tree, fanned out across worker threads
+    /// when the pass is big enough to amortize them: the batch's
+    /// depth-`levels` [`reduce::subtree_frontier`] ranges each run
+    /// their own in-order [`SimEngine::lm_grad_tree`] (with a disjoint
+    /// `wlosses` sub-slice and private `h`/`dh` scratch), and the
+    /// per-subtree partials are combined on this thread, in leaf
+    /// order, with the same recursion — so the result is bit-identical
+    /// to the serial walk on every thread count (pinned by
+    /// `parallel_lm_fanout_is_bit_identical_to_serial`).
+    fn lm_grad_fanout(&self, params: &[f32], tokens: &[i32], sp1: usize, batch: usize,
+                      wlosses: &mut [f32]) -> Vec<f32> {
+        // per-window work ~ seq positions x (n_mats rows axpy + head)
+        let work = batch * self.manifest.model.seq * (self.n_mats * self.rows + 2)
+            * self.cols;
+        let workers = par::threads().min(batch / 2).max(1);
+        if workers > 1 && work >= 2 * par::MIN_ELEMS_PER_THREAD {
+            let levels = usize::BITS as usize - 1 - workers.leading_zeros() as usize;
+            let ranges = reduce::subtree_frontier(batch, levels);
+            if ranges.len() > 1 {
+                let mut slots: Vec<Option<Vec<f32>>> = Vec::new();
+                slots.resize_with(ranges.len(), || None);
+                let mut jobs: Vec<(std::ops::Range<usize>, &mut Option<Vec<f32>>,
+                                   &mut [f32])> = Vec::with_capacity(ranges.len());
+                let mut rest = &mut wlosses[..];
+                for (r, slot) in ranges.iter().zip(slots.iter_mut()) {
+                    let (chunk, rr) = rest.split_at_mut(r.end - r.start);
+                    rest = rr;
+                    jobs.push((r.clone(), slot, chunk));
+                }
+                par::run(jobs, |(r, slot, wl)| {
+                    let mut h = vec![0f32; self.cols];
+                    let mut dh = vec![0f32; self.cols];
+                    *slot = Some(self.lm_grad_tree(params, tokens, sp1, r.start, r.end,
+                                                   r.start, wl, &mut h, &mut dh));
+                });
+                let mut partials: Vec<Vec<f32>> =
+                    slots.into_iter().map(|s| s.expect("subtree partial")).collect();
+                return combine_pooled(&mut partials);
+            }
+        }
+        let mut h = vec![0f32; self.cols];
+        let mut dh = vec![0f32; self.cols];
+        self.lm_grad_tree(params, tokens, sp1, 0, batch, 0, wlosses, &mut h, &mut dh)
     }
 
     /// Next-token LM pass. Returns `(tree-summed loss, token count)`;
@@ -416,14 +463,18 @@ impl SimEngine {
                 out.extend_from_slice(&logits);
             }
             if grads.is_some() {
-                let mut gw = vec![0f32; self.manifest.n_params];
+                let mut gw = pool::take_zeroed(self.manifest.n_params);
                 self.backprop_readout(&dlog, 1.0, &mut dh);
                 self.accum_grads(&mut gw, &x, &dh);
                 parts.push(gw);
             }
         }
         if let Some(g) = grads.as_deref_mut() {
-            g.copy_from_slice(&reduce::tree_sum_vecs(parts));
+            // same recursion as reduce::tree_sum_vecs, but buffers go
+            // back to the scratch pool
+            let total = combine_pooled(&mut parts);
+            g.copy_from_slice(&total);
+            pool::put(total);
         }
         Ok((reduce::tree_sum_f32(&wlosses), batch))
     }
@@ -459,9 +510,7 @@ impl SimEngine {
                 continue;
             }
             let row = &self.readout[c * self.cols..(c + 1) * self.cols];
-            for (dv, &p) in dh.iter_mut().zip(row) {
-                *dv += a * p;
-            }
+            lanes::axpy(dh, a, row);
         }
     }
 
@@ -609,27 +658,31 @@ impl SimEngine {
                 let mask = args[1].host_f32()?;
                 let s = scalars_of(args[2])?;
                 let tokens = args[3].host_i32()?;
-                let mut grads = vec![0f32; n];
+                let mut grads = pool::take_zeroed(n);
                 let (sum, count) = self.lm_pass(&state[..n.min(state.len())], tokens,
                                                 Some(&mut grads))?;
                 let loss = reduce::mean_loss(sum, count);
-                Ok(self.out_f32(self.fused_step(state, Some(mask), &s, &grads, loss)?))
+                let out = self.fused_step(state, Some(mask), &s, &grads, loss)?;
+                pool::put(grads);
+                Ok(self.out_f32(out))
             }
             (true, "adamw") => {
                 arity(3)?;
                 let state = args[0].host_f32()?;
                 let s = scalars_of(args[1])?;
                 let tokens = args[2].host_i32()?;
-                let mut grads = vec![0f32; n];
+                let mut grads = pool::take_zeroed(n);
                 let (sum, count) = self.lm_pass(&state[..n.min(state.len())], tokens,
                                                 Some(&mut grads))?;
                 let loss = reduce::mean_loss(sum, count);
-                Ok(self.out_f32(self.fused_step(state, None, &s, &grads, loss)?))
+                let out = self.fused_step(state, None, &s, &grads, loss)?;
+                pool::put(grads);
+                Ok(self.out_f32(out))
             }
             (true, "scores") => {
                 arity(2)?;
                 let (params, tokens) = (args[0].host_f32()?, args[1].host_i32()?);
-                let mut grads = vec![0f32; n];
+                let mut grads = pool::take_zeroed(n);
                 self.lm_pass(params, tokens, Some(&mut grads))?;
                 // reuse the canonical block-score definition so the sim
                 // entry can never drift from the host reference
@@ -643,6 +696,7 @@ impl SimEngine {
                         scores[p.score_offset + b] = *s as f32;
                     }
                 }
+                pool::put(grads);
                 Ok(self.out_f32(scores))
             }
             (false, "grad") => {
@@ -692,10 +746,12 @@ impl SimEngine {
                 let tokens = args[base + 1].host_i32()?;
                 let labels = self.labels(args[base + 2])?;
                 ensure!(state.len() == man.state_len, "bad state len");
-                let mut grads = vec![0f32; n];
+                let mut grads = pool::take_zeroed(n);
                 let loss = self.cls_pass(&state[..n], tokens, &labels,
                                          Some(&mut grads), None)?;
-                Ok(self.out_f32(self.fused_step(state, mask, &s, &grads, loss as f32)?))
+                let out = self.fused_step(state, mask, &s, &grads, loss as f32)?;
+                pool::put(grads);
+                Ok(self.out_f32(out))
             }
             (false, "lora_adamw") => {
                 arity(5)?;
@@ -734,34 +790,70 @@ impl SimEngine {
     }
 }
 
+/// Combine per-subtree gradient partials (in leaf order) with the same
+/// list recursion as [`reduce::tree_sum_vecs`] — bit-identical to the
+/// full serial tree by the [`reduce::subtree_frontier`] contract —
+/// returning every consumed buffer to the scratch pool.
+fn combine_pooled(parts: &mut [Vec<f32>]) -> Vec<f32> {
+    if parts.len() == 1 {
+        return std::mem::take(&mut parts[0]);
+    }
+    let mid = reduce::split_mid(parts.len());
+    let (lo, hi) = parts.split_at_mut(mid);
+    let mut left = combine_pooled(lo);
+    let right = combine_pooled(hi);
+    lanes::add_assign(&mut left, &right);
+    pool::put(right);
+    left
+}
+
 /// Apply the fused update to a packed `params‖m‖v‖loss` state vector:
-/// MaskedFrugal when a mask is given, AdamW otherwise — the reference
-/// host rules the HLO kernels are pinned to. Used by the sim fused
-/// entries; [`crate::runtime::shard::ShardedBackend`] applies the same
-/// per-element rule partition-locally through
-/// `optim::frugal::hybrid_update_range`, which both
-/// MaskedFrugal/AdamW steps and the sharded path share, so the update
-/// math cannot diverge between the paths.
+/// the FRUGAL hybrid rule when a mask is given, AdamW otherwise — the
+/// reference host rules the HLO kernels are pinned to. The state is
+/// split in place and every per-spec region runs through
+/// `optim::frugal::hybrid_update_range` on its own worker — the exact
+/// kernel `MaskedFrugal::step`/`AdamW::step` and the sharded partition
+/// update reduce to (pinned by `range_kernel_tiles_to_the_unsharded_
+/// step`), so the update math cannot diverge between the paths and the
+/// step no longer copies moments in and out of a temporary optimizer.
 pub(crate) fn fused_step_packed(man: &Manifest, state: &[f32], mask: Option<&[f32]>,
                                 s: &StepScalars, grads: &[f32],
                                 loss: f32) -> Result<Vec<f32>> {
     let n = man.n_params;
     ensure!(state.len() == man.state_len, "state len {} != {}", state.len(), man.state_len);
-    let mut st = state.to_vec();
-    match mask {
-        Some(mcols) => {
-            ensure!(mcols.len() == man.mask_len,
-                    "mask len {} != {}", mcols.len(), man.mask_len);
-            let mut opt = MaskedFrugal::new(n);
-            opt.m.copy_from_slice(&st[n..2 * n]);
-            opt.v.copy_from_slice(&st[2 * n..3 * n]);
-            opt.step(man, &mut st[..n], grads, mcols, s);
-            st[n..2 * n].copy_from_slice(&opt.m);
-            st[2 * n..3 * n].copy_from_slice(&opt.v);
-            st[3 * n] = loss;
-        }
-        None => adamw_packed(&mut st, n, grads, s, loss),
+    ensure!(state.len() == 3 * n + 1, "packed state must be params‖m‖v‖loss");
+    ensure!(grads.len() >= n, "grads len {} < n_params {n}", grads.len());
+    if let Some(mcols) = mask {
+        ensure!(mcols.len() == man.mask_len,
+                "mask len {} != {}", mcols.len(), man.mask_len);
     }
+    let mut st = state.to_vec();
+    let (params, rest) = st.split_at_mut(n);
+    let (ms, rest) = rest.split_at_mut(n);
+    let (vs, tail) = rest.split_at_mut(n);
+    // one job per spec: the same disjoint carve as MaskedFrugal::step
+    // (offsets are contiguous by Manifest::validate)
+    let mut jobs: Vec<(usize, &mut [f32], &[f32], &mut [f32], &mut [f32])> =
+        Vec::with_capacity(man.params.len());
+    let mut p_rest = params;
+    let mut g_rest = &grads[..n];
+    let mut m_rest = ms;
+    let mut v_rest = vs;
+    for spec in &man.params {
+        let (p, pr) = p_rest.split_at_mut(spec.size);
+        let (g, gr) = g_rest.split_at(spec.size);
+        let (m, mr) = m_rest.split_at_mut(spec.size);
+        let (v, vr) = v_rest.split_at_mut(spec.size);
+        p_rest = pr;
+        g_rest = gr;
+        m_rest = mr;
+        v_rest = vr;
+        jobs.push((spec.offset, p, g, m, v));
+    }
+    par::run_for(n, jobs, |(off, p, g, m, v)| {
+        hybrid_update_range(man, off, p, g, m, v, mask, s);
+    });
+    tail[0] = loss;
     Ok(st)
 }
 
@@ -1073,6 +1165,32 @@ mod tests {
             let want_sum = crate::runtime::shard::reduce::tree_sum_f32(&wlosses);
             assert_eq!(sum.to_bits(), want_sum.to_bits(), "batch {batch}: loss total");
         }
+    }
+
+    #[test]
+    fn parallel_lm_fanout_is_bit_identical_to_serial() {
+        // the mid geometry clears the fan-out work threshold, so this
+        // pins the subtree fan-out (and its pooled combine) bitwise
+        // against the single-thread recursion, on several thread counts
+        let e = SimEngine::from_name("mid", &["grad"]).unwrap();
+        let man = e.manifest().clone();
+        let n = man.n_params;
+        let params = init::init_state(&man, 23)[..n].to_vec();
+        let toks = lm_tokens(&e, 29);
+        let saved = par::threads();
+        par::set_threads(1);
+        let mut want = vec![0f32; n];
+        let (want_sum, _) = e.lm_pass_raw(&params, &toks, Some(&mut want)).unwrap();
+        for threads in [2usize, 3, 4, 8] {
+            par::set_threads(threads);
+            let mut got = vec![0f32; n];
+            let (sum, _) = e.lm_pass_raw(&params, &toks, Some(&mut got)).unwrap();
+            assert_eq!(sum.to_bits(), want_sum.to_bits(), "threads {threads}: loss");
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads {threads} elem {i}");
+            }
+        }
+        par::set_threads(saved);
     }
 
     #[test]

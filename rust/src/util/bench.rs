@@ -1,10 +1,13 @@
-//! Mini-criterion: warmup + timed iterations with mean/std/percentiles.
-//! (criterion is not in the vendored registry; `cargo bench` runs these
-//! through `harness = false` bench targets.)
+//! Mini-criterion: warmup + timed iterations with mean/std/percentiles,
+//! plus the noise-aware repetition statistics and record schema used by
+//! `bench_loop` (criterion is not in the vendored registry; `cargo
+//! bench` runs these through `harness = false` bench targets.)
 
 use std::time::Instant;
 
-use super::stats;
+use anyhow::{bail, Result};
+
+use super::{json, stats};
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -51,6 +54,139 @@ pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> 
     }
 }
 
+/// Per-repetition samples of one scalar metric (steps/sec in
+/// `bench_loop`), with the noise band reported next to the median so a
+/// regression gate can tell signal from jitter. The warmup repetition
+/// must be excluded by the caller — only push measured reps.
+#[derive(Debug, Clone, Default)]
+pub struct Reps {
+    samples: Vec<f64>,
+}
+
+impl Reps {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn median(&self) -> f64 {
+        stats::percentile(&self.samples, 50.0)
+    }
+
+    pub fn min(&self) -> f64 {
+        stats::percentile(&self.samples, 0.0)
+    }
+
+    pub fn max(&self) -> f64 {
+        stats::percentile(&self.samples, 100.0)
+    }
+
+    /// Full spread relative to the median, `(max - min) / median`. A
+    /// baseline comparison is only believable when the delta exceeds
+    /// the union of both runs' bands.
+    pub fn noise_rel(&self) -> f64 {
+        let m = self.median();
+        if !(m > 0.0) {
+            return 0.0;
+        }
+        (self.max() - self.min()) / m
+    }
+}
+
+/// Number of measured repetitions for `bench_loop`, from
+/// `ADAFRUGAL_BENCH_REPS` (default 5, min 1). One extra warmup
+/// repetition always runs first and is never measured.
+pub fn loop_reps() -> usize {
+    std::env::var("ADAFRUGAL_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(5)
+        .max(1)
+}
+
+/// Keys every `bench_loop` JSON line must carry (`bench_loop/v1`).
+pub const LOOP_RECORD_KEYS: &[&str] = &[
+    "bench",
+    "backend",
+    "preset",
+    "method",
+    "steps",
+    "reps",
+    "steps_per_sec",
+    "sps_min",
+    "sps_max",
+    "noise_rel",
+    "step_time_s",
+    "wall_s_incl_eval",
+    "control_time_s",
+    "control_ns_per_step",
+    "rho_policy",
+    "t_policy",
+    "uploads_fresh",
+    "uploads_reused",
+    "uploads_per_step",
+    "upload_bytes",
+    "state_syncs",
+    "final_ppl",
+];
+
+/// Keys every `bench_loop_shards` JSON line must carry (`bench_loop/v1`).
+pub const SHARD_RECORD_KEYS: &[&str] = &[
+    "bench",
+    "backend",
+    "preset",
+    "method",
+    "shards",
+    "steps",
+    "reps",
+    "steps_per_sec",
+    "sps_min",
+    "sps_max",
+    "noise_rel",
+    "speedup_vs_1shard",
+    "sync_reduces",
+    "sync_state_bytes",
+    "sync_grad_bytes",
+    "per_shard_replicated_bytes",
+    "per_shard_state_bytes",
+    "measured_owned_state_bytes",
+    "final_ppl",
+];
+
+/// `final_ppl` for a record: a finite number or JSON `null` — never a
+/// bare NaN, which is not valid JSON.
+pub fn ppl_value(ppl: Option<f64>) -> json::Value {
+    match ppl {
+        Some(p) if p.is_finite() => json::num(p),
+        _ => json::Value::Null,
+    }
+}
+
+/// Validate one bench output line: strict JSON, object, and every
+/// required key for its `bench` kind present. Returns the parsed value.
+pub fn check_record(line: &str) -> Result<json::Value> {
+    let v = json::parse(line)?;
+    let kind = v.get("bench")?.as_str()?.to_string();
+    let required: &[&str] = match kind.as_str() {
+        "bench_loop" => LOOP_RECORD_KEYS,
+        "bench_loop_shards" => SHARD_RECORD_KEYS,
+        other => bail!("unknown bench record kind {other:?}"),
+    };
+    for k in required {
+        if v.opt(k).is_none() {
+            bail!("bench record kind {kind:?} missing key {k:?}");
+        }
+    }
+    Ok(v)
+}
+
 /// Standard bench-binary header so `cargo bench` output is scannable.
 pub fn header(title: &str) {
     println!("\n=== {title} ===");
@@ -70,5 +206,88 @@ mod tests {
         assert_eq!(r.iters, 10);
         assert!(r.mean_s >= 0.0 && r.mean_s < 0.1);
         assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn reps_stats() {
+        let mut r = Reps::new();
+        for x in [10.0, 12.0, 8.0, 11.0, 9.0] {
+            r.push(x);
+        }
+        assert_eq!(r.count(), 5);
+        assert_eq!(r.median(), 10.0);
+        assert_eq!(r.min(), 8.0);
+        assert_eq!(r.max(), 12.0);
+        assert!((r.noise_rel() - 0.4).abs() < 1e-12);
+        // degenerate cases must not poison downstream JSON with NaN
+        let empty = Reps::new();
+        assert_eq!(empty.count(), 0);
+        assert_eq!(empty.noise_rel(), 0.0);
+        let mut one = Reps::new();
+        one.push(5.0);
+        assert_eq!(one.median(), 5.0);
+        assert_eq!(one.noise_rel(), 0.0);
+    }
+
+    fn full_record(kind: &str, keys: &[&str]) -> json::Value {
+        json::obj(
+            keys.iter()
+                .map(|&k| {
+                    let v = match k {
+                        "bench" => json::s(kind),
+                        "backend" => json::s("sim"),
+                        "preset" => json::s("nano"),
+                        "method" => json::s("frugal_static"),
+                        "rho_policy" | "t_policy" => json::s("static"),
+                        "final_ppl" => bench_mod_ppl(),
+                        _ => json::num(1.0),
+                    };
+                    (k, v)
+                })
+                .collect(),
+        )
+    }
+
+    fn bench_mod_ppl() -> json::Value {
+        // a NaN ppl must serialize as null and still validate
+        ppl_value(Some(f64::NAN))
+    }
+
+    #[test]
+    fn records_roundtrip_strict_json_with_all_keys() {
+        for (kind, keys) in [
+            ("bench_loop", LOOP_RECORD_KEYS),
+            ("bench_loop_shards", SHARD_RECORD_KEYS),
+        ] {
+            let line = full_record(kind, keys).to_string();
+            assert!(!line.contains("NaN"), "no NaN literal may leak: {line}");
+            let v = check_record(&line).expect("full record must validate");
+            assert_eq!(v.get("final_ppl").unwrap(), &json::Value::Null);
+        }
+    }
+
+    #[test]
+    fn check_record_rejects_missing_keys_and_unknown_kinds() {
+        // drop one required key at a time — each omission must fail loudly
+        for &victim in LOOP_RECORD_KEYS.iter().filter(|&&k| k != "bench") {
+            let keys: Vec<&str> = LOOP_RECORD_KEYS
+                .iter()
+                .copied()
+                .filter(|&k| k != victim)
+                .collect();
+            let line = full_record("bench_loop", &keys).to_string();
+            let err = check_record(&line).unwrap_err().to_string();
+            assert!(err.contains(victim), "error should name {victim}: {err}");
+        }
+        assert!(check_record(r#"{"bench":"mystery"}"#).is_err());
+        assert!(check_record("not json").is_err());
+    }
+
+    #[test]
+    fn ppl_value_is_null_unless_finite() {
+        assert_eq!(ppl_value(None), json::Value::Null);
+        assert_eq!(ppl_value(Some(f64::NAN)), json::Value::Null);
+        assert_eq!(ppl_value(Some(f64::INFINITY)), json::Value::Null);
+        assert_eq!(ppl_value(Some(2.5)), json::num(2.5));
     }
 }

@@ -84,7 +84,11 @@ impl Value {
             Value::Null => out.push_str("null"),
             Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Value::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // strict JSON has no NaN/Infinity literal; emit
+                    // null so every consumer can parse the output
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -380,6 +384,20 @@ mod tests {
         assert_eq!(parse("[]").unwrap(), Value::Arr(vec![]));
         assert_eq!(parse("{}").unwrap(), Value::Obj(Default::default()));
         assert_eq!(parse("[ ]").unwrap(), Value::Arr(vec![]));
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // strict JSON has no NaN/Infinity literal — a NaN that reached
+        // a Num must not produce unparseable output
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let v = obj(vec![("x", num(bad)), ("y", num(1.5))]);
+            let s = v.to_string();
+            assert_eq!(s, r#"{"x":null,"y":1.5}"#);
+            let back = parse(&s).unwrap();
+            assert_eq!(back.get("x").unwrap(), &Value::Null);
+        }
+        assert_eq!(arr(vec![num(f64::NAN)]).to_string(), "[null]");
     }
 
     #[test]

@@ -1,0 +1,183 @@
+//! Wide-f32 leaf kernels for the hot loops.
+//!
+//! Every batch reduction in this repo flows through the fixed-order
+//! `runtime::shard::reduce::split_mid` tree, so the *combine* order is
+//! ABI and cannot change. What CAN change freely is how the work inside
+//! one tree leaf (or one per-element map) is expressed: operations on
+//! distinct elements are independent, so evaluating `WIDTH` of them per
+//! loop iteration produces bit-identical results to the scalar loop —
+//! Rust/LLVM do not contract or reassociate floats by default, and none
+//! of these kernels carries a value across lane boundaries.
+//!
+//! The kernels are written as `chunks_exact` bodies with a fixed inner
+//! trip count so LLVM's auto-vectorizer turns them into SIMD without
+//! any nightly `std::simd` or intrinsics dependency (the build stays
+//! offline and stable-toolchain). Bit-equality with the scalar
+//! expressions is pinned by the tests below across every remainder
+//! length in `0..2*WIDTH`, including exotic bit patterns.
+//!
+//! What must NOT go through here: order-dependent reductions — the f64
+//! per-window loss accumulation, dot products (`readout_into`), and the
+//! tree combines themselves. Those stay scalar/serial by design.
+
+/// Lane width: 8 f32 = one AVX2 register, two NEON registers. The
+/// value only affects scheduling, never results (see module docs).
+pub const WIDTH: usize = 8;
+
+/// `y[i] += a * x[i]` — the axpy at the heart of the sim forward
+/// (`head_into`) and backward (`accum_grads`, `backprop_readout`).
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let n = y.len() - y.len() % WIDTH;
+    for (yc, xc) in y[..n].chunks_exact_mut(WIDTH).zip(x[..n].chunks_exact(WIDTH)) {
+        for i in 0..WIDTH {
+            yc[i] += a * xc[i];
+        }
+    }
+    for i in n..y.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// `y[i] += x[i]` — the in-place add inside every `split_mid` tree
+/// combine (`reduce::tree_sum_vecs`, the sim's gradient recursion).
+/// Element-wise, so lane width cannot affect the combine *order*.
+#[inline]
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let n = y.len() - y.len() % WIDTH;
+    for (yc, xc) in y[..n].chunks_exact_mut(WIDTH).zip(x[..n].chunks_exact(WIDTH)) {
+        for i in 0..WIDTH {
+            yc[i] += xc[i];
+        }
+    }
+    for i in n..y.len() {
+        y[i] += x[i];
+    }
+}
+
+/// `out[i] = a[i] - b[i]` — the residual (`h - y`) in the LM window
+/// loss. The f64 loss sum over the residual stays a scalar loop at the
+/// call site (it is order-dependent); only the element-wise subtract
+/// lives here.
+#[inline]
+pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    let n = out.len() - out.len() % WIDTH;
+    for ((oc, ac), bc) in out[..n]
+        .chunks_exact_mut(WIDTH)
+        .zip(a[..n].chunks_exact(WIDTH))
+        .zip(b[..n].chunks_exact(WIDTH))
+    {
+        for i in 0..WIDTH {
+            oc[i] = ac[i] - bc[i];
+        }
+    }
+    for i in n..out.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// `y[i] *= a` — gradient normalization (`reduce::normalize`).
+#[inline]
+pub fn scale(y: &mut [f32], a: f32) {
+    let n = y.len() - y.len() % WIDTH;
+    for yc in y[..n].chunks_exact_mut(WIDTH) {
+        for i in 0..WIDTH {
+            yc[i] *= a;
+        }
+    }
+    for i in n..y.len() {
+        y[i] *= a;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Values that exercise rounding, cancellation, and non-finite
+    /// propagation — if lane evaluation differed from scalar anywhere,
+    /// these surface it.
+    fn probe(n: usize, seed: u64) -> Vec<f32> {
+        let specials = [
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.0,
+            f32::MIN_POSITIVE,
+            f32::from_bits(1),        // smallest subnormal
+            f32::from_bits(0x7f7f_ffff), // largest finite
+            1e-30,
+            -1e30,
+            std::f32::consts::PI,
+        ];
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                if i % 3 == 0 {
+                    specials[rng.below(specials.len())]
+                } else {
+                    rng.normal_f32(3.0)
+                }
+            })
+            .collect()
+    }
+
+    /// The satellite property: each lane kernel is bit-equal to the
+    /// scalar per-element expression at every remainder length in
+    /// 0..2*WIDTH (covers empty, sub-width, exactly-width, width+tail,
+    /// and double-width inputs).
+    #[test]
+    fn lane_kernels_bit_equal_scalar_at_all_remainder_lengths() {
+        for len in 0..2 * WIDTH {
+            for seed in 0..4u64 {
+                let x = probe(len, seed * 101 + len as u64);
+                let b = probe(len, seed * 777 + 13 + len as u64);
+                let y0 = probe(len, seed * 313 + 7 + len as u64);
+                let a = Rng::new(seed + 99).normal_f32(2.0);
+
+                let mut y = y0.clone();
+                axpy(&mut y, a, &x);
+                for i in 0..len {
+                    assert_eq!(y[i].to_bits(), (y0[i] + a * x[i]).to_bits(),
+                               "axpy len={len} i={i}");
+                }
+
+                let mut y = y0.clone();
+                add_assign(&mut y, &x);
+                for i in 0..len {
+                    assert_eq!(y[i].to_bits(), (y0[i] + x[i]).to_bits(),
+                               "add_assign len={len} i={i}");
+                }
+
+                let mut out = vec![9.0f32; len];
+                sub_into(&mut out, &x, &b);
+                for i in 0..len {
+                    assert_eq!(out[i].to_bits(), (x[i] - b[i]).to_bits(),
+                               "sub_into len={len} i={i}");
+                }
+
+                let mut y = y0.clone();
+                scale(&mut y, a);
+                for i in 0..len {
+                    assert_eq!(y[i].to_bits(), (y0[i] * a).to_bits(),
+                               "scale len={len} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_slices_are_noops() {
+        let mut y: Vec<f32> = Vec::new();
+        axpy(&mut y, 2.0, &[]);
+        add_assign(&mut y, &[]);
+        sub_into(&mut y, &[], &[]);
+        scale(&mut y, 2.0);
+        assert!(y.is_empty());
+    }
+}

@@ -4,8 +4,10 @@
 pub mod bench;
 pub mod csv;
 pub mod json;
+pub mod lanes;
 pub mod log;
 pub mod par;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,98 @@
+//! Thread-local f32 scratch pool — kills the steady-state per-step
+//! `vec![0.0; n_params]` allocations in the sim hot path.
+//!
+//! The sim's gradient tree allocates one n_params-sized buffer per
+//! leaf, per step; the fused entries allocate another for the reduced
+//! gradient. After the first step those allocations are pure allocator
+//! traffic. `take_zeroed` hands back a recycled buffer instead (zeroed,
+//! so it is observationally identical to `vec![0.0; len]`), and `put`
+//! returns a buffer to the current thread's free list.
+//!
+//! Thread-local on purpose: no locks on the hot path, and `util::par`
+//! workers each warm their own small pool. Buffers that migrate across
+//! threads (e.g. produced on a worker, combined on the caller) are
+//! simply `put` wherever they end up — correctness never depends on
+//! which pool a buffer came from or returns to.
+
+use std::cell::RefCell;
+
+/// Free-list cap per thread. Bounds worst-case retained memory at
+/// `MAX_POOLED * largest_len * 4` bytes per thread while comfortably
+/// covering the deepest gradient-tree recursion (log2(batch) live
+/// buffers) plus the fused-step scratch.
+const MAX_POOLED: usize = 32;
+
+thread_local! {
+    static FREE: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// A zeroed buffer of `len` f32 — bit-identical in content to
+/// `vec![0.0; len]`, but recycled from this thread's pool when
+/// possible.
+pub fn take_zeroed(len: usize) -> Vec<f32> {
+    let recycled = FREE.with(|f| f.borrow_mut().pop());
+    match recycled {
+        Some(mut v) => {
+            v.clear();
+            v.resize(len, 0.0);
+            v
+        }
+        None => vec![0.0; len],
+    }
+}
+
+/// Return a buffer to this thread's pool. Contents are discarded;
+/// oversized free lists drop the buffer instead of growing unbounded.
+pub fn put(v: Vec<f32>) {
+    if v.capacity() == 0 {
+        return;
+    }
+    FREE.with(|f| {
+        let mut free = f.borrow_mut();
+        if free.len() < MAX_POOLED {
+            free.push(v);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_zeroed_matches_fresh_vec_even_after_dirty_put() {
+        let mut v = take_zeroed(8);
+        v.iter_mut().for_each(|x| *x = f32::NAN);
+        put(v);
+        // recycled buffer must be indistinguishable from vec![0.0; _],
+        // at a different length in both directions
+        for len in [3usize, 8, 20, 0] {
+            let v = take_zeroed(len);
+            assert_eq!(v.len(), len);
+            assert!(v.iter().all(|&x| x.to_bits() == 0), "len {len}: {v:?}");
+            put(v);
+        }
+    }
+
+    #[test]
+    fn pool_recycles_capacity() {
+        let v = take_zeroed(1000);
+        let ptr = v.as_ptr();
+        put(v);
+        let v2 = take_zeroed(500);
+        // same allocation reused (same thread, nothing else pooled a
+        // bigger buffer in between)
+        assert_eq!(v2.as_ptr(), ptr);
+        assert!(v2.capacity() >= 1000);
+        put(v2);
+    }
+
+    #[test]
+    fn free_list_is_bounded() {
+        for _ in 0..3 * MAX_POOLED {
+            put(vec![0.0; 4]);
+        }
+        let held = FREE.with(|f| f.borrow().len());
+        assert!(held <= MAX_POOLED, "pool held {held} buffers");
+    }
+}

@@ -1,0 +1,233 @@
+#!/usr/bin/env python3
+"""Validate bench_loop output and gate steps/sec regressions.
+
+Three subcommands, all stdlib-only:
+
+  check FRESH.jsonl
+      Every line must be strict JSON (no NaN/Infinity literals) and
+      carry every required key for its record kind. Mirrors
+      `util::bench::check_record` on the Rust side.
+
+  emit-candidate FRESH.jsonl OUT.json
+      Validate FRESH.jsonl and wrap it into a blessed baseline file
+      (schema bench_loop/v1). CI uploads this as the
+      `bench-baseline-candidate` artifact; committing it to
+      BENCH_loop.json at the repo root arms the regression gate.
+
+  gate BASELINE.json FRESH.jsonl
+      While BASELINE.json is the unblessed placeholder, fail loudly
+      with bless instructions. Once blessed, compare the fresh median
+      steps/sec of every baseline config (bench_loop method sweep AND
+      bench_loop_shards mid sweep) against the baseline median: fail
+      when the drop exceeds the union of both runs' recorded noise
+      bands plus a safety margin (ADAFRUGAL_BENCH_MARGIN, default
+      0.10). Configs present in the baseline but missing from the
+      fresh run fail; new configs only warn.
+
+The required-key lists below must stay in sync with
+rust/src/util/bench.rs (LOOP_RECORD_KEYS / SHARD_RECORD_KEYS); the
+bench binary self-checks against those before printing, so drift shows
+up on both sides.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+SCHEMA = "bench_loop/v1"
+
+LOOP_RECORD_KEYS = [
+    "bench", "backend", "preset", "method", "steps", "reps",
+    "steps_per_sec", "sps_min", "sps_max", "noise_rel",
+    "step_time_s", "wall_s_incl_eval", "control_time_s",
+    "control_ns_per_step", "rho_policy", "t_policy",
+    "uploads_fresh", "uploads_reused", "uploads_per_step",
+    "upload_bytes", "state_syncs", "final_ppl",
+]
+
+SHARD_RECORD_KEYS = [
+    "bench", "backend", "preset", "method", "shards", "steps", "reps",
+    "steps_per_sec", "sps_min", "sps_max", "noise_rel",
+    "speedup_vs_1shard", "sync_reduces", "sync_state_bytes",
+    "sync_grad_bytes", "per_shard_replicated_bytes",
+    "per_shard_state_bytes", "measured_owned_state_bytes", "final_ppl",
+]
+
+REQUIRED = {"bench_loop": LOOP_RECORD_KEYS, "bench_loop_shards": SHARD_RECORD_KEYS}
+
+
+def _reject_constant(name):
+    raise ValueError(f"non-strict JSON constant {name!r}")
+
+
+def strict_loads(text):
+    """json.loads that rejects NaN/Infinity literals (strict JSON)."""
+    return json.loads(text, parse_constant=_reject_constant)
+
+
+def fail(msg):
+    print(f"bench_compare: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load_records(path):
+    records = []
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = strict_loads(line)
+            except ValueError as e:
+                fail(f"{path}:{lineno}: not strict JSON: {e}")
+            if not isinstance(rec, dict):
+                fail(f"{path}:{lineno}: record is not a JSON object")
+            kind = rec.get("bench")
+            if kind not in REQUIRED:
+                fail(f"{path}:{lineno}: unknown bench record kind {kind!r}")
+            missing = [k for k in REQUIRED[kind] if k not in rec]
+            if missing:
+                fail(f"{path}:{lineno}: kind {kind!r} missing keys {missing}")
+            records.append(rec)
+    if not records:
+        fail(f"{path}: no bench records found")
+    return records
+
+
+def config_key(rec):
+    return (rec["bench"], rec["backend"], rec["preset"], rec["method"],
+            rec.get("shards"))
+
+
+def key_name(key):
+    kind, backend, preset, method, shards = key
+    tail = f" shards={int(shards)}" if shards is not None else ""
+    return f"{kind} {backend}/{preset}/{method}{tail}"
+
+
+def cmd_check(args):
+    records = load_records(args.fresh)
+    print(f"bench_compare: OK: {len(records)} valid records in {args.fresh}")
+
+
+def cmd_emit_candidate(args):
+    records = load_records(args.fresh)
+    out = {
+        "schema": SCHEMA,
+        "blessed": True,
+        "note": "CI-measured baseline. Commit this file to BENCH_loop.json "
+                "at the repository root to arm the perf regression gate.",
+        "source": {
+            "workflow_run": os.environ.get("GITHUB_RUN_ID"),
+            "commit": os.environ.get("GITHUB_SHA"),
+            "runner_os": os.environ.get("RUNNER_OS"),
+        },
+        "records": records,
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(f"bench_compare: wrote candidate baseline with "
+          f"{len(records)} records to {args.out}")
+
+
+BLESS_INSTRUCTIONS = """\
+BENCH_loop.json is NOT blessed yet (blessed=false) — the perf gate has
+no measured baseline to compare against. This CI run already produced
+one. To arm the gate:
+
+  1. open this workflow run and download the artifact:
+         bench-baseline-candidate
+  2. commit its BENCH_loop.json over the placeholder at the repo root:
+         BENCH_loop.json
+
+This step fails ON PURPOSE until that happens: a gate that self-seeds
+its baseline every run blesses every regression and measures nothing.
+"""
+
+
+def cmd_gate(args):
+    with open(args.baseline, encoding="utf-8") as f:
+        try:
+            baseline = strict_loads(f.read())
+        except ValueError as e:
+            fail(f"{args.baseline}: not strict JSON: {e}")
+    if baseline.get("schema") != SCHEMA:
+        fail(f"{args.baseline}: schema {baseline.get('schema')!r}, "
+             f"expected {SCHEMA!r}")
+    if not baseline.get("blessed"):
+        print(BLESS_INSTRUCTIONS, file=sys.stderr)
+        sys.exit(1)
+
+    base = {}
+    for rec in baseline.get("records", []):
+        kind = rec.get("bench")
+        if kind not in REQUIRED:
+            fail(f"{args.baseline}: unknown record kind {kind!r}")
+        base[config_key(rec)] = rec
+    if not base:
+        fail(f"{args.baseline}: blessed baseline has no records")
+
+    fresh = {config_key(r): r for r in load_records(args.fresh)}
+    margin = float(os.environ.get("ADAFRUGAL_BENCH_MARGIN", "0.10"))
+
+    failures = []
+    for key, brec in sorted(base.items()):
+        name = key_name(key)
+        frec = fresh.get(key)
+        if frec is None:
+            failures.append(f"{name}: present in baseline, missing from "
+                            f"fresh run — a config silently disappeared")
+            continue
+        b_sps, f_sps = brec["steps_per_sec"], frec["steps_per_sec"]
+        band = brec["noise_rel"] + frec["noise_rel"] + margin
+        floor = b_sps * (1.0 - band)
+        verdict = "PASS" if f_sps >= floor else "FAIL"
+        print(f"  {verdict} {name}: baseline {b_sps:.2f} sps "
+              f"(noise {brec['noise_rel']:.3f}), fresh {f_sps:.2f} sps "
+              f"(noise {frec['noise_rel']:.3f}), floor {floor:.2f} "
+              f"(margin {margin:.2f})")
+        if f_sps < floor:
+            failures.append(
+                f"{name}: steps/sec regressed beyond noise: "
+                f"{f_sps:.2f} < floor {floor:.2f} "
+                f"(baseline {b_sps:.2f}, combined band {band:.3f})")
+    for key in sorted(set(fresh) - set(base)):
+        print(f"  WARN {key_name(key)}: new config, not in baseline "
+              f"(bless a new candidate to start gating it)")
+
+    if failures:
+        for f_msg in failures:
+            print(f"bench_compare: FAIL: {f_msg}", file=sys.stderr)
+        sys.exit(1)
+    print(f"bench_compare: OK: {len(base)} configs within noise of baseline")
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    c = sub.add_parser("check", help="validate a fresh jsonl")
+    c.add_argument("fresh")
+    c.set_defaults(fn=cmd_check)
+
+    e = sub.add_parser("emit-candidate",
+                       help="wrap a fresh jsonl into a blessed baseline")
+    e.add_argument("fresh")
+    e.add_argument("out")
+    e.set_defaults(fn=cmd_emit_candidate)
+
+    g = sub.add_parser("gate", help="fail on regression beyond noise")
+    g.add_argument("baseline")
+    g.add_argument("fresh")
+    g.set_defaults(fn=cmd_gate)
+
+    args = p.parse_args()
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()
