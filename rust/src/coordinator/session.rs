@@ -206,6 +206,10 @@ pub struct SessionResult {
     /// cross-shard sync totals (FRUGAL-aware pricing); `None` when the
     /// run was not sharded
     pub sync: Option<crate::runtime::shard::SyncTraffic>,
+    /// per-phase step timing of the sharded runtime (fan-out wall +
+    /// aggregate worker upload/reduce/update); `None` when the run was
+    /// not sharded
+    pub phases: Option<crate::runtime::shard::PhaseNanos>,
 }
 
 /// Optimizer state: backend-resident packed state (fused path) or
@@ -927,6 +931,7 @@ impl Session {
             final_score,
             uploads: self.dev.stats,
             sync: self.dev.engine.sync_stats(),
+            phases: self.dev.engine.phase_stats(),
         })
     }
 

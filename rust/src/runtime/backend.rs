@@ -126,6 +126,19 @@ pub trait ExecBackend: Send {
     /// Read a whole f32 buffer.
     fn read_all_f32(&self, buf: &Buffer) -> Result<Vec<f32>>;
 
+    /// Read a whole f32 buffer into a caller-owned vector, reusing its
+    /// allocation when possible. Returns `true` when the existing
+    /// capacity was reused (no fresh allocation). The default routes
+    /// through [`ExecBackend::read_all_f32`] and always reallocates;
+    /// host-buffer backends override it with a capacity-reusing copy.
+    /// The sharded fan-out reads every per-step shard partial through
+    /// this into persistent buffers, so steady-state steps allocate
+    /// nothing on the readback side.
+    fn read_all_f32_into(&self, buf: &Buffer, out: &mut Vec<f32>) -> Result<bool> {
+        *out = self.read_all_f32(buf)?;
+        Ok(false)
+    }
+
     /// Data-parallel shard count behind this backend (1 for the
     /// single-device engines; N for
     /// [`crate::runtime::shard::ShardedBackend`]). The session layer
@@ -150,6 +163,15 @@ pub trait ExecBackend: Send {
     /// validate the layout and reshard elastically. Wrappers must
     /// forward it, like [`ExecBackend::sync_stats`].
     fn partition(&self) -> Option<crate::runtime::shard::partition::Partition> {
+        None
+    }
+
+    /// Per-phase timing of the sharded step pipeline (fan-out /
+    /// upload / reduce / update nanoseconds): `Some` for
+    /// [`crate::runtime::shard::ShardedBackend`], `None` for unsharded
+    /// backends, which have no fan-out/reduce phases to attribute.
+    /// Wrappers must forward it, like [`ExecBackend::sync_stats`].
+    fn phase_stats(&self) -> Option<crate::runtime::shard::PhaseNanos> {
         None
     }
 }
@@ -317,6 +339,10 @@ impl ExecBackend for CountingBackend {
         self.inner.read_all_f32(buf)
     }
 
+    fn read_all_f32_into(&self, buf: &Buffer, out: &mut Vec<f32>) -> Result<bool> {
+        self.inner.read_all_f32_into(buf, out)
+    }
+
     fn shard_count(&self) -> usize {
         self.inner.shard_count()
     }
@@ -327,6 +353,10 @@ impl ExecBackend for CountingBackend {
 
     fn partition(&self) -> Option<crate::runtime::shard::partition::Partition> {
         self.inner.partition()
+    }
+
+    fn phase_stats(&self) -> Option<crate::runtime::shard::PhaseNanos> {
+        self.inner.phase_stats()
     }
 }
 

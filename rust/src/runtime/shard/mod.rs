@@ -1,23 +1,60 @@
 //! `runtime::shard` — data-parallel sharded execution with
 //! FRUGAL-aware gradient synchronization and ZeRO-style partitioned
-//! optimizer state.
+//! optimizer state, on a persistent worker-pool runtime.
 //!
 //! [`ShardedBackend`] implements [`ExecBackend`] by fanning the batch
 //! dimension of every step entry out to `N` inner backends (its own
-//! [`crate::runtime::sim::SimEngine`] or PJRT engine per worker,
-//! driven through [`crate::util::par`]), reducing the per-shard
-//! partial gradients with the deterministic fixed-order tree in
-//! [`reduce`], and applying the fused optimizer update *shard-locally*:
-//! each shard owns a contiguous slice of the packed `params‖m‖v` state
-//! (its [`partition::Partition`] range) and updates only that slice.
-//! Because the inner engines compute *raw subtree partials* (the
-//! `grad_part` entry), both sides of the split share the reduction
-//! tree, and the per-element update rule is untouched by the slicing,
-//! an `N`-shard run is **bit-identical** to the 1-shard run for any
-//! power-of-two `N` dividing the batch — on any thread schedule —
-//! which `rust/tests/shard_parity.rs` pins for every Table-1 method
-//! and `rust/tests/elastic_parity.rs` extends across shard-count
-//! changes at a checkpoint boundary.
+//! [`crate::runtime::sim::SimEngine`] or PJRT engine per worker),
+//! reducing the per-shard partial gradients with the deterministic
+//! fixed-order tree in [`reduce`], and applying the fused optimizer
+//! update *shard-locally*: each shard owns a contiguous slice of the
+//! packed `params‖m‖v` state (its [`partition::Partition`] range) and
+//! updates only that slice. Because the inner engines compute *raw
+//! subtree partials* (the `grad_part` entry), both sides of the split
+//! share the reduction tree, and the per-element update rule is
+//! untouched by the slicing, an `N`-shard run is **bit-identical** to
+//! the 1-shard run for any power-of-two `N` dividing the batch — on
+//! any thread schedule — which `rust/tests/shard_parity.rs` pins for
+//! every Table-1 method and `rust/tests/elastic_parity.rs` extends
+//! across shard-count changes at a checkpoint boundary.
+//!
+//! # The persistent worker runtime
+//!
+//! Each shard's engine lives on its own long-lived thread of a
+//! [`crate::util::pipeline::WorkerPool`], together with everything
+//! that must persist across steps: the engine's upload slots (params
+//! and sub-batch have the same shape every step, so `upload_*_into`
+//! rewrites buffers in place), the worker's owned reduce scratch, and
+//! the thread-local [`crate::util::pool`] scratch the sim engine draws
+//! its gradient-tree and gather-cache buffers from. A step is two
+//! scope rounds over the pool instead of a round of thread
+//! spawn/joins:
+//!
+//! ```text
+//! step ──► fanout scope:  worker k: upload params+rows ─► grad_part ─► partial k
+//!     ──► update scope:   worker k: tree_sum_range(partials, range k)
+//!                                   ─► normalize ─► hybrid_update_range(range k)
+//! (serial fallback: whole-vector tree_sum_vecs + par::run_for update)
+//! ```
+//!
+//! The second round is the pipelined **reduce-scatter**: worker `k`
+//! reduces only its owned partition range (a column range of the same
+//! per-shard partials) and flows straight into its local update with
+//! no global barrier between "reduce" and "update" — the phases
+//! overlap across shards. This is bit-identical to the serial
+//! whole-vector path because the tree reduction is elementwise
+//! ([`reduce::tree_sum_range`] replays shard order per element),
+//! normalization is one per-element multiply, and the update rule
+//! visits each element exactly once either way. The serial reference
+//! path is kept selectable — `ADAFRUGAL_SHARD_PIPELINE=0` in the
+//! environment, or [`ShardedBackend::set_pipelined`] in tests — and
+//! `rust/tests/pipeline_parity.rs` pins the two bitwise equal.
+//!
+//! Per-phase wall is accounted into a [`PhaseNanos`] snapshot
+//! ([`ExecBackend::phase_stats`]): `fanout_ns` is main-thread wall of
+//! the fan-out round; `upload_ns`, `reduce_ns` and `update_ns` are
+//! **summed worker-side durations** (aggregate worker time, which can
+//! exceed wall when shards overlap — that overlap is the point).
 //!
 //! # How a step is sharded
 //!
@@ -27,11 +64,12 @@
 //! concatenation of the shard streams. Each shard uploads the current
 //! params plus its sub-batch and runs `grad_part`, which returns
 //! **unnormalized** tree-partial gradients, the f32 tree-partial loss
-//! and its element count. The coordinator-side reduce then:
+//! and its element count. The reduce then:
 //!
 //! 1. tree-sums the shard partials in shard order ([`reduce`] — the
 //!    top `log2(N)` levels of the same tree the engines used inside
-//!    their sub-batches),
+//!    their sub-batches), as whole vectors on the serial path or as
+//!    per-owner column ranges on the pipelined path,
 //! 2. normalizes by the *global* count and folds the mean loss —
 //!    through the same [`reduce::normalize`]/[`reduce::mean_loss`] the
 //!    unsharded sim entries call,
@@ -56,10 +94,10 @@
 //! canonical layout before accepting it).
 //!
 //! Non-step entries (`eval`, `scores`, `lora_adamw`, `lora_eval`) are
-//! delegated whole to shard 0: evaluation batches are deterministic
-//! and not on the hot path, `scores` feeds redefinition (amortized
-//! over T steps), and LoRA adapter state is small enough that
-//! replicating beats sharding (the ProTrain trade-off) — all are
+//! delegated whole to shard 0's worker: evaluation batches are
+//! deterministic and not on the hot path, `scores` feeds redefinition
+//! (amortized over T steps), and LoRA adapter state is small enough
+//! that replicating beats sharding (the ProTrain trade-off) — all are
 //! trivially bit-identical to the unsharded run.
 //!
 //! # FRUGAL-aware synchronization accounting
@@ -92,8 +130,9 @@ pub mod partition;
 pub mod reduce;
 
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -101,8 +140,8 @@ use self::partition::Partition;
 use super::backend::{self, Buffer, ExecBackend, HostData};
 use super::manifest::Manifest;
 use super::sim;
-use crate::optim::StepScalars;
-use crate::util::par;
+use crate::util::pipeline::WorkerPool;
+use crate::util::{par, pool};
 
 /// Bytes shipped per element of state-full packed optimizer state
 /// (param + m + v, f32).
@@ -141,6 +180,39 @@ impl SyncTraffic {
     }
 }
 
+/// Per-phase time totals of one [`ShardedBackend`] over its lifetime,
+/// in nanoseconds. `fanout_ns` is main-thread wall of the fan-out
+/// round (upload + `grad_part` + read-back across all shards, so it
+/// *contains* the upload time); `upload_ns`, `reduce_ns` and
+/// `update_ns` are **summed worker-side durations** — aggregate worker
+/// time that can exceed wall clock when shards overlap. Divide by
+/// `steps` for per-step figures (`bench_loop` emits exactly that).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseNanos {
+    /// main-thread wall of the fan-out scope, summed over steps
+    pub fanout_ns: u64,
+    /// worker-side upload time (params + sub-batch + labels), summed
+    /// over shards and steps
+    pub upload_ns: u64,
+    /// worker-side gradient-reduce time, summed over shards and steps
+    pub reduce_ns: u64,
+    /// worker-side optimizer-update time, summed over shards and steps
+    pub update_ns: u64,
+    /// sharded step entries executed (fused steps and `grad`)
+    pub steps: u64,
+}
+
+/// Lifetime phase-clock of a [`ShardedBackend`]; workers add into the
+/// atomics concurrently, [`ExecBackend::phase_stats`] snapshots them.
+#[derive(Default)]
+struct PhaseClock {
+    fanout_ns: AtomicU64,
+    upload_ns: AtomicU64,
+    reduce_ns: AtomicU64,
+    update_ns: AtomicU64,
+    steps: AtomicU64,
+}
+
 /// Validate a shard count: power-of-two (the tree-alignment
 /// precondition for bit-exact parity) and non-zero.
 fn validate_count(n: usize) -> Result<()> {
@@ -166,6 +238,13 @@ pub fn resolve(configured: usize) -> Result<usize> {
             Ok(configured)
         }
     }
+}
+
+/// Whether new backends use the pipelined step: on unless the
+/// environment opts out with `ADAFRUGAL_SHARD_PIPELINE=0` (any other
+/// value, or unset, means pipelined).
+fn pipeline_default() -> bool {
+    !matches!(std::env::var("ADAFRUGAL_SHARD_PIPELINE"), Ok(s) if s == "0")
 }
 
 /// Build the execution backend for a shard count: the bare backend for
@@ -197,45 +276,74 @@ enum LabelSlice<'a> {
     F(&'a [f32]),
 }
 
-/// One fan-out job: everything a worker needs to produce shard `i`'s
-/// raw partial (written into its own `out` slot, so the fan-out needs
-/// no synchronization beyond the scope join).
-struct ShardJob<'a> {
-    worker: &'a Mutex<ShardWorker>,
-    out: &'a mut Option<Result<Vec<f32>>>,
-    params: &'a [f32],
-    tokens: &'a [i32],
-    token_dims: [usize; 2],
-    labels: Option<LabelSlice<'a>>,
+/// Host-side view of a delegated argument, extracted on the caller's
+/// thread so only plain slices (never a `Buffer`) cross into the
+/// worker.
+enum HostArg<'a> {
+    F(&'a [f32], &'a [usize]),
+    I(&'a [i32], &'a [usize]),
 }
 
-/// One shard's engine plus its persistent upload slots: the replicated
-/// params and the shard's sub-batch have the same shape every step, so
-/// `upload_*_into` rewrites the same buffers in place instead of
-/// allocating three fresh ones per shard per step.
+/// One shard's persistent worker state, owned by its pool thread for
+/// the backend's whole lifetime: the engine, the upload slots the
+/// fan-out rewrites in place every step, and the owned reduce scratch
+/// the pipelined update fills via `tree_sum_range`. `grad_reallocs`
+/// counts the times `grad` had to grow — flat at steady state, which
+/// `scratch_stats` exposes and a test pins.
 struct ShardWorker {
     engine: Box<dyn ExecBackend>,
     params: Option<Buffer>,
     tokens: Option<Buffer>,
     labels: Option<Buffer>,
+    grad: Vec<f32>,
+    grad_reallocs: usize,
+}
+
+/// Caller-side step buffers (behind one mutex): the per-shard raw
+/// partials the fan-out reads back into, reused across steps.
+struct StepBufs {
+    partials: Vec<Vec<f32>>,
+    /// fan-out read-backs that could not reuse the partial's capacity
+    partial_reallocs: usize,
+}
+
+/// Scratch-reuse counters of a [`ShardedBackend`] — the observable
+/// form of "the shard hot path does not allocate at steady state".
+/// Realloc counts and pool misses must stay flat once warm; pool hits
+/// keep growing.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScratchStats {
+    /// fan-out read-backs that had to grow a partial buffer
+    pub partial_reallocs: usize,
+    /// pipelined reduces that had to grow a worker's grad scratch
+    pub grad_reallocs: usize,
+    /// pooled-scratch takes served by recycling, summed over workers
+    pub pool_hits: usize,
+    /// pooled-scratch takes that allocated fresh, summed over workers
+    pub pool_misses: usize,
 }
 
 /// Data-parallel [`ExecBackend`] over `N` inner backends. See the
 /// module docs for the execution and synchronization model.
 pub struct ShardedBackend {
     manifest: Manifest,
-    shards: Vec<Mutex<ShardWorker>>,
+    /// one persistent thread per shard, owning that shard's engine
+    pool: WorkerPool<ShardWorker>,
+    bufs: Mutex<StepBufs>,
     /// which contiguous slice of the packed state each shard owns
     partition: Partition,
+    pipelined: bool,
     reduces: AtomicUsize,
     state_bytes: AtomicUsize,
     grad_bytes: AtomicUsize,
     owned_state_bytes: AtomicUsize,
+    phases: PhaseClock,
 }
 
 impl ShardedBackend {
     /// Wrap `inners` (one per shard, identical manifests, each
-    /// providing `grad_part`). The count must be a power of two.
+    /// providing `grad_part`). The count must be a power of two. Each
+    /// inner engine moves onto its own persistent worker thread.
     pub fn new(inners: Vec<Box<dyn ExecBackend>>) -> Result<ShardedBackend> {
         ensure!(!inners.is_empty(), "sharded backend needs at least one inner backend");
         validate_count(inners.len())?;
@@ -255,29 +363,70 @@ impl ShardedBackend {
         }
         let partition = Partition::new(man.n_params, inners.len())
             .context("building the optimizer-state partition")?;
+        let workers: Vec<ShardWorker> = inners
+            .into_iter()
+            .map(|engine| ShardWorker {
+                engine,
+                params: None,
+                tokens: None,
+                labels: None,
+                grad: Vec::new(),
+                grad_reallocs: 0,
+            })
+            .collect();
         Ok(ShardedBackend {
             manifest: man,
-            shards: inners
-                .into_iter()
-                .map(|engine| {
-                    Mutex::new(ShardWorker { engine, params: None, tokens: None,
-                                             labels: None })
-                })
-                .collect(),
+            pool: WorkerPool::new("shard", workers),
+            bufs: Mutex::new(StepBufs { partials: Vec::new(), partial_reallocs: 0 }),
             partition,
+            pipelined: pipeline_default(),
             reduces: AtomicUsize::new(0),
             state_bytes: AtomicUsize::new(0),
             grad_bytes: AtomicUsize::new(0),
             owned_state_bytes: AtomicUsize::new(0),
+            phases: PhaseClock::default(),
         })
     }
 
     fn n_shards(&self) -> usize {
-        self.shards.len()
+        self.pool.len()
     }
 
-    fn lock(&self, i: usize) -> std::sync::MutexGuard<'_, ShardWorker> {
-        self.shards[i].lock().unwrap_or_else(|p| p.into_inner())
+    fn lock_bufs(&self) -> std::sync::MutexGuard<'_, StepBufs> {
+        self.bufs.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Select the pipelined reduce-scatter step (`true`, the default
+    /// unless the environment opts out) or the serial whole-vector
+    /// reference path (`false`). Both are bit-identical; the serial
+    /// path exists as the parity oracle and escape hatch.
+    pub fn set_pipelined(&mut self, on: bool) {
+        self.pipelined = on;
+    }
+
+    /// Snapshot the scratch-reuse counters (caller-side partial
+    /// buffers plus every worker's grad scratch and thread-local
+    /// pool).
+    pub fn scratch_stats(&self) -> ScratchStats {
+        let bufs = self.lock_bufs();
+        let mut per: Vec<Option<(usize, usize, usize)>> =
+            (0..self.n_shards()).map(|_| None).collect();
+        self.pool.scope(|scope| {
+            for (k, slot) in per.iter_mut().enumerate() {
+                scope.submit(k, move |w| {
+                    let (hits, misses) = pool::stats();
+                    *slot = Some((w.grad_reallocs, hits, misses));
+                });
+            }
+        });
+        let mut out = ScratchStats { partial_reallocs: bufs.partial_reallocs,
+                                     ..Default::default() };
+        for s in per.into_iter().flatten() {
+            out.grad_reallocs += s.0;
+            out.pool_hits += s.1;
+            out.pool_misses += s.2;
+        }
+        out
     }
 
     /// Elements whose optimizer state is live under the current mask:
@@ -317,39 +466,65 @@ impl ShardedBackend {
         self.grad_bytes.fetch_add(sfree * STATE_FREE_BYTES * edges, Ordering::Relaxed);
     }
 
-    /// Run `entry` whole on shard 0 (non-step entries). Arguments are
-    /// re-uploaded into the inner backend so PJRT inners receive
-    /// native buffers; the output is read back into this backend's
+    /// Run `entry` whole on shard 0's worker (non-step entries).
+    /// Host-slice views of the arguments are extracted here and
+    /// re-uploaded inside the worker so PJRT inners receive native
+    /// buffers; the output is read back into this backend's
     /// host-buffer domain.
     fn delegate(&self, entry: &str, args: &[&Buffer]) -> Result<Buffer> {
-        let w = self.lock(0);
-        let eng = &w.engine;
-        let mut owned: Vec<Buffer> = Vec::with_capacity(args.len());
+        let mut host: Vec<HostArg> = Vec::with_capacity(args.len());
         for a in args {
-            owned.push(match a {
-                Buffer::Host { data: HostData::F32(v), dims } => eng.upload_f32(v, dims)?,
-                Buffer::Host { data: HostData::I32(v), dims } => eng.upload_i32(v, dims)?,
+            host.push(match a {
+                Buffer::Host { data: HostData::F32(v), dims } => HostArg::F(v, dims),
+                Buffer::Host { data: HostData::I32(v), dims } => HostArg::I(v, dims),
                 Buffer::Pjrt(_) => {
                     bail!("sharded backend only accepts its own host buffers")
                 }
             });
         }
-        let refs: Vec<&Buffer> = owned.iter().collect();
-        let out = eng.run(entry, &refs)?;
-        let v = eng.read_all_f32(&out)?;
+        let mut slot: Option<Result<Vec<f32>>> = None;
+        self.pool.scope(|scope| {
+            let host = &host;
+            let slot = &mut slot;
+            scope.submit(0, move |w| {
+                *slot = Some((|| {
+                    let mut owned: Vec<Buffer> = Vec::with_capacity(host.len());
+                    for a in host {
+                        owned.push(match a {
+                            HostArg::F(v, dims) => w.engine.upload_f32(v, dims)?,
+                            HostArg::I(v, dims) => w.engine.upload_i32(v, dims)?,
+                        });
+                    }
+                    let refs: Vec<&Buffer> = owned.iter().collect();
+                    let out = w.engine.run(entry, &refs)?;
+                    w.engine.read_all_f32(&out)
+                })());
+            });
+        });
+        let v = match slot {
+            Some(r) => {
+                r.with_context(|| format!("delegated entry {entry:?} failed on shard 0"))?
+            }
+            None => bail!("delegated entry {entry:?} produced no output"),
+        };
         let dims = vec![v.len()];
         Ok(Buffer::Host { data: HostData::F32(v), dims })
     }
 
-    /// Fan `grad_part` out over the shards for contiguous row blocks
-    /// and tree-reduce the raw partials. Returns the **normalized**
-    /// gradient (first `n_params` elements) and the mean loss.
-    fn reduce_grads(&self, params: &[f32], tokens: &[i32], token_dims: &[usize],
-                    labels: Option<&Buffer>) -> Result<(Vec<f32>, f32)> {
+    /// Fan `grad_part` out over the shard workers for contiguous row
+    /// blocks, reading each raw partial back into its persistent
+    /// `bufs.partials` slot. Returns the global `(mean loss, count)`;
+    /// the partials stay in `bufs` for whichever reduce path runs
+    /// next. The tail-slot totals are tree-summed here exactly as the
+    /// whole-vector reduce would (the tree is elementwise).
+    fn fanout_partials(&self, bufs: &mut StepBufs, params: &[f32], tokens: &[i32],
+                       token_dims: &[usize], labels: Option<&Buffer>)
+                       -> Result<(f32, usize)> {
         let man = &self.manifest;
         let n = man.n_params;
         ensure!(params.len() >= n, "params buffer too short: {} < {n}", params.len());
-        ensure!(token_dims.len() == 2, "sharded step needs 2-D token dims, got {token_dims:?}");
+        ensure!(token_dims.len() == 2,
+                "sharded step needs 2-D token dims, got {token_dims:?}");
         let (rows, width) = (token_dims[0], token_dims[1]);
         ensure!(rows * width == tokens.len(),
                 "token dims {token_dims:?} disagree with buffer len {}", tokens.len());
@@ -372,69 +547,187 @@ impl ShardedBackend {
             Some(Buffer::Pjrt(_)) => bail!("sharded backend only accepts host buffers"),
         };
 
-        let mut outs: Vec<Option<Result<Vec<f32>>>> = (0..nsh).map(|_| None).collect();
-        let jobs: Vec<ShardJob> = self
-            .shards
-            .iter()
-            .zip(outs.iter_mut())
-            .enumerate()
-            .map(|(i, (worker, out))| ShardJob {
-                worker,
-                out,
-                params: &params[..n],
-                tokens: &tokens[i * per * width..(i + 1) * per * width],
-                token_dims: [per, width],
-                labels: labels.as_ref().map(|l| match l {
+        if bufs.partials.len() != nsh {
+            bufs.partials.resize_with(nsh, Vec::new);
+        }
+        let mut outs: Vec<Option<Result<bool>>> = (0..nsh).map(|_| None).collect();
+        let t0 = Instant::now();
+        // one job per shard worker; each writes only its own partial
+        // and out slot, and everything after the scope runs on this
+        // thread in shard order — thread scheduling reorders nothing
+        self.pool.scope(|scope| {
+            let upload_ns = &self.phases.upload_ns;
+            for (i, (partial, out)) in
+                bufs.partials.iter_mut().zip(outs.iter_mut()).enumerate()
+            {
+                let params = &params[..n];
+                let tokens = &tokens[i * per * width..(i + 1) * per * width];
+                let labels = labels.as_ref().map(|l| match l {
                     LabelSlice::I(v) => LabelSlice::I(&v[i * per..(i + 1) * per]),
                     LabelSlice::F(v) => LabelSlice::F(&v[i * per..(i + 1) * per]),
-                }),
-            })
-            .collect();
-        // one worker per shard; each writes only its own slot, and the
-        // reduce below runs after the scope join, on this thread, in
-        // shard order — so thread scheduling cannot reorder anything
-        par::run(jobs, |job| {
-            *job.out = Some(run_shard(job.worker, job.params, job.tokens,
-                                      &job.token_dims, job.labels.as_ref()));
+                });
+                scope.submit(i, move |w| {
+                    *out = Some(run_shard(w, partial, params, tokens, [per, width],
+                                          labels.as_ref(), upload_ns));
+                });
+            }
         });
+        self.phases.fanout_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
 
-        let mut partials = Vec::with_capacity(nsh);
+        let mut losses = Vec::with_capacity(nsh);
+        let mut counts = Vec::with_capacity(nsh);
         for (i, slot) in outs.into_iter().enumerate() {
-            let part = match slot {
+            let reused = match slot {
                 Some(r) => r.with_context(|| format!("shard {i} grad_part failed"))?,
                 None => bail!("shard {i} produced no output"),
             };
+            if !reused {
+                bufs.partial_reallocs += 1;
+            }
+            let part = &bufs.partials[i];
             ensure!(part.len() == n + 2,
                     "shard {i} grad_part returned {} values, want n+2 = {}",
                     part.len(), n + 2);
-            partials.push(part);
+            losses.push(part[n]);
+            counts.push(part[n + 1]);
         }
-        let mut totals = reduce::tree_sum_vecs(partials);
-        let count = totals[n + 1] as usize;
+        let count = reduce::tree_sum_f32(&counts) as usize;
         // the count crosses the wire as f32 (exact below 2^24); a
         // global batch large enough to round it must fail loudly, not
         // normalize by a wrong denominator
         ensure!(count < reduce::MAX_F32_EXACT_COUNT,
                 "global element count {count} exceeds the exact-f32 range of the \
                  grad_part count slot");
-        let loss = reduce::mean_loss(totals[n], count);
-        totals.truncate(n);
-        reduce::normalize(&mut totals, count);
-        Ok((totals, loss))
+        Ok((reduce::mean_loss(reduce::tree_sum_f32(&losses), count), count))
     }
 
-    /// The partitioned fused update: each shard applies the reference
-    /// per-element hybrid rule to its owned contiguous slice of the
-    /// packed `params‖m‖v` state only (reduce-scatter → local update →
-    /// all-gather in a real transport; in-process the "gather" is the
-    /// slices landing disjointly in one output vector). Bit-identical
-    /// to the unsharded fused entries: the per-element expressions are
-    /// `optim::frugal`'s single source of truth, no element is visited
-    /// twice, and the ranges tile `[0, n)` — pinned by
-    /// `frugal::tests::range_kernel_tiles_to_the_unsharded_step` and
-    /// the shard/elastic parity gates.
-    fn sharded_fused_step(&self, state: &[f32], mask: Option<&[f32]>, s: &StepScalars,
-                          grads: &[f32], loss: f32) -> Result<Vec<f32>> {
+    /// The serial reference reduce: whole-vector fixed-order tree over
+    /// the shard partials, truncated to the gradient and normalized.
+    /// The pipelined reduce-scatter must match this bitwise.
+    fn serial_reduce(&self, bufs: &StepBufs, count: usize) -> Vec<f32> {
+        let mut totals = reduce::tree_sum_vecs(bufs.partials.clone());
+        totals.truncate(self.manifest.n_params);
+        reduce::normalize(&mut totals, count);
+        totals
+    }
+
+    /// The pipelined fused step: one job per shard worker, where
+    /// worker `k` tree-reduces its owned partition range out of the
+    /// shard partials (`reduce::tree_sum_range` — the same combine
+    /// order as the whole-vector tree, restricted to the range),
+    /// normalizes it, and immediately applies the reference
+    /// per-element hybrid rule to its owned `params‖m‖v` slices. No
+    /// barrier separates reduce from update, so the phases overlap
+    /// across shards; bit-identity with the serial path is pinned by
+    /// `pipelined_step_matches_serial_reference_bitwise` and the
+    /// parity gates.
+    fn pipelined_fused_step(&self, bufs: &StepBufs, state: &[f32], mask: Option<&[f32]>,
+                            s: &crate::optim::StepScalars, loss: f32, count: usize)
+                            -> Result<Vec<f32>> {
+        let man = &self.manifest;
+        let n = man.n_params;
+        ensure!(state.len() == man.state_len,
+                "fused step: state len {} != {}", state.len(), man.state_len);
+        if let Some(mc) = mask {
+            ensure!(mc.len() == man.mask_len,
+                    "mask len {} != {}", mc.len(), man.mask_len);
+        }
+        let mut next = state.to_vec();
+        let (params, rest) = next.split_at_mut(n);
+        let (ms, rest) = rest.split_at_mut(n);
+        let (vs, loss_slot) = rest.split_at_mut(n);
+        // carve each shard's owned (p, m, v) slices; the partition
+        // ranges tile [0, n) in order, so sequential split_at_mut
+        // lands exactly on the ownership boundaries
+        let mut jobs = Vec::with_capacity(self.partition.ranges.len());
+        let mut p_rest = params;
+        let mut m_rest = ms;
+        let mut v_rest = vs;
+        for r in &self.partition.ranges {
+            let (p, pr) = p_rest.split_at_mut(r.len());
+            let (m, mr) = m_rest.split_at_mut(r.len());
+            let (v, vr) = v_rest.split_at_mut(r.len());
+            p_rest = pr;
+            m_rest = mr;
+            v_rest = vr;
+            jobs.push((r.clone(), p, m, v));
+        }
+        let partials = &bufs.partials;
+        let reduce_ns = &self.phases.reduce_ns;
+        let update_ns = &self.phases.update_ns;
+        self.pool.scope(|scope| {
+            for (k, (r, p, m, v)) in jobs.into_iter().enumerate() {
+                scope.submit(k, move |w| {
+                    let t = Instant::now();
+                    if w.grad.capacity() < r.len() {
+                        w.grad_reallocs += 1;
+                    }
+                    w.grad.clear();
+                    w.grad.resize(r.len(), 0.0);
+                    reduce::tree_sum_range(partials, &r, &mut w.grad);
+                    reduce::normalize(&mut w.grad, count);
+                    reduce_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    let t = Instant::now();
+                    crate::optim::frugal::hybrid_update_range(man, r.start, p, &w.grad,
+                                                              m, v, mask, s);
+                    update_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                });
+            }
+        });
+        loss_slot[0] = loss;
+        // measured residency: the largest owned m+v slice under the
+        // live mask (what a real worker would actually hold)
+        let peak = self
+            .partition
+            .ranges
+            .iter()
+            .map(|r| {
+                partition::statefull_in_range(man, mask, r)
+                    * crate::model::memory::BYTES_PER_STATE_ELEM
+            })
+            .max()
+            .unwrap_or(0);
+        self.owned_state_bytes.fetch_max(peak, Ordering::Relaxed);
+        Ok(next)
+    }
+
+    /// The pipelined reduce for the host-path `grad` entry: each
+    /// worker tree-reduces and normalizes its owned range straight
+    /// into its disjoint segment of `grads` (length `n_params`).
+    fn pipelined_reduce_scatter(&self, bufs: &StepBufs, count: usize, grads: &mut [f32]) {
+        let mut segs = Vec::with_capacity(self.partition.ranges.len());
+        let mut rest = grads;
+        for r in &self.partition.ranges {
+            let (seg, rr) = rest.split_at_mut(r.len());
+            rest = rr;
+            segs.push((r.clone(), seg));
+        }
+        let partials = &bufs.partials;
+        let reduce_ns = &self.phases.reduce_ns;
+        self.pool.scope(|scope| {
+            for (k, (r, seg)) in segs.into_iter().enumerate() {
+                scope.submit(k, move |_w| {
+                    let t = Instant::now();
+                    reduce::tree_sum_range(partials, &r, seg);
+                    reduce::normalize(seg, count);
+                    reduce_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                });
+            }
+        });
+    }
+
+    /// The serial-path partitioned fused update: each range applies
+    /// the reference per-element hybrid rule to its contiguous slice
+    /// of the packed `params‖m‖v` state over `par`'s scoped threads.
+    /// Bit-identical to the unsharded fused entries and to
+    /// [`ShardedBackend::pipelined_fused_step`]: the per-element
+    /// expressions are `optim::frugal`'s single source of truth, no
+    /// element is visited twice, and the ranges tile `[0, n)` — pinned
+    /// by `frugal::tests::range_kernel_tiles_to_the_unsharded_step`
+    /// and the shard/elastic parity gates.
+    fn sharded_fused_step(&self, state: &[f32], mask: Option<&[f32]>,
+                          s: &crate::optim::StepScalars, grads: &[f32], loss: f32)
+                          -> Result<Vec<f32>> {
         let man = &self.manifest;
         let n = man.n_params;
         ensure!(state.len() == man.state_len,
@@ -448,9 +741,6 @@ impl ShardedBackend {
         let (params, rest) = next.split_at_mut(n);
         let (ms, rest) = rest.split_at_mut(n);
         let (vs, loss_slot) = rest.split_at_mut(n);
-        // carve each shard's owned (p, g, m, v) slices; the partition
-        // ranges tile [0, n) in order, so sequential split_at_mut lands
-        // exactly on the ownership boundaries
         struct RangeJob<'a> {
             lo: usize,
             p: &'a mut [f32],
@@ -479,8 +769,6 @@ impl ShardedBackend {
                                                       job.m, job.v, mask, s);
         });
         loss_slot[0] = loss;
-        // measured residency: the largest owned m+v slice under the
-        // live mask (what a real worker would actually hold)
         let peak = self
             .partition
             .ranges
@@ -496,16 +784,18 @@ impl ShardedBackend {
     }
 }
 
-/// One shard's half of the fan-out: rewrite the worker's persistent
-/// upload slots with the replicated params and the shard's row block
-/// (same shapes every step, so after the first step this allocates
-/// nothing), run `grad_part`, and read the raw partial back.
-fn run_shard(worker: &Mutex<ShardWorker>, params: &[f32], tokens: &[i32],
-             token_dims: &[usize; 2], labels: Option<&LabelSlice>) -> Result<Vec<f32>> {
-    let mut w = worker.lock().unwrap_or_else(|p| p.into_inner());
-    let w = &mut *w;
+/// One shard's half of the fan-out, running on its persistent worker
+/// thread: rewrite the worker's upload slots with the replicated
+/// params and the shard's row block (same shapes every step, so after
+/// the first step this allocates nothing), run `grad_part`, and read
+/// the raw partial back into the caller's persistent buffer. Returns
+/// whether the read-back reused that buffer's capacity.
+fn run_shard(w: &mut ShardWorker, out: &mut Vec<f32>, params: &[f32], tokens: &[i32],
+             token_dims: [usize; 2], labels: Option<&LabelSlice<'_>>,
+             upload_ns: &AtomicU64) -> Result<bool> {
+    let t = Instant::now();
     w.engine.upload_f32_into(&mut w.params, params, &[params.len()])?;
-    w.engine.upload_i32_into(&mut w.tokens, tokens, token_dims)?;
+    w.engine.upload_i32_into(&mut w.tokens, tokens, &token_dims)?;
     match labels {
         None => w.labels = None,
         Some(LabelSlice::I(v)) => {
@@ -515,6 +805,7 @@ fn run_shard(worker: &Mutex<ShardWorker>, params: &[f32], tokens: &[i32],
             w.engine.upload_f32_into(&mut w.labels, v, &[v.len()])?;
         }
     }
+    upload_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
     let mut args: Vec<&Buffer> = vec![
         w.params.as_ref().expect("params slot filled"),
         w.tokens.as_ref().expect("tokens slot filled"),
@@ -522,8 +813,15 @@ fn run_shard(worker: &Mutex<ShardWorker>, params: &[f32], tokens: &[i32],
     if let Some(l) = w.labels.as_ref() {
         args.push(l);
     }
-    let out = w.engine.run("grad_part", &args)?;
-    w.engine.read_all_f32(&out)
+    let outb = w.engine.run("grad_part", &args)?;
+    let reused = w.engine.read_all_f32_into(&outb, out)?;
+    // recycle the output allocation into this worker thread's scratch
+    // pool — the sim engine's next grad_part take re-draws it, closing
+    // the per-step allocation loop
+    if let Buffer::Host { data: HostData::F32(v), .. } = outb {
+        pool::put(v);
+    }
+    Ok(reused)
 }
 
 impl ExecBackend for ShardedBackend {
@@ -532,7 +830,12 @@ impl ExecBackend for ShardedBackend {
     }
 
     fn has_entry(&self, entry: &str) -> bool {
-        self.lock(0).engine.has_entry(entry)
+        let mut has = false;
+        self.pool.scope(|scope| {
+            let has = &mut has;
+            scope.submit(0, move |w| *has = w.engine.has_entry(entry));
+        });
+        has
     }
 
     fn shard_count(&self) -> usize {
@@ -546,6 +849,16 @@ impl ExecBackend for ShardedBackend {
             state_bytes: self.state_bytes.load(Ordering::Relaxed),
             grad_bytes: self.grad_bytes.load(Ordering::Relaxed),
             owned_state_bytes: self.owned_state_bytes.load(Ordering::Relaxed),
+        })
+    }
+
+    fn phase_stats(&self) -> Option<PhaseNanos> {
+        Some(PhaseNanos {
+            fanout_ns: self.phases.fanout_ns.load(Ordering::Relaxed),
+            upload_ns: self.phases.upload_ns.load(Ordering::Relaxed),
+            reduce_ns: self.phases.reduce_ns.load(Ordering::Relaxed),
+            update_ns: self.phases.update_ns.load(Ordering::Relaxed),
+            steps: self.phases.steps.load(Ordering::Relaxed),
         })
     }
 
@@ -576,11 +889,26 @@ impl ExecBackend for ShardedBackend {
                     Buffer::Pjrt(_) => bail!("sharded backend only accepts host buffers"),
                 };
                 let labels = if cls { Some(args[base + 2]) } else { None };
-                let (grads, loss) =
-                    self.reduce_grads(&state[..man.n_params], tokens, tdims, labels)?;
+                let mut bufs = self.lock_bufs();
+                let (loss, count) = self.fanout_partials(&mut bufs, &state[..man.n_params],
+                                                         tokens, tdims, labels)?;
                 // the update validates the mask length; price the sync
                 // only once the step is known-good
-                let next = self.sharded_fused_step(state, mask, &scal, &grads, loss)?;
+                let next = if self.pipelined {
+                    self.pipelined_fused_step(&bufs, state, mask, &scal, loss, count)?
+                } else {
+                    let t = Instant::now();
+                    let grads = self.serial_reduce(&bufs, count);
+                    self.phases.reduce_ns.fetch_add(t.elapsed().as_nanos() as u64,
+                                                    Ordering::Relaxed);
+                    let t = Instant::now();
+                    let next = self.sharded_fused_step(state, mask, &scal, &grads, loss)?;
+                    self.phases.update_ns.fetch_add(t.elapsed().as_nanos() as u64,
+                                                    Ordering::Relaxed);
+                    next
+                };
+                drop(bufs);
+                self.phases.steps.fetch_add(1, Ordering::Relaxed);
                 self.note_reduce(mask, false);
                 let dims = vec![next.len()];
                 Ok(Buffer::Host { data: HostData::F32(next), dims })
@@ -596,9 +924,25 @@ impl ExecBackend for ShardedBackend {
                     Buffer::Pjrt(_) => bail!("sharded backend only accepts host buffers"),
                 };
                 let labels = if cls { Some(args[2]) } else { None };
-                let (mut grads, loss) = self.reduce_grads(params, tokens, tdims, labels)?;
+                let mut bufs = self.lock_bufs();
+                let (loss, count) =
+                    self.fanout_partials(&mut bufs, params, tokens, tdims, labels)?;
+                let n = man.n_params;
+                let mut grads;
+                if self.pipelined {
+                    grads = vec![0f32; n + 1];
+                    self.pipelined_reduce_scatter(&bufs, count, &mut grads[..n]);
+                } else {
+                    let t = Instant::now();
+                    grads = self.serial_reduce(&bufs, count);
+                    self.phases.reduce_ns.fetch_add(t.elapsed().as_nanos() as u64,
+                                                    Ordering::Relaxed);
+                    grads.push(0.0);
+                }
+                grads[n] = loss;
+                drop(bufs);
+                self.phases.steps.fetch_add(1, Ordering::Relaxed);
                 self.note_reduce(None, true);
-                grads.push(loss);
                 let dims = vec![grads.len()];
                 Ok(Buffer::Host { data: HostData::F32(grads), dims })
             }
@@ -684,9 +1028,11 @@ mod tests {
         let b = load("sim", "artifacts", "nano", &["grad", "eval"], 1).unwrap();
         assert_eq!(b.shard_count(), 1);
         assert!(b.sync_stats().is_none());
+        assert!(b.phase_stats().is_none());
         let s = load("sim", "artifacts", "nano.b8", &["grad", "eval"], 4).unwrap();
         assert_eq!(s.shard_count(), 4);
         assert_eq!(s.sync_stats().unwrap(), SyncTraffic { shards: 4, ..Default::default() });
+        assert_eq!(s.phase_stats().unwrap(), PhaseNanos::default());
     }
 
     #[test]
@@ -741,6 +1087,90 @@ mod tests {
         let sync = sb.sync_stats().unwrap();
         assert_eq!(sync.state_bytes, 12 * man.n_params);
         assert_eq!(sync.grad_bytes, 0);
+        // one sharded step, with every phase observed
+        let ph = sb.phase_stats().unwrap();
+        assert_eq!(ph.steps, 1);
+        assert!(ph.fanout_ns > 0 && ph.reduce_ns > 0 && ph.update_ns > 0);
+    }
+
+    #[test]
+    fn pipelined_step_matches_serial_reference_bitwise() {
+        // the reduce-scatter + in-worker update against the
+        // whole-vector reference path, frugal (masked) and grad, at 2
+        // and 4 shards — every output bit equal
+        let man = sharded_lm("nano.b8", 2).manifest().clone();
+        let state = crate::model::init::init_state(&man, 11);
+        let toks = lm_tokens(&man, 13);
+        let scal = StepScalars::new(1e-2, 1e-3, 0.01, 0.9, 0.999, 1e-8, 1).to_array();
+        let mut mask = crate::projection::SubspaceMask::new(&man);
+        let mut rng = Rng::new(3);
+        mask.redefine(crate::projection::Strategy::Random, 0.5, None, &mut rng).unwrap();
+        let rendered = mask.render();
+        for shards in [2usize, 4] {
+            let mut serial = sharded_lm("nano.b8", shards);
+            serial.set_pipelined(false);
+            let mut piped = sharded_lm("nano.b8", shards);
+            piped.set_pipelined(true);
+            let step = |sb: &ShardedBackend| -> (Vec<f32>, Vec<f32>) {
+                let s = sb.upload_f32(&state, &[man.state_len]).unwrap();
+                let m = sb.upload_f32(&rendered, &[man.mask_len]).unwrap();
+                let c = sb.upload_f32(&scal, &[8]).unwrap();
+                let t =
+                    sb.upload_i32(&toks, &[man.model.batch, man.model.seq + 1]).unwrap();
+                let next =
+                    sb.read_all_f32(&sb.run("frugal", &[&s, &m, &c, &t]).unwrap()).unwrap();
+                let p = sb.upload_f32(&state[..man.n_params], &[man.n_params]).unwrap();
+                let grad =
+                    sb.read_all_f32(&sb.run("grad", &[&p, &t]).unwrap()).unwrap();
+                (next, grad)
+            };
+            let (want_next, want_grad) = step(&serial);
+            let (got_next, got_grad) = step(&piped);
+            assert_eq!(want_next.len(), got_next.len());
+            for (i, (w, g)) in want_next.iter().zip(&got_next).enumerate() {
+                assert_eq!(w.to_bits(), g.to_bits(), "{shards} shards: state elem {i}");
+            }
+            assert_eq!(want_grad.len(), got_grad.len());
+            for (i, (w, g)) in want_grad.iter().zip(&got_grad).enumerate() {
+                assert_eq!(w.to_bits(), g.to_bits(), "{shards} shards: grad elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn persistent_workers_reuse_scratch_across_steps() {
+        // after warmup, a step must not grow any persistent buffer nor
+        // allocate pooled scratch: realloc counters and pool misses
+        // flat, pool hits still growing — the "no allocation in the
+        // shard hot path" claim, measured
+        let mut sb = sharded_lm("nano.b8", 2);
+        sb.set_pipelined(true);
+        let man = sb.manifest().clone();
+        let toks = lm_tokens(&man, 3);
+        let scal = StepScalars::new(1e-2, 1e-3, 0.01, 0.9, 0.999, 1e-8, 1).to_array();
+        let step = |sb: &ShardedBackend, state: &[f32]| -> Vec<f32> {
+            let s = sb.upload_f32(state, &[man.state_len]).unwrap();
+            let c = sb.upload_f32(&scal, &[8]).unwrap();
+            let t = sb.upload_i32(&toks, &[man.model.batch, man.model.seq + 1]).unwrap();
+            sb.read_all_f32(&sb.run("adamw", &[&s, &c, &t]).unwrap()).unwrap()
+        };
+        let mut state = crate::model::init::init_state(&man, 2);
+        for _ in 0..2 {
+            state = step(&sb, &state);
+        }
+        let warm = sb.scratch_stats();
+        for _ in 0..4 {
+            state = step(&sb, &state);
+        }
+        let later = sb.scratch_stats();
+        assert_eq!(later.partial_reallocs, warm.partial_reallocs,
+                   "fan-out read-back buffers must be reused across steps");
+        assert_eq!(later.grad_reallocs, warm.grad_reallocs,
+                   "worker reduce scratch must be reused across steps");
+        assert_eq!(later.pool_misses, warm.pool_misses,
+                   "steady-state steps must not allocate pooled scratch");
+        assert!(later.pool_hits > warm.pool_hits,
+                "steady-state steps must recycle pooled scratch");
     }
 
     #[test]
@@ -785,6 +1215,7 @@ mod tests {
         assert_eq!(run(&single), run(&sb));
         // delegation is not a reduce: sync counters stay untouched
         assert_eq!(sb.sync_stats().unwrap().reduces, 0);
+        assert_eq!(sb.phase_stats().unwrap().steps, 0);
     }
 
     #[test]

@@ -34,7 +34,7 @@
 //! here so the sharded and unsharded paths cannot diverge in the final
 //! ops either.
 
-use crate::util::{lanes, par};
+use crate::util::{lanes, par, pool};
 
 /// The single definition of the tree's split point: the left child of
 /// a node over `len` leaves covers the first `ceil(len/2)`. Everything
@@ -124,6 +124,41 @@ pub fn tree_sum_vecs(mut parts: Vec<Vec<f32>>) -> Vec<f32> {
         }
     }
     rec(&mut parts)
+}
+
+/// [`tree_sum_vecs`] restricted to one element range — the
+/// reduce-scatter primitive of the pipelined sharded step. Writes
+/// `tree_sum_vecs(parts)[r]` into `out` (which must have `r.len()`
+/// elements), without consuming the parts, so each shard worker can
+/// reduce *its own* partition range concurrently with the others.
+///
+/// Bit-exactness: the tree combine is element-wise (`x[i] += y[i]`
+/// leaf-to-root in [`split_mid`] order), so restricting every level of
+/// the recursion to `r` performs, for each element of the range, the
+/// *identical* sequence of additions the whole-vector reduction
+/// performs for that element — pinned bitwise against
+/// [`tree_sum_vecs`] below. Temporaries come from the calling thread's
+/// scratch pool, so a persistent worker reduces its range with zero
+/// steady-state allocation.
+pub fn tree_sum_range(parts: &[Vec<f32>], r: &std::ops::Range<usize>, out: &mut [f32]) {
+    fn rec(parts: &[Vec<f32>], r: &std::ops::Range<usize>, out: &mut [f32]) {
+        if parts.len() == 1 {
+            out.copy_from_slice(&parts[0][r.clone()]);
+            return;
+        }
+        let mid = split_mid(parts.len());
+        rec(&parts[..mid], r, out);
+        let mut right = pool::take_raw(out.len());
+        rec(&parts[mid..], r, &mut right);
+        lanes::add_assign(out, &right);
+        pool::put(right);
+    }
+    assert_eq!(out.len(), r.len(), "tree_sum_range: out/range length mismatch");
+    if parts.is_empty() {
+        out.fill(0.0);
+        return;
+    }
+    rec(parts, r, out);
 }
 
 /// Scalar sibling of [`tree_sum_vecs`]: tree-sum of f32 values with
@@ -348,6 +383,50 @@ mod tests {
             }
         }
         par::set_threads(saved);
+    }
+
+    /// The reduce-scatter primitive must agree bitwise with the
+    /// whole-vector tree on every range — including ranges that are
+    /// NOT subtree-aligned, because the combine is element-wise.
+    #[test]
+    fn tree_sum_range_matches_tree_sum_vecs_on_any_range() {
+        let dim = 53usize;
+        for k in [1usize, 2, 3, 4, 5, 7, 8] {
+            let parts: Vec<Vec<f32>> =
+                (0..k).map(|i| vals(dim, 900 + k as u64 * 31 + i as u64)).collect();
+            let whole = tree_sum_vecs(parts.clone());
+            for r in [0..dim, 0..1, dim - 1..dim, 3..17, 13..14, 20..53, 0..0] {
+                let mut out = vec![f32::NAN; r.len()];
+                tree_sum_range(&parts, &r, &mut out);
+                for (i, (a, b)) in out.iter().zip(&whole[r.clone()]).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "k {k} range {r:?} elem {i}");
+                }
+            }
+        }
+        // no parts: the empty sum, regardless of prior out contents
+        let mut out = vec![f32::NAN; 4];
+        tree_sum_range(&[], &(0..4), &mut out);
+        assert_eq!(out, vec![0.0; 4]);
+    }
+
+    /// Scattered per-range reduction across a disjoint cover composes
+    /// to the exact whole-vector reduction — the identity the
+    /// pipelined fused step relies on.
+    #[test]
+    fn scattered_ranges_reassemble_the_full_reduction() {
+        let dim = 40usize;
+        let parts: Vec<Vec<f32>> = (0..4).map(|i| vals(dim, 4242 + i as u64)).collect();
+        let whole = tree_sum_vecs(parts.clone());
+        let mut scattered = vec![0.0f32; dim];
+        let mut rest = &mut scattered[..];
+        for r in [0usize..10, 10..20, 20..30, 30..40] {
+            let (seg, rr) = rest.split_at_mut(r.len());
+            rest = rr;
+            tree_sum_range(&parts, &r, seg);
+        }
+        for (i, (a, b)) in scattered.iter().zip(&whole).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "elem {i}");
+        }
     }
 
     #[test]

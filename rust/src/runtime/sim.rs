@@ -46,6 +46,20 @@
 //! exactly a subtree of the full batch's pass, so
 //! [`crate::runtime::shard::ShardedBackend`] can reassemble the
 //! single-backend result bit-for-bit from per-shard partials.
+//!
+//! # The embedding-gather head cache
+//!
+//! Within one LM pass the forward head `h(t) = b + (1/n_mats) Σᵢ Wᵢᵀ
+//! e(t)` depends only on the token id `t` and the (fixed-for-the-pass)
+//! parameters, so repeated tokens recompute identical bits. Each pass
+//! builds a private per-worker [`GatherCache`] (pooled `vocab × cols`
+//! scratch with a validity stamp per token): the first occurrence of a
+//! token computes `h(t)` into its cache row with the *same*
+//! `head_into` call the uncached code ran, later occurrences reuse the
+//! row — bit-identical by construction, since `h(t)` is a pure
+//! function of `(t, params)` within the pass. The cache's lifetime IS
+//! its invalidation: it never outlives the pass that built it, so a
+//! parameter update can never be observed through a stale row.
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -99,6 +113,27 @@ impl Labels<'_> {
             Labels::Class(v) => v.len(),
             Labels::Reg(v) => v.len(),
         }
+    }
+}
+
+/// One pass's embedding-gather head cache (see the module docs): row
+/// `t` of `rows` holds `h(t)` once `stamp[t]` is 1.0. Built per pass,
+/// per worker thread, from pooled scratch — `rows` is *raw* (stale
+/// contents from the pool are fine because `stamp` gates every read),
+/// `stamp` is zeroed. Never shared across threads and never kept
+/// across a parameter update.
+struct GatherCache {
+    /// `vocab × cols` cached heads, valid only where stamped
+    rows: Vec<f32>,
+    /// `vocab` validity stamps: 0.0 = empty, 1.0 = filled
+    stamp: Vec<f32>,
+}
+
+impl GatherCache {
+    /// Hand the allocations back to the current thread's scratch pool.
+    fn release(self) {
+        pool::put(self.rows);
+        pool::put(self.stamp);
     }
 }
 
@@ -251,6 +286,33 @@ impl SimEngine {
         }
     }
 
+    /// A fresh (all-empty) gather cache for one pass over this engine,
+    /// drawn from the current thread's scratch pool. Callers hand it
+    /// back with [`GatherCache::release`] when the pass ends; the
+    /// cache must never outlive a parameter change (see the module
+    /// docs — its per-pass lifetime is its invalidation).
+    fn new_cache(&self) -> GatherCache {
+        GatherCache {
+            rows: pool::take_raw(self.manifest.model.vocab * self.cols),
+            stamp: pool::take_zeroed(self.manifest.model.vocab),
+        }
+    }
+
+    /// The forward head `h(t)` for token id `t`, computed on first use
+    /// (with the identical [`SimEngine::head_into`] call the uncached
+    /// code ran, hence bit-identical) and served from `cache` on every
+    /// repeat within the pass.
+    fn cached_head<'c>(&self, cache: &'c mut GatherCache, params: &[f32],
+                       t: usize) -> &'c [f32] {
+        let c = self.cols;
+        if cache.stamp[t] == 0.0 {
+            let x = &self.embed[t * self.rows..(t + 1) * self.rows];
+            self.head_into(params, x, &mut cache.rows[t * c..(t + 1) * c]);
+            cache.stamp[t] = 1.0;
+        }
+        &cache.rows[t * c..(t + 1) * c]
+    }
+
     /// Accumulate `dL/dW_i += (1/n_mats)·x·dhᵀ` and `dL/db += dh`.
     fn accum_grads(&self, grads: &mut [f32], x: &[f32], dh: &[f32]) {
         let inv = 1.0 / self.n_mats as f32;
@@ -293,9 +355,12 @@ impl SimEngine {
     /// `(tree-summed loss, token count)`.
     /// One window's contribution: the f64 loss sum over its `seq`
     /// positions, with raw (unnormalized) gradients accumulated into
-    /// `g` when given. `h`/`dh` are caller-provided scratch.
+    /// `g` when given. `cache`/`dh` are caller-provided scratch; the
+    /// head `h(t)` comes from `cache`, computed once per distinct
+    /// token id per pass.
     fn lm_window(&self, params: &[f32], tokens: &[i32], sp1: usize, w: usize,
-                 h: &mut [f32], dh: &mut [f32], mut g: Option<&mut [f32]>) -> f64 {
+                 cache: &mut GatherCache, dh: &mut [f32],
+                 mut g: Option<&mut [f32]>) -> f64 {
         let d = &self.manifest.model;
         let mut wsum = 0f64;
         for j in 0..d.seq {
@@ -303,7 +368,7 @@ impl SimEngine {
             let u = tokens[w * sp1 + j + 1].rem_euclid(d.vocab as i32) as usize;
             let x = &self.embed[t * self.rows..(t + 1) * self.rows];
             let y = &self.target[u * self.cols..(u + 1) * self.cols];
-            self.head_into(params, x, h);
+            let h = self.cached_head(cache, params, t);
             // residual via the lane kernel; the f64 loss accumulation
             // stays a scalar loop in ascending order (order-dependent)
             lanes::sub_into(dh, h, y);
@@ -329,19 +394,19 @@ impl SimEngine {
     /// parallel caller can hand each subtree its own disjoint
     /// sub-slice.
     fn lm_grad_tree(&self, params: &[f32], tokens: &[i32], sp1: usize, lo: usize,
-                    hi: usize, wbase: usize, wlosses: &mut [f32], h: &mut [f32],
-                    dh: &mut [f32]) -> Vec<f32> {
+                    hi: usize, wbase: usize, wlosses: &mut [f32],
+                    cache: &mut GatherCache, dh: &mut [f32]) -> Vec<f32> {
         if hi - lo == 1 {
             let mut g = pool::take_zeroed(self.manifest.n_params);
             wlosses[lo - wbase] =
-                self.lm_window(params, tokens, sp1, lo, h, dh, Some(&mut g)) as f32;
+                self.lm_window(params, tokens, sp1, lo, cache, dh, Some(&mut g)) as f32;
             return g;
         }
         let mid = lo + reduce::split_mid(hi - lo);
         let mut left =
-            self.lm_grad_tree(params, tokens, sp1, lo, mid, wbase, wlosses, h, dh);
+            self.lm_grad_tree(params, tokens, sp1, lo, mid, wbase, wlosses, cache, dh);
         let right =
-            self.lm_grad_tree(params, tokens, sp1, mid, hi, wbase, wlosses, h, dh);
+            self.lm_grad_tree(params, tokens, sp1, mid, hi, wbase, wlosses, cache, dh);
         lanes::add_assign(&mut left, &right);
         pool::put(right);
         left
@@ -365,13 +430,14 @@ impl SimEngine {
                 pool::put(total);
             }
             None => {
-                let mut h = vec![0f32; self.cols];
+                let mut cache = self.new_cache();
                 let mut dh = vec![0f32; self.cols];
                 for w in 0..batch {
                     wlosses[w] =
-                        self.lm_window(params, tokens, sp1, w, &mut h, &mut dh, None)
+                        self.lm_window(params, tokens, sp1, w, &mut cache, &mut dh, None)
                             as f32;
                 }
+                cache.release();
             }
         }
         Ok((reduce::tree_sum_f32(&wlosses), count))
@@ -381,11 +447,14 @@ impl SimEngine {
     /// when the pass is big enough to amortize them: the batch's
     /// depth-`levels` [`reduce::subtree_frontier`] ranges each run
     /// their own in-order [`SimEngine::lm_grad_tree`] (with a disjoint
-    /// `wlosses` sub-slice and private `h`/`dh` scratch), and the
+    /// `wlosses` sub-slice and private cache/`dh` scratch), and the
     /// per-subtree partials are combined on this thread, in leaf
     /// order, with the same recursion — so the result is bit-identical
     /// to the serial walk on every thread count (pinned by
-    /// `parallel_lm_fanout_is_bit_identical_to_serial`).
+    /// `parallel_lm_fanout_is_bit_identical_to_serial`). Each worker
+    /// also builds a **private** gather cache for its subtree, kept
+    /// thread-local so caching never introduces cross-thread order
+    /// dependence.
     fn lm_grad_fanout(&self, params: &[f32], tokens: &[i32], sp1: usize, batch: usize,
                       wlosses: &mut [f32]) -> Vec<f32> {
         // per-window work ~ seq positions x (n_mats rows axpy + head)
@@ -407,19 +476,24 @@ impl SimEngine {
                     jobs.push((r.clone(), slot, chunk));
                 }
                 par::run(jobs, |(r, slot, wl)| {
-                    let mut h = vec![0f32; self.cols];
+                    let mut cache = self.new_cache();
                     let mut dh = vec![0f32; self.cols];
                     *slot = Some(self.lm_grad_tree(params, tokens, sp1, r.start, r.end,
-                                                   r.start, wl, &mut h, &mut dh));
+                                                   r.start, wl, &mut cache, &mut dh));
+                    cache.release();
                 });
                 let mut partials: Vec<Vec<f32>> =
                     slots.into_iter().map(|s| s.expect("subtree partial")).collect();
                 return combine_pooled(&mut partials);
             }
         }
-        let mut h = vec![0f32; self.cols];
+        let mut cache = self.new_cache();
         let mut dh = vec![0f32; self.cols];
-        self.lm_grad_tree(params, tokens, sp1, 0, batch, 0, wlosses, &mut h, &mut dh)
+        let g =
+            self.lm_grad_tree(params, tokens, sp1, 0, batch, 0, wlosses, &mut cache,
+                              &mut dh);
+        cache.release();
+        g
     }
 
     /// Next-token LM pass. Returns `(tree-summed loss, token count)`;
@@ -636,7 +710,12 @@ impl SimEngine {
                 // unnormalized tree-summed grads ‖ f32 loss total ‖ count
                 arity(2)?;
                 let (params, tokens) = (args[0].host_f32()?, args[1].host_i32()?);
-                let mut grads = vec![0f32; n];
+                // pooled with the two tail slots pre-reserved, so the
+                // persistent shard worker that recycles this buffer
+                // (via read_all_f32_into + pool::put) makes the whole
+                // entry allocation-free at steady state
+                let mut grads = pool::take_zeroed(n + 2);
+                grads.truncate(n);
                 let (sum, count) = self.lm_pass_raw(params, tokens, Some(&mut grads))?;
                 ensure!(count < reduce::MAX_F32_EXACT_COUNT,
                         "grad_part count {count} exceeds the exact-f32 range of the \
@@ -714,7 +793,8 @@ impl SimEngine {
                 arity(3)?;
                 let (params, tokens) = (args[0].host_f32()?, args[1].host_i32()?);
                 let labels = self.labels(args[2])?;
-                let mut grads = vec![0f32; n];
+                let mut grads = pool::take_zeroed(n + 2);
+                grads.truncate(n);
                 let (sum, batch) =
                     self.cls_pass_raw(params, tokens, &labels, Some(&mut grads), None)?;
                 ensure!(batch < reduce::MAX_F32_EXACT_COUNT,
@@ -964,6 +1044,14 @@ impl ExecBackend for SimEngine {
     fn read_all_f32(&self, buf: &Buffer) -> Result<Vec<f32>> {
         Ok(buf.host_f32()?.to_vec())
     }
+
+    fn read_all_f32_into(&self, buf: &Buffer, out: &mut Vec<f32>) -> Result<bool> {
+        let src = buf.host_f32()?;
+        let reused = out.capacity() >= src.len();
+        out.clear();
+        out.extend_from_slice(src);
+        Ok(reused)
+    }
 }
 
 #[cfg(test)]
@@ -1131,6 +1219,26 @@ mod tests {
     }
 
     #[test]
+    fn cached_head_is_bit_identical_to_head_into_and_stable_on_repeat() {
+        // first use computes through the very same head_into call, and
+        // repeats serve the stamped row unchanged
+        let e = lm_engine();
+        let man = e.manifest().clone();
+        let params = init::init_state(&man, 5)[..man.n_params].to_vec();
+        let mut cache = e.new_cache();
+        for t in [0usize, 3, 3, 7, 3] {
+            let mut want = vec![0f32; e.cols];
+            let x = &e.embed[t * e.rows..(t + 1) * e.rows];
+            e.head_into(&params, x, &mut want);
+            let got = e.cached_head(&mut cache, &params, t);
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "token {t} elem {i}");
+            }
+        }
+        cache.release();
+    }
+
+    #[test]
     fn lm_grad_tree_matches_materialized_parts() {
         // the O(log batch) in-place recursion must be bit-identical to
         // materializing one vector per window and tree-summing them —
@@ -1146,18 +1254,20 @@ mod tests {
             let mut grads = vec![0f32; n];
             let (sum, _) = e.lm_pass_raw(&params, &toks, Some(&mut grads)).unwrap();
             // reference: per-window vectors + the shared tree reducer
-            let mut h = vec![0f32; e.cols];
+            // (a shared gather cache is fine — h(t) is pass-invariant)
+            let mut cache = e.new_cache();
             let mut dh = vec![0f32; e.cols];
             let mut parts = Vec::with_capacity(batch);
             let mut wlosses = Vec::with_capacity(batch);
             for w in 0..batch {
                 let mut g = vec![0f32; n];
                 wlosses.push(
-                    e.lm_window(&params, &toks, sp1, w, &mut h, &mut dh, Some(&mut g))
-                        as f32,
+                    e.lm_window(&params, &toks, sp1, w, &mut cache, &mut dh,
+                                Some(&mut g)) as f32,
                 );
                 parts.push(g);
             }
+            cache.release();
             let want = crate::runtime::shard::reduce::tree_sum_vecs(parts);
             for (i, (a, b)) in grads.iter().zip(&want).enumerate() {
                 assert_eq!(a.to_bits(), b.to_bits(), "batch {batch}: elem {i}");

@@ -134,6 +134,10 @@ pub const LOOP_RECORD_KEYS: &[&str] = &[
     "uploads_per_step",
     "upload_bytes",
     "state_syncs",
+    "fanout_ns_per_step",
+    "upload_ns_per_step",
+    "reduce_ns_per_step",
+    "update_ns_per_step",
     "final_ppl",
 ];
 
@@ -157,6 +161,10 @@ pub const SHARD_RECORD_KEYS: &[&str] = &[
     "per_shard_replicated_bytes",
     "per_shard_state_bytes",
     "measured_owned_state_bytes",
+    "fanout_ns_per_step",
+    "upload_ns_per_step",
+    "reduce_ns_per_step",
+    "update_ns_per_step",
     "final_ppl",
 ];
 

@@ -7,6 +7,7 @@ pub mod json;
 pub mod lanes;
 pub mod log;
 pub mod par;
+pub mod pipeline;
 pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -1,58 +1,145 @@
-//! Thread-local f32 scratch pool — kills the steady-state per-step
-//! `vec![0.0; n_params]` allocations in the sim hot path.
+//! Reusable `Vec<f32>` scratch buffers for the per-step hot path.
 //!
-//! The sim's gradient tree allocates one n_params-sized buffer per
-//! leaf, per step; the fused entries allocate another for the reduced
-//! gradient. After the first step those allocations are pure allocator
-//! traffic. `take_zeroed` hands back a recycled buffer instead (zeroed,
-//! so it is observationally identical to `vec![0.0; len]`), and `put`
-//! returns a buffer to the current thread's free list.
+//! The training loop allocates a handful of large, same-sized vectors
+//! every step (gradient accumulators, reduce partials, gather caches).
+//! After the first step those allocations are pure allocator traffic.
+//! [`Scratch`] is the explicit free list they recycle through, with
+//! reuse accounting (`hits`/`misses`) so "no allocation in the hot
+//! path" is a testable claim instead of an assumption.
 //!
-//! Thread-local on purpose: no locks on the hot path, and `util::par`
-//! workers each warm their own small pool. Buffers that migrate across
-//! threads (e.g. produced on a worker, combined on the caller) are
-//! simply `put` wherever they end up — correctness never depends on
-//! which pool a buffer came from or returns to.
+//! Two access styles:
+//!
+//! - **Owned** ([`Scratch`]): construct with `Scratch::new()` and call
+//!   `take_zeroed`/`take_raw`/`put` on it directly. This is the shape
+//!   persistent workers want — scratch that belongs to the worker
+//!   struct and provably lives across steps.
+//! - **Thread-local facade** (module-level [`take_zeroed`] /
+//!   [`take_raw`] / [`put`] / [`stats`]): one `Scratch` per thread, no
+//!   locks on the hot path. On a *persistent* worker thread (the
+//!   `util::pipeline` pool) this is equivalent to owned scratch,
+//!   because the thread — and therefore its pool — lives across steps;
+//!   on short-lived `util::par` scoped threads it only recycles within
+//!   the one spawn. Buffers may migrate across threads: `put` wherever
+//!   the buffer ends up — correctness never depends on which pool a
+//!   buffer came from or returns to.
+//!
+//! `take_zeroed` returns a buffer bit-identical in content to
+//! `vec![0.0; len]`; `take_raw` skips the zeroing for callers that
+//! overwrite or stamp-guard every element before reading it.
 
 use std::cell::RefCell;
 
-/// Free-list cap per thread. Bounds worst-case retained memory at
-/// `MAX_POOLED * largest_len * 4` bytes per thread while comfortably
-/// covering the deepest gradient-tree recursion (log2(batch) live
-/// buffers) plus the fused-step scratch.
+/// Free-list cap per [`Scratch`]. Bounds worst-case retained memory at
+/// `MAX_POOLED * largest_len * 4` bytes while comfortably covering the
+/// deepest gradient-tree recursion (log2(batch) live buffers) plus the
+/// fused-step and gather-cache scratch.
 const MAX_POOLED: usize = 32;
 
+/// An explicit free list of `Vec<f32>` buffers with reuse accounting.
+pub struct Scratch {
+    free: Vec<Vec<f32>>,
+    hits: usize,
+    misses: usize,
+}
+
+impl Scratch {
+    pub const fn new() -> Self {
+        Self { free: Vec::new(), hits: 0, misses: 0 }
+    }
+
+    /// A buffer of exactly `len` zeros — bit-identical to
+    /// `vec![0.0; len]` whatever was left in the recycled allocation.
+    pub fn take_zeroed(&mut self, len: usize) -> Vec<f32> {
+        match self.free.pop() {
+            Some(mut v) => {
+                self.hits += 1;
+                v.clear();
+                v.resize(len, 0.0);
+                v
+            }
+            None => {
+                self.misses += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// A buffer of length `len` with **unspecified contents** — only
+    /// for callers that overwrite (or stamp-guard) every element
+    /// before reading. Skips the `O(len)` zeroing on reuse.
+    pub fn take_raw(&mut self, len: usize) -> Vec<f32> {
+        match self.free.pop() {
+            Some(mut v) => {
+                self.hits += 1;
+                if v.len() > len {
+                    v.truncate(len);
+                } else {
+                    v.resize(len, 0.0);
+                }
+                v
+            }
+            None => {
+                self.misses += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Return a buffer's allocation to the free list. Zero-capacity
+    /// vectors are dropped (nothing to recycle); beyond [`MAX_POOLED`]
+    /// retained buffers the allocation is released instead of hoarded.
+    pub fn put(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 && self.free.len() < MAX_POOLED {
+            self.free.push(v);
+        }
+    }
+
+    /// Requests served by recycling an existing allocation.
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// Requests that had to allocate fresh.
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 thread_local! {
-    static FREE: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+    static SCRATCH: RefCell<Scratch> = const { RefCell::new(Scratch::new()) };
 }
 
-/// A zeroed buffer of `len` f32 — bit-identical in content to
-/// `vec![0.0; len]`, but recycled from this thread's pool when
-/// possible.
+/// Thread-local [`Scratch::take_zeroed`].
 pub fn take_zeroed(len: usize) -> Vec<f32> {
-    let recycled = FREE.with(|f| f.borrow_mut().pop());
-    match recycled {
-        Some(mut v) => {
-            v.clear();
-            v.resize(len, 0.0);
-            v
-        }
-        None => vec![0.0; len],
-    }
+    SCRATCH.with(|s| s.borrow_mut().take_zeroed(len))
 }
 
-/// Return a buffer to this thread's pool. Contents are discarded;
-/// oversized free lists drop the buffer instead of growing unbounded.
+/// Thread-local [`Scratch::take_raw`].
+pub fn take_raw(len: usize) -> Vec<f32> {
+    SCRATCH.with(|s| s.borrow_mut().take_raw(len))
+}
+
+/// Thread-local [`Scratch::put`].
 pub fn put(v: Vec<f32>) {
-    if v.capacity() == 0 {
-        return;
-    }
-    FREE.with(|f| {
-        let mut free = f.borrow_mut();
-        if free.len() < MAX_POOLED {
-            free.push(v);
-        }
-    });
+    SCRATCH.with(|s| s.borrow_mut().put(v));
+}
+
+/// `(hits, misses)` of the **current thread's** scratch pool. On a
+/// persistent worker thread, a miss count that stays flat across steps
+/// is the proof that the hot path reached zero steady-state
+/// allocation — `ShardedBackend::scratch_stats` aggregates this per
+/// worker for exactly that test.
+pub fn stats() -> (usize, usize) {
+    SCRATCH.with(|s| {
+        let s = s.borrow();
+        (s.hits(), s.misses())
+    })
 }
 
 #[cfg(test)]
@@ -61,38 +148,72 @@ mod tests {
 
     #[test]
     fn take_zeroed_matches_fresh_vec_even_after_dirty_put() {
-        let mut v = take_zeroed(8);
+        let mut s = Scratch::new();
+        let mut v = s.take_zeroed(8);
         v.iter_mut().for_each(|x| *x = f32::NAN);
-        put(v);
+        s.put(v);
         // recycled buffer must be indistinguishable from vec![0.0; _],
         // at a different length in both directions
         for len in [3usize, 8, 20, 0] {
-            let v = take_zeroed(len);
+            let v = s.take_zeroed(len);
             assert_eq!(v.len(), len);
             assert!(v.iter().all(|&x| x.to_bits() == 0), "len {len}: {v:?}");
-            put(v);
+            s.put(v);
         }
     }
 
     #[test]
-    fn pool_recycles_capacity() {
-        let v = take_zeroed(1000);
+    fn take_raw_has_len_but_contents_are_unspecified() {
+        let mut s = Scratch::new();
+        let mut v = s.take_raw(8);
+        assert_eq!(v, vec![0.0f32; 8], "fresh take_raw buffers are zeroed");
+        v.iter_mut().for_each(|x| *x = 7.0);
+        s.put(v);
+        // reuse may keep old contents — only the length is guaranteed
+        assert_eq!(s.take_raw(3).len(), 3);
+        assert_eq!(s.take_raw(12).len(), 12);
+    }
+
+    #[test]
+    fn scratch_recycles_capacity_and_counts_reuse() {
+        let mut s = Scratch::new();
+        let v = s.take_zeroed(1000);
+        assert_eq!((s.hits(), s.misses()), (0, 1));
         let ptr = v.as_ptr();
-        put(v);
-        let v2 = take_zeroed(500);
-        // same allocation reused (same thread, nothing else pooled a
-        // bigger buffer in between)
-        assert_eq!(v2.as_ptr(), ptr);
-        assert!(v2.capacity() >= 1000);
-        put(v2);
+        s.put(v);
+        let v = s.take_zeroed(500);
+        assert_eq!(v.as_ptr(), ptr, "recycled buffer must reuse the allocation");
+        assert!(v.capacity() >= 1000);
+        assert_eq!((s.hits(), s.misses()), (1, 1));
+        s.put(v);
+        let v = s.take_raw(256);
+        assert_eq!(v.as_ptr(), ptr);
+        assert_eq!((s.hits(), s.misses()), (2, 1));
     }
 
     #[test]
     fn free_list_is_bounded() {
+        let mut s = Scratch::new();
         for _ in 0..3 * MAX_POOLED {
-            put(vec![0.0; 4]);
+            s.put(vec![0.0; 4]);
         }
-        let held = FREE.with(|f| f.borrow().len());
-        assert!(held <= MAX_POOLED, "pool held {held} buffers");
+        assert!(s.free.len() <= MAX_POOLED, "pool held {} buffers", s.free.len());
+        // zero-capacity vectors are not worth pooling
+        let mut s = Scratch::new();
+        s.put(Vec::new());
+        assert!(s.free.is_empty());
+    }
+
+    #[test]
+    fn thread_local_facade_shares_one_pool_per_thread() {
+        let v = take_zeroed(64);
+        let ptr = v.as_ptr();
+        put(v);
+        let (h0, _) = stats();
+        let v = take_zeroed(32);
+        let (h1, _) = stats();
+        assert!(h1 > h0, "facade take after put must count a hit");
+        assert_eq!(v.as_ptr(), ptr);
+        put(v);
     }
 }

@@ -1,0 +1,144 @@
+//! Pipelined-runtime parity gate: the persistent worker-pool step
+//! (`ShardedBackend` with `set_pipelined(true)`, the default) must be
+//! **bit-identical** to the serial whole-vector reference path
+//! (`set_pipelined(false)`, the pre-pipeline behaviour) — losses, ρ/T
+//! trajectories, eval losses, memory samples, subspace masks and
+//! redefinition events — for every fused Table-1 method at shard
+//! counts N ∈ {1, 2, 4}, and across worker thread-pool sizes.
+//!
+//! Why this holds: the pipelined step reduces each shard's owned
+//! parameter range with `reduce::tree_sum_range` — the restriction of
+//! the global fixed-order tree to that range — and the tree reduction
+//! is elementwise, so per-range reassembly is the same arithmetic in
+//! the same order as the whole-vector reduce. The update then calls
+//! the identical `hybrid_update_range` over identical ranges. Thread
+//! count and pipelining change wall-clock, never one bit.
+
+use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::method::Method;
+use adafrugal::coordinator::session::{Session, SessionOptions, SessionResult};
+use adafrugal::coordinator::task::LmTask;
+use adafrugal::runtime::backend::{self, ExecBackend};
+use adafrugal::runtime::shard::ShardedBackend;
+use adafrugal::util::par;
+
+/// The parity workload: `nano.b8` is the nano sim LM geometry with a
+/// global batch of 8 windows, so it splits evenly over 2 and 4 shards.
+fn parity_cfg(shards: usize) -> TrainConfig {
+    TrainConfig {
+        preset: "nano.b8".into(),
+        backend: "sim".into(),
+        shards,
+        steps: 60,
+        warmup_steps: 5,
+        n_eval: 20,
+        t_start: 10,
+        t_max: 40,
+        tau_low: 0.02,
+        log_every: 5,
+        val_batches: 2,
+        lr: 1e-2,
+        seed: 7,
+        ..TrainConfig::default()
+    }
+}
+
+/// Run a full session on a [`ShardedBackend`] built by hand (bypassing
+/// `shard::load`, which never yields the wrapper for one shard) so the
+/// pipelined/serial switch is explicit — including at N = 1, where the
+/// pipelined path still exercises the single persistent worker.
+fn run_with(method: Method, shards: usize, pipelined: bool)
+            -> (SessionResult, Vec<f32>) {
+    let cfg = parity_cfg(shards);
+    let mut entries = method.entries();
+    if !entries.contains(&"grad_part") {
+        entries.push("grad_part");
+    }
+    let mut inners = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        inners.push(backend::load("sim", &cfg.artifacts_dir, &cfg.preset, &entries)
+            .unwrap());
+    }
+    let mut engine = ShardedBackend::new(inners).unwrap();
+    engine.set_pipelined(pipelined);
+    let task = LmTask::new(&cfg, engine.manifest()).unwrap();
+    let mut s = Session::new(cfg, method.profile(), Box::new(engine), Box::new(task),
+                             SessionOptions::pretraining())
+        .unwrap();
+    s.quiet = true;
+    let r = s.run().unwrap();
+    let mask = s.mask_render();
+    (r, mask)
+}
+
+/// Every observable of the trajectory, compared bit-for-bit.
+fn assert_identical(label: &str, want: &(SessionResult, Vec<f32>),
+                    got: &(SessionResult, Vec<f32>)) {
+    let (rw, mw) = want;
+    let (rg, mg) = got;
+    assert_eq!(rw.steps.len(), rg.steps.len(), "{label}: step-log length");
+    for (a, b) in rw.steps.iter().zip(&rg.steps) {
+        assert_eq!(a.step, b.step, "{label}");
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(),
+                   "{label}: train loss at step {}: {} vs {}", a.step, a.train_loss,
+                   b.train_loss);
+        assert_eq!(a.rho.to_bits(), b.rho.to_bits(), "{label}: rho at step {}", a.step);
+        assert_eq!(a.t_current, b.t_current, "{label}: T at step {}", a.step);
+    }
+    assert_eq!(rw.evals.len(), rg.evals.len(), "{label}: eval count");
+    for (a, b) in rw.evals.iter().zip(&rg.evals) {
+        assert_eq!(a.step, b.step, "{label}");
+        assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits(),
+                   "{label}: val loss at step {}: {} vs {}", a.step, a.val_loss,
+                   b.val_loss);
+        assert_eq!(a.memory_bytes, b.memory_bytes, "{label}: memory at step {}", a.step);
+    }
+    assert_eq!(rw.redefinitions, rg.redefinitions, "{label}: redefinition count");
+    assert_eq!(rw.t_events, rg.t_events, "{label}: T events");
+    assert_eq!(rw.final_train_loss.to_bits(), rg.final_train_loss.to_bits(),
+               "{label}: final train loss");
+    assert_eq!(mw.len(), mg.len(), "{label}: mask length");
+    for (i, (a, b)) in mw.iter().zip(mg.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label}: mask column {i}");
+    }
+}
+
+#[test]
+fn every_fused_method_pipelined_matches_serial_at_each_shard_count() {
+    for &m in Method::table_roster().iter().filter(|m| m.is_fused()) {
+        for shards in [1usize, 2, 4] {
+            let serial = run_with(m, shards, false);
+            let piped = run_with(m, shards, true);
+            assert_identical(&format!("{m:?} x{shards}"), &serial, &piped);
+            // the pipelined run must also have counted its phases —
+            // silent zeros here would blind the bench breakdown
+            let ph = piped.0.phases.expect("sharded run must report phase stats");
+            assert_eq!(ph.steps as usize, parity_cfg(shards).steps,
+                       "{m:?} x{shards}: one phase-clock tick per step");
+            assert!(ph.reduce_ns > 0 && ph.update_ns > 0,
+                    "{m:?} x{shards}: worker-side phases must accumulate, got {ph:?}");
+        }
+    }
+}
+
+#[test]
+fn host_optimizer_grad_path_pipelined_matches_serial() {
+    // GaLore reduces through the `grad` entry (host-side update), so
+    // the pipelined reduce-scatter path needs its own parity witness
+    let serial = run_with(Method::GaLore, 4, false);
+    let piped = run_with(Method::GaLore, 4, true);
+    assert_identical("galore x4", &serial, &piped);
+}
+
+#[test]
+fn pipelined_run_is_bit_identical_across_thread_pool_sizes() {
+    // the inner engines' batch fan-out uses util::par; its worker
+    // count must never leak into the trajectory, whatever the size
+    let reference = run_with(Method::AdaFrugalCombined, 4, true);
+    for threads in [1usize, 2, 8] {
+        par::set_threads(threads);
+        let got = run_with(Method::AdaFrugalCombined, 4, true);
+        par::set_threads(0);
+        assert_identical(&format!("combined x4 threads={threads}"), &reference, &got);
+    }
+}

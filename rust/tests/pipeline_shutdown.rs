@@ -1,0 +1,93 @@
+//! Worker-lifecycle gate: persistent shard workers must shut down
+//! cleanly — no deadlock, no leaked threads — in every way a runtime
+//! can die: dropped idle, dropped right after a burst of queued work,
+//! dropped as a never-run session, and dropped mid-training with warm
+//! queues and scratch.
+//!
+//! This file holds exactly ONE `#[test]`: `pipeline::live_workers()`
+//! is a process-global counter, so equality assertions against a
+//! baseline are only sound in a binary where no other test can spawn
+//! or retire pools concurrently. Keep it that way.
+
+use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::method::Method;
+use adafrugal::coordinator::session::{Session, SessionOptions};
+use adafrugal::coordinator::task::LmTask;
+use adafrugal::runtime::shard;
+use adafrugal::util::pipeline::{self, WorkerPool};
+
+/// A short sharded training session: big enough to warm every queue,
+/// scratch buffer and gather cache (and cross a redefinition), small
+/// enough to keep this gate fast.
+fn build_session(shards: usize) -> Session {
+    let cfg = TrainConfig {
+        preset: "nano.b8".into(),
+        backend: "sim".into(),
+        shards,
+        steps: 12,
+        warmup_steps: 2,
+        n_eval: 6,
+        t_start: 3,
+        t_max: 9,
+        log_every: 100,
+        val_batches: 1,
+        lr: 1e-2,
+        seed: 7,
+        ..TrainConfig::default()
+    };
+    let m = Method::AdaFrugalCombined;
+    let engine = shard::load("sim", &cfg.artifacts_dir, &cfg.preset, &m.entries(),
+                             shards)
+        .unwrap();
+    let task = LmTask::new(&cfg, engine.manifest()).unwrap();
+    Session::new(cfg, m.profile(), engine, Box::new(task),
+                 SessionOptions::pretraining())
+        .unwrap()
+}
+
+#[test]
+fn workers_shut_down_cleanly_in_every_lifecycle() {
+    let baseline = pipeline::live_workers();
+
+    // raw pool, dropped idle: join must not wait on work that never came
+    {
+        let pool = WorkerPool::new("idle", vec![(), (), (), ()]);
+        assert_eq!(pipeline::live_workers(), baseline + 4, "idle pool spawned");
+        drop(pool);
+    }
+    assert_eq!(pipeline::live_workers(), baseline, "idle pool retired");
+
+    // raw pool, dropped right after a burst of completed scoped work
+    {
+        let pool = WorkerPool::new("burst", vec![0u64; 4]);
+        pool.scope(|scope| {
+            for k in 0..4 {
+                for _ in 0..32 {
+                    scope.submit(k, |n| *n += 1);
+                }
+            }
+        });
+    }
+    assert_eq!(pipeline::live_workers(), baseline, "burst pool retired");
+
+    // full 4-shard session built, never run, dropped: the engine's
+    // workers hold sim engines but no job ever reaches them
+    {
+        let s = build_session(4);
+        assert_eq!(pipeline::live_workers(), baseline + 4, "session pool spawned");
+        drop(s);
+    }
+    assert_eq!(pipeline::live_workers(), baseline, "never-run session retired");
+
+    // dropped mid-training: run a short slice so every worker has hot
+    // scratch, a warmed thread-local pool and a populated upload slot,
+    // then tear the session down with all of that in flight state. A
+    // deadlock here hangs the test; a leak fails the counter below.
+    {
+        let mut s = build_session(4);
+        s.quiet = true;
+        s.run().unwrap();
+        drop(s);
+    }
+    assert_eq!(pipeline::live_workers(), baseline, "mid-training session retired");
+}

@@ -37,13 +37,20 @@ import sys
 
 SCHEMA = "bench_loop/v1"
 
+# per-phase step timings from the persistent shard-worker runtime;
+# null on unsharded runs, must be non-null when shards > 1
+PHASE_KEYS = [
+    "fanout_ns_per_step", "upload_ns_per_step",
+    "reduce_ns_per_step", "update_ns_per_step",
+]
+
 LOOP_RECORD_KEYS = [
     "bench", "backend", "preset", "method", "steps", "reps",
     "steps_per_sec", "sps_min", "sps_max", "noise_rel",
     "step_time_s", "wall_s_incl_eval", "control_time_s",
     "control_ns_per_step", "rho_policy", "t_policy",
     "uploads_fresh", "uploads_reused", "uploads_per_step",
-    "upload_bytes", "state_syncs", "final_ppl",
+    "upload_bytes", "state_syncs", *PHASE_KEYS, "final_ppl",
 ]
 
 SHARD_RECORD_KEYS = [
@@ -51,7 +58,8 @@ SHARD_RECORD_KEYS = [
     "steps_per_sec", "sps_min", "sps_max", "noise_rel",
     "speedup_vs_1shard", "sync_reduces", "sync_state_bytes",
     "sync_grad_bytes", "per_shard_replicated_bytes",
-    "per_shard_state_bytes", "measured_owned_state_bytes", "final_ppl",
+    "per_shard_state_bytes", "measured_owned_state_bytes",
+    *PHASE_KEYS, "final_ppl",
 ]
 
 REQUIRED = {"bench_loop": LOOP_RECORD_KEYS, "bench_loop_shards": SHARD_RECORD_KEYS}
@@ -90,6 +98,12 @@ def load_records(path):
             missing = [k for k in REQUIRED[kind] if k not in rec]
             if missing:
                 fail(f"{path}:{lineno}: kind {kind!r} missing keys {missing}")
+            if kind == "bench_loop_shards" and (rec.get("shards") or 0) > 1:
+                dead = [k for k in PHASE_KEYS if rec.get(k) is None]
+                if dead:
+                    fail(f"{path}:{lineno}: shards={int(rec['shards'])} "
+                         f"record has null phase timings {dead} — the "
+                         f"sharded runtime stopped counting its phases")
             records.append(rec)
     if not records:
         fail(f"{path}: no bench records found")
