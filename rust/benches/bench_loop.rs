@@ -68,6 +68,18 @@ fn emit(line: &json::Value) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// When `ADAFRUGAL_BENCH_TRACE` names a directory, the (unmeasured)
+/// warmup run of each configuration streams its run telemetry there as
+/// `<dir>/<name>.trace.jsonl`. Measured reps always run untraced, so
+/// the recorded numbers and the emitted record schema are identical
+/// with or without the variable set.
+fn bench_trace_path(name: &str) -> Option<String> {
+    match std::env::var("ADAFRUGAL_BENCH_TRACE") {
+        Ok(dir) if !dir.is_empty() => Some(format!("{dir}/{name}.trace.jsonl")),
+        _ => None,
+    }
+}
+
 struct MethodRun {
     r: SessionResult,
     wall_s: f64,
@@ -75,7 +87,8 @@ struct MethodRun {
     state_syncs: f64,
 }
 
-fn run_method_once(m: &Method, steps: usize) -> anyhow::Result<MethodRun> {
+fn run_method_once(m: &Method, steps: usize, trace: Option<&str>)
+                   -> anyhow::Result<MethodRun> {
     let cfg = TrainConfig {
         preset: "nano".into(),
         backend: "sim".into(),
@@ -97,6 +110,9 @@ fn run_method_once(m: &Method, steps: usize) -> anyhow::Result<MethodRun> {
     let mut s = Session::new(cfg, m.profile(), Box::new(counting), Box::new(task),
                              SessionOptions::pretraining())?;
     s.quiet = true;
+    if let Some(p) = trace {
+        s.enable_trace(p)?;
+    }
     let t = std::time::Instant::now();
     let r = s.run()?;
     let wall_s = t.elapsed().as_secs_f64();
@@ -113,11 +129,14 @@ fn run_methods(reps: usize) -> anyhow::Result<()> {
     let steps = 150usize;
     for m in [Method::AdaFrugalCombined, Method::FrugalStatic, Method::AdamW,
               Method::GaLore] {
-        std::hint::black_box(run_method_once(&m, steps)?); // warmup, excluded
+        // warmup, excluded from the stats — and the only rep that ever
+        // streams a trace, so tracing cannot touch a measured number
+        let trace = bench_trace_path(&format!("bench_loop_{}", m.id()));
+        std::hint::black_box(run_method_once(&m, steps, trace.as_deref())?);
         let mut sps = Reps::new();
         let mut last = None;
         for _ in 0..reps {
-            let run = run_method_once(&m, steps)?;
+            let run = run_method_once(&m, steps, None)?;
             sps.push(steps as f64 / run.r.step_time_s.max(1e-9));
             last = Some(run);
         }
@@ -161,7 +180,7 @@ fn run_methods(reps: usize) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn run_shards_once(method: &Method, shards: usize, steps: usize)
+fn run_shards_once(method: &Method, shards: usize, steps: usize, trace: Option<&str>)
                    -> anyhow::Result<(SessionResult, f64, f64)> {
     let cfg = TrainConfig {
         preset: "mid".into(),
@@ -186,6 +205,9 @@ fn run_shards_once(method: &Method, shards: usize, steps: usize)
     let mut s = Session::new(cfg, method.profile(), engine, Box::new(task),
                              SessionOptions::pretraining())?;
     s.quiet = true;
+    if let Some(p) = trace {
+        s.enable_trace(p)?;
+    }
     let r = s.run()?;
     // price the per-shard footprint against the *live* final mask,
     // so the JSON shows the real partition's largest owned slice
@@ -203,11 +225,13 @@ fn shard_sweep(reps: usize) -> anyhow::Result<()> {
     let method = Method::FrugalStatic;
     let mut base_sps: Option<f64> = None;
     for shards in [1usize, 2, 4] {
-        std::hint::black_box(run_shards_once(&method, shards, steps)?); // warmup
+        // warmup, excluded — the only rep that ever streams a trace
+        let trace = bench_trace_path(&format!("bench_loop_shards_{shards}"));
+        std::hint::black_box(run_shards_once(&method, shards, steps, trace.as_deref())?);
         let mut sps = Reps::new();
         let mut last = None;
         for _ in 0..reps {
-            let run = run_shards_once(&method, shards, steps)?;
+            let run = run_shards_once(&method, shards, steps, None)?;
             sps.push(steps as f64 / run.0.step_time_s.max(1e-9));
             last = Some(run);
         }

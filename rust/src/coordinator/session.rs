@@ -62,7 +62,9 @@ use crate::config::TrainConfig;
 use crate::control::{ControlEvent, ControlPlane, LrSchedule, StepObs, TEvent};
 use crate::coordinator::memory_tracker::{MemoryModel, MemoryTracker};
 use crate::coordinator::task::{EvalOutcome, LabelData, Task, TaskBatch};
+use crate::control::PlaneDecision;
 use crate::info;
+use crate::obs::{Recorder, RunReport, StepRecord, WorkerStepNanos};
 use crate::optim::{self, OptimBuild, Optimizer, StateMgmt, StepScalars};
 use crate::projection::{Strategy, SubspaceMask};
 use crate::runtime::backend::{Buffer, ExecBackend};
@@ -210,6 +212,10 @@ pub struct SessionResult {
     /// aggregate worker upload/reduce/update); `None` when the run was
     /// not sharded
     pub phases: Option<crate::runtime::shard::PhaseNanos>,
+    /// end-of-run telemetry rollup (per-phase p50/p95/max, straggler
+    /// ratio, control-decision histogram); `Some` only when tracing
+    /// was enabled via [`Session::enable_trace`]
+    pub report: Option<RunReport>,
 }
 
 /// Optimizer state: backend-resident packed state (fused path) or
@@ -263,7 +269,24 @@ pub struct Session {
     /// steps since the last optimizer-state reset (bias correction)
     t_since_reset: usize,
     timers: PhaseTimer,
+    /// run telemetry (disabled unless [`Session::enable_trace`] ran);
+    /// also the single timing source behind the phase timers
+    rec: Recorder,
     pub quiet: bool,
+}
+
+/// Per-step delta cursor behind the trace stream: the previous step's
+/// cumulative backend counters, so each [`StepRecord`] carries this
+/// step's increments instead of lifetime sums. Only constructed when
+/// tracing is enabled (the scratch snapshot costs one worker-pool
+/// round on sharded backends).
+struct TraceCursor {
+    uploads: UploadStats,
+    sync: Option<crate::runtime::shard::SyncTraffic>,
+    fanout_ns: u64,
+    workers: Vec<crate::runtime::shard::WorkerPhaseNanos>,
+    scratch: Option<crate::runtime::shard::ScratchStats>,
+    events_seen: usize,
 }
 
 /// Learning rate at step `k`: linear warmup then cosine decay to
@@ -487,6 +510,7 @@ impl Session {
             state_mgmt,
             t_since_reset: 0,
             timers: PhaseTimer::new(),
+            rec: Recorder::new(),
             quiet: false,
         })
     }
@@ -501,6 +525,27 @@ impl Session {
 
     pub fn upload_stats(&self) -> UploadStats {
         self.dev.stats
+    }
+
+    /// Turn on run telemetry: stream one schema-locked `trace_step`
+    /// JSONL record per step to `path`, record the span timeline (the
+    /// Chrome trace-event export lands next to it), and attach the
+    /// recorder to the backend so sharded runtimes emit per-worker
+    /// spans. Recording only reads counters and clocks — it never
+    /// touches an RNG stream or reorders a reduction, so the
+    /// trajectory stays byte-identical to an untraced run (pinned by
+    /// `rust/tests/obs_trace.rs`).
+    pub fn enable_trace(&mut self, path: &str) -> Result<()> {
+        self.rec.enable_stream(path)?;
+        self.rec.name_track(0, "session");
+        self.dev.engine.attach_recorder(&self.rec);
+        Ok(())
+    }
+
+    /// The session's telemetry recorder (disabled unless
+    /// [`Session::enable_trace`] was called).
+    pub fn recorder(&self) -> &Recorder {
+        &self.rec
     }
 
     /// The rendered flat column mask of the live subspace (parity
@@ -737,21 +782,28 @@ impl Session {
         let mut pending: Option<TaskBatch> = None;
         let mut last_loss = f64::NAN;
         let mut final_score = None;
+        // trace bookkeeping: the cursor snapshots the cumulative
+        // backend counters the per-step records delta against; `None`
+        // (untraced) costs nothing past the enabled check
+        let mut cursor = if self.rec.enabled() { Some(self.trace_cursor()) } else { None };
 
         for step in from..to {
             // --- dynamic control: one plane decision per step (ρ_k,
             // T_k, redefine?, lr) ---
             let tc = std::time::Instant::now();
             let d = self.control.decide(step);
-            self.timers.add("control", tc.elapsed());
+            let mut control_ns = self.rec.end_phase(&mut self.timers, "control", step, tc);
+            let mut redefine_ns = 0u64;
+            let mut did_redefine = false;
             if self.profile.frugal && d.redefine {
                 let t = std::time::Instant::now();
                 if step > 0 {
                     self.redefine(d.rho)?;
                     redefinitions += 1;
                     redefinition_steps.push(step);
+                    did_redefine = true;
                 }
-                self.timers.add("redefine", t.elapsed());
+                redefine_ns = self.rec.end_phase(&mut self.timers, "redefine", step, t);
             }
 
             // --- the hybrid step, overlapped with next-batch prep ---
@@ -789,8 +841,9 @@ impl Session {
                 }
             };
             pending = next;
-            self.timers.add("step", t.elapsed());
+            let step_ns = self.rec.end_phase(&mut self.timers, "step", step, t);
             let step_loss = step_res?;
+            let mut obs_train_loss: Option<f64> = step_loss.map(|l| l as f64);
 
             if let Some(l) = step_loss {
                 last_loss = l as f64;
@@ -805,6 +858,7 @@ impl Session {
                     None => self.train_loss_now()?,
                 };
                 last_loss = loss as f64;
+                obs_train_loss = Some(last_loss);
                 if step > 0 && self.opts.bail_on_divergence && !loss.is_finite() {
                     bail!("loss diverged by step {step}: {loss}");
                 }
@@ -822,6 +876,9 @@ impl Session {
                 }
             }
 
+            let mut eval_ns = 0u64;
+            let mut obs_val_loss: Option<f64> = None;
+            let mut obs_memory_bytes: Option<u64> = None;
             match self.opts.eval {
                 // --- periodic validation: Eq. 2 / Eq. 3 + checkpoints ---
                 EvalPolicy::Periodic => {
@@ -830,7 +887,7 @@ impl Session {
                     if at_eval || at_checkpoint || step + 1 == self.cfg.steps {
                         let t = std::time::Instant::now();
                         let out = self.evaluate()?;
-                        self.timers.add("eval", t.elapsed());
+                        eval_ns = self.rec.end_phase(&mut self.timers, "eval", step, t);
                         let bytes = MemoryTracker::bytes_for(
                             self.dev.engine.manifest(),
                             self.profile.memory,
@@ -848,8 +905,11 @@ impl Session {
                             val_loss: if at_eval { Some(out.val_loss) } else { None },
                             memory_bytes: Some(bytes),
                         });
-                        self.timers.add("control", tc.elapsed());
+                        control_ns +=
+                            self.rec.end_phase(&mut self.timers, "control", step, tc);
                         memory.record(step + 1, bytes);
+                        obs_val_loss = Some(out.val_loss);
+                        obs_memory_bytes = Some(bytes as u64);
                         final_score = out.score;
                         evals.push(EvalPoint {
                             step: step + 1,
@@ -884,6 +944,7 @@ impl Session {
                             if let OptState::Fused { state_buf, .. } = &self.dev.opt {
                                 last_loss =
                                     self.dev.engine.read_f32(state_buf, slot, 1)?[0] as f64;
+                                obs_train_loss = Some(last_loss);
                             }
                         }
                         if tee_dynamic && !last_step {
@@ -898,19 +959,39 @@ impl Session {
                                 val_loss: Some(last_loss),
                                 memory_bytes: None,
                             });
-                            self.timers.add("control", tc.elapsed());
+                            control_ns +=
+                                self.rec.end_phase(&mut self.timers, "control", step, tc);
                         }
                     }
                 }
+            }
+
+            if let Some(cur) = cursor.as_mut() {
+                self.record_trace_step(
+                    step, &d, did_redefine, obs_train_loss, obs_val_loss,
+                    obs_memory_bytes, control_ns, redefine_ns, step_ns, eval_ns, cur,
+                )?;
             }
         }
 
         if self.opts.eval == EvalPolicy::FinalOnly && to == self.cfg.steps {
             let t = std::time::Instant::now();
             let out = self.evaluate()?;
-            self.timers.add("eval", t.elapsed());
+            self.rec.end_phase(&mut self.timers, "eval", to, t);
             final_score = out.score;
         }
+
+        let report = if self.rec.enabled() {
+            if let Some(p) = self.rec.write_chrome()? {
+                if !self.quiet {
+                    info!("[{}] trace timeline exported to {p}", self.profile.id);
+                }
+            }
+            self.rec.flush()?;
+            Some(self.rec.report())
+        } else {
+            None
+        };
 
         Ok(SessionResult {
             evals,
@@ -932,7 +1013,109 @@ impl Session {
             uploads: self.dev.stats,
             sync: self.dev.engine.sync_stats(),
             phases: self.dev.engine.phase_stats(),
+            report,
         })
+    }
+
+    /// Snapshot the cumulative backend counters the trace stream
+    /// deltas against. Only called when tracing is enabled — the
+    /// scratch snapshot costs one worker-pool round on sharded
+    /// backends (a pure counter read; it submits no step work).
+    fn trace_cursor(&self) -> TraceCursor {
+        let e = &*self.dev.engine;
+        TraceCursor {
+            uploads: self.dev.stats,
+            sync: e.sync_stats(),
+            fanout_ns: e.phase_stats().map(|p| p.fanout_ns).unwrap_or(0),
+            workers: e.worker_phase_stats().unwrap_or_default(),
+            scratch: e.scratch_stats(),
+            events_seen: self.control.events().len(),
+        }
+    }
+
+    /// Emit one schema-locked [`StepRecord`] for `step` and advance
+    /// the delta cursor. Reads counters only — no RNG stream is
+    /// touched and no reduction reordered, so the traced trajectory
+    /// stays byte-identical to an untraced one.
+    #[allow(clippy::too_many_arguments)]
+    fn record_trace_step(
+        &self,
+        step: usize,
+        d: &PlaneDecision,
+        did_redefine: bool,
+        train_loss: Option<f64>,
+        val_loss: Option<f64>,
+        memory_bytes: Option<u64>,
+        control_ns: u64,
+        redefine_ns: u64,
+        step_ns: u64,
+        eval_ns: u64,
+        cur: &mut TraceCursor,
+    ) -> Result<()> {
+        let e = &*self.dev.engine;
+        let sync = e.sync_stats();
+        let fanout_now = e.phase_stats().map(|p| p.fanout_ns);
+        let workers_now = e.worker_phase_stats().unwrap_or_default();
+        let scratch = e.scratch_stats();
+        let all_events = self.control.events();
+        let events: Vec<Value> =
+            all_events[cur.events_seen..].iter().map(|ev| ev.to_json()).collect();
+        let workers: Vec<WorkerStepNanos> = workers_now
+            .iter()
+            .enumerate()
+            .map(|(k, w)| {
+                let prev = cur.workers.get(k).copied().unwrap_or_default();
+                WorkerStepNanos {
+                    worker: k,
+                    upload_ns: w.upload_ns.saturating_sub(prev.upload_ns),
+                    reduce_ns: w.reduce_ns.saturating_sub(prev.reduce_ns),
+                    update_ns: w.update_ns.saturating_sub(prev.update_ns),
+                }
+            })
+            .collect();
+        let prev_sync = cur.sync.unwrap_or_default();
+        let prev_scratch = cur.scratch.unwrap_or_default();
+        let rec = StepRecord {
+            step: step as u64,
+            train_loss,
+            val_loss,
+            rho: d.rho,
+            t: d.t,
+            lr: d.lr as f64,
+            redefine: did_redefine,
+            events,
+            control_ns,
+            redefine_ns,
+            step_ns,
+            eval_ns,
+            fanout_ns: fanout_now.map(|f| f.saturating_sub(cur.fanout_ns)),
+            workers,
+            sync_reduces: sync.map(|s| s.reduces.saturating_sub(prev_sync.reduces) as u64),
+            sync_state_bytes: sync
+                .map(|s| s.state_bytes.saturating_sub(prev_sync.state_bytes) as u64),
+            sync_grad_bytes: sync
+                .map(|s| s.grad_bytes.saturating_sub(prev_sync.grad_bytes) as u64),
+            // residency, not traffic: absolute, never deltaed
+            owned_state_bytes: sync.map(|s| s.owned_state_bytes as u64),
+            memory_bytes,
+            uploads_fresh: self.dev.stats.uploads.saturating_sub(cur.uploads.uploads)
+                as u64,
+            uploads_reused: self.dev.stats.reuses.saturating_sub(cur.uploads.reuses)
+                as u64,
+            upload_bytes: self.dev.stats.bytes.saturating_sub(cur.uploads.bytes) as u64,
+            pool_hits: scratch
+                .map(|s| s.pool_hits.saturating_sub(prev_scratch.pool_hits) as u64),
+            pool_misses: scratch
+                .map(|s| s.pool_misses.saturating_sub(prev_scratch.pool_misses) as u64),
+        };
+        self.rec.record_step(&rec)?;
+        cur.uploads = self.dev.stats;
+        cur.sync = sync;
+        cur.fanout_ns = fanout_now.unwrap_or(0);
+        cur.workers = workers_now;
+        cur.scratch = scratch;
+        cur.events_seen = all_events.len();
+        Ok(())
     }
 
     /// Snapshot everything a bit-exact mid-run resume needs, as a

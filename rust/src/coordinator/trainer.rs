@@ -51,6 +51,9 @@ pub struct RunResult {
     pub uploads: UploadStats,
     /// cross-shard sync totals (`None` for unsharded runs)
     pub sync: Option<crate::runtime::shard::SyncTraffic>,
+    /// end-of-run telemetry rollup; `Some` only when
+    /// [`Trainer::enable_trace`] was called before the run
+    pub report: Option<crate::obs::RunReport>,
 }
 
 impl RunResult {
@@ -111,6 +114,14 @@ impl Trainer {
         Ok(self.session.evaluate()?.val_loss)
     }
 
+    /// Turn on run telemetry (`--trace`): one schema-locked JSONL
+    /// record per step streamed to `path`, a Chrome trace-event
+    /// timeline next to it, and a [`crate::obs::RunReport`] in the
+    /// [`RunResult`]. Tracing never perturbs the trajectory.
+    pub fn enable_trace(&mut self, path: &str) -> Result<()> {
+        self.session.enable_trace(path)
+    }
+
     /// Download current params (fused path) or clone host params.
     pub fn params_host(&self) -> Result<Vec<f32>> {
         self.session.params_host()
@@ -167,6 +178,7 @@ impl Trainer {
             t_policy: r.t_policy,
             uploads: r.uploads,
             sync: r.sync,
+            report: r.report,
         }
     }
 

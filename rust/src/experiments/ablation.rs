@@ -11,6 +11,7 @@ use crate::config::TrainConfig;
 use crate::coordinator::method::Method;
 use crate::coordinator::trainer::Trainer;
 use crate::experiments::common::{self, TablePrinter};
+use crate::info;
 use crate::util::csv::CsvWriter;
 
 fn quick_cfg(base: &TrainConfig, quick: bool) -> TrainConfig {
@@ -58,7 +59,7 @@ pub fn tau_sweep(base: &TrainConfig, quick: bool) -> Result<()> {
         ])?;
         csv.flush()?;
     }
-    println!("\n(written to results/ablation_tau.csv)");
+    info!("written to results/ablation_tau.csv");
     Ok(())
 }
 
@@ -86,7 +87,7 @@ pub fn state_mgmt(base: &TrainConfig, quick: bool) -> Result<()> {
             csv.flush()?;
         }
     }
-    println!("\n(written to results/ablation_state.csv)");
+    info!("written to results/ablation_state.csv");
     Ok(())
 }
 
@@ -112,7 +113,7 @@ pub fn strategy_sweep(base: &TrainConfig, quick: bool) -> Result<()> {
                   format!("{:.2}", r.total_time_s)])?;
         csv.flush()?;
     }
-    println!("\n(written to results/ablation_strategy.csv)");
+    info!("written to results/ablation_strategy.csv");
     Ok(())
 }
 
@@ -155,7 +156,7 @@ pub fn rho_schedules(base: &TrainConfig, quick: bool) -> Result<()> {
         ])?;
         csv.flush()?;
     }
-    println!("\n(written to results/ablation_rho_schedule.csv)");
+    info!("written to results/ablation_rho_schedule.csv");
     Ok(())
 }
 
@@ -215,6 +216,6 @@ pub fn t_policies(base: &TrainConfig, quick: bool) -> Result<()> {
         ])?;
         csv.flush()?;
     }
-    println!("\n(written to results/ablation_t_policy.csv)");
+    info!("written to results/ablation_t_policy.csv");
     Ok(())
 }

@@ -127,6 +127,13 @@ pub fn summary_json(cfg: &TrainConfig, r: &RunResult) -> Value {
          json::num(r.sync.map(|s| s.grad_bytes).unwrap_or(0) as f64)),
         ("steps_per_sec",
          json::num(cfg.steps as f64 / r.step_time_s.max(1e-9))),
+        // run telemetry rollup: per-phase p50/p95/max, straggler ratio
+        // and the control-decision histogram; null unless the run was
+        // traced (`--trace` / `Trainer::enable_trace`)
+        ("run_report", match &r.report {
+            Some(rep) => rep.to_json(),
+            None => Value::Null,
+        }),
     ])
 }
 

@@ -8,6 +8,7 @@ use anyhow::Result;
 use crate::config::TrainConfig;
 use crate::coordinator::method::Method;
 use crate::experiments::common;
+use crate::info;
 use crate::util::csv::CsvWriter;
 
 pub fn run(base: &TrainConfig, quick: bool) -> Result<()> {
@@ -45,6 +46,6 @@ pub fn run(base: &TrainConfig, quick: bool) -> Result<()> {
         println!("  {:<22} peak {:>10} bytes, final {:>10} bytes", m.label(),
                  r.memory.peak_bytes, r.memory.last_bytes());
     }
-    println!("\n(written to results/fig1.csv)");
+    info!("written to results/fig1.csv");
     Ok(())
 }

@@ -10,6 +10,7 @@ use crate::config::TrainConfig;
 use crate::coordinator::method::Method;
 use crate::coordinator::trainer::Trainer;
 use crate::experiments::common::{self, TablePrinter};
+use crate::info;
 use crate::util::csv::CsvWriter;
 
 pub fn run(base: &TrainConfig, quick: bool) -> Result<()> {
@@ -70,6 +71,6 @@ pub fn run(base: &TrainConfig, quick: bool) -> Result<()> {
         ])?;
         csv.flush()?;
     }
-    println!("\n(written to results/fig2.csv)");
+    info!("written to results/fig2.csv");
     Ok(())
 }

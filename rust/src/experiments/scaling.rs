@@ -6,6 +6,7 @@
 use anyhow::Result;
 
 use crate::experiments::common::{self, TablePrinter};
+use crate::info;
 use crate::model::memory::{self, ScalingPoint, SCALING_LADDER};
 use crate::runtime::Manifest;
 use crate::util::csv::CsvWriter;
@@ -60,6 +61,6 @@ pub fn run() -> Result<()> {
         ])?;
     }
     csv.flush()?;
-    println!("\n(written to results/scaling.csv)");
+    info!("written to results/scaling.csv");
     Ok(())
 }

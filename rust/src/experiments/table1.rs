@@ -7,6 +7,7 @@ use anyhow::Result;
 use crate::config::TrainConfig;
 use crate::coordinator::method::Method;
 use crate::experiments::common::{self, TablePrinter};
+use crate::info;
 use crate::util::csv::CsvWriter;
 
 pub fn run(base: &TrainConfig, corpus: &str, tag: &str, quick: bool) -> Result<()> {
@@ -53,6 +54,6 @@ pub fn run(base: &TrainConfig, corpus: &str, tag: &str, quick: bool) -> Result<(
         ])?;
         csv.flush()?;
     }
-    println!("\n(written to results/{tag}.csv)");
+    info!("written to results/{tag}.csv");
     Ok(())
 }

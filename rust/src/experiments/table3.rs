@@ -8,6 +8,7 @@ use crate::config::TrainConfig;
 use crate::coordinator::finetune::{FineTuner, FtMethod};
 use crate::data::glue;
 use crate::experiments::common::{self, TablePrinter};
+use crate::info;
 use crate::util::csv::CsvWriter;
 use crate::util::stats;
 
@@ -75,6 +76,6 @@ pub fn run(base: &TrainConfig, quick: bool) -> Result<()> {
         cells.push(format!("{:.1}", stats::mean(&task_means)));
         printer.row(&cells);
     }
-    println!("\n(written to results/table3.csv)");
+    info!("written to results/table3.csv");
     Ok(())
 }

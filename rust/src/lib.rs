@@ -15,8 +15,9 @@
 //!   [`coordinator::task::Task`]; the `Trainer`/`FineTuner` drivers are
 //!   thin adapters), the projection subsystem ([`projection`]), the
 //!   baseline optimizer zoo ([`optim`]), the data pipeline ([`data`]),
-//!   the optimizer-memory accounting model ([`model`]), and the
-//!   experiment harness ([`experiments`]).
+//!   the optimizer-memory accounting model ([`model`]), the experiment
+//!   harness ([`experiments`]), and the run-telemetry recorder ([`obs`]:
+//!   per-step trace stream, per-worker span timeline, run reports).
 //! - **Layer 2** — a LLaMA-style transformer + fused optimizer-step
 //!   graphs in JAX (`python/compile/model.py`), AOT-lowered once to HLO
 //!   text artifacts.
@@ -43,6 +44,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod projection;
 pub mod runtime;

@@ -123,6 +123,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     info!("training {} on preset {} for {} steps", method.label(), cfg.preset, cfg.steps);
     let mut trainer = Trainer::new(cfg.clone(), method)?;
     trainer.quiet = args.has("quiet");
+    if let Some(path) = args.get("trace") {
+        trainer.enable_trace(path)?;
+        info!("tracing run telemetry to {path}");
+    }
     let (rho_spec, t_spec) = trainer.control_specs();
     info!("control: rho {rho_spec} | T {t_spec}");
 
@@ -323,6 +327,9 @@ USAGE:
                      [--set train.key=value]...
                      [--out results/run.jsonl] [--save-checkpoint p] [--from-checkpoint p]
                      [--checkpoint-at N]   (pause at N, write a resume checkpoint)
+                     [--trace run.trace.jsonl]   (per-step telemetry stream + a
+                                                  Perfetto-loadable .chrome.json timeline;
+                                                  see docs/OBSERVABILITY.md)
   adafrugal finetune --task CoLA|SST-2|MRPC|STS-B|QQP|MNLI-m|QNLI|RTE
                      [--ft-method full|lora|galore|frugal|dyn-rho|dyn-t|combined]
                      [--seeds N]

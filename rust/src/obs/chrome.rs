@@ -1,0 +1,76 @@
+//! Chrome trace-event export of the recorded span timeline.
+//!
+//! Emits the classic `{"traceEvents": [...]}` JSON object with "X"
+//! (complete) duration events — one timeline track per recorder track
+//! (track 0 is the session thread, track k+1 is shard worker k), named
+//! via "M" `thread_name` metadata events. The file loads directly in
+//! Perfetto (<https://ui.perfetto.dev>) or `chrome://tracing`, which
+//! is the whole point: pipeline skew between workers is visible as
+//! staircased upload/reduce/update blocks instead of a summed counter.
+//!
+//! Timestamps are microseconds relative to the recorder's epoch (the
+//! `Instant` captured when the recorder was created), so a trace
+//! always starts near t=0 regardless of host uptime.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::json::{self, Value};
+use crate::util::log::JsonlWriter;
+
+use super::Span;
+
+/// Derive the Chrome export path from the JSONL trace path:
+/// `run.trace.jsonl` → `run.trace.chrome.json`.
+pub fn chrome_path(trace_path: &str) -> String {
+    let base = trace_path.strip_suffix(".jsonl").unwrap_or(trace_path);
+    format!("{base}.chrome.json")
+}
+
+/// Convert an instant to trace microseconds relative to `epoch`.
+/// Saturates to zero for anything that (pathologically) precedes it.
+fn micros_since(epoch: Instant, t: Instant) -> f64 {
+    t.saturating_duration_since(epoch).as_nanos() as f64 / 1e3
+}
+
+/// Write `spans` as one Chrome trace-event JSON document at `path`.
+/// `tracks` maps track id → display name for the timeline rows.
+pub fn write(
+    path: &str,
+    epoch: Instant,
+    spans: &[Span],
+    tracks: &BTreeMap<u32, String>,
+) -> Result<()> {
+    let mut events = Vec::with_capacity(spans.len() + tracks.len());
+    for (tid, name) in tracks {
+        events.push(json::obj(vec![
+            ("name", json::s("thread_name")),
+            ("ph", json::s("M")),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(*tid as f64)),
+            ("args", json::obj(vec![("name", json::s(name))])),
+        ]));
+    }
+    for sp in spans {
+        let ts = micros_since(epoch, sp.start);
+        let dur = micros_since(sp.start, sp.end);
+        events.push(json::obj(vec![
+            ("name", json::s(sp.phase)),
+            ("ph", json::s("X")),
+            ("ts", json::num(ts)),
+            ("dur", json::num(dur)),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(sp.track as f64)),
+            ("args", json::obj(vec![("step", json::num(sp.step as f64))])),
+        ]));
+    }
+    let doc = json::obj(vec![
+        ("traceEvents", Value::Arr(events)),
+        ("displayTimeUnit", json::s("ms")),
+    ]);
+    let mut w = JsonlWriter::create(path)?;
+    w.write(&doc)?;
+    w.flush()
+}

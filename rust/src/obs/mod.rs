@@ -1,0 +1,745 @@
+//! `obs` — run telemetry: a run-scoped step-trace [`Recorder`],
+//! per-worker span tracing, and exportable run reports.
+//!
+//! The runtime already *measures* a lot (phase clocks, sync traffic,
+//! control events, upload stats, pool hit rates) but historically only
+//! surfaced end-of-run sums. This module turns those signals into one
+//! unified per-step record stream plus a span timeline:
+//!
+//! - [`StepRecord`] — one schema-locked JSON object per training step
+//!   (losses, rho/T/lr, the control decision and its events, per-phase
+//!   nanos **per shard worker**, sync-traffic deltas, modeled and
+//!   measured state bytes, upload counts, pool hit rates), streamed to
+//!   a JSONL sink (`--trace <path>`) and validated against
+//!   [`schema::TRACE_STEP_KEYS`] before every write.
+//! - [`Span`] — a named interval on a track (track 0 = session thread,
+//!   track k+1 = shard worker k), exported as a Chrome trace-event
+//!   file ([`chrome`]) loadable in Perfetto.
+//! - [`RunReport`] — end-of-run p50/p95/max per phase, straggler
+//!   ratio, and a control-decision histogram, embedded in
+//!   `summary_json` under `"run_report"`.
+//!
+//! Design constraints (pinned by `rust/tests/obs_trace.rs` and
+//! `rust/tests/obs_alloc.rs`):
+//!
+//! - **Determinism**: recording only reads counters and `Instant`s —
+//!   it never touches an RNG stream or reorders a reduction, so every
+//!   trajectory is byte-identical with tracing on or off.
+//! - **No mutex in the hot path**: shard workers record spans into
+//!   buffers they own ([`Recorder::absorb_spans`] drains them on the
+//!   caller thread at step boundaries); the recorder's mutex is only
+//!   taken at those boundaries.
+//! - **Zero heap traffic when disabled**: the enabled check is one
+//!   relaxed atomic load, and the disabled-path [`Recorder::end_phase`]
+//!   allocates nothing (its `PhaseTimer` keys are warm after the first
+//!   step).
+
+pub mod chrome;
+pub mod schema;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::{self, Value};
+use crate::util::log::JsonlWriter;
+use crate::util::stats;
+use crate::util::timer::PhaseTimer;
+use crate::warn;
+
+/// Hard cap on retained spans per run — a backstop so a very long
+/// traced run cannot grow memory without bound. Overflow is counted
+/// and reported at export time, never silently swallowed.
+const MAX_SPANS: usize = 4_000_000;
+
+/// Phases summarized in the [`RunReport`], in display order. Session
+/// phases ("control"/"redefine"/"step"/"eval") live on track 0;
+/// "fanout" is the caller-side distribution phase; "upload"/"reduce"/
+/// "update" are summed across shard workers per step.
+const REPORT_PHASES: &[&str] = &[
+    "control", "redefine", "step", "eval", "fanout", "upload", "reduce", "update",
+];
+
+/// One named interval on a timeline track. Track 0 is the session
+/// (caller) thread; track k+1 is shard worker k.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    /// Timeline track id (Chrome `tid`).
+    pub track: u32,
+    /// Phase name — the span taxonomy in the module docs.
+    pub phase: &'static str,
+    /// Training step the interval belongs to.
+    pub step: u64,
+    /// Interval start.
+    pub start: Instant,
+    /// Interval end.
+    pub end: Instant,
+}
+
+/// Per-worker phase nanos for one training step.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerStepNanos {
+    /// Worker index (0-based shard index).
+    pub worker: usize,
+    /// Nanos this worker spent uploading its batch slice + running the
+    /// sharded forward/backward.
+    pub upload_ns: u64,
+    /// Nanos this worker spent reducing its owned parameter range.
+    pub reduce_ns: u64,
+    /// Nanos this worker spent applying the optimizer update.
+    pub update_ns: u64,
+}
+
+/// One unified telemetry record per training step. Serialized by
+/// [`StepRecord::to_json`] against the locked
+/// [`schema::TRACE_STEP_KEYS`] key set.
+#[derive(Debug, Clone, Default)]
+pub struct StepRecord {
+    /// Training step index.
+    pub step: u64,
+    /// Train loss read back this step, if the loop observed one.
+    pub train_loss: Option<f64>,
+    /// Validation loss, only on eval steps.
+    pub val_loss: Option<f64>,
+    /// Projection density from the control plane's decision.
+    pub rho: f64,
+    /// Redefinition period T from the control plane's decision.
+    pub t: usize,
+    /// Learning rate from the control plane's decision.
+    pub lr: f64,
+    /// Whether the subspace was actually redefined this step.
+    pub redefine: bool,
+    /// Control events emitted while observing this step
+    /// (`ControlEvent::to_json` objects).
+    pub events: Vec<Value>,
+    /// Nanos spent in control-plane decide/observe this step.
+    pub control_ns: u64,
+    /// Nanos spent redefining the subspace (0 unless `redefine`).
+    pub redefine_ns: u64,
+    /// Nanos spent in the fused/engine training step.
+    pub step_ns: u64,
+    /// Nanos spent in evaluation (0 on non-eval steps).
+    pub eval_ns: u64,
+    /// Caller-side fan-out nanos (null when the engine is unsharded).
+    pub fanout_ns: Option<u64>,
+    /// Per-worker phase breakdown (empty when unsharded).
+    pub workers: Vec<WorkerStepNanos>,
+    /// Sharded-runtime reduce count delta (null when unsharded).
+    pub sync_reduces: Option<u64>,
+    /// Optimizer-state bytes moved by sharding sync this step.
+    pub sync_state_bytes: Option<u64>,
+    /// Gradient bytes moved by sharding sync this step.
+    pub sync_grad_bytes: Option<u64>,
+    /// Measured per-shard optimizer-state residency (absolute bytes).
+    pub owned_state_bytes: Option<u64>,
+    /// Modeled memory bytes from `MemoryTracker`, when observed.
+    pub memory_bytes: Option<u64>,
+    /// Fresh device uploads this step.
+    pub uploads_fresh: u64,
+    /// Cached uploads reused this step.
+    pub uploads_reused: u64,
+    /// Bytes uploaded this step.
+    pub upload_bytes: u64,
+    /// Scratch-pool hits delta (null when the engine exposes none).
+    pub pool_hits: Option<u64>,
+    /// Scratch-pool misses delta (null when the engine exposes none).
+    pub pool_misses: Option<u64>,
+}
+
+impl StepRecord {
+    /// Serialize as the schema-locked `trace_step` JSON object.
+    pub fn to_json(&self) -> Value {
+        let ou = |x: Option<u64>| match x {
+            Some(n) => json::num(n as f64),
+            None => Value::Null,
+        };
+        let of = |x: Option<f64>| match x {
+            Some(n) if n.is_finite() => json::num(n),
+            _ => Value::Null,
+        };
+        let workers = self
+            .workers
+            .iter()
+            .map(|w| {
+                json::obj(vec![
+                    ("worker", json::num(w.worker as f64)),
+                    ("upload_ns", json::num(w.upload_ns as f64)),
+                    ("reduce_ns", json::num(w.reduce_ns as f64)),
+                    ("update_ns", json::num(w.update_ns as f64)),
+                ])
+            })
+            .collect::<Vec<_>>();
+        json::obj(vec![
+            ("kind", json::s("trace_step")),
+            ("step", json::num(self.step as f64)),
+            ("train_loss", of(self.train_loss)),
+            ("val_loss", of(self.val_loss)),
+            ("rho", json::num(self.rho)),
+            ("t", json::num(self.t as f64)),
+            ("lr", json::num(self.lr)),
+            ("redefine", Value::Bool(self.redefine)),
+            ("events", Value::Arr(self.events.clone())),
+            ("control_ns", json::num(self.control_ns as f64)),
+            ("redefine_ns", json::num(self.redefine_ns as f64)),
+            ("step_ns", json::num(self.step_ns as f64)),
+            ("eval_ns", json::num(self.eval_ns as f64)),
+            ("fanout_ns", ou(self.fanout_ns)),
+            ("workers", Value::Arr(workers)),
+            ("sync_reduces", ou(self.sync_reduces)),
+            ("sync_state_bytes", ou(self.sync_state_bytes)),
+            ("sync_grad_bytes", ou(self.sync_grad_bytes)),
+            ("owned_state_bytes", ou(self.owned_state_bytes)),
+            ("memory_bytes", ou(self.memory_bytes)),
+            ("uploads_fresh", json::num(self.uploads_fresh as f64)),
+            ("uploads_reused", json::num(self.uploads_reused as f64)),
+            ("upload_bytes", json::num(self.upload_bytes as f64)),
+            ("pool_hits", ou(self.pool_hits)),
+            ("pool_misses", ou(self.pool_misses)),
+        ])
+    }
+}
+
+/// p50/p95/max summary of one phase's per-step samples. Percentiles
+/// are NaN (serialized as `null`) when no samples were recorded.
+#[derive(Debug, Clone)]
+pub struct PhaseSummary {
+    /// Median nanos per step.
+    pub p50_ns: f64,
+    /// 95th-percentile nanos per step.
+    pub p95_ns: f64,
+    /// Worst-case nanos per step.
+    pub max_ns: f64,
+    /// Steps that contributed a sample.
+    pub count: usize,
+}
+
+impl PhaseSummary {
+    fn from_samples(xs: &[f64]) -> Self {
+        PhaseSummary {
+            p50_ns: stats::percentile(xs, 50.0),
+            p95_ns: stats::percentile(xs, 95.0),
+            // f64::max ignores the NaN seed, so this is NaN only when
+            // xs is empty — matching the percentile convention
+            max_ns: xs.iter().copied().fold(f64::NAN, f64::max),
+            count: xs.len(),
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("p50_ns", json::num(self.p50_ns)),
+            ("p95_ns", json::num(self.p95_ns)),
+            ("max_ns", json::num(self.max_ns)),
+            ("count", json::num(self.count as f64)),
+        ])
+    }
+}
+
+/// End-of-run telemetry rollup: per-phase latency summaries, the
+/// straggler ratio across shard workers, and a control-decision
+/// histogram. Embedded in `summary_json` under `"run_report"`.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Per-phase summaries in [`REPORT_PHASES`] order.
+    pub phases: Vec<(&'static str, PhaseSummary)>,
+    /// Median of per-step max-worker-busy / mean-worker-busy (NaN when
+    /// fewer than 2 workers ever reported).
+    pub straggler_p50: f64,
+    /// Worst per-step straggler ratio observed.
+    pub straggler_max: f64,
+    /// Steps recorded.
+    pub steps: usize,
+    /// Steps on which the subspace was redefined.
+    pub redefines: usize,
+    /// `TChanged` control events observed.
+    pub t_events: usize,
+    /// `RhoAdjusted` control events observed.
+    pub rho_events: usize,
+}
+
+impl RunReport {
+    /// Serialize for the `"run_report"` section of `summary_json`.
+    pub fn to_json(&self) -> Value {
+        let phases = Value::Obj(
+            self.phases
+                .iter()
+                .map(|(k, s)| ((*k).to_string(), s.to_json()))
+                .collect(),
+        );
+        json::obj(vec![
+            ("phases", phases),
+            (
+                "straggler_ratio",
+                json::obj(vec![
+                    ("p50", json::num(self.straggler_p50)),
+                    ("max", json::num(self.straggler_max)),
+                ]),
+            ),
+            (
+                "decisions",
+                json::obj(vec![
+                    ("steps", json::num(self.steps as f64)),
+                    ("redefines", json::num(self.redefines as f64)),
+                    ("t_events", json::num(self.t_events as f64)),
+                    ("rho_events", json::num(self.rho_events as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Streaming aggregation behind the [`RunReport`].
+#[derive(Default)]
+struct ReportAgg {
+    samples: BTreeMap<&'static str, Vec<f64>>,
+    straggler: Vec<f64>,
+    steps: usize,
+    redefines: usize,
+    t_events: usize,
+    rho_events: usize,
+}
+
+fn sample(agg: &mut ReportAgg, phase: &'static str, ns: f64) {
+    agg.samples.entry(phase).or_default().push(ns);
+}
+
+fn absorb_record(agg: &mut ReportAgg, rec: &StepRecord) {
+    agg.steps += 1;
+    if rec.redefine {
+        agg.redefines += 1;
+    }
+    for e in &rec.events {
+        match e.get("kind").ok().and_then(|k| k.as_str().ok()) {
+            Some("t") => agg.t_events += 1,
+            Some("rho") => agg.rho_events += 1,
+            _ => {}
+        }
+    }
+    sample(agg, "control", rec.control_ns as f64);
+    sample(agg, "step", rec.step_ns as f64);
+    if rec.redefine {
+        sample(agg, "redefine", rec.redefine_ns as f64);
+    }
+    if rec.eval_ns > 0 {
+        sample(agg, "eval", rec.eval_ns as f64);
+    }
+    if let Some(f) = rec.fanout_ns {
+        sample(agg, "fanout", f as f64);
+    }
+    if !rec.workers.is_empty() {
+        let up: u64 = rec.workers.iter().map(|w| w.upload_ns).sum();
+        let rd: u64 = rec.workers.iter().map(|w| w.reduce_ns).sum();
+        let upd: u64 = rec.workers.iter().map(|w| w.update_ns).sum();
+        sample(agg, "upload", up as f64);
+        sample(agg, "reduce", rd as f64);
+        sample(agg, "update", upd as f64);
+        if rec.workers.len() >= 2 {
+            let busy: Vec<f64> = rec
+                .workers
+                .iter()
+                .map(|w| (w.upload_ns + w.reduce_ns + w.update_ns) as f64)
+                .collect();
+            let max = busy.iter().copied().fold(0.0, f64::max);
+            let mean = busy.iter().sum::<f64>() / busy.len() as f64;
+            if mean > 0.0 {
+                agg.straggler.push(max / mean);
+            }
+        }
+    }
+}
+
+/// Mutable recorder state, touched only at step boundaries.
+struct State {
+    sink: Option<JsonlWriter>,
+    trace_path: Option<String>,
+    spans: Vec<Span>,
+    dropped_spans: usize,
+    tracks: BTreeMap<u32, String>,
+    agg: ReportAgg,
+    records: usize,
+}
+
+impl State {
+    fn push(&mut self, span: Span) {
+        if self.spans.len() < MAX_SPANS {
+            self.spans.push(span);
+        } else {
+            self.dropped_spans += 1;
+        }
+    }
+}
+
+struct Inner {
+    enabled: AtomicBool,
+    epoch: Instant,
+    state: Mutex<State>,
+}
+
+/// Run-scoped telemetry recorder. Cheap to clone (an `Arc` handle);
+/// the session and the sharded backend share one.
+///
+/// Disabled by default: every recording entry point first checks one
+/// relaxed atomic and bails, so an untraced run pays a branch — no
+/// lock, no allocation (pinned by `rust/tests/obs_alloc.rs`).
+#[derive(Clone)]
+pub struct Recorder {
+    inner: Arc<Inner>,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Recorder {
+    /// A disabled recorder. `epoch` (the Chrome-trace t=0) is captured
+    /// here so it precedes every span the run can produce.
+    pub fn new() -> Self {
+        Recorder {
+            inner: Arc::new(Inner {
+                enabled: AtomicBool::new(false),
+                epoch: Instant::now(),
+                state: Mutex::new(State {
+                    sink: None,
+                    trace_path: None,
+                    spans: Vec::new(),
+                    dropped_spans: 0,
+                    tracks: BTreeMap::new(),
+                    agg: ReportAgg::default(),
+                    records: 0,
+                }),
+            }),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, State> {
+        self.inner.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Whether recording is on. One relaxed atomic load — the only
+    /// cost the disabled hot path pays.
+    pub fn enabled(&self) -> bool {
+        self.inner.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Turn recording on without a sink (spans + report only). Mainly
+    /// for tests; runs use [`Recorder::enable_stream`].
+    pub fn enable(&self) {
+        self.inner.enabled.store(true, Ordering::Release);
+    }
+
+    /// Attach a JSONL sink at `path` (parent dirs created) and turn
+    /// recording on. The Chrome span export lands next to it at
+    /// [`chrome::chrome_path`].
+    pub fn enable_stream(&self, path: &str) -> Result<()> {
+        let mut st = self.lock();
+        ensure!(st.sink.is_none(), "trace sink already attached");
+        st.sink = Some(JsonlWriter::create(path)?);
+        st.trace_path = Some(path.to_string());
+        drop(st);
+        self.inner.enabled.store(true, Ordering::Release);
+        Ok(())
+    }
+
+    /// Name a timeline track (Chrome `thread_name` metadata).
+    pub fn name_track(&self, track: u32, name: &str) {
+        self.lock().tracks.insert(track, name.to_string());
+    }
+
+    /// End a track-0 phase that began at `start`: always feeds the
+    /// session's [`PhaseTimer`] (one timing source for `control_time_s`
+    /// and friends, traced or not), records a span only when enabled,
+    /// and returns the elapsed nanos.
+    pub fn end_phase(
+        &self,
+        timers: &mut PhaseTimer,
+        phase: &'static str,
+        step: usize,
+        start: Instant,
+    ) -> u64 {
+        let end = Instant::now();
+        let d = end.saturating_duration_since(start);
+        timers.add(phase, d);
+        if self.enabled() {
+            self.push_span(Span { track: 0, phase, step: step as u64, start, end });
+        }
+        d.as_nanos() as u64
+    }
+
+    /// Record one span. No-op when disabled.
+    pub fn push_span(&self, span: Span) {
+        if !self.enabled() {
+            return;
+        }
+        self.lock().push(span);
+    }
+
+    /// Drain worker-owned span buffers into the recorder, preserving
+    /// each buffer's order. Called on the caller thread at step
+    /// boundaries — workers never touch the recorder's mutex. Always
+    /// leaves `spans` empty.
+    pub fn absorb_spans(&self, spans: &mut Vec<Span>) {
+        if !self.enabled() {
+            spans.clear();
+            return;
+        }
+        let mut st = self.lock();
+        for s in spans.drain(..) {
+            st.push(s);
+        }
+    }
+
+    /// Validate one step record against the locked schema, stream it
+    /// to the JSONL sink (when attached), and fold it into the run
+    /// report. No-op when disabled.
+    pub fn record_step(&self, rec: &StepRecord) -> Result<()> {
+        if !self.enabled() {
+            return Ok(());
+        }
+        let v = rec.to_json();
+        schema::check_trace_value(&v)
+            .context("recorder produced a trace record violating its own schema")?;
+        let mut st = self.lock();
+        st.records += 1;
+        absorb_record(&mut st.agg, rec);
+        if let Some(sink) = st.sink.as_mut() {
+            sink.write(&v)?;
+        }
+        Ok(())
+    }
+
+    /// Step records absorbed so far.
+    pub fn record_count(&self) -> usize {
+        self.lock().records
+    }
+
+    /// Snapshot of the recorded spans (test/debug helper).
+    pub fn spans(&self) -> Vec<Span> {
+        self.lock().spans.clone()
+    }
+
+    /// Build the end-of-run rollup from everything recorded so far.
+    pub fn report(&self) -> RunReport {
+        let st = self.lock();
+        let phases = REPORT_PHASES
+            .iter()
+            .map(|&k| {
+                let xs = st.agg.samples.get(k).map(|v| v.as_slice()).unwrap_or(&[]);
+                (k, PhaseSummary::from_samples(xs))
+            })
+            .collect();
+        RunReport {
+            phases,
+            straggler_p50: stats::percentile(&st.agg.straggler, 50.0),
+            straggler_max: st.agg.straggler.iter().copied().fold(f64::NAN, f64::max),
+            steps: st.agg.steps,
+            redefines: st.agg.redefines,
+            t_events: st.agg.t_events,
+            rho_events: st.agg.rho_events,
+        }
+    }
+
+    /// Write the Chrome trace-event file next to the JSONL sink.
+    /// Returns the path written, or `None` when disabled / no sink.
+    pub fn write_chrome(&self) -> Result<Option<String>> {
+        if !self.enabled() {
+            return Ok(None);
+        }
+        let st = self.lock();
+        let Some(tp) = st.trace_path.clone() else {
+            return Ok(None);
+        };
+        if st.dropped_spans > 0 {
+            warn!(
+                "trace dropped {} spans beyond the {MAX_SPANS}-span cap",
+                st.dropped_spans
+            );
+        }
+        let path = chrome::chrome_path(&tp);
+        chrome::write(&path, self.inner.epoch, &st.spans, &st.tracks)?;
+        Ok(Some(path))
+    }
+
+    /// Flush the JSONL sink, if attached.
+    pub fn flush(&self) -> Result<()> {
+        let mut st = self.lock();
+        if let Some(sink) = st.sink.as_mut() {
+            sink.flush()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("adafrugal_obs_{}_{name}", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    fn worker_rec(step: u64, skewed: bool) -> StepRecord {
+        StepRecord {
+            step,
+            train_loss: Some(2.0),
+            rho: 0.5,
+            t: 100,
+            lr: 1e-2,
+            control_ns: 100,
+            step_ns: 10_000,
+            fanout_ns: Some(500),
+            workers: vec![
+                WorkerStepNanos { worker: 0, upload_ns: 100, reduce_ns: 100, update_ns: 100 },
+                WorkerStepNanos {
+                    worker: 1,
+                    upload_ns: if skewed { 600 } else { 100 },
+                    reduce_ns: 100,
+                    update_ns: 100,
+                },
+            ],
+            sync_reduces: Some(1),
+            sync_state_bytes: Some(0),
+            sync_grad_bytes: Some(64),
+            owned_state_bytes: Some(128),
+            ..StepRecord::default()
+        }
+    }
+
+    #[test]
+    fn disabled_recorder_times_but_records_nothing() {
+        let rec = Recorder::new();
+        let mut timers = PhaseTimer::new();
+        let t0 = Instant::now();
+        let ns = rec.end_phase(&mut timers, "control", 3, t0);
+        assert!(!rec.enabled());
+        assert_eq!(timers.count("control"), 1);
+        // one timing source: the returned nanos and the PhaseTimer
+        // total come from the same measured interval
+        assert!((ns as f64 - timers.total_secs("control") * 1e9).abs() < 1.0);
+        assert!(rec.spans().is_empty());
+        rec.record_step(&worker_rec(0, false)).unwrap();
+        assert_eq!(rec.record_count(), 0);
+        let mut buf = vec![Span {
+            track: 1,
+            phase: "upload",
+            step: 0,
+            start: t0,
+            end: Instant::now(),
+        }];
+        rec.absorb_spans(&mut buf);
+        assert!(buf.is_empty() && rec.spans().is_empty());
+    }
+
+    #[test]
+    fn enabled_recorder_streams_schema_valid_lines_and_reports() {
+        let path = tmp("stream.trace.jsonl");
+        let rec = Recorder::new();
+        rec.enable_stream(&path).unwrap();
+        rec.name_track(0, "session");
+        rec.name_track(1, "shard-0");
+        assert!(rec.enable_stream(&path).is_err(), "double attach must fail");
+
+        let mut timers = PhaseTimer::new();
+        for step in 0..4u64 {
+            let t0 = Instant::now();
+            let control_ns = rec.end_phase(&mut timers, "control", step as usize, t0);
+            let mut r = worker_rec(step, step == 3);
+            r.control_ns = control_ns;
+            if step == 2 {
+                r.redefine = true;
+                r.redefine_ns = 50;
+                r.events = vec![json::obj(vec![
+                    ("step", json::num(step as f64)),
+                    ("kind", json::s("t")),
+                    ("old", json::num(100.0)),
+                    ("new", json::num(120.0)),
+                    ("delta_l_rel", json::num(0.01)),
+                ])];
+            }
+            rec.record_step(&r).unwrap();
+        }
+        rec.flush().unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+        assert_eq!(lines.len(), 4);
+        for l in &lines {
+            schema::check_trace_record(l).unwrap();
+        }
+
+        let report = rec.report();
+        assert_eq!(report.steps, 4);
+        assert_eq!(report.redefines, 1);
+        assert_eq!(report.t_events, 1);
+        assert_eq!(report.rho_events, 0);
+        let step_phase = report
+            .phases
+            .iter()
+            .find(|(k, _)| *k == "step")
+            .map(|(_, s)| s.clone())
+            .unwrap();
+        assert_eq!(step_phase.count, 4);
+        assert_eq!(step_phase.max_ns, 10_000.0);
+        // eval never ran: empty sample set → NaN percentiles, count 0
+        let eval_phase = report
+            .phases
+            .iter()
+            .find(|(k, _)| *k == "eval")
+            .map(|(_, s)| s.clone())
+            .unwrap();
+        assert_eq!(eval_phase.count, 0);
+        assert!(eval_phase.p50_ns.is_nan());
+        // one skewed step: worker 1 busy 800 vs worker 0 busy 300 →
+        // ratio 800/550; the other three steps are balanced (ratio 1)
+        assert!((report.straggler_max - 800.0 / 550.0).abs() < 1e-12);
+        assert_eq!(report.straggler_p50, 1.0);
+        // report JSON serializes (NaN → null) and nests the histogram
+        let rj = report.to_json();
+        let decisions = rj.get("decisions").unwrap();
+        assert_eq!(decisions.get("t_events").unwrap().as_usize().unwrap(), 1);
+
+        let chrome_out = rec.write_chrome().unwrap().unwrap();
+        assert_eq!(chrome_out, chrome::chrome_path(&path));
+        let doc = json::parse(&std::fs::read_to_string(&chrome_out).unwrap()).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 thread_name metadata events + 4 control spans
+        assert_eq!(events.len(), 6);
+        assert_eq!(events[0].get("ph").unwrap().as_str().unwrap(), "M");
+        let span_ev = &events[2];
+        assert_eq!(span_ev.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(span_ev.get("name").unwrap().as_str().unwrap(), "control");
+
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&chrome_out).ok();
+    }
+
+    #[test]
+    fn absorb_preserves_buffer_order() {
+        let rec = Recorder::new();
+        rec.enable();
+        let epoch = Instant::now();
+        let mut buf: Vec<Span> = (0..10)
+            .map(|i| Span { track: 2, phase: "reduce", step: i, start: epoch, end: epoch })
+            .collect();
+        rec.absorb_spans(&mut buf);
+        assert!(buf.is_empty());
+        let got: Vec<u64> = rec.spans().iter().map(|s| s.step).collect();
+        assert_eq!(got, (0..10).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn recorder_rejects_its_own_nonfinite_output() {
+        let rec = Recorder::new();
+        rec.enable();
+        let mut r = worker_rec(0, false);
+        r.rho = f64::INFINITY;
+        assert!(rec.record_step(&r).is_err());
+    }
+}

@@ -1,0 +1,203 @@
+//! The locked `trace_step` record schema: the exact key set every
+//! streamed step record must carry, and the strict validator both the
+//! recorder (before writing a line) and the tests run against it.
+//!
+//! Same discipline as `util::bench`'s record keys, but stricter: a
+//! trace line fails on a *missing* key, on an *extra* key, and on any
+//! non-finite number — so schema drift or a NaN that slipped into a
+//! metric is caught by the producer, not by a dashboard three steps
+//! later. The key lists must stay in sync with
+//! `scripts/trace_summary.py` (the CI-side verifier mirrors them).
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Every key of a `trace_step` record, exactly — no more, no fewer.
+pub const TRACE_STEP_KEYS: &[&str] = &[
+    "kind", "step", "train_loss", "val_loss", "rho", "t", "lr", "redefine",
+    "events", "control_ns", "redefine_ns", "step_ns", "eval_ns", "fanout_ns",
+    "workers", "sync_reduces", "sync_state_bytes", "sync_grad_bytes",
+    "owned_state_bytes", "memory_bytes", "uploads_fresh", "uploads_reused",
+    "upload_bytes", "pool_hits", "pool_misses",
+];
+
+/// Every key of one entry in the per-worker `workers` array.
+pub const TRACE_WORKER_KEYS: &[&str] = &["worker", "upload_ns", "reduce_ns", "update_ns"];
+
+/// Required finite number.
+fn req_num(v: &Value, key: &str) -> Result<f64> {
+    let x = v.get(key)?.as_f64().with_context(|| format!("trace key {key:?}"))?;
+    ensure!(x.is_finite(), "trace key {key:?} is non-finite");
+    Ok(x)
+}
+
+/// Number-or-null (sharded-only counters are null on unsharded runs,
+/// losses are null between readback boundaries).
+fn opt_num(v: &Value, key: &str) -> Result<Option<f64>> {
+    match v.get(key)? {
+        Value::Null => Ok(None),
+        other => {
+            let x = other.as_f64().with_context(|| format!("trace key {key:?}"))?;
+            ensure!(x.is_finite(), "trace key {key:?} is non-finite");
+            Ok(Some(x))
+        }
+    }
+}
+
+/// Validate one parsed `trace_step` record against the locked schema:
+/// the exact [`TRACE_STEP_KEYS`] set (missing AND unexpected keys both
+/// fail), the exact [`TRACE_WORKER_KEYS`] set per worker entry, and
+/// finite numbers everywhere a number appears.
+pub fn check_trace_value(v: &Value) -> Result<()> {
+    let Value::Obj(m) = v else { bail!("trace record is not a JSON object") };
+    for k in TRACE_STEP_KEYS {
+        ensure!(m.contains_key(*k), "trace record missing key {k:?}");
+    }
+    for k in m.keys() {
+        ensure!(TRACE_STEP_KEYS.contains(&k.as_str()),
+                "trace record has unexpected key {k:?} (schema drift: update \
+                 TRACE_STEP_KEYS and scripts/trace_summary.py together)");
+    }
+    let kind = v.get("kind")?.as_str()?;
+    ensure!(kind == "trace_step", "unknown trace record kind {kind:?}");
+
+    for key in ["step", "rho", "t", "lr", "control_ns", "redefine_ns", "step_ns",
+                "eval_ns", "uploads_fresh", "uploads_reused", "upload_bytes"] {
+        req_num(v, key)?;
+    }
+    for key in ["train_loss", "val_loss", "fanout_ns", "sync_reduces",
+                "sync_state_bytes", "sync_grad_bytes", "owned_state_bytes",
+                "memory_bytes", "pool_hits", "pool_misses"] {
+        opt_num(v, key)?;
+    }
+    v.get("redefine")?.as_bool().context("trace key \"redefine\"")?;
+
+    for (i, e) in v.get("events")?.as_arr()?.iter().enumerate() {
+        ensure!(matches!(e, Value::Obj(_)), "trace event {i} is not an object");
+    }
+    for (i, w) in v.get("workers")?.as_arr()?.iter().enumerate() {
+        let Value::Obj(wm) = w else { bail!("worker entry {i} is not an object") };
+        for k in TRACE_WORKER_KEYS {
+            ensure!(wm.contains_key(*k), "worker entry {i} missing key {k:?}");
+        }
+        for k in wm.keys() {
+            ensure!(TRACE_WORKER_KEYS.contains(&k.as_str()),
+                    "worker entry {i} has unexpected key {k:?}");
+        }
+        for k in TRACE_WORKER_KEYS {
+            req_num(w, k).with_context(|| format!("worker entry {i}"))?;
+        }
+    }
+    Ok(())
+}
+
+/// Parse one trace line as strict JSON and validate it; returns the
+/// parsed record. Non-finite floats cannot survive this path: the
+/// serializer has no NaN/Infinity literal (it emits `null`), the
+/// parser rejects the literals, and any numeric overflow that parsed
+/// to an infinity fails the finiteness check.
+pub fn check_trace_record(line: &str) -> Result<Value> {
+    let v = json::parse(line).context("trace line is not strict JSON")?;
+    check_trace_value(&v)?;
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{StepRecord, WorkerStepNanos};
+
+    fn sample() -> StepRecord {
+        StepRecord {
+            step: 7,
+            train_loss: Some(1.25),
+            val_loss: None,
+            rho: 0.5,
+            t: 100,
+            lr: 1e-2,
+            redefine: true,
+            events: vec![json::obj(vec![("step", json::num(7.0)),
+                                        ("kind", json::s("t"))])],
+            control_ns: 120,
+            redefine_ns: 3000,
+            step_ns: 50_000,
+            eval_ns: 0,
+            fanout_ns: Some(40_000),
+            workers: vec![
+                WorkerStepNanos { worker: 0, upload_ns: 10, reduce_ns: 20, update_ns: 30 },
+                WorkerStepNanos { worker: 1, upload_ns: 11, reduce_ns: 21, update_ns: 31 },
+            ],
+            sync_reduces: Some(1),
+            sync_state_bytes: Some(4096),
+            sync_grad_bytes: Some(1024),
+            owned_state_bytes: Some(2048),
+            memory_bytes: None,
+            uploads_fresh: 0,
+            uploads_reused: 3,
+            upload_bytes: 12_000,
+            pool_hits: Some(4),
+            pool_misses: Some(0),
+        }
+    }
+
+    #[test]
+    fn full_record_round_trips_through_the_validator() {
+        let line = sample().to_json().to_string();
+        let v = check_trace_record(&line).unwrap();
+        assert_eq!(v.get("step").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(v.get("workers").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn every_missing_key_is_rejected_by_name() {
+        let full = sample().to_json();
+        for key in TRACE_STEP_KEYS {
+            let mut v = full.clone();
+            if let Value::Obj(m) = &mut v {
+                m.remove(*key);
+            }
+            let err = format!("{:#}", check_trace_value(&v).unwrap_err());
+            assert!(err.contains(*key), "dropping {key:?} gave: {err}");
+        }
+    }
+
+    #[test]
+    fn extra_keys_and_non_finite_numbers_are_rejected() {
+        let mut v = sample().to_json();
+        if let Value::Obj(m) = &mut v {
+            m.insert("surprise".into(), json::num(1.0));
+        }
+        let err = format!("{:#}", check_trace_value(&v).unwrap_err());
+        assert!(err.contains("surprise"), "{err}");
+
+        // a NaN that reached a required field serializes as null,
+        // which the validator refuses for that key
+        let mut rec = sample();
+        rec.rho = f64::NAN;
+        let err = format!("{:#}", check_trace_record(&rec.to_json().to_string())
+                          .unwrap_err());
+        assert!(err.contains("rho"), "{err}");
+
+        // literal NaN and an overflowing float both fail the line check
+        assert!(check_trace_record("{\"kind\": NaN}").is_err());
+        let inf_line = sample().to_json().to_string().replace("\"rho\":0.5",
+                                                              "\"rho\":1e999");
+        let err = format!("{:#}", check_trace_record(&inf_line).unwrap_err());
+        assert!(err.contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn worker_entries_are_schema_locked_too() {
+        let mut v = sample().to_json();
+        if let Value::Obj(m) = &mut v {
+            if let Some(Value::Arr(ws)) = m.get_mut("workers") {
+                if let Value::Obj(w0) = &mut ws[0] {
+                    w0.remove("reduce_ns");
+                }
+            }
+        }
+        let err = format!("{:#}", check_trace_value(&v).unwrap_err());
+        assert!(err.contains("reduce_ns"), "{err}");
+    }
+}

@@ -174,6 +174,32 @@ pub trait ExecBackend: Send {
     fn phase_stats(&self) -> Option<crate::runtime::shard::PhaseNanos> {
         None
     }
+
+    /// Per-worker breakdown of the sharded step pipeline (upload /
+    /// reduce / update nanoseconds for each shard worker): `Some` for
+    /// [`crate::runtime::shard::ShardedBackend`], `None` for unsharded
+    /// backends. Unlike [`ExecBackend::phase_stats`] this keeps the
+    /// per-worker attribution, which is what exposes pipeline skew and
+    /// straggler time. Wrappers must forward it.
+    fn worker_phase_stats(&self) -> Option<Vec<crate::runtime::shard::WorkerPhaseNanos>> {
+        None
+    }
+
+    /// Readback scratch-pool counters of the sharded fan-out (hits vs
+    /// reallocations): `Some` for
+    /// [`crate::runtime::shard::ShardedBackend`], `None` for unsharded
+    /// backends. Wrappers must forward it.
+    fn scratch_stats(&self) -> Option<crate::runtime::shard::ScratchStats> {
+        None
+    }
+
+    /// Attach a run-telemetry recorder (see [`crate::obs`]). Sharded
+    /// backends register their worker timeline tracks and start
+    /// emitting per-phase spans when the recorder is enabled; the
+    /// default is a no-op for backends with nothing to attribute.
+    /// Wrappers must forward it so tracing survives
+    /// [`CountingBackend`] layering.
+    fn attach_recorder(&self, _rec: &crate::obs::Recorder) {}
 }
 
 /// Backend selector carried by config as a plain name (the same
@@ -357,6 +383,18 @@ impl ExecBackend for CountingBackend {
 
     fn phase_stats(&self) -> Option<crate::runtime::shard::PhaseNanos> {
         self.inner.phase_stats()
+    }
+
+    fn worker_phase_stats(&self) -> Option<Vec<crate::runtime::shard::WorkerPhaseNanos>> {
+        self.inner.worker_phase_stats()
+    }
+
+    fn scratch_stats(&self) -> Option<crate::runtime::shard::ScratchStats> {
+        self.inner.scratch_stats()
+    }
+
+    fn attach_recorder(&self, rec: &crate::obs::Recorder) {
+        self.inner.attach_recorder(rec)
     }
 }
 

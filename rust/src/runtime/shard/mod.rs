@@ -54,7 +54,16 @@
 //! ([`ExecBackend::phase_stats`]): `fanout_ns` is main-thread wall of
 //! the fan-out round; `upload_ns`, `reduce_ns` and `update_ns` are
 //! **summed worker-side durations** (aggregate worker time, which can
-//! exceed wall when shards overlap — that overlap is the point).
+//! exceed wall when shards overlap — that overlap is the point). The
+//! clock is kept **per worker** ([`WorkerPhaseNanos`], via
+//! [`ExecBackend::worker_phase_stats`]) so pipeline skew — one shard
+//! consistently slower than its peers — is observable; the summed
+//! snapshot is derived from it and unchanged. With a telemetry
+//! recorder attached ([`ShardedBackend::attach_recorder`]) each worker
+//! additionally records named upload/grad_part/reduce/update spans
+//! into a buffer it owns, drained on the caller thread at the end of
+//! the step — tracing adds no lock and no allocation to the worker hot
+//! path when disabled, and never reorders a reduction either way.
 //!
 //! # How a step is sharded
 //!
@@ -140,6 +149,7 @@ use self::partition::Partition;
 use super::backend::{self, Buffer, ExecBackend, HostData};
 use super::manifest::Manifest;
 use super::sim;
+use crate::obs::{Recorder, Span};
 use crate::util::pipeline::WorkerPool;
 use crate::util::{par, pool};
 
@@ -202,15 +212,50 @@ pub struct PhaseNanos {
     pub steps: u64,
 }
 
-/// Lifetime phase-clock of a [`ShardedBackend`]; workers add into the
-/// atomics concurrently, [`ExecBackend::phase_stats`] snapshots them.
+/// Lifetime per-worker phase totals of a [`ShardedBackend`], in
+/// nanoseconds — the un-summed breakdown behind [`PhaseNanos`]
+/// (snapshot via [`ExecBackend::worker_phase_stats`]; entry `k` is
+/// shard worker `k`). Comparing entries exposes pipeline skew: a
+/// straggler shard shows up as one entry consistently larger than its
+/// peers, which the summed clock erases.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerPhaseNanos {
+    /// this worker's upload time (params + sub-batch + labels), summed
+    /// over steps
+    pub upload_ns: u64,
+    /// this worker's gradient-reduce time, summed over steps
+    pub reduce_ns: u64,
+    /// this worker's optimizer-update time, summed over steps
+    pub update_ns: u64,
+}
+
+/// One worker's slot of the phase clock; only worker `k`'s jobs add
+/// into slot `k`, so the adds are uncontended.
 #[derive(Default)]
-struct PhaseClock {
-    fanout_ns: AtomicU64,
+struct WorkerClock {
     upload_ns: AtomicU64,
     reduce_ns: AtomicU64,
     update_ns: AtomicU64,
+}
+
+/// Lifetime phase-clock of a [`ShardedBackend`]; workers add into
+/// their own [`WorkerClock`] slot concurrently,
+/// [`ExecBackend::phase_stats`] snapshots the sum and
+/// [`ExecBackend::worker_phase_stats`] the per-worker breakdown.
+struct PhaseClock {
+    fanout_ns: AtomicU64,
     steps: AtomicU64,
+    workers: Vec<WorkerClock>,
+}
+
+impl PhaseClock {
+    fn new(n: usize) -> Self {
+        PhaseClock {
+            fanout_ns: AtomicU64::new(0),
+            steps: AtomicU64::new(0),
+            workers: (0..n).map(|_| WorkerClock::default()).collect(),
+        }
+    }
 }
 
 /// Validate a shard count: power-of-two (the tree-alignment
@@ -297,6 +342,10 @@ struct ShardWorker {
     labels: Option<Buffer>,
     grad: Vec<f32>,
     grad_reallocs: usize,
+    /// telemetry spans recorded by this worker's jobs, owned by the
+    /// worker thread (lock-free) and drained at step boundaries; stays
+    /// empty when no enabled recorder is attached
+    spans: Vec<Span>,
 }
 
 /// Caller-side step buffers (behind one mutex): the per-shard raw
@@ -338,6 +387,9 @@ pub struct ShardedBackend {
     grad_bytes: AtomicUsize,
     owned_state_bytes: AtomicUsize,
     phases: PhaseClock,
+    /// attached telemetry recorder; checked once per step entry on the
+    /// caller thread (uncontended), never from a worker job
+    trace: Mutex<Option<Recorder>>,
 }
 
 impl ShardedBackend {
@@ -372,8 +424,10 @@ impl ShardedBackend {
                 labels: None,
                 grad: Vec::new(),
                 grad_reallocs: 0,
+                spans: Vec::new(),
             })
             .collect();
+        let phases = PhaseClock::new(workers.len());
         Ok(ShardedBackend {
             manifest: man,
             pool: WorkerPool::new("shard", workers),
@@ -384,7 +438,8 @@ impl ShardedBackend {
             state_bytes: AtomicUsize::new(0),
             grad_bytes: AtomicUsize::new(0),
             owned_state_bytes: AtomicUsize::new(0),
-            phases: PhaseClock::default(),
+            phases,
+            trace: Mutex::new(None),
         })
     }
 
@@ -402,6 +457,55 @@ impl ShardedBackend {
     /// path exists as the parity oracle and escape hatch.
     pub fn set_pipelined(&mut self, on: bool) {
         self.pipelined = on;
+    }
+
+    /// Attach a telemetry recorder: names one timeline track per shard
+    /// worker (track `k + 1`, matching the pool's `"shard-k"` thread
+    /// names; track 0 belongs to the session) and arms span recording
+    /// on the step path for whenever the recorder is enabled.
+    pub fn attach_recorder(&self, rec: &Recorder) {
+        for k in 0..self.n_shards() {
+            rec.name_track(k as u32 + 1, &format!("{}-{k}", self.pool.label()));
+        }
+        *self.trace.lock().unwrap_or_else(|p| p.into_inner()) = Some(rec.clone());
+    }
+
+    /// The attached recorder, if any and enabled — one uncontended
+    /// lock per *step entry* on the caller thread; worker jobs never
+    /// touch it.
+    fn active_recorder(&self) -> Option<Recorder> {
+        let g = self.trace.lock().unwrap_or_else(|p| p.into_inner());
+        g.as_ref().filter(|r| r.enabled()).cloned()
+    }
+
+    /// Pull every worker's locally-recorded spans into the recorder,
+    /// in worker order (one scope round). Only called when tracing is
+    /// enabled, at the end of a step entry.
+    fn drain_worker_spans(&self, rec: &Recorder) {
+        let mut slots: Vec<Vec<Span>> = (0..self.n_shards()).map(|_| Vec::new()).collect();
+        self.pool.scope(|scope| {
+            for (k, slot) in slots.iter_mut().enumerate() {
+                scope.submit(k, move |w| *slot = std::mem::take(&mut w.spans));
+            }
+        });
+        for mut spans in slots {
+            rec.absorb_spans(&mut spans);
+        }
+    }
+
+    /// Per-worker lifetime phase totals; entry `k` is shard worker
+    /// `k`. Sums exactly to the aggregate [`ExecBackend::phase_stats`]
+    /// snapshot (pinned by a test below).
+    pub fn worker_phase_stats(&self) -> Vec<WorkerPhaseNanos> {
+        self.phases
+            .workers
+            .iter()
+            .map(|w| WorkerPhaseNanos {
+                upload_ns: w.upload_ns.load(Ordering::Relaxed),
+                reduce_ns: w.reduce_ns.load(Ordering::Relaxed),
+                update_ns: w.update_ns.load(Ordering::Relaxed),
+            })
+            .collect()
     }
 
     /// Snapshot the scratch-reuse counters (caller-side partial
@@ -516,9 +620,12 @@ impl ShardedBackend {
     /// `bufs.partials` slot. Returns the global `(mean loss, count)`;
     /// the partials stay in `bufs` for whichever reduce path runs
     /// next. The tail-slot totals are tree-summed here exactly as the
-    /// whole-vector reduce would (the tree is elementwise).
+    /// whole-vector reduce would (the tree is elementwise). With
+    /// `trace` set, worker `i` records upload/grad_part spans into its
+    /// own buffer and the caller records the fan-out wall span.
     fn fanout_partials(&self, bufs: &mut StepBufs, params: &[f32], tokens: &[i32],
-                       token_dims: &[usize], labels: Option<&Buffer>)
+                       token_dims: &[usize], labels: Option<&Buffer>,
+                       trace: Option<(&Recorder, u64)>)
                        -> Result<(f32, usize)> {
         let man = &self.manifest;
         let n = man.n_params;
@@ -551,12 +658,13 @@ impl ShardedBackend {
             bufs.partials.resize_with(nsh, Vec::new);
         }
         let mut outs: Vec<Option<Result<bool>>> = (0..nsh).map(|_| None).collect();
+        let step_no = trace.map(|(_, s)| s);
         let t0 = Instant::now();
         // one job per shard worker; each writes only its own partial
         // and out slot, and everything after the scope runs on this
         // thread in shard order — thread scheduling reorders nothing
         self.pool.scope(|scope| {
-            let upload_ns = &self.phases.upload_ns;
+            let clocks = &self.phases.workers;
             for (i, (partial, out)) in
                 bufs.partials.iter_mut().zip(outs.iter_mut()).enumerate()
             {
@@ -566,13 +674,21 @@ impl ShardedBackend {
                     LabelSlice::I(v) => LabelSlice::I(&v[i * per..(i + 1) * per]),
                     LabelSlice::F(v) => LabelSlice::F(&v[i * per..(i + 1) * per]),
                 });
+                let clock = &clocks[i];
+                let wtrace = step_no.map(|s| (s, i as u32 + 1));
                 scope.submit(i, move |w| {
                     *out = Some(run_shard(w, partial, params, tokens, [per, width],
-                                          labels.as_ref(), upload_ns));
+                                          labels.as_ref(), clock, wtrace));
                 });
             }
         });
-        self.phases.fanout_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let t_end = Instant::now();
+        self.phases
+            .fanout_ns
+            .fetch_add(t_end.duration_since(t0).as_nanos() as u64, Ordering::Relaxed);
+        if let Some((rec, s)) = trace {
+            rec.push_span(Span { track: 0, phase: "fanout", step: s, start: t0, end: t_end });
+        }
 
         let mut losses = Vec::with_capacity(nsh);
         let mut counts = Vec::with_capacity(nsh);
@@ -622,7 +738,8 @@ impl ShardedBackend {
     /// `pipelined_step_matches_serial_reference_bitwise` and the
     /// parity gates.
     fn pipelined_fused_step(&self, bufs: &StepBufs, state: &[f32], mask: Option<&[f32]>,
-                            s: &crate::optim::StepScalars, loss: f32, count: usize)
+                            s: &crate::optim::StepScalars, loss: f32, count: usize,
+                            trace: Option<u64>)
                             -> Result<Vec<f32>> {
         let man = &self.manifest;
         let n = man.n_params;
@@ -653,10 +770,11 @@ impl ShardedBackend {
             jobs.push((r.clone(), p, m, v));
         }
         let partials = &bufs.partials;
-        let reduce_ns = &self.phases.reduce_ns;
-        let update_ns = &self.phases.update_ns;
         self.pool.scope(|scope| {
+            let clocks = &self.phases.workers;
             for (k, (r, p, m, v)) in jobs.into_iter().enumerate() {
+                let clock = &clocks[k];
+                let wtrace = trace.map(|s_no| (s_no, k as u32 + 1));
                 scope.submit(k, move |w| {
                     let t = Instant::now();
                     if w.grad.capacity() < r.len() {
@@ -666,11 +784,27 @@ impl ShardedBackend {
                     w.grad.resize(r.len(), 0.0);
                     reduce::tree_sum_range(partials, &r, &mut w.grad);
                     reduce::normalize(&mut w.grad, count);
-                    reduce_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    let t_end = Instant::now();
+                    clock
+                        .reduce_ns
+                        .fetch_add(t_end.duration_since(t).as_nanos() as u64,
+                                   Ordering::Relaxed);
+                    if let Some((s_no, track)) = wtrace {
+                        w.spans.push(Span { track, phase: "reduce", step: s_no,
+                                            start: t, end: t_end });
+                    }
                     let t = Instant::now();
                     crate::optim::frugal::hybrid_update_range(man, r.start, p, &w.grad,
                                                               m, v, mask, s);
-                    update_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    let t_end = Instant::now();
+                    clock
+                        .update_ns
+                        .fetch_add(t_end.duration_since(t).as_nanos() as u64,
+                                   Ordering::Relaxed);
+                    if let Some((s_no, track)) = wtrace {
+                        w.spans.push(Span { track, phase: "update", step: s_no,
+                                            start: t, end: t_end });
+                    }
                 });
             }
         });
@@ -694,7 +828,8 @@ impl ShardedBackend {
     /// The pipelined reduce for the host-path `grad` entry: each
     /// worker tree-reduces and normalizes its owned range straight
     /// into its disjoint segment of `grads` (length `n_params`).
-    fn pipelined_reduce_scatter(&self, bufs: &StepBufs, count: usize, grads: &mut [f32]) {
+    fn pipelined_reduce_scatter(&self, bufs: &StepBufs, count: usize, grads: &mut [f32],
+                                trace: Option<u64>) {
         let mut segs = Vec::with_capacity(self.partition.ranges.len());
         let mut rest = grads;
         for r in &self.partition.ranges {
@@ -703,14 +838,24 @@ impl ShardedBackend {
             segs.push((r.clone(), seg));
         }
         let partials = &bufs.partials;
-        let reduce_ns = &self.phases.reduce_ns;
         self.pool.scope(|scope| {
+            let clocks = &self.phases.workers;
             for (k, (r, seg)) in segs.into_iter().enumerate() {
-                scope.submit(k, move |_w| {
+                let clock = &clocks[k];
+                let wtrace = trace.map(|s_no| (s_no, k as u32 + 1));
+                scope.submit(k, move |w| {
                     let t = Instant::now();
                     reduce::tree_sum_range(partials, &r, seg);
                     reduce::normalize(seg, count);
-                    reduce_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    let t_end = Instant::now();
+                    clock
+                        .reduce_ns
+                        .fetch_add(t_end.duration_since(t).as_nanos() as u64,
+                                   Ordering::Relaxed);
+                    if let Some((s_no, track)) = wtrace {
+                        w.spans.push(Span { track, phase: "reduce", step: s_no,
+                                            start: t, end: t_end });
+                    }
                 });
             }
         });
@@ -792,7 +937,7 @@ impl ShardedBackend {
 /// whether the read-back reused that buffer's capacity.
 fn run_shard(w: &mut ShardWorker, out: &mut Vec<f32>, params: &[f32], tokens: &[i32],
              token_dims: [usize; 2], labels: Option<&LabelSlice<'_>>,
-             upload_ns: &AtomicU64) -> Result<bool> {
+             clock: &WorkerClock, trace: Option<(u64, u32)>) -> Result<bool> {
     let t = Instant::now();
     w.engine.upload_f32_into(&mut w.params, params, &[params.len()])?;
     w.engine.upload_i32_into(&mut w.tokens, tokens, &token_dims)?;
@@ -805,7 +950,11 @@ fn run_shard(w: &mut ShardWorker, out: &mut Vec<f32>, params: &[f32], tokens: &[
             w.engine.upload_f32_into(&mut w.labels, v, &[v.len()])?;
         }
     }
-    upload_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    let t_end = Instant::now();
+    clock.upload_ns.fetch_add(t_end.duration_since(t).as_nanos() as u64, Ordering::Relaxed);
+    if let Some((step, track)) = trace {
+        w.spans.push(Span { track, phase: "upload", step, start: t, end: t_end });
+    }
     let mut args: Vec<&Buffer> = vec![
         w.params.as_ref().expect("params slot filled"),
         w.tokens.as_ref().expect("tokens slot filled"),
@@ -813,8 +962,12 @@ fn run_shard(w: &mut ShardWorker, out: &mut Vec<f32>, params: &[f32], tokens: &[
     if let Some(l) = w.labels.as_ref() {
         args.push(l);
     }
+    let g0 = Instant::now();
     let outb = w.engine.run("grad_part", &args)?;
     let reused = w.engine.read_all_f32_into(&outb, out)?;
+    if let Some((step, track)) = trace {
+        w.spans.push(Span { track, phase: "grad_part", step, start: g0, end: Instant::now() });
+    }
     // recycle the output allocation into this worker thread's scratch
     // pool — the sim engine's next grad_part take re-draws it, closing
     // the per-step allocation loop
@@ -853,13 +1006,29 @@ impl ExecBackend for ShardedBackend {
     }
 
     fn phase_stats(&self) -> Option<PhaseNanos> {
-        Some(PhaseNanos {
+        let mut agg = PhaseNanos {
             fanout_ns: self.phases.fanout_ns.load(Ordering::Relaxed),
-            upload_ns: self.phases.upload_ns.load(Ordering::Relaxed),
-            reduce_ns: self.phases.reduce_ns.load(Ordering::Relaxed),
-            update_ns: self.phases.update_ns.load(Ordering::Relaxed),
             steps: self.phases.steps.load(Ordering::Relaxed),
-        })
+            ..Default::default()
+        };
+        for w in ShardedBackend::worker_phase_stats(self) {
+            agg.upload_ns += w.upload_ns;
+            agg.reduce_ns += w.reduce_ns;
+            agg.update_ns += w.update_ns;
+        }
+        Some(agg)
+    }
+
+    fn worker_phase_stats(&self) -> Option<Vec<WorkerPhaseNanos>> {
+        Some(ShardedBackend::worker_phase_stats(self))
+    }
+
+    fn scratch_stats(&self) -> Option<ScratchStats> {
+        Some(ShardedBackend::scratch_stats(self))
+    }
+
+    fn attach_recorder(&self, rec: &Recorder) {
+        ShardedBackend::attach_recorder(self, rec);
     }
 
     fn partition(&self) -> Option<Partition> {
@@ -889,27 +1058,50 @@ impl ExecBackend for ShardedBackend {
                     Buffer::Pjrt(_) => bail!("sharded backend only accepts host buffers"),
                 };
                 let labels = if cls { Some(args[base + 2]) } else { None };
+                // telemetry is read-only over counters and clocks: the
+                // numeric path below is identical with tracing on/off
+                let tr = self
+                    .active_recorder()
+                    .map(|r| (r, self.phases.steps.load(Ordering::Relaxed)));
                 let mut bufs = self.lock_bufs();
-                let (loss, count) = self.fanout_partials(&mut bufs, &state[..man.n_params],
-                                                         tokens, tdims, labels)?;
+                let (loss, count) =
+                    self.fanout_partials(&mut bufs, &state[..man.n_params], tokens, tdims,
+                                         labels, tr.as_ref().map(|(r, s)| (r, *s)))?;
                 // the update validates the mask length; price the sync
                 // only once the step is known-good
                 let next = if self.pipelined {
-                    self.pipelined_fused_step(&bufs, state, mask, &scal, loss, count)?
+                    self.pipelined_fused_step(&bufs, state, mask, &scal, loss, count,
+                                              tr.as_ref().map(|(_, s)| *s))?
                 } else {
+                    // serial reference path runs on the caller thread;
+                    // its time lands in worker 0's clock so the summed
+                    // snapshot stays comparable across both paths
                     let t = Instant::now();
                     let grads = self.serial_reduce(&bufs, count);
-                    self.phases.reduce_ns.fetch_add(t.elapsed().as_nanos() as u64,
-                                                    Ordering::Relaxed);
+                    let t_end = Instant::now();
+                    self.phases.workers[0].reduce_ns.fetch_add(
+                        t_end.duration_since(t).as_nanos() as u64, Ordering::Relaxed);
+                    if let Some((rec, s)) = tr.as_ref() {
+                        rec.push_span(Span { track: 0, phase: "reduce", step: *s,
+                                             start: t, end: t_end });
+                    }
                     let t = Instant::now();
                     let next = self.sharded_fused_step(state, mask, &scal, &grads, loss)?;
-                    self.phases.update_ns.fetch_add(t.elapsed().as_nanos() as u64,
-                                                    Ordering::Relaxed);
+                    let t_end = Instant::now();
+                    self.phases.workers[0].update_ns.fetch_add(
+                        t_end.duration_since(t).as_nanos() as u64, Ordering::Relaxed);
+                    if let Some((rec, s)) = tr.as_ref() {
+                        rec.push_span(Span { track: 0, phase: "update", step: *s,
+                                             start: t, end: t_end });
+                    }
                     next
                 };
                 drop(bufs);
                 self.phases.steps.fetch_add(1, Ordering::Relaxed);
                 self.note_reduce(mask, false);
+                if let Some((rec, _)) = tr.as_ref() {
+                    self.drain_worker_spans(rec);
+                }
                 let dims = vec![next.len()];
                 Ok(Buffer::Host { data: HostData::F32(next), dims })
             }
@@ -924,25 +1116,38 @@ impl ExecBackend for ShardedBackend {
                     Buffer::Pjrt(_) => bail!("sharded backend only accepts host buffers"),
                 };
                 let labels = if cls { Some(args[2]) } else { None };
+                let tr = self
+                    .active_recorder()
+                    .map(|r| (r, self.phases.steps.load(Ordering::Relaxed)));
                 let mut bufs = self.lock_bufs();
                 let (loss, count) =
-                    self.fanout_partials(&mut bufs, params, tokens, tdims, labels)?;
+                    self.fanout_partials(&mut bufs, params, tokens, tdims, labels,
+                                         tr.as_ref().map(|(r, s)| (r, *s)))?;
                 let n = man.n_params;
                 let mut grads;
                 if self.pipelined {
                     grads = vec![0f32; n + 1];
-                    self.pipelined_reduce_scatter(&bufs, count, &mut grads[..n]);
+                    self.pipelined_reduce_scatter(&bufs, count, &mut grads[..n],
+                                                  tr.as_ref().map(|(_, s)| *s));
                 } else {
                     let t = Instant::now();
                     grads = self.serial_reduce(&bufs, count);
-                    self.phases.reduce_ns.fetch_add(t.elapsed().as_nanos() as u64,
-                                                    Ordering::Relaxed);
+                    let t_end = Instant::now();
+                    self.phases.workers[0].reduce_ns.fetch_add(
+                        t_end.duration_since(t).as_nanos() as u64, Ordering::Relaxed);
+                    if let Some((rec, s)) = tr.as_ref() {
+                        rec.push_span(Span { track: 0, phase: "reduce", step: *s,
+                                             start: t, end: t_end });
+                    }
                     grads.push(0.0);
                 }
                 grads[n] = loss;
                 drop(bufs);
                 self.phases.steps.fetch_add(1, Ordering::Relaxed);
                 self.note_reduce(None, true);
+                if let Some((rec, _)) = tr.as_ref() {
+                    self.drain_worker_spans(rec);
+                }
                 let dims = vec![grads.len()];
                 Ok(Buffer::Host { data: HostData::F32(grads), dims })
             }
@@ -1287,5 +1492,75 @@ mod tests {
             partition::statefull_in_range(&man, Some(&rendered), &(0..man.n_params)) * 8;
         assert!(want <= total && 4 * want <= 2 * total,
                 "owned {want} vs unsharded {total}: partitioning must shrink state");
+    }
+
+    #[test]
+    fn worker_phase_stats_sum_to_aggregate_snapshot() {
+        let sb = sharded_lm("nano.b8", 2);
+        let man = sb.manifest().clone();
+        let state = crate::model::init::init_state(&man, 2);
+        let toks = lm_tokens(&man, 3);
+        let scal = StepScalars::new(1e-2, 1e-3, 0.01, 0.9, 0.999, 1e-8, 1).to_array();
+        let s = sb.upload_f32(&state, &[man.state_len]).unwrap();
+        let c = sb.upload_f32(&scal, &[8]).unwrap();
+        let t = sb.upload_i32(&toks, &[man.model.batch, man.model.seq + 1]).unwrap();
+        sb.run("adamw", &[&s, &c, &t]).unwrap();
+        let per = ShardedBackend::worker_phase_stats(&sb);
+        assert_eq!(per.len(), 2, "one clock entry per shard worker");
+        assert_eq!(ExecBackend::worker_phase_stats(&sb), Some(per.clone()));
+        assert!(per.iter().all(|w| w.upload_ns > 0),
+                "every worker uploaded its slice");
+        let agg = sb.phase_stats().unwrap();
+        assert_eq!(per.iter().map(|w| w.upload_ns).sum::<u64>(), agg.upload_ns);
+        assert_eq!(per.iter().map(|w| w.reduce_ns).sum::<u64>(), agg.reduce_ns);
+        assert_eq!(per.iter().map(|w| w.update_ns).sum::<u64>(), agg.update_ns);
+        // the trait-default scratch route reports the same counters as
+        // the inherent accessor (one pool round each)
+        let via_trait = ExecBackend::scratch_stats(&sb).unwrap();
+        assert_eq!(via_trait.partial_reallocs,
+                   ShardedBackend::scratch_stats(&sb).partial_reallocs);
+    }
+
+    #[test]
+    fn attached_recorder_collects_worker_spans_without_changing_results() {
+        let man = sharded_lm("nano.b8", 2).manifest().clone();
+        let state = crate::model::init::init_state(&man, 11);
+        let toks = lm_tokens(&man, 13);
+        let scal = StepScalars::new(1e-2, 1e-3, 0.01, 0.9, 0.999, 1e-8, 1).to_array();
+        let step = |sb: &ShardedBackend| -> Vec<f32> {
+            let s = sb.upload_f32(&state, &[man.state_len]).unwrap();
+            let c = sb.upload_f32(&scal, &[8]).unwrap();
+            let t = sb.upload_i32(&toks, &[man.model.batch, man.model.seq + 1]).unwrap();
+            sb.read_all_f32(&sb.run("adamw", &[&s, &c, &t]).unwrap()).unwrap()
+        };
+
+        let mut plain = sharded_lm("nano.b8", 2);
+        plain.set_pipelined(true);
+        let want = step(&plain);
+
+        let mut traced = sharded_lm("nano.b8", 2);
+        traced.set_pipelined(true);
+        let rec = Recorder::new();
+        traced.attach_recorder(&rec);
+        // attached but disabled: the step path records nothing
+        let got = step(&traced);
+        assert!(rec.spans().is_empty());
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.to_bits(), g.to_bits());
+        }
+
+        rec.enable();
+        step(&traced);
+        let spans = rec.spans();
+        assert!(spans.iter().any(|s| s.track == 0 && s.phase == "fanout"));
+        for k in 1..=2u32 {
+            for ph in ["upload", "grad_part", "reduce", "update"] {
+                assert!(spans.iter().any(|s| s.track == k && s.phase == ph),
+                        "missing {ph:?} span on worker track {k}");
+            }
+        }
+        // worker buffers were drained back to empty at the step end
+        step(&traced);
+        assert!(rec.spans().len() > spans.len());
     }
 }

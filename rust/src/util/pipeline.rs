@@ -77,6 +77,7 @@ struct Worker<S> {
 /// Jobs are submitted through [`WorkerPool::scope`] and run with
 /// `&mut S` on the worker that has owned that state since `new`.
 pub struct WorkerPool<S> {
+    label: String,
     workers: Vec<Worker<S>>,
 }
 
@@ -102,7 +103,14 @@ impl<S: Send + 'static> WorkerPool<S> {
                 Worker { tx: Some(tx), handle: Some(handle) }
             })
             .collect();
-        Self { workers }
+        Self { label: label.to_string(), workers }
+    }
+
+    /// The label the worker threads were named with: worker `i` runs
+    /// on the thread `"<label>-<i>"`. Telemetry uses the same names
+    /// for its per-worker timeline tracks.
+    pub fn label(&self) -> &str {
+        &self.label
     }
 
     pub fn len(&self) -> usize {

@@ -1,0 +1,93 @@
+//! Disabled-recorder overhead gate: with tracing off, the telemetry
+//! hot path must perform ZERO heap allocations — an untraced run pays
+//! one relaxed atomic load per recording entry point and nothing else.
+//!
+//! This file must contain exactly one test: the counting
+//! `#[global_allocator]` is process-wide, and a sibling test running
+//! concurrently would bump the counter from another thread.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use adafrugal::obs::{Recorder, Span, StepRecord};
+use adafrugal::util::timer::PhaseTimer;
+
+/// System allocator with an allocation-event counter (allocs and
+/// reallocs; frees are not the concern here).
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::SeqCst);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::SeqCst);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::SeqCst);
+        unsafe { System.alloc_zeroed(layout) }
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const PHASES: [&str; 4] = ["control", "redefine", "step", "eval"];
+
+#[test]
+fn disabled_recorder_hot_path_allocates_nothing() {
+    let rec = Recorder::new();
+    assert!(!rec.enabled());
+
+    let mut timers = PhaseTimer::new();
+    // warm-up, outside the measured window: the first `add` of each
+    // phase key may allocate its timer slot (that is the documented
+    // "keys are warm after the first step" contract)
+    for phase in PHASES {
+        rec.end_phase(&mut timers, phase, 0, Instant::now());
+    }
+    // pre-built inputs: Span is Copy; the default StepRecord's vectors
+    // are empty (Vec::new is allocation-free) and the disabled
+    // recorder must not even look at them
+    let record = StepRecord::default();
+    let mut worker_buf: Vec<Span> = Vec::new();
+
+    let before = ALLOC_EVENTS.load(Ordering::SeqCst);
+    for step in 1..=100usize {
+        for phase in PHASES {
+            rec.end_phase(&mut timers, phase, step, Instant::now());
+        }
+        rec.push_span(Span {
+            track: 1,
+            phase: "upload",
+            step: step as u64,
+            start: Instant::now(),
+            end: Instant::now(),
+        });
+        rec.absorb_spans(&mut worker_buf);
+        rec.record_step(&record).unwrap();
+    }
+    let after = ALLOC_EVENTS.load(Ordering::SeqCst);
+
+    assert_eq!(after - before, 0,
+               "disabled telemetry hot path allocated {} times over 100 steps",
+               after - before);
+    // and it recorded nothing
+    assert_eq!(rec.record_count(), 0);
+    assert!(rec.spans().is_empty());
+    // the one timing source still measured every phase
+    for phase in PHASES {
+        assert_eq!(timers.count(phase), 101);
+    }
+}

@@ -1,0 +1,290 @@
+//! Telemetry gate: tracing must observe without perturbing.
+//!
+//! Pins the obs-module contract end to end:
+//!
+//! - **Bit-identity** — a traced run (JSONL sink + Chrome export +
+//!   per-worker spans) produces the byte-identical trajectory of an
+//!   untraced run, unsharded and on the pipelined sharded backend.
+//!   Recording only reads counters and `Instant`s; this test is the
+//!   loud alarm if that ever changes.
+//! - **Stream integrity** — one schema-valid `trace_step` line per
+//!   step, per-step deltas that sum back to the session's lifetime
+//!   counters, per-worker breakdowns present exactly when sharded.
+//! - **Drain order** — `Recorder::absorb_spans` preserves each worker
+//!   buffer's order under `WorkerPool` sizes {1, 2, 8}.
+
+use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::method::Method;
+use adafrugal::coordinator::session::{Session, SessionOptions, SessionResult};
+use adafrugal::coordinator::task::LmTask;
+use adafrugal::obs::{schema, Recorder, Span};
+use adafrugal::runtime::backend::{self, ExecBackend};
+use adafrugal::runtime::shard::ShardedBackend;
+use adafrugal::util::json;
+use adafrugal::util::pipeline::WorkerPool;
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("adafrugal_obs_trace_{}_{name}", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn cfg(preset: &str, shards: usize) -> TrainConfig {
+    TrainConfig {
+        preset: preset.into(),
+        backend: "sim".into(),
+        shards,
+        steps: 60,
+        warmup_steps: 5,
+        n_eval: 20,
+        t_start: 10,
+        t_max: 40,
+        tau_low: 0.02,
+        log_every: 5,
+        val_batches: 2,
+        lr: 1e-2,
+        seed: 7,
+        ..TrainConfig::default()
+    }
+}
+
+/// Run a session to completion; `trace` streams telemetry to that
+/// path. `shards > 1` builds the pipelined [`ShardedBackend`] by hand
+/// (the same construction as `pipeline_parity.rs`).
+fn run(method: Method, preset: &str, shards: usize, trace: Option<&str>)
+       -> (SessionResult, Vec<f32>) {
+    let c = cfg(preset, shards);
+    let mut entries = method.entries();
+    if !entries.contains(&"grad_part") {
+        entries.push("grad_part");
+    }
+    let engine: Box<dyn ExecBackend> = if shards > 1 {
+        let mut inners = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            inners.push(
+                backend::load("sim", &c.artifacts_dir, &c.preset, &entries).unwrap());
+        }
+        let mut sb = ShardedBackend::new(inners).unwrap();
+        sb.set_pipelined(true);
+        Box::new(sb)
+    } else {
+        backend::load("sim", &c.artifacts_dir, &c.preset, &method.entries()).unwrap()
+    };
+    let task = LmTask::new(&c, engine.manifest()).unwrap();
+    let mut s = Session::new(c, method.profile(), engine, Box::new(task),
+                             SessionOptions::pretraining())
+        .unwrap();
+    s.quiet = true;
+    if let Some(p) = trace {
+        s.enable_trace(p).unwrap();
+    }
+    let r = s.run().unwrap();
+    let mask = s.mask_render();
+    (r, mask)
+}
+
+/// Every observable of the trajectory, compared bit-for-bit (the same
+/// comparison the parity suites use).
+fn assert_identical(label: &str, want: &(SessionResult, Vec<f32>),
+                    got: &(SessionResult, Vec<f32>)) {
+    let (rw, mw) = want;
+    let (rg, mg) = got;
+    assert_eq!(rw.steps.len(), rg.steps.len(), "{label}: step-log length");
+    for (a, b) in rw.steps.iter().zip(&rg.steps) {
+        assert_eq!(a.step, b.step, "{label}");
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(),
+                   "{label}: train loss at step {}", a.step);
+        assert_eq!(a.rho.to_bits(), b.rho.to_bits(), "{label}: rho at step {}", a.step);
+        assert_eq!(a.t_current, b.t_current, "{label}: T at step {}", a.step);
+    }
+    assert_eq!(rw.evals.len(), rg.evals.len(), "{label}: eval count");
+    for (a, b) in rw.evals.iter().zip(&rg.evals) {
+        assert_eq!(a.step, b.step, "{label}");
+        assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits(),
+                   "{label}: val loss at step {}", a.step);
+        assert_eq!(a.memory_bytes, b.memory_bytes, "{label}: memory at step {}", a.step);
+    }
+    assert_eq!(rw.redefinitions, rg.redefinitions, "{label}: redefinition count");
+    assert_eq!(rw.redefinition_steps, rg.redefinition_steps,
+               "{label}: redefinition steps");
+    assert_eq!(rw.t_events, rg.t_events, "{label}: T events");
+    assert_eq!(rw.control_events.len(), rg.control_events.len(),
+               "{label}: control-event count");
+    assert_eq!(rw.final_train_loss.to_bits(), rg.final_train_loss.to_bits(),
+               "{label}: final train loss");
+    assert_eq!(rw.uploads.uploads, rg.uploads.uploads, "{label}: fresh uploads");
+    assert_eq!(rw.uploads.reuses, rg.uploads.reuses, "{label}: upload reuses");
+    assert_eq!(rw.sync, rg.sync, "{label}: sync traffic");
+    assert_eq!(mw.len(), mg.len(), "{label}: mask length");
+    for (i, (a, b)) in mw.iter().zip(mg.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label}: mask column {i}");
+    }
+}
+
+/// Parse + schema-check every line of a trace file.
+fn read_trace(path: &str) -> Vec<json::Value> {
+    std::fs::read_to_string(path)
+        .unwrap()
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| schema::check_trace_record(l).expect("schema-valid trace line"))
+        .collect()
+}
+
+#[test]
+fn traced_unsharded_run_is_byte_identical_and_streams_every_step() {
+    let m = Method::AdaFrugalCombined;
+    let plain = run(m, "nano", 1, None);
+    let path = tmp("unsharded.trace.jsonl");
+    let traced = run(m, "nano", 1, Some(&path));
+    assert_identical("combined unsharded traced-vs-untraced", &plain, &traced);
+
+    let lines = read_trace(&path);
+    assert_eq!(lines.len(), cfg("nano", 1).steps, "one record per step");
+    let mut fresh = 0u64;
+    let mut reused = 0u64;
+    let mut bytes = 0u64;
+    for (i, v) in lines.iter().enumerate() {
+        assert_eq!(v.get("step").unwrap().as_usize().unwrap(), i);
+        // unsharded: no fan-out, no workers, no pool counters
+        assert_eq!(v.get("fanout_ns").unwrap(), &json::Value::Null);
+        assert_eq!(v.get("pool_hits").unwrap(), &json::Value::Null);
+        assert!(v.get("workers").unwrap().as_arr().unwrap().is_empty());
+        fresh += v.get("uploads_fresh").unwrap().as_f64().unwrap() as u64;
+        reused += v.get("uploads_reused").unwrap().as_f64().unwrap() as u64;
+        bytes += v.get("upload_bytes").unwrap().as_f64().unwrap() as u64;
+    }
+    // the per-step deltas reassemble the session's lifetime counters
+    // (minus construction-time uploads, which precede step 0's cursor)
+    let total = traced.0.uploads;
+    assert!(fresh <= total.uploads as u64 && reused <= total.reuses as u64
+                && bytes <= total.bytes as u64,
+            "per-step deltas must fold back into the run totals");
+    assert!(bytes > 0, "steps upload something every step");
+    assert!(fresh + reused > 0, "upload counters must move during the run");
+
+    // the report rollup rode back on the result
+    let report = traced.0.report.as_ref().expect("traced run must carry a report");
+    assert_eq!(report.steps, lines.len());
+    assert_eq!(report.redefines, traced.0.redefinitions);
+
+    // the Chrome export parses and covers the session track
+    let chrome = adafrugal::obs::chrome::chrome_path(&path);
+    let doc = json::parse(&std::fs::read_to_string(&chrome).unwrap()).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(events.iter().any(|e| {
+        e.get("ph").map(|p| p == &json::s("X")).unwrap_or(false)
+            && e.get("name").map(|n| n == &json::s("step")).unwrap_or(false)
+    }), "step spans must appear on the timeline");
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&chrome).ok();
+}
+
+#[test]
+fn traced_pipelined_sharded_run_is_byte_identical_with_worker_breakdown() {
+    let m = Method::AdaFrugalCombined;
+    let shards = 2usize;
+    let plain = run(m, "nano.b8", shards, None);
+    let path = tmp("sharded.trace.jsonl");
+    let traced = run(m, "nano.b8", shards, Some(&path));
+    assert_identical("combined 2-shard traced-vs-untraced", &plain, &traced);
+
+    let lines = read_trace(&path);
+    assert_eq!(lines.len(), cfg("nano.b8", shards).steps);
+    for v in &lines {
+        // sharded: fan-out wall + a per-worker entry per shard
+        assert!(v.get("fanout_ns").unwrap().as_f64().is_ok(),
+                "sharded records carry fan-out nanos");
+        let workers = v.get("workers").unwrap().as_arr().unwrap();
+        assert_eq!(workers.len(), shards);
+        for (k, w) in workers.iter().enumerate() {
+            assert_eq!(w.get("worker").unwrap().as_usize().unwrap(), k);
+        }
+        assert!(v.get("sync_reduces").unwrap().as_f64().unwrap() >= 1.0,
+                "every sharded step reduces");
+        assert!(v.get("owned_state_bytes").unwrap().as_f64().unwrap() > 0.0);
+    }
+    // worker spans made it onto the timeline tracks k+1
+    let chrome = adafrugal::obs::chrome::chrome_path(&path);
+    let doc = json::parse(&std::fs::read_to_string(&chrome).unwrap()).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    for phase in ["upload", "reduce", "update"] {
+        assert!(events.iter().any(|e| {
+            e.get("name").map(|n| n == &json::s(phase)).unwrap_or(false)
+                && e.get("tid").and_then(|t| t.as_f64()).map(|t| t >= 1.0).unwrap_or(false)
+        }), "{phase} spans must land on a worker track");
+    }
+    let report = traced.0.report.as_ref().expect("report present");
+    let upload = report.phases.iter().find(|(k, _)| *k == "upload").unwrap();
+    assert_eq!(upload.1.count, lines.len(), "every step sampled worker upload time");
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&chrome).ok();
+}
+
+#[test]
+fn absorb_spans_preserves_per_worker_submission_order_across_pool_sizes() {
+    for workers in [1usize, 2, 8] {
+        let rec = Recorder::new();
+        rec.enable();
+        let epoch = std::time::Instant::now();
+        let pool: WorkerPool<Vec<Span>> =
+            WorkerPool::new("obstest", (0..workers).map(|_| Vec::new()).collect());
+        // each worker records 50 spans into its own buffer, in order
+        pool.scope(|s| {
+            for k in 0..workers {
+                for i in 0..50u64 {
+                    s.submit(k, move |buf| {
+                        buf.push(Span {
+                            track: k as u32 + 1,
+                            phase: "upload",
+                            step: i,
+                            start: epoch,
+                            end: epoch,
+                        });
+                    });
+                }
+            }
+        });
+        // drain in worker order, like the sharded backend does
+        let mut slots: Vec<Vec<Span>> = (0..workers).map(|_| Vec::new()).collect();
+        pool.scope(|s| {
+            for (k, slot) in slots.iter_mut().enumerate() {
+                s.submit(k, move |buf| *slot = std::mem::take(buf));
+            }
+        });
+        for mut spans in slots {
+            rec.absorb_spans(&mut spans);
+        }
+        // the absorbed stream is exactly the in-order per-worker
+        // concatenation: track blocks ascending, steps 0..50 in each
+        let got = rec.spans();
+        assert_eq!(got.len(), workers * 50, "{workers} workers");
+        for (j, sp) in got.iter().enumerate() {
+            assert_eq!(sp.track, (j / 50) as u32 + 1, "{workers} workers: block {j}");
+            assert_eq!(sp.step, (j % 50) as u64, "{workers} workers: order in block");
+        }
+    }
+}
+
+#[test]
+fn schema_rejects_drift_both_directions() {
+    // a real record round-trips...
+    let path = tmp("schema.trace.jsonl");
+    run(Method::FrugalStatic, "nano", 1, Some(&path));
+    let text = std::fs::read_to_string(&path).unwrap();
+    let line = text.lines().next().unwrap();
+    let v = schema::check_trace_record(line).unwrap();
+    // ...a missing key is loud...
+    let json::Value::Obj(mut map) = v.clone() else { panic!("record is an object") };
+    map.remove("rho");
+    assert!(schema::check_trace_value(&json::Value::Obj(map)).is_err(),
+            "missing key must be rejected");
+    // ...and so is an extra one
+    let json::Value::Obj(mut map) = v else { panic!("record is an object") };
+    map.insert("surprise".into(), json::num(1.0));
+    assert!(schema::check_trace_value(&json::Value::Obj(map)).is_err(),
+            "extra key must be rejected");
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(adafrugal::obs::chrome::chrome_path(&path)).ok();
+}

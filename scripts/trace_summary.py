@@ -1,0 +1,212 @@
+#!/usr/bin/env python3
+"""Validate a run-telemetry trace (--trace JSONL) and print a summary.
+
+Stdlib-only, one positional argument:
+
+  trace_summary.py RUN.trace.jsonl
+
+Validation mirrors the locked Rust-side schema exactly: every line must
+be strict JSON (no NaN/Infinity literals), carry the exact trace_step
+key set (missing AND extra keys both fail), the exact per-worker key
+set in every `workers` entry, and finite numbers everywhere a number
+appears. On success it prints the run shape (steps, redefinitions,
+control events), per-phase p50/p95/max latencies, and — when per-worker
+breakdowns are present — the straggler ratio across shard workers.
+
+The key lists below must stay in sync with
+rust/src/obs/schema.rs (TRACE_STEP_KEYS / TRACE_WORKER_KEYS); the
+recorder self-checks every record against those before writing, so
+drift shows up on both sides.
+"""
+
+import argparse
+import json
+import math
+import sys
+
+# keep in sync with rust/src/obs/schema.rs TRACE_STEP_KEYS
+TRACE_STEP_KEYS = [
+    "kind", "step", "train_loss", "val_loss", "rho", "t", "lr", "redefine",
+    "events", "control_ns", "redefine_ns", "step_ns", "eval_ns", "fanout_ns",
+    "workers", "sync_reduces", "sync_state_bytes", "sync_grad_bytes",
+    "owned_state_bytes", "memory_bytes", "uploads_fresh", "uploads_reused",
+    "upload_bytes", "pool_hits", "pool_misses",
+]
+
+# keep in sync with rust/src/obs/schema.rs TRACE_WORKER_KEYS
+TRACE_WORKER_KEYS = ["worker", "upload_ns", "reduce_ns", "update_ns"]
+
+# keys that must be a finite number (never null)
+REQUIRED_NUM = [
+    "step", "rho", "t", "lr", "control_ns", "redefine_ns", "step_ns",
+    "eval_ns", "uploads_fresh", "uploads_reused", "upload_bytes",
+]
+
+# keys that are either null or a finite number
+OPTIONAL_NUM = [
+    "train_loss", "val_loss", "fanout_ns", "sync_reduces",
+    "sync_state_bytes", "sync_grad_bytes", "owned_state_bytes",
+    "memory_bytes", "pool_hits", "pool_misses",
+]
+
+
+def _reject_constant(name):
+    raise ValueError(f"non-strict JSON constant {name!r}")
+
+
+def strict_loads(text):
+    """json.loads that rejects NaN/Infinity literals (strict JSON)."""
+    return json.loads(text, parse_constant=_reject_constant)
+
+
+def fail(msg):
+    print(f"trace_summary: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_finite_num(value, where):
+    if not isinstance(value, (int, float)) or isinstance(value, bool):
+        fail(f"{where}: not a number: {value!r}")
+    if not math.isfinite(value):
+        fail(f"{where}: non-finite number")
+
+
+def check_record(rec, where):
+    if not isinstance(rec, dict):
+        fail(f"{where}: record is not a JSON object")
+    missing = [k for k in TRACE_STEP_KEYS if k not in rec]
+    if missing:
+        fail(f"{where}: missing keys {missing}")
+    extra = [k for k in rec if k not in TRACE_STEP_KEYS]
+    if extra:
+        fail(f"{where}: unexpected keys {extra} (schema drift: update "
+             f"TRACE_STEP_KEYS here and in rust/src/obs/schema.rs together)")
+    if rec["kind"] != "trace_step":
+        fail(f"{where}: unknown record kind {rec['kind']!r}")
+    for k in REQUIRED_NUM:
+        check_finite_num(rec[k], f"{where}: key {k!r}")
+    for k in OPTIONAL_NUM:
+        if rec[k] is not None:
+            check_finite_num(rec[k], f"{where}: key {k!r}")
+    if not isinstance(rec["redefine"], bool):
+        fail(f"{where}: key 'redefine' is not a bool")
+    if not isinstance(rec["events"], list):
+        fail(f"{where}: key 'events' is not an array")
+    for i, ev in enumerate(rec["events"]):
+        if not isinstance(ev, dict):
+            fail(f"{where}: event {i} is not an object")
+    if not isinstance(rec["workers"], list):
+        fail(f"{where}: key 'workers' is not an array")
+    for i, w in enumerate(rec["workers"]):
+        if not isinstance(w, dict):
+            fail(f"{where}: worker entry {i} is not an object")
+        w_missing = [k for k in TRACE_WORKER_KEYS if k not in w]
+        if w_missing:
+            fail(f"{where}: worker entry {i} missing keys {w_missing}")
+        w_extra = [k for k in w if k not in TRACE_WORKER_KEYS]
+        if w_extra:
+            fail(f"{where}: worker entry {i} unexpected keys {w_extra}")
+        for k in TRACE_WORKER_KEYS:
+            check_finite_num(w[k], f"{where}: worker entry {i} key {k!r}")
+
+
+def load_trace(path):
+    records = []
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = strict_loads(line)
+            except ValueError as e:
+                fail(f"{path}:{lineno}: not strict JSON: {e}")
+            check_record(rec, f"{path}:{lineno}")
+            records.append(rec)
+    if not records:
+        fail(f"{path}: no trace records found")
+    return records
+
+
+def percentile(xs, p):
+    """Linear-interpolation percentile on the (len-1) rank, matching
+    util::stats::percentile on the Rust side."""
+    ys = sorted(xs)
+    if not ys:
+        return float("nan")
+    rank = (p / 100.0) * (len(ys) - 1)
+    lo = int(math.floor(rank))
+    hi = int(math.ceil(rank))
+    if lo == hi:
+        return ys[lo]
+    frac = rank - lo
+    return ys[lo] * (1.0 - frac) + ys[hi] * frac
+
+
+def phase_samples(records):
+    """Per-phase per-step nanos, same sampling rules as obs::ReportAgg."""
+    phases = {k: [] for k in
+              ["control", "redefine", "step", "eval", "fanout",
+               "upload", "reduce", "update"]}
+    stragglers = []
+    for rec in records:
+        phases["control"].append(rec["control_ns"])
+        phases["step"].append(rec["step_ns"])
+        if rec["redefine"]:
+            phases["redefine"].append(rec["redefine_ns"])
+        if rec["eval_ns"] > 0:
+            phases["eval"].append(rec["eval_ns"])
+        if rec["fanout_ns"] is not None:
+            phases["fanout"].append(rec["fanout_ns"])
+        workers = rec["workers"]
+        if workers:
+            for k in ["upload", "reduce", "update"]:
+                phases[k].append(sum(w[f"{k}_ns"] for w in workers))
+            if len(workers) >= 2:
+                busy = [w["upload_ns"] + w["reduce_ns"] + w["update_ns"]
+                        for w in workers]
+                mean = sum(busy) / len(busy)
+                if mean > 0:
+                    stragglers.append(max(busy) / mean)
+    return phases, stragglers
+
+
+def summarize(path, records):
+    steps = len(records)
+    redefines = sum(1 for r in records if r["redefine"])
+    events = [e for r in records for e in r["events"]]
+    t_events = sum(1 for e in events if e.get("kind") == "t")
+    rho_events = sum(1 for e in events if e.get("kind") == "rho")
+    print(f"trace_summary: {path}")
+    print(f"  steps {steps}, redefinitions {redefines}, "
+          f"control events {len(events)} (T {t_events}, rho {rho_events})")
+
+    phases, stragglers = phase_samples(records)
+    print(f"  {'phase':<10} {'p50 ms':>10} {'p95 ms':>10} "
+          f"{'max ms':>10} {'n':>6}")
+    for name, xs in phases.items():
+        if not xs:
+            continue
+        print(f"  {name:<10} {percentile(xs, 50) / 1e6:>10.3f} "
+              f"{percentile(xs, 95) / 1e6:>10.3f} "
+              f"{max(xs) / 1e6:>10.3f} {len(xs):>6}")
+    if stragglers:
+        print(f"  straggler ratio (max worker busy / mean): "
+              f"p50 {percentile(stragglers, 50):.3f}, "
+              f"max {max(stragglers):.3f}")
+    workers = max((len(r["workers"]) for r in records), default=0)
+    if workers:
+        print(f"  shard workers: {workers}")
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("trace", help="run trace (--trace output, JSONL)")
+    args = p.parse_args()
+    records = load_trace(args.trace)
+    summarize(args.trace, records)
+    print(f"trace_summary: OK: {len(records)} valid trace records")
+
+
+if __name__ == "__main__":
+    main()
