@@ -1,0 +1,120 @@
+//! Queue/throughput shape of the fine-tune farm: a fixed 24-job /
+//! 3-tenant / 2-slot schedule with staggered arrivals and a forced
+//! preemption on every 5th job, drained end to end. The metric is
+//! **jobs per wall-clock second** — the farm is a throughput device,
+//! so the whole drain (sessions, checkpoint cuts, resumes, scheduling)
+//! is inside the timer; there is no per-phase decomposition to
+//! mis-attribute.
+//!
+//! Statistical protocol matches `bench_loop`: one unmeasured warmup
+//! drain, then `ADAFRUGAL_BENCH_REPS` (default 5) measured repetitions;
+//! the JSON line reports the median with its noise band. The farm
+//! counters (ticks, preemptions, queue waits) are identical across reps
+//! — the scheduler is deterministic — and are taken from the last rep.
+//!
+//! One record kind, `bench_serve`, schema-checked before printing
+//! (`util::bench::check_record`, mirrored by
+//! `scripts/bench_compare.py`).
+//!
+//! ```text
+//! cargo bench --bench bench_serve
+//! ```
+
+use adafrugal::config::TrainConfig;
+use adafrugal::serve::{FarmOutcome, JobSpec, JobState, Scheduler, ServeOpts};
+use adafrugal::util::bench::{self, Reps};
+use adafrugal::util::json;
+
+const JOBS: usize = 24;
+const SLOTS: usize = 2;
+const QUANTUM: usize = 10;
+const STEPS_PER_JOB: usize = 30;
+
+fn farm_jobs() -> Vec<JobSpec> {
+    let cfg = TrainConfig {
+        preset: "nano".into(),
+        backend: "sim".into(),
+        method: "combined".into(),
+        steps: STEPS_PER_JOB,
+        warmup_steps: 5,
+        n_eval: 15,
+        t_start: 10,
+        t_max: 40,
+        log_every: 10_000, // no per-step logging: isolate the farm cost
+        val_batches: 1,
+        lr: 1e-2,
+        seed: 0,
+        ..TrainConfig::default()
+    };
+    (0..JOBS)
+        .map(|i| JobSpec {
+            id: format!("job{i:02}"),
+            tenant: ["alpha", "beta", "gamma"][i % 3].into(),
+            priority: (i % 3) as i64 - 1,
+            arrive_tick: i / 2, // two arrivals per tick: a persistent queue
+            // a mid-run checkpoint cut + resume on every 5th job, so the
+            // preemption path is inside the measured drain
+            preempt_at: if i % 5 == 0 { vec![STEPS_PER_JOB / 2] } else { vec![] },
+            resume_shards: None,
+            cfg: cfg.clone(),
+        })
+        .collect()
+}
+
+fn drain_once() -> anyhow::Result<(FarmOutcome, f64)> {
+    let t = std::time::Instant::now();
+    let farm = Scheduler::new(ServeOpts {
+        slots: SLOTS,
+        quantum: QUANTUM,
+        ..ServeOpts::default()
+    })
+    .run(farm_jobs(), vec![])?;
+    let wall_s = t.elapsed().as_secs_f64();
+    for j in &farm.jobs {
+        anyhow::ensure!(j.state == JobState::Done,
+                        "bench schedule must drain clean: {} {:?}", j.id, j.error);
+    }
+    Ok((farm, wall_s))
+}
+
+fn main() -> anyhow::Result<()> {
+    let reps = bench::loop_reps();
+    // warmup, excluded from the stats
+    std::hint::black_box(drain_once()?);
+    let mut jps = Reps::new();
+    let mut last = None;
+    for _ in 0..reps {
+        let (farm, wall_s) = drain_once()?;
+        jps.push(JOBS as f64 / wall_s.max(1e-9));
+        last = Some(farm);
+    }
+    let farm = last.expect("reps >= 1");
+
+    let waits: Vec<f64> = farm.jobs.iter().map(|j| j.wait_ticks as f64).collect();
+    let pct = |p: f64| adafrugal::util::stats::percentile(&waits, p);
+    let line = json::obj(vec![
+        ("bench", json::s("bench_serve")),
+        ("backend", json::s("sim")),
+        ("preset", json::s("nano")),
+        ("method", json::s("combined")),
+        ("jobs", json::num(JOBS as f64)),
+        ("slots", json::num(SLOTS as f64)),
+        ("quantum", json::num(QUANTUM as f64)),
+        ("steps_per_job", json::num(STEPS_PER_JOB as f64)),
+        ("reps", json::num(jps.count() as f64)),
+        ("jobs_per_sec", json::num(jps.median())),
+        ("jps_min", json::num(jps.min())),
+        ("jps_max", json::num(jps.max())),
+        ("noise_rel", json::num(jps.noise_rel())),
+        ("ticks", json::num(farm.ticks as f64)),
+        ("preemptions", json::num(farm.preemptions as f64)),
+        ("forced_yields", json::num(farm.forced_yields as f64)),
+        ("queue_wait_p50_ticks", json::num(pct(50.0))),
+        ("queue_wait_p95_ticks", json::num(pct(95.0))),
+        ("peak_resident_sessions", json::num(farm.peak_resident as f64)),
+    ]);
+    let s = line.to_string();
+    bench::check_record(&s)?;
+    println!("{s}");
+    Ok(())
+}

@@ -268,6 +268,14 @@ pub struct Session {
     state_mgmt: StateMgmt,
     /// steps since the last optimizer-state reset (bias correction)
     t_since_reset: usize,
+    /// The exact-snapshot boundary: `Some(k)` when the session sits at
+    /// absolute step `k` with every stream (batch RNG, control plane,
+    /// mask, packed state) at the state a straight-through run would
+    /// have after `run_range(_, k)`. Cleared while a range runs (and
+    /// left cleared if it aborts mid-run or a restore fails), so
+    /// [`Session::pause`] can refuse to cut a checkpoint anywhere a
+    /// trajectory-exact resume is not guaranteed.
+    boundary: Option<usize>,
     timers: PhaseTimer,
     /// run telemetry (disabled unless [`Session::enable_trace`] ran);
     /// also the single timing source behind the phase timers
@@ -509,6 +517,7 @@ impl Session {
             strategy,
             state_mgmt,
             t_since_reset: 0,
+            boundary: Some(0),
             timers: PhaseTimer::new(),
             rec: Recorder::new(),
             quiet: false,
@@ -537,6 +546,18 @@ impl Session {
     /// `rust/tests/obs_trace.rs`).
     pub fn enable_trace(&mut self, path: &str) -> Result<()> {
         self.rec.enable_stream(path)?;
+        self.rec.name_track(0, "session");
+        self.dev.engine.attach_recorder(&self.rec);
+        Ok(())
+    }
+
+    /// As [`Session::enable_trace`] but appending to an existing JSONL
+    /// stream — a preempted job's resumed segments extend the same
+    /// per-job trace file instead of clobbering the earlier steps. The
+    /// JSONL stream is the canonical artifact; the Chrome-timeline
+    /// sidecar is rewritten per segment (last segment wins).
+    pub fn enable_trace_append(&mut self, path: &str) -> Result<()> {
+        self.rec.enable_stream_append(path)?;
         self.rec.name_track(0, "session");
         self.dev.engine.attach_recorder(&self.rec);
         Ok(())
@@ -760,6 +781,9 @@ impl Session {
     pub fn run_range(&mut self, from: usize, to: usize) -> Result<SessionResult> {
         anyhow::ensure!(from <= to && to <= self.cfg.steps,
                         "bad step range [{from}, {to}) for a {}-step run", self.cfg.steps);
+        // not at a boundary while the range runs; a mid-range bail
+        // (e.g. divergence) leaves it cleared so pause() stays refused
+        self.boundary = None;
         let total = Timer::start();
         let mut evals = Vec::new();
         let mut steps_log = Vec::new();
@@ -993,6 +1017,10 @@ impl Session {
             None
         };
 
+        // the range completed: every stream sits exactly where a
+        // straight-through run would after step `to`, so a pause here
+        // cuts a trajectory-exact checkpoint
+        self.boundary = Some(to);
         Ok(SessionResult {
             evals,
             steps: steps_log,
@@ -1175,6 +1203,11 @@ impl Session {
     /// straight-through trajectory is exactly what this API exists to
     /// prevent.
     pub fn restore_resume(&mut self, header: &Value, data: &[f32]) -> Result<usize> {
+        // conservatively off-boundary until the restore fully lands: a
+        // failed restore may have partially overwritten control/mask/
+        // task state, and pausing from that half-state would checkpoint
+        // a trajectory no straight-through run ever produces
+        self.boundary = None;
         let kind = header.get("kind")?.as_str()?;
         anyhow::ensure!(kind == "resume",
                         "not a resume checkpoint (kind {kind:?}); params-only \
@@ -1254,7 +1287,44 @@ impl Session {
         if self.profile.frugal {
             *masks_buf = Some(fresh_f32(&**engine, stats, &rendered, &[man.mask_len])?);
         }
+        self.boundary = Some(next_step);
         Ok(next_step)
+    }
+
+    /// The absolute step this session is exactly snapshotted at, or
+    /// `None` while a range is running / after a mid-range abort or a
+    /// failed restore. `Some(k)` guarantees [`Session::pause`] cuts a
+    /// checkpoint bit-identical to a straight-through run's state
+    /// after step `k`.
+    pub fn boundary(&self) -> Option<usize> {
+        self.boundary
+    }
+
+    /// Preemption entry point: snapshot the session at its current
+    /// exact-snapshot boundary. This is the ONLY way `serve` cuts a
+    /// preemption checkpoint — it refuses (a named error) anywhere
+    /// [`Session::resume_state`] could observe a half-advanced stream
+    /// (mid-eval, mid-redefine, a range that aborted partway, a restore
+    /// that failed), instead of trusting the caller to track the step
+    /// cursor separately from the session's real position (the
+    /// double-bookkeeping that motivated this API).
+    ///
+    /// Idempotent: a pure read of the session state, so calling it
+    /// twice at the same boundary returns byte-identical snapshots.
+    pub fn pause(&self) -> Result<(Value, Vec<f32>)> {
+        let at = self.boundary.ok_or_else(|| anyhow::anyhow!(
+            "pause: session is not at an exact snapshot boundary (a range \
+             aborted mid-run or a restore failed); a trajectory-exact \
+             preemption checkpoint can only be cut where run_range completed"
+        ))?;
+        self.resume_state(at)
+    }
+
+    /// Resume a paused job: [`Session::restore_resume`] under the name
+    /// the preemption API pairs with [`Session::pause`]. Returns the
+    /// step to continue from.
+    pub fn resume(&mut self, header: &Value, data: &[f32]) -> Result<usize> {
+        self.restore_resume(header, data)
     }
 }
 

@@ -122,6 +122,25 @@ impl Trainer {
         self.session.enable_trace(path)
     }
 
+    /// As [`Trainer::enable_trace`] but appending — resumed preemption
+    /// segments extend the job's existing trace stream.
+    pub fn enable_trace_append(&mut self, path: &str) -> Result<()> {
+        self.session.enable_trace_append(path)
+    }
+
+    /// Preemption snapshot at the session's exact-snapshot boundary
+    /// (see [`crate::coordinator::session::Session::pause`]).
+    /// Idempotent; a named error off-boundary or on host-path methods.
+    pub fn pause(&self) -> Result<(Value, Vec<f32>)> {
+        self.session.pause()
+    }
+
+    /// The rendered flat column mask of the live subspace (serve parity
+    /// compares it bit-for-bit against the straight-through run).
+    pub fn mask_render(&self) -> Vec<f32> {
+        self.session.mask_render()
+    }
+
     /// Download current params (fused path) or clone host params.
     pub fn params_host(&self) -> Result<Vec<f32>> {
         self.session.params_host()

@@ -48,6 +48,7 @@ pub mod obs;
 pub mod optim;
 pub mod projection;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

@@ -8,6 +8,9 @@
 //! adafrugal finetune --task SST-2 [--ft-method frugal] [--seeds 3]
 //! adafrugal exp    table1|table2|table3|fig1|fig2|ablation-tau|
 //!                  ablation-state|ablation-strategy|scaling [--quick]
+//! adafrugal serve  --jobs jobs.ndjson|- [--spool dir] [--slots 2]
+//!                  [--quantum 25] [--aging 4] [--out results.ndjson]
+//!                  [--report farm.json] [--trace-dir traces/]
 //! adafrugal info   [--preset micro]
 //! ```
 
@@ -22,6 +25,8 @@ use adafrugal::coordinator::method::Method;
 use adafrugal::coordinator::trainer::Trainer;
 use adafrugal::experiments;
 use adafrugal::info;
+use adafrugal::serve::{self, BudgetSpec, JobSpec, Scheduler, ServeOpts};
+use adafrugal::util::json;
 
 /// Minimal flag parser: `--key value` pairs + positional args.
 struct Args {
@@ -290,6 +295,106 @@ fn cmd_exp(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Collect the newline-delimited JSON records the farm consumes: a
+/// jobs file (or `-` for stdin) and/or every `*.json`/`*.jsonl`/
+/// `*.ndjson` file in a spool directory, in sorted filename order (the
+/// offline stand-in for an arrival stream — no network dependency).
+fn serve_records(args: &Args) -> Result<Vec<String>> {
+    let mut lines: Vec<String> = Vec::new();
+    let mut push_text = |text: String| {
+        lines.extend(text.lines().map(str::trim).filter(|l| !l.is_empty())
+                         .map(String::from));
+    };
+    if let Some(path) = args.get("jobs") {
+        let text = if path == "-" {
+            use std::io::Read;
+            let mut buf = String::new();
+            std::io::stdin().read_to_string(&mut buf).context("reading stdin")?;
+            buf
+        } else {
+            std::fs::read_to_string(path).with_context(|| format!("--jobs {path}"))?
+        };
+        push_text(text);
+    }
+    if let Some(dir) = args.get("spool") {
+        let mut names: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+            .with_context(|| format!("--spool {dir}"))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                matches!(p.extension().and_then(|e| e.to_str()),
+                         Some("json" | "jsonl" | "ndjson"))
+            })
+            .collect();
+        names.sort();
+        for p in names {
+            push_text(std::fs::read_to_string(&p)
+                .with_context(|| format!("spool file {}", p.display()))?);
+        }
+    }
+    anyhow::ensure!(!lines.is_empty(),
+                    "serve: no records found; pass --jobs <file|-> and/or \
+                     --spool <dir> with {{\"kind\":\"job\",...}} lines");
+    Ok(lines)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::io::Write;
+    let mut jobs: Vec<JobSpec> = Vec::new();
+    let mut budgets: Vec<BudgetSpec> = Vec::new();
+    for (n, line) in serve_records(args)?.iter().enumerate() {
+        let v = json::parse(line).with_context(|| format!("record {}", n + 1))?;
+        match v.get("kind")?.as_str()? {
+            "job" => jobs.push(
+                JobSpec::from_json(&v).with_context(|| format!("record {}", n + 1))?),
+            "tenant" => budgets.push(
+                BudgetSpec::from_json(&v)
+                    .with_context(|| format!("record {}", n + 1))?),
+            other => bail!("record {}: unknown kind {other:?} (expected \"job\" \
+                            or \"tenant\")", n + 1),
+        }
+    }
+    let parse_n = |flag: &str, default: usize| -> Result<usize> {
+        match args.get(flag) {
+            Some(v) => v.parse().with_context(|| format!("--{flag} {v}")),
+            None => Ok(default),
+        }
+    };
+    let opts = ServeOpts {
+        slots: parse_n("slots", 2)?,
+        quantum: parse_n("quantum", 25)?,
+        aging_every: parse_n("aging", 4)?,
+        trace_dir: args.get("trace-dir").map(String::from),
+        capture_final: false,
+    };
+    info!("serve: {} job(s), {} budget directive(s), {} slot(s), quantum {}",
+          jobs.len(), budgets.len(), opts.slots, opts.quantum);
+    let farm = Scheduler::new(opts).run(jobs, budgets)?;
+    let report = serve::farm_report(&farm);
+    serve::check_farm_report(&report)?;
+
+    // protocol output: one job_result line per job, then the farm
+    // report, to stdout or --out (diagnostics go through util::log on
+    // stderr, so the stream stays machine-parseable)
+    let mut sink: Box<dyn Write> = match args.get("out") {
+        Some(p) => Box::new(std::io::BufWriter::new(
+            std::fs::File::create(p).with_context(|| format!("--out {p}"))?)),
+        None => Box::new(std::io::stdout()),
+    };
+    for j in &farm.jobs {
+        writeln!(sink, "{}", serve::job_result_json(j).to_string())?;
+    }
+    writeln!(sink, "{}", report.to_string())?;
+    sink.flush()?;
+    if let Some(p) = args.get("report") {
+        std::fs::write(p, format!("{}\n", report.to_string()))
+            .with_context(|| format!("--report {p}"))?;
+        info!("serve: farm report written to {p}");
+    }
+    info!("serve: {} ticks, {} preemption(s), peak {} resident session(s)",
+          farm.ticks, farm.preemptions, farm.peak_resident);
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let preset = args.get("preset").unwrap_or("micro");
     let dir = args.get("artifacts").unwrap_or("artifacts");
@@ -336,6 +441,15 @@ USAGE:
   adafrugal exp      table1|table2|table3|fig1|fig2|ablation-tau|ablation-state|
                      ablation-strategy|ablation-rho-schedule|ablation-t-policy|
                      scaling [--quick]
+  adafrugal serve    --jobs jobs.ndjson|-   (newline-delimited JSON: one
+                                             {\"kind\":\"job\",...} or
+                                             {\"kind\":\"tenant\",...} per line)
+                     [--spool dir]          (also read *.json|*.jsonl|*.ndjson
+                                             from dir, sorted filename order)
+                     [--slots 2] [--quantum 25] [--aging 4]
+                     [--out results.ndjson] [--report farm.json]
+                     [--trace-dir traces/]  (per-job obs trace streams;
+                                             see docs/ARCHITECTURE.md \"serve\")
   adafrugal info     [--preset micro]
   adafrugal --list-policies      (control-policy registry: names + grammar)
 "
@@ -356,6 +470,7 @@ fn main() -> ExitCode {
         "train" => cmd_train(&args),
         "finetune" => cmd_finetune(&args),
         "exp" => cmd_exp(&args),
+        "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             println!("{}", usage());

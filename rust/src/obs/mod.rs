@@ -445,6 +445,21 @@ impl Recorder {
         Ok(())
     }
 
+    /// As [`Recorder::enable_stream`] but appending to `path` — a
+    /// preempted job's fresh session keeps streaming into the same
+    /// per-job trace file. The Chrome-timeline sidecar (derived from
+    /// this recorder's spans only) still overwrites; the JSONL stream
+    /// is the canonical full-run artifact.
+    pub fn enable_stream_append(&self, path: &str) -> Result<()> {
+        let mut st = self.lock();
+        ensure!(st.sink.is_none(), "trace sink already attached");
+        st.sink = Some(JsonlWriter::append(path)?);
+        st.trace_path = Some(path.to_string());
+        drop(st);
+        self.inner.enabled.store(true, Ordering::Release);
+        Ok(())
+    }
+
     /// Name a timeline track (Chrome `thread_name` metadata).
     pub fn name_track(&self, track: u32, name: &str) {
         self.lock().tracks.insert(track, name.to_string());

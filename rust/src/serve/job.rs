@@ -1,0 +1,295 @@
+//! The job model of the fine-tune farm: a [`JobSpec`] is one training
+//! run submitted over the wire (newline-delimited JSON), a
+//! [`BudgetSpec`] is a per-tenant byte-budget directive, and
+//! [`JobState`] is the lifecycle the scheduler moves every job through
+//! (queued → running → preempted → … → done/failed).
+//!
+//! Specs are *validated at submit time*: a bad config key, an unknown
+//! method, or a malformed preemption grid fails the one job loudly when
+//! it is parsed — never mid-run inside a scheduler slot, where the
+//! failure would burn a quantum and read like a scheduling bug.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::method::Method;
+use crate::util::json::Value;
+
+/// Scheduler lifecycle of a job. `Preempted` means the job holds a
+/// trajectory-exact checkpoint and sits back in the queue; `Failed`
+/// carries a named error in the job outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Preempted,
+    Done,
+    Failed,
+}
+
+impl JobState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Preempted => "preempted",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+}
+
+/// One submitted fine-tune job: tenant identity + scheduling knobs +
+/// the full [`TrainConfig`] of the run (applied over defaults with the
+/// backend pinned to `sim` — the farm is offline by construction).
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// names the job everywhere: results, the farm report, and its
+    /// per-job trace file (`<trace_dir>/<id>.trace.jsonl`)
+    pub id: String,
+    pub tenant: String,
+    /// higher runs earlier; queued jobs age past it (no starvation)
+    pub priority: i64,
+    /// the scheduler tick the job becomes visible at (arrival time)
+    pub arrive_tick: usize,
+    /// forced preemption grid (absolute steps, exclusive of 0 and the
+    /// final step): the deterministic stand-in for "a higher-priority
+    /// job arrived here" that `serve_parity` and CI smokes key off
+    pub preempt_at: Vec<usize>,
+    /// shard count to resume at after the FIRST preemption (elastic
+    /// resume; power of two) — `None` keeps the submitted count
+    pub resume_shards: Option<usize>,
+    pub cfg: TrainConfig,
+}
+
+impl JobSpec {
+    /// Parse a `{"kind":"job", ...}` record. Everything but `id` is
+    /// optional; `config` entries are applied through
+    /// [`TrainConfig::set`], so unknown keys and invalid values fail
+    /// here with the offending key named.
+    pub fn from_json(v: &Value) -> Result<JobSpec> {
+        let kind = v.get("kind")?.as_str()?;
+        ensure!(kind == "job", "not a job record (kind {kind:?})");
+        let id = v.get("id")?.as_str()?.to_string();
+        ensure!(
+            !id.is_empty()
+                && id.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+            "job id {id:?}: ids name trace files, use [A-Za-z0-9_-]+"
+        );
+        let tenant = match v.opt("tenant") {
+            Some(t) => t.as_str()?.to_string(),
+            None => "default".to_string(),
+        };
+        ensure!(!tenant.is_empty(), "job {id}: tenant must be non-empty");
+        let priority = match v.opt("priority") {
+            Some(p) => {
+                let n = p.as_f64()?;
+                ensure!(n.fract() == 0.0 && n.abs() <= 1e9,
+                        "job {id}: priority must be a small integer, got {n}");
+                n as i64
+            }
+            None => 0,
+        };
+        let arrive_tick = match v.opt("arrive_tick") {
+            Some(a) => a.as_usize()?,
+            None => 0,
+        };
+        let cfg = build_cfg(v.opt("config"))
+            .map_err(|e| e.context(format!("job {id}")))?;
+        // resolve the method now: an unknown method must bounce the
+        // submission, not fail inside a scheduler slot later
+        Method::parse(&cfg.method).map_err(|e| e.context(format!("job {id}")))?;
+        let mut preempt_at = match v.opt("preempt_at") {
+            Some(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|p| p.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+        preempt_at.sort_unstable();
+        preempt_at.dedup();
+        for &p in &preempt_at {
+            ensure!(p > 0 && p < cfg.steps,
+                    "job {id}: preempt_at step {p} outside (0, {}); a checkpoint \
+                     at 0 or at the end preempts nothing", cfg.steps);
+        }
+        let resume_shards = match v.opt("resume_shards") {
+            None | Some(Value::Null) => None,
+            Some(s) => {
+                let n = s.as_usize()?;
+                ensure!(n >= 1 && n.is_power_of_two(),
+                        "job {id}: resume_shards must be a power of two >= 1, got {n}");
+                Some(n)
+            }
+        };
+        Ok(JobSpec { id, tenant, priority, arrive_tick, preempt_at, resume_shards, cfg })
+    }
+}
+
+/// A per-tenant byte-budget directive: `{"kind":"tenant","name":...,
+/// "budget_bytes":N|null,"at_tick":T}`. `null` lifts the budget;
+/// `at_tick` lets a spool lower a tenant's ceiling mid-farm (the
+/// scheduler evicts that tenant's residents until it fits again).
+#[derive(Debug, Clone)]
+pub struct BudgetSpec {
+    pub tenant: String,
+    pub budget_bytes: Option<usize>,
+    pub at_tick: usize,
+}
+
+impl BudgetSpec {
+    pub fn from_json(v: &Value) -> Result<BudgetSpec> {
+        let kind = v.get("kind")?.as_str()?;
+        ensure!(kind == "tenant", "not a tenant record (kind {kind:?})");
+        let tenant = v.get("name")?.as_str()?.to_string();
+        ensure!(!tenant.is_empty(), "tenant name must be non-empty");
+        let budget_bytes = match v.opt("budget_bytes") {
+            None | Some(Value::Null) => None,
+            Some(b) => Some(b.as_usize()?),
+        };
+        let at_tick = match v.opt("at_tick") {
+            Some(t) => t.as_usize()?,
+            None => 0,
+        };
+        Ok(BudgetSpec { tenant, budget_bytes, at_tick })
+    }
+}
+
+/// The job's [`TrainConfig`]: defaults, backend pinned to `sim`, then
+/// the submitted `config` object applied key-by-key through
+/// [`TrainConfig::set`].
+///
+/// `set` re-validates the WHOLE config after every key, so a pair like
+/// `{"t_start":10,"t_max":60}` can be transiently invalid in one
+/// application order and fine in the other (defaults have `t_start`
+/// 100, so `t_max=60` alone fails). Apply with an ordering-tolerant
+/// fixpoint: sorted passes over the pending keys, retrying failures,
+/// until a full pass makes no progress — then the stuck key's own
+/// error surfaces.
+fn build_cfg(config: Option<&Value>) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::default();
+    cfg.set("backend", "sim")?;
+    let Some(obj) = config else { return Ok(cfg) };
+    let Value::Obj(map) = obj else { bail!("config must be a JSON object") };
+    // BTreeMap iteration is key-sorted: deterministic pass order
+    let mut pending: Vec<(&str, &Value)> =
+        map.iter().map(|(k, v)| (k.as_str(), v)).collect();
+    loop {
+        let before = pending.len();
+        let mut stuck: Option<anyhow::Error> = None;
+        let mut rest = Vec::new();
+        for (k, val) in pending {
+            // strings pass through verbatim; numbers/bools render via
+            // the JSON writer (integral floats print without ".0")
+            let s = match val {
+                Value::Str(s) => s.clone(),
+                other => other.to_string(),
+            };
+            match cfg.set(k, &s) {
+                Ok(()) => {}
+                Err(e) => {
+                    if stuck.is_none() {
+                        stuck = Some(e.context(format!("config key {k:?}")));
+                    }
+                    rest.push((k, val));
+                }
+            }
+        }
+        pending = rest;
+        if pending.is_empty() {
+            return Ok(cfg);
+        }
+        if pending.len() == before {
+            // no key applied this pass: the failure is real, not an
+            // ordering artifact
+            return Err(stuck.unwrap());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn job_defaults_and_config() {
+        let v = json::parse(
+            r#"{"kind":"job","id":"j-1","config":
+                {"preset":"nano","steps":40,"method":"frugal"}}"#,
+        )
+        .unwrap();
+        let j = JobSpec::from_json(&v).unwrap();
+        assert_eq!(j.id, "j-1");
+        assert_eq!(j.tenant, "default");
+        assert_eq!(j.priority, 0);
+        assert_eq!(j.arrive_tick, 0);
+        assert!(j.preempt_at.is_empty());
+        assert_eq!(j.resume_shards, None);
+        assert_eq!(j.cfg.backend, "sim");
+        assert_eq!(j.cfg.preset, "nano");
+        assert_eq!(j.cfg.steps, 40);
+        assert_eq!(j.cfg.method, "frugal");
+    }
+
+    #[test]
+    fn order_dependent_config_pair_applies() {
+        // t_max=60 alone is invalid over the default t_start=100: the
+        // fixpoint application must still land the pair
+        let v = json::parse(
+            r#"{"kind":"job","id":"j","config":
+                {"steps":120,"t_max":60,"t_start":10}}"#,
+        )
+        .unwrap();
+        let j = JobSpec::from_json(&v).unwrap();
+        assert_eq!(j.cfg.t_start, 10);
+        assert_eq!(j.cfg.t_max, 60);
+    }
+
+    #[test]
+    fn bad_specs_fail_at_submit_time() {
+        for (line, needle) in [
+            (r#"{"kind":"job","id":"a b"}"#, "trace files"),
+            (r#"{"kind":"job","id":"j","config":{"method":"nope"}}"#, "method"),
+            (r#"{"kind":"job","id":"j","config":{"bogus_key":1}}"#, "bogus_key"),
+            (r#"{"kind":"job","id":"j","config":{"steps":40},
+                 "preempt_at":[40]}"#, "preempt_at"),
+            (r#"{"kind":"job","id":"j","resume_shards":3}"#, "power of two"),
+            (r#"{"kind":"nope","id":"j"}"#, "not a job"),
+        ] {
+            let v = json::parse(line).unwrap();
+            let err = format!("{:?}", JobSpec::from_json(&v).unwrap_err());
+            assert!(err.contains(needle), "spec {line} -> {err}");
+        }
+    }
+
+    #[test]
+    fn preempt_grid_sorted_deduped() {
+        let v = json::parse(
+            r#"{"kind":"job","id":"j","config":{"steps":100},
+                "preempt_at":[30,10,30]}"#,
+        )
+        .unwrap();
+        let j = JobSpec::from_json(&v).unwrap();
+        assert_eq!(j.preempt_at, vec![10, 30]);
+    }
+
+    #[test]
+    fn tenant_budget_spec() {
+        let v = json::parse(
+            r#"{"kind":"tenant","name":"acme","budget_bytes":5000,"at_tick":3}"#,
+        )
+        .unwrap();
+        let b = BudgetSpec::from_json(&v).unwrap();
+        assert_eq!(b.tenant, "acme");
+        assert_eq!(b.budget_bytes, Some(5000));
+        assert_eq!(b.at_tick, 3);
+        let lift =
+            json::parse(r#"{"kind":"tenant","name":"acme","budget_bytes":null}"#)
+                .unwrap();
+        let b = BudgetSpec::from_json(&lift).unwrap();
+        assert_eq!(b.budget_bytes, None);
+        assert_eq!(b.at_tick, 0);
+    }
+}

@@ -1,0 +1,38 @@
+//! `serve` — the multi-tenant fine-tune farm.
+//!
+//! This layer composes the pieces every earlier PR built — the
+//! task-generic `Session` (Algorithm 1), trajectory-exact
+//! checkpoint/resume (`resume_parity`), elastic cross-shard-count
+//! restore (`elastic_parity`), the persistent worker-pool runtime, the
+//! `obs` recorder and the `MemoryTracker` byte model — into a service:
+//! fine-tune jobs arrive as newline-delimited JSON (config in,
+//! `RunResult`/summary JSON out), a deterministic [`Scheduler`] runs
+//! them over a bounded pool of session slots with **checkpoint-based
+//! preemption**, per-tenant byte budgets gate admission, and the farm
+//! emits per-job `obs` traces plus a schema-locked report (queue-wait
+//! percentiles, preemption counts, per-tenant peak bytes).
+//!
+//! Exactness is the design center: a job preempted N times — even
+//! migrating to a different shard count on resume — produces
+//! bit-identical losses/ρ/T/masks/control events to its uninterrupted
+//! run (`rust/tests/serve_parity.rs`), because preemption only ever
+//! cuts checkpoints at the session's exact-snapshot boundary
+//! (`Session::pause`) and never tracks a step cursor the session
+//! doesn't confirm.
+//!
+//! Wire protocol (the `serve` CLI subcommand): one JSON object per
+//! line on stdin / a jobs file / a spool directory — no network, the
+//! workspace stays offline-buildable. `{"kind":"job",...}` submits
+//! ([`JobSpec`]), `{"kind":"tenant",...}` sets a byte budget
+//! ([`BudgetSpec`]); results stream back as `{"kind":"job_result"}`
+//! lines and one `{"kind":"farm_report"}` object
+//! (`scripts/serve_report.py` validates the schema).
+
+pub mod job;
+pub mod report;
+pub mod scheduler;
+
+pub use job::{BudgetSpec, JobSpec, JobState};
+pub use report::{check_farm_report, farm_report, job_result_json, FARM_REPORT_KEYS,
+                 TENANT_REPORT_KEYS};
+pub use scheduler::{FarmOutcome, JobOutcome, Scheduler, ServeOpts, TenantStats};

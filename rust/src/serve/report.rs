@@ -1,0 +1,194 @@
+//! Farm-level reporting: the schema-locked farm report (queue-wait
+//! percentiles, preemption counters, per-tenant peak bytes) and the
+//! per-job result records the `serve` CLI streams out.
+//!
+//! Both schemas are locked the same way as the bench and trace records:
+//! exact key sets, checked in Rust before anything is written
+//! ([`check_farm_report`]) and mirrored by the stdlib-only
+//! `scripts/serve_report.py`, so drift shows up on both sides.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::experiments::common::summary_json;
+use crate::util::json::{self, Value};
+use crate::util::stats;
+
+use super::job::JobState;
+use super::scheduler::{FarmOutcome, JobOutcome};
+
+/// Exact key set of the farm report — keep in sync with
+/// `scripts/serve_report.py` FARM_REPORT_KEYS.
+pub const FARM_REPORT_KEYS: &[&str] = &[
+    "kind", "slots", "quantum", "ticks", "jobs_total", "jobs_done", "jobs_failed",
+    "preemptions", "forced_yields", "peak_resident_sessions",
+    "queue_wait_p50_ticks", "queue_wait_p95_ticks", "queue_wait_max_ticks",
+    "tenants", "traces",
+];
+
+/// Exact key set of each entry in the report's `tenants` array — keep
+/// in sync with `scripts/serve_report.py` TENANT_REPORT_KEYS.
+pub const TENANT_REPORT_KEYS: &[&str] = &[
+    "tenant", "jobs", "peak_bytes", "budget_bytes", "preemptions",
+];
+
+/// The farm-level report (`kind: "farm_report"`). Queue-wait
+/// percentiles use the same linear-interpolation definition as every
+/// other rollup in the repo ([`stats::percentile`], mirrored in
+/// Python).
+pub fn farm_report(f: &FarmOutcome) -> Value {
+    let waits: Vec<f64> = f.jobs.iter().map(|j| j.wait_ticks as f64).collect();
+    let pct = |p: f64| if waits.is_empty() { 0.0 } else { stats::percentile(&waits, p) };
+    let max_wait = waits.iter().cloned().fold(0.0, f64::max);
+    let tenants = f.tenants.iter().map(|t| {
+        json::obj(vec![
+            ("tenant", json::s(&t.tenant)),
+            ("jobs", json::num(t.jobs as f64)),
+            ("peak_bytes", json::num(t.peak_bytes as f64)),
+            ("budget_bytes", match t.budget_bytes {
+                Some(b) => json::num(b as f64),
+                None => Value::Null,
+            }),
+            ("preemptions", json::num(t.preemptions as f64)),
+        ])
+    });
+    let traces = f.jobs.iter().filter_map(|j| j.trace.as_deref()).map(json::s);
+    let report = json::obj(vec![
+        ("kind", json::s("farm_report")),
+        ("slots", json::num(f.slots as f64)),
+        ("quantum", json::num(f.quantum as f64)),
+        ("ticks", json::num(f.ticks as f64)),
+        ("jobs_total", json::num(f.jobs.len() as f64)),
+        ("jobs_done", json::num(
+            f.jobs.iter().filter(|j| j.state == JobState::Done).count() as f64)),
+        ("jobs_failed", json::num(
+            f.jobs.iter().filter(|j| j.state == JobState::Failed).count() as f64)),
+        ("preemptions", json::num(f.preemptions as f64)),
+        ("forced_yields", json::num(f.forced_yields as f64)),
+        ("peak_resident_sessions", json::num(f.peak_resident as f64)),
+        ("queue_wait_p50_ticks", json::num(pct(50.0))),
+        ("queue_wait_p95_ticks", json::num(pct(95.0))),
+        ("queue_wait_max_ticks", json::num(max_wait)),
+        ("tenants", json::arr(tenants)),
+        ("traces", json::arr(traces)),
+    ]);
+    debug_assert!(check_farm_report(&report).is_ok());
+    report
+}
+
+/// Validate a farm report against the locked schema: exact top-level
+/// key set (missing AND extra both fail), exact per-tenant key set,
+/// and the percentile ordering invariant p50 <= p95 <= max.
+pub fn check_farm_report(v: &Value) -> Result<()> {
+    let Value::Obj(map) = v else { bail!("farm report is not a JSON object") };
+    for k in FARM_REPORT_KEYS {
+        ensure!(map.contains_key(*k), "farm report missing key {k:?}");
+    }
+    for k in map.keys() {
+        ensure!(FARM_REPORT_KEYS.contains(&k.as_str()),
+                "farm report has unexpected key {k:?} (schema drift: update \
+                 FARM_REPORT_KEYS here and in scripts/serve_report.py together)");
+    }
+    ensure!(v.get("kind")?.as_str()? == "farm_report", "wrong farm report kind");
+    let p50 = v.get("queue_wait_p50_ticks")?.as_f64()?;
+    let p95 = v.get("queue_wait_p95_ticks")?.as_f64()?;
+    let max = v.get("queue_wait_max_ticks")?.as_f64()?;
+    ensure!(p50.is_finite() && p95.is_finite() && max.is_finite(),
+            "farm report queue-wait percentiles must be finite");
+    ensure!(p50 <= p95 && p95 <= max,
+            "farm report queue-wait percentiles out of order: \
+             p50 {p50} p95 {p95} max {max}");
+    for t in v.get("tenants")?.as_arr()? {
+        let Value::Obj(tm) = t else { bail!("tenant entry is not a JSON object") };
+        for k in TENANT_REPORT_KEYS {
+            ensure!(tm.contains_key(*k), "tenant entry missing key {k:?}");
+        }
+        for k in tm.keys() {
+            ensure!(TENANT_REPORT_KEYS.contains(&k.as_str()),
+                    "tenant entry has unexpected key {k:?}");
+        }
+    }
+    for t in v.get("traces")?.as_arr()? {
+        ensure!(matches!(t, Value::Str(_)), "traces entries must be strings");
+    }
+    Ok(())
+}
+
+/// One per-job output record (`kind: "job_result"`): lifecycle +
+/// scheduling counters, and — for jobs that produced a trajectory —
+/// the standard run summary ([`summary_json`], the same record `exp`
+/// writes), so downstream tooling needs no serve-specific parser for
+/// the training outcome itself.
+pub fn job_result_json(j: &JobOutcome) -> Value {
+    json::obj(vec![
+        ("kind", json::s("job_result")),
+        ("id", json::s(&j.id)),
+        ("tenant", json::s(&j.tenant)),
+        ("state", json::s(j.state.label())),
+        ("error", match &j.error {
+            Some(e) => json::s(e),
+            None => Value::Null,
+        }),
+        ("preemptions", json::num(j.preemptions as f64)),
+        ("forced_yields", json::num(j.forced_yields as f64)),
+        ("queue_wait_ticks", json::num(j.wait_ticks as f64)),
+        ("shards", json::num(j.shards as f64)),
+        ("summary", match &j.result {
+            Some(r) => summary_json(&j.cfg, r),
+            None => Value::Null,
+        }),
+        ("trace", match &j.trace {
+            Some(p) => json::s(p),
+            None => Value::Null,
+        }),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::scheduler::{FarmOutcome, TenantStats};
+
+    fn outcome() -> FarmOutcome {
+        FarmOutcome {
+            jobs: Vec::new(),
+            slots: 2,
+            quantum: 25,
+            ticks: 7,
+            preemptions: 1,
+            forced_yields: 0,
+            peak_resident: 2,
+            tenants: vec![TenantStats {
+                tenant: "acme".into(),
+                jobs: 3,
+                peak_bytes: 3328,
+                budget_bytes: Some(5000),
+                preemptions: 1,
+            }],
+        }
+    }
+
+    #[test]
+    fn report_roundtrips_and_validates() {
+        let rep = farm_report(&outcome());
+        check_farm_report(&rep).unwrap();
+        // survive a serialize/parse cycle (what the CLI writes to disk)
+        let parsed = json::parse(&rep.to_string()).unwrap();
+        check_farm_report(&parsed).unwrap();
+        assert_eq!(parsed.get("jobs_total").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(parsed.get("queue_wait_p50_ticks").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn report_rejects_drift() {
+        let rep = farm_report(&outcome());
+        let Value::Obj(mut map) = rep else { unreachable!() };
+        map.insert("surprise".into(), json::num(1.0));
+        let err = format!("{:?}", check_farm_report(&Value::Obj(map.clone()))
+            .unwrap_err());
+        assert!(err.contains("surprise"), "{err}");
+        map.remove("surprise");
+        map.remove("ticks");
+        let err = format!("{:?}", check_farm_report(&Value::Obj(map)).unwrap_err());
+        assert!(err.contains("ticks"), "{err}");
+    }
+}

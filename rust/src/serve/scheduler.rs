@@ -1,0 +1,694 @@
+//! The preemptive scheduler of the fine-tune farm: hundreds of queued
+//! [`JobSpec`]s run over a bounded pool of `Session` slots, sliced
+//! into fixed step quanta on a deterministic tick loop.
+//!
+//! One tick = (apply budget directives) → (rebalance: admissions +
+//! rank-based eviction) → (run one quantum for the round-robin
+//! resident) → (wait accounting). Everything is decided from submitted
+//! data and the tick counter — no wall clock, no thread timing — so a
+//! given job set always schedules identically, which is what lets
+//! `serve_parity` pin preempted == straight-through bit-for-bit.
+//!
+//! Preemption is checkpoint-based: a fused-path resident is paused at
+//! its exact-snapshot boundary ([`Trainer::pause`]), its session torn
+//! down, and the (header, packed-state) snapshot re-queued with the
+//! job; resumption builds a fresh `Trainer` — possibly at a different
+//! shard count (elastic resume) — and restores it. Host-path methods
+//! (galore/badam) cannot checkpoint mid-run ("host optimizer"), so
+//! they are *pinned*: never evicted, and their `preempt_at` points
+//! degrade to forced yields (the quantum ends there, the slot is kept).
+//!
+//! Queued jobs are ranked by `priority + waited_ticks / aging_every`;
+//! residents defend only their raw priority, so any starved job
+//! eventually out-ranks every resident (no tenant starvation — pinned
+//! by `serve_scheduler`). Per-tenant byte budgets are enforced on the
+//! *modeled* optimizer footprint ([`MemoryTracker::bytes_for`]): a job
+//! whose own charge exceeds its tenant cap fails loudly at admission;
+//! a tenant at its cap queues its next job until a slot frees.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::memory_tracker::MemoryTracker;
+use crate::coordinator::method::Method;
+use crate::coordinator::session::UploadStats;
+use crate::coordinator::trainer::{RunResult, Trainer};
+use crate::runtime::shard::SyncTraffic;
+use crate::runtime::sim::SimEngine;
+use crate::util::json::Value;
+use crate::{info, warn};
+
+use super::job::{BudgetSpec, JobSpec, JobState};
+
+/// Farm shape: slot pool size, quantum length, aging cadence, and the
+/// per-job trace directory (`--trace-dir`).
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// concurrent `Session` slots (the bounded pool)
+    pub slots: usize,
+    /// steps per scheduling quantum
+    pub quantum: usize,
+    /// a queued job gains +1 effective priority per this many waited
+    /// ticks — the anti-starvation knob
+    pub aging_every: usize,
+    /// when set, every job streams `<dir>/<id>.trace.jsonl`
+    pub trace_dir: Option<String>,
+    /// download final params + mask at completion (parity tests)
+    pub capture_final: bool,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            slots: 2,
+            quantum: 25,
+            aging_every: 4,
+            trace_dir: None,
+            capture_final: false,
+        }
+    }
+}
+
+/// Per-tenant rollup for the farm report.
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    pub tenant: String,
+    pub jobs: usize,
+    /// peak summed *modeled* bytes of this tenant's concurrently
+    /// resident jobs
+    pub peak_bytes: usize,
+    pub budget_bytes: Option<usize>,
+    pub preemptions: usize,
+}
+
+/// Final record of one job after the farm drains.
+#[derive(Debug)]
+pub struct JobOutcome {
+    pub id: String,
+    pub tenant: String,
+    pub state: JobState,
+    pub error: Option<String>,
+    pub preemptions: usize,
+    pub forced_yields: usize,
+    pub wait_ticks: usize,
+    pub done_tick: Option<usize>,
+    /// shard count of the job's final segment (elastic resume applied)
+    pub shards: usize,
+    pub cfg: crate::config::TrainConfig,
+    /// the merged whole-run result (all segments stitched); `None` for
+    /// jobs that failed before producing a segment
+    pub result: Option<RunResult>,
+    pub trace: Option<String>,
+    pub final_params: Option<Vec<f32>>,
+    pub final_mask: Option<Vec<f32>>,
+}
+
+/// Everything the farm produced: per-job outcomes + fleet counters.
+#[derive(Debug)]
+pub struct FarmOutcome {
+    pub jobs: Vec<JobOutcome>,
+    pub slots: usize,
+    pub quantum: usize,
+    pub ticks: usize,
+    pub preemptions: usize,
+    pub forced_yields: usize,
+    /// max concurrently resident sessions ever observed (must never
+    /// exceed `slots` — pinned by `serve_scheduler`)
+    pub peak_resident: usize,
+    pub tenants: Vec<TenantStats>,
+}
+
+/// Cumulative-per-session fields folded out of torn-down sessions.
+/// `Session` timers and upload/sync counters reset when a preempted
+/// job's trainer is dropped, so the job-level totals are
+/// (sum over finished sessions) + (live session's latest values).
+#[derive(Default)]
+struct FoldedTotals {
+    step_time_s: f64,
+    redef_time_s: f64,
+    eval_time_s: f64,
+    control_time_s: f64,
+    uploads: UploadStats,
+    sync: Option<SyncTraffic>,
+}
+
+/// Stitches per-segment [`RunResult`]s into one whole-run result.
+///
+/// Field semantics differ, so the merge is field-by-field:
+/// - per-segment (evals, steps, memory, redefinitions + their steps,
+///   total_time_s): appended / summed across segments;
+/// - cumulative per session (phase times, uploads, sync): the latest
+///   segment's value covers every earlier segment *of the same
+///   session*; on session teardown they fold into [`FoldedTotals`];
+/// - job-cumulative (control/T event logs, policy specs): the control
+///   plane is checkpointed and restored with the trajectory, so the
+///   latest segment already carries the full history — take it.
+#[derive(Default)]
+struct ResultAgg {
+    merged: Option<RunResult>,
+    folded: FoldedTotals,
+}
+
+impl ResultAgg {
+    fn absorb(&mut self, r: RunResult) {
+        match &mut self.merged {
+            None => self.merged = Some(r),
+            Some(m) => {
+                m.evals.extend(r.evals);
+                m.steps.extend(r.steps);
+                for s in &r.memory.samples {
+                    m.memory.record(s.step, s.bytes);
+                }
+                m.redefinitions += r.redefinitions;
+                m.redefinition_steps.extend(r.redefinition_steps);
+                m.total_time_s += r.total_time_s;
+                m.step_time_s = r.step_time_s;
+                m.redef_time_s = r.redef_time_s;
+                m.eval_time_s = r.eval_time_s;
+                m.control_time_s = r.control_time_s;
+                m.uploads = r.uploads;
+                m.sync = r.sync;
+                m.t_events = r.t_events;
+                m.control_events = r.control_events;
+                m.rho_policy = r.rho_policy;
+                m.t_policy = r.t_policy;
+                if r.report.is_some() {
+                    m.report = r.report;
+                }
+            }
+        }
+    }
+
+    /// The live session is being torn down (preemption, completion or
+    /// failure): move its cumulative counters into the fold so the
+    /// next session's restart-from-zero values don't erase them.
+    fn finish_session(&mut self) {
+        let Some(m) = &mut self.merged else { return };
+        self.folded.step_time_s += m.step_time_s;
+        self.folded.redef_time_s += m.redef_time_s;
+        self.folded.eval_time_s += m.eval_time_s;
+        self.folded.control_time_s += m.control_time_s;
+        m.step_time_s = 0.0;
+        m.redef_time_s = 0.0;
+        m.eval_time_s = 0.0;
+        m.control_time_s = 0.0;
+        self.folded.uploads.uploads += m.uploads.uploads;
+        self.folded.uploads.reuses += m.uploads.reuses;
+        self.folded.uploads.bytes += m.uploads.bytes;
+        m.uploads = UploadStats::default();
+        if let Some(s) = m.sync.take() {
+            match &mut self.folded.sync {
+                None => self.folded.sync = Some(s),
+                Some(f) => {
+                    // traffic adds up; shard count / owned residency
+                    // are snapshots — keep the latest segment's
+                    f.reduces += s.reduces;
+                    f.state_bytes += s.state_bytes;
+                    f.grad_bytes += s.grad_bytes;
+                    f.shards = s.shards;
+                    f.owned_state_bytes = s.owned_state_bytes;
+                }
+            }
+        }
+    }
+
+    fn take(mut self) -> Option<RunResult> {
+        self.finish_session();
+        let mut m = self.merged?;
+        let f = self.folded;
+        m.step_time_s = f.step_time_s;
+        m.redef_time_s = f.redef_time_s;
+        m.eval_time_s = f.eval_time_s;
+        m.control_time_s = f.control_time_s;
+        m.uploads = f.uploads;
+        m.sync = f.sync;
+        Some(m)
+    }
+}
+
+/// Live scheduler record of one job.
+struct JobRun {
+    spec: JobSpec,
+    state: JobState,
+    /// shard count the NEXT session builds with (elastic resume
+    /// rewrites it at the first preemption)
+    shards: usize,
+    /// next absolute step to run — always equals the paused session's
+    /// exact-snapshot boundary (the restore cross-checks it)
+    cursor: usize,
+    ckpt: Option<(Value, Vec<f32>)>,
+    enqueue_tick: usize,
+    wait_ticks: usize,
+    preemptions: usize,
+    forced_yields: usize,
+    /// remaining forced-preemption grid (ascending)
+    grid: Vec<usize>,
+    /// cached modeled byte charge ([`MemoryTracker::bytes_for`])
+    charge: Option<usize>,
+    error: Option<String>,
+    done_tick: Option<usize>,
+    trace: Option<String>,
+    trace_started: bool,
+    agg: ResultAgg,
+    final_params: Option<Vec<f32>>,
+    final_mask: Option<Vec<f32>>,
+}
+
+impl JobRun {
+    fn new(spec: JobSpec) -> JobRun {
+        JobRun {
+            state: JobState::Queued,
+            shards: spec.cfg.shards,
+            cursor: 0,
+            ckpt: None,
+            enqueue_tick: spec.arrive_tick,
+            wait_ticks: 0,
+            preemptions: 0,
+            forced_yields: 0,
+            grid: spec.preempt_at.clone(),
+            charge: None,
+            error: None,
+            done_tick: None,
+            trace: None,
+            trace_started: false,
+            agg: ResultAgg::default(),
+            final_params: None,
+            final_mask: None,
+            spec,
+        }
+    }
+
+    fn waiting(&self) -> bool {
+        matches!(self.state, JobState::Queued | JobState::Preempted)
+    }
+}
+
+struct Resident {
+    idx: usize,
+    trainer: Trainer,
+}
+
+/// Effective rank of a queued job: raw priority + waited-tick aging.
+fn rank_of(j: &JobRun, tick: usize, aging_every: usize) -> i64 {
+    j.spec.priority + (tick.saturating_sub(j.enqueue_tick) / aging_every) as i64
+}
+
+/// The modeled per-job byte charge the tenant budget is enforced on:
+/// the preset's manifest priced under the method's memory model at the
+/// configured ρ (mask-independent — admission happens before a session
+/// exists). Cached per job; the manifest comes from the sim preset
+/// grammar, which is the only backend the farm schedules.
+fn charge_of(j: &mut JobRun) -> Result<usize> {
+    if let Some(c) = j.charge {
+        return Ok(c);
+    }
+    let eng = SimEngine::from_name(&j.spec.cfg.preset, &["eval"])?;
+    let method = Method::parse(&j.spec.cfg.method)?;
+    let c = MemoryTracker::bytes_for(eng.manifest(), method.memory_model(), None,
+                                     j.spec.cfg.rho);
+    j.charge = Some(c);
+    Ok(c)
+}
+
+/// Sum of the tenant's currently resident charges.
+fn tenant_resident_bytes(jobs: &[JobRun], residents: &[Resident], tenant: &str)
+                         -> usize {
+    residents
+        .iter()
+        .filter(|r| jobs[r.idx].spec.tenant == tenant)
+        .map(|r| jobs[r.idx].charge.unwrap_or(0))
+        .sum()
+}
+
+/// Build (or rebuild) the job's `Trainer`: config at the job's current
+/// shard count, per-job trace stream (append on resume), and — when a
+/// preemption checkpoint exists — a [`Trainer::restore_resume`] whose
+/// returned step is cross-checked against the scheduler's cursor (the
+/// single-bookkeeping guarantee: the session's boundary is the truth).
+fn build_trainer(j: &mut JobRun, trace_dir: &Option<String>) -> Result<Trainer> {
+    let mut cfg = j.spec.cfg.clone();
+    cfg.shards = j.shards;
+    let method = Method::parse(&cfg.method)?;
+    let mut t = Trainer::new(cfg, method)?;
+    t.quiet = true;
+    if let Some(dir) = trace_dir {
+        let path = format!("{dir}/{}.trace.jsonl", j.spec.id);
+        if j.trace_started {
+            t.enable_trace_append(&path)?;
+        } else {
+            t.enable_trace(&path)?;
+            j.trace_started = true;
+        }
+        j.trace = Some(path);
+    }
+    if let Some((header, data)) = &j.ckpt {
+        let step = t.restore_resume(header, data)?;
+        ensure!(step == j.cursor,
+                "resume checkpoint is at step {step} but the scheduler cursor \
+                 says {}; refusing to run a diverged trajectory", j.cursor);
+    }
+    Ok(t)
+}
+
+fn fail_job(j: &mut JobRun, tick: usize, err: &anyhow::Error) {
+    warn!("serve: job {} failed: {err:?}", j.spec.id);
+    j.state = JobState::Failed;
+    j.error = Some(format!("{err:?}"));
+    j.done_tick = Some(tick);
+    j.agg.finish_session();
+}
+
+/// Checkpoint-preempt the resident at `slot` back into the queue.
+/// On a pause failure the job fails loudly instead (it would otherwise
+/// silently lose its progress).
+#[allow(clippy::too_many_arguments)]
+fn evict_resident(jobs: &mut [JobRun], residents: &mut Vec<Resident>, slot: usize,
+                  tick: usize, tenant_preempt: &mut BTreeMap<String, usize>,
+                  total_preempt: &mut usize) {
+    let r = residents.remove(slot);
+    let j = &mut jobs[r.idx];
+    match r.trainer.pause() {
+        Ok((header, data)) => {
+            j.ckpt = Some((header, data));
+            j.state = JobState::Preempted;
+            j.enqueue_tick = tick;
+            j.preemptions += 1;
+            *total_preempt += 1;
+            *tenant_preempt.entry(j.spec.tenant.clone()).or_insert(0) += 1;
+            // elastic resume: the first preemption may migrate the job
+            // to its requested shard count
+            if j.preemptions == 1 {
+                if let Some(n) = j.spec.resume_shards {
+                    j.shards = n;
+                }
+            }
+            j.agg.finish_session();
+        }
+        Err(e) => fail_job(j, tick, &e),
+    }
+    // r.trainer drops here: the slot is free
+}
+
+/// The eviction victim, if any: the lowest-priority *fused* resident
+/// (host-path residents are pinned — they cannot checkpoint), skipping
+/// `exclude` — the jobs admitted earlier in this same rebalance pass,
+/// which out-ranked every later candidate by sort order and haven't
+/// run a step yet (evicting one would both invert the ranking and
+/// reset its aging, reintroducing the starvation the aging prevents).
+/// Ties go to the later-submitted job. Returns `(slot, priority)`.
+fn pick_victim(jobs: &[JobRun], residents: &[Resident],
+               exclude: &BTreeSet<usize>) -> Option<(usize, i64)> {
+    residents
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.trainer.method.is_fused() && !exclude.contains(&r.idx))
+        .min_by_key(|(_, r)| (jobs[r.idx].spec.priority, std::cmp::Reverse(r.idx)))
+        .map(|(slot, r)| (slot, jobs[r.idx].spec.priority))
+}
+
+/// The farm scheduler. Construct with [`ServeOpts`], feed it the full
+/// job + budget-directive lists, and [`Scheduler::run`] drains the
+/// queue deterministically.
+pub struct Scheduler {
+    opts: ServeOpts,
+}
+
+impl Scheduler {
+    pub fn new(opts: ServeOpts) -> Scheduler {
+        Scheduler { opts }
+    }
+
+    pub fn run(&self, specs: Vec<JobSpec>, budgets: Vec<BudgetSpec>)
+               -> Result<FarmOutcome> {
+        let o = &self.opts;
+        ensure!(o.slots >= 1, "serve: slots must be >= 1");
+        ensure!(o.quantum >= 1, "serve: quantum must be >= 1");
+        ensure!(o.aging_every >= 1, "serve: aging cadence must be >= 1");
+        {
+            let mut seen = BTreeSet::new();
+            for s in &specs {
+                ensure!(seen.insert(s.id.clone()),
+                        "duplicate job id {:?} (ids key results and trace files)",
+                        s.id);
+            }
+        }
+
+        let mut jobs: Vec<JobRun> = specs.into_iter().map(JobRun::new).collect();
+        let mut directives = budgets;
+        directives.sort_by_key(|b| b.at_tick); // stable: submit order per tick
+        let mut directive_i = 0usize;
+        let mut tenant_budget: BTreeMap<String, Option<usize>> = BTreeMap::new();
+        let mut tenant_peak: BTreeMap<String, usize> = BTreeMap::new();
+        let mut tenant_preempt: BTreeMap<String, usize> = BTreeMap::new();
+        for j in &jobs {
+            tenant_peak.entry(j.spec.tenant.clone()).or_insert(0);
+        }
+        let mut residents: Vec<Resident> = Vec::new();
+        let mut rr = 0usize; // round-robin cursor over residents
+        let mut tick = 0usize;
+        let mut total_preempt = 0usize;
+        let mut total_yields = 0usize;
+        let mut peak_resident = 0usize;
+
+        // livelock backstop: with any resident, every tick advances >= 1
+        // step, and idle ticks only happen before the last arrival or a
+        // directive — a farm that outlives this bound is a real bug
+        // (e.g. mutually budget-blocked queue), not a slow run
+        let max_event = jobs.iter().map(|j| j.spec.arrive_tick)
+            .chain(directives.iter().map(|b| b.at_tick)).max().unwrap_or(0);
+        let total_steps: usize = jobs.iter().map(|j| j.spec.cfg.steps).sum();
+        let tick_bound = max_event + total_steps + 16 * jobs.len() + 64;
+
+        while jobs.iter().any(|j| !matches!(j.state, JobState::Done | JobState::Failed))
+        {
+            ensure!(
+                tick <= tick_bound,
+                "serve: scheduler made no progress for {tick} ticks ({} jobs, {} \
+                 slots) — every runnable job is likely budget-blocked",
+                jobs.len(), o.slots);
+
+            // --- 1. budget directives landing at this tick ---
+            while directive_i < directives.len()
+                && directives[directive_i].at_tick <= tick
+            {
+                let b = directives[directive_i].clone();
+                directive_i += 1;
+                info!("serve: tick {tick}: tenant {:?} budget -> {:?}", b.tenant,
+                      b.budget_bytes);
+                tenant_budget.insert(b.tenant.clone(), b.budget_bytes);
+                tenant_peak.entry(b.tenant.clone()).or_insert(0);
+                if let Some(cap) = b.budget_bytes {
+                    // a lowered cap may strand residents over budget:
+                    // evict (lowest priority first) until it fits;
+                    // pinned host-path residents cannot be evicted, so
+                    // a pinned-only overage is warned, not fixed
+                    loop {
+                        let used = tenant_resident_bytes(&jobs, &residents, &b.tenant);
+                        if used <= cap {
+                            break;
+                        }
+                        let victim = residents
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, r)| jobs[r.idx].spec.tenant == b.tenant
+                                    && r.trainer.method.is_fused())
+                            .min_by_key(|(_, r)| (jobs[r.idx].spec.priority,
+                                                  std::cmp::Reverse(r.idx)))
+                            .map(|(slot, _)| slot);
+                        match victim {
+                            Some(slot) => evict_resident(
+                                &mut jobs, &mut residents, slot, tick,
+                                &mut tenant_preempt, &mut total_preempt),
+                            None => {
+                                warn!(
+                                    "serve: tenant {:?} is {used} modeled bytes \
+                                     over its new {cap}-byte budget but only \
+                                     pinned host-path jobs are resident; the \
+                                     overage drains as they complete", b.tenant);
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+
+            // --- 2. rebalance: admit by effective rank; when the pool
+            //        is full, a queued job strictly out-ranking the
+            //        weakest fused resident evicts it ---
+            let mut order: Vec<usize> = (0..jobs.len())
+                .filter(|&i| jobs[i].waiting() && jobs[i].spec.arrive_tick <= tick)
+                .collect();
+            order.sort_by(|&a, &b| {
+                let ra = rank_of(&jobs[a], tick, o.aging_every);
+                let rb = rank_of(&jobs[b], tick, o.aging_every);
+                rb.cmp(&ra)
+                    .then(jobs[a].spec.arrive_tick.cmp(&jobs[b].spec.arrive_tick))
+                    .then(jobs[a].spec.id.cmp(&jobs[b].spec.id))
+            });
+            let mut fresh: BTreeSet<usize> = BTreeSet::new();
+            for idx in order {
+                if !jobs[idx].waiting() {
+                    continue; // failed during this rebalance pass
+                }
+                // price the candidate BEFORE any eviction: a job that
+                // cannot be admitted anyway (unpriceable, impossible
+                // charge, tenant at its cap) must not cost a resident
+                // its slot
+                let charge = match charge_of(&mut jobs[idx]) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        fail_job(&mut jobs[idx], tick, &e);
+                        continue;
+                    }
+                };
+                let tenant = jobs[idx].spec.tenant.clone();
+                if let Some(Some(cap)) = tenant_budget.get(&tenant) {
+                    if charge > *cap {
+                        let e = anyhow::Error::msg(format!(
+                            "job {} needs {charge} modeled bytes but tenant \
+                             {tenant:?} has a budget of {cap} bytes; the job can \
+                             never be admitted", jobs[idx].spec.id));
+                        fail_job(&mut jobs[idx], tick, &e);
+                        continue;
+                    }
+                    // eviction below only ever FREES tenant bytes, so a
+                    // cap satisfied here stays satisfied at admission
+                    if tenant_resident_bytes(&jobs, &residents, &tenant) + charge
+                        > *cap
+                    {
+                        continue; // at the cap: stays queued, retried next tick
+                    }
+                }
+                if residents.len() >= o.slots {
+                    let rank = rank_of(&jobs[idx], tick, o.aging_every);
+                    match pick_victim(&jobs, &residents, &fresh) {
+                        Some((slot, prio)) if rank > prio => {
+                            evict_resident(&mut jobs, &mut residents, slot, tick,
+                                           &mut tenant_preempt, &mut total_preempt);
+                        }
+                        // candidates only get weaker down the order:
+                        // nothing else preempts this tick
+                        _ => break,
+                    }
+                }
+                match build_trainer(&mut jobs[idx], &o.trace_dir) {
+                    Ok(t) => {
+                        jobs[idx].state = JobState::Running;
+                        residents.push(Resident { idx, trainer: t });
+                        fresh.insert(idx);
+                    }
+                    Err(e) => fail_job(&mut jobs[idx], tick, &e),
+                }
+            }
+            peak_resident = peak_resident.max(residents.len());
+            for (tenant, peak) in tenant_peak.iter_mut() {
+                *peak = (*peak).max(tenant_resident_bytes(&jobs, &residents, tenant));
+            }
+
+            // --- 3. one quantum for the round-robin resident ---
+            if !residents.is_empty() {
+                let slot = rr % residents.len();
+                let idx = residents[slot].idx;
+                let from = jobs[idx].cursor;
+                let steps = jobs[idx].spec.cfg.steps;
+                let mut to = (from + o.quantum).min(steps);
+                if let Some(&g) = jobs[idx].grid.first() {
+                    if g > from {
+                        to = to.min(g);
+                    }
+                }
+                match residents[slot].trainer.run_span(from, to) {
+                    Ok(r) => {
+                        jobs[idx].cursor = to;
+                        jobs[idx].agg.absorb(r);
+                        if to == steps {
+                            if o.capture_final {
+                                jobs[idx].final_params =
+                                    residents[slot].trainer.params_host().ok();
+                                jobs[idx].final_mask =
+                                    Some(residents[slot].trainer.mask_render());
+                            }
+                            let j = &mut jobs[idx];
+                            j.agg.finish_session();
+                            j.state = JobState::Done;
+                            j.done_tick = Some(tick);
+                            info!("serve: tick {tick}: job {} done ({} steps, {} \
+                                   preemptions)", j.spec.id, steps, j.preemptions);
+                            residents.remove(slot);
+                        } else if jobs[idx].grid.first() == Some(&to) {
+                            jobs[idx].grid.remove(0);
+                            if residents[slot].trainer.method.is_fused() {
+                                // forced preemption point: checkpoint
+                                // out and back to the queue
+                                evict_resident(&mut jobs, &mut residents, slot,
+                                               tick, &mut tenant_preempt,
+                                               &mut total_preempt);
+                            } else {
+                                // pinned host-path job: the point
+                                // degrades to a forced yield
+                                jobs[idx].forced_yields += 1;
+                                total_yields += 1;
+                                rr += 1;
+                            }
+                        } else {
+                            rr += 1;
+                        }
+                    }
+                    Err(e) => {
+                        fail_job(&mut jobs[idx], tick, &e);
+                        residents.remove(slot);
+                    }
+                }
+            }
+
+            // --- 4. wait accounting ---
+            for j in jobs.iter_mut() {
+                if j.waiting() && j.spec.arrive_tick <= tick {
+                    j.wait_ticks += 1;
+                }
+            }
+            tick += 1;
+        }
+
+        let tenants = tenant_peak
+            .iter()
+            .map(|(tenant, peak)| TenantStats {
+                tenant: tenant.clone(),
+                jobs: jobs.iter().filter(|j| &j.spec.tenant == tenant).count(),
+                peak_bytes: *peak,
+                budget_bytes: tenant_budget.get(tenant).copied().flatten(),
+                preemptions: tenant_preempt.get(tenant).copied().unwrap_or(0),
+            })
+            .collect();
+        let outcomes = jobs
+            .into_iter()
+            .map(|j| JobOutcome {
+                id: j.spec.id.clone(),
+                tenant: j.spec.tenant.clone(),
+                state: j.state,
+                error: j.error,
+                preemptions: j.preemptions,
+                forced_yields: j.forced_yields,
+                wait_ticks: j.wait_ticks,
+                done_tick: j.done_tick,
+                shards: j.shards,
+                cfg: j.spec.cfg,
+                result: j.agg.take(),
+                trace: j.trace,
+                final_params: j.final_params,
+                final_mask: j.final_mask,
+            })
+            .collect();
+        Ok(FarmOutcome {
+            jobs: outcomes,
+            slots: o.slots,
+            quantum: o.quantum,
+            ticks: tick,
+            preemptions: total_preempt,
+            forced_yields: total_yields,
+            peak_resident,
+            tenants,
+        })
+    }
+}

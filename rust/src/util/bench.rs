@@ -168,6 +168,33 @@ pub const SHARD_RECORD_KEYS: &[&str] = &[
     "final_ppl",
 ];
 
+/// Keys every `bench_serve` JSON line must carry (`bench_serve/v1`):
+/// queue/throughput shape of the fine-tune farm — jobs-per-second over
+/// measured reps plus the farm counters (ticks, preemptions, queue
+/// waits) of the last rep. Keep in sync with
+/// `scripts/bench_compare.py` SERVE_RECORD_KEYS.
+pub const SERVE_RECORD_KEYS: &[&str] = &[
+    "bench",
+    "backend",
+    "preset",
+    "method",
+    "jobs",
+    "slots",
+    "quantum",
+    "steps_per_job",
+    "reps",
+    "jobs_per_sec",
+    "jps_min",
+    "jps_max",
+    "noise_rel",
+    "ticks",
+    "preemptions",
+    "forced_yields",
+    "queue_wait_p50_ticks",
+    "queue_wait_p95_ticks",
+    "peak_resident_sessions",
+];
+
 /// `final_ppl` for a record: a finite number or JSON `null` — never a
 /// bare NaN, which is not valid JSON.
 pub fn ppl_value(ppl: Option<f64>) -> json::Value {
@@ -185,6 +212,7 @@ pub fn check_record(line: &str) -> Result<json::Value> {
     let required: &[&str] = match kind.as_str() {
         "bench_loop" => LOOP_RECORD_KEYS,
         "bench_loop_shards" => SHARD_RECORD_KEYS,
+        "bench_serve" => SERVE_RECORD_KEYS,
         other => bail!("unknown bench record kind {other:?}"),
     };
     for k in required {
@@ -266,11 +294,14 @@ mod tests {
         for (kind, keys) in [
             ("bench_loop", LOOP_RECORD_KEYS),
             ("bench_loop_shards", SHARD_RECORD_KEYS),
+            ("bench_serve", SERVE_RECORD_KEYS),
         ] {
             let line = full_record(kind, keys).to_string();
             assert!(!line.contains("NaN"), "no NaN literal may leak: {line}");
             let v = check_record(&line).expect("full record must validate");
-            assert_eq!(v.get("final_ppl").unwrap(), &json::Value::Null);
+            if keys.contains(&"final_ppl") {
+                assert_eq!(v.get("final_ppl").unwrap(), &json::Value::Null);
+            }
         }
     }
 

@@ -64,6 +64,17 @@ impl JsonlWriter {
         Ok(JsonlWriter { w: BufWriter::new(File::create(path)?) })
     }
 
+    /// Open `path` for appending (creating it if absent) — a resumed
+    /// preemption segment extends the job's existing JSONL stream
+    /// instead of truncating the steps recorded before the preemption.
+    pub fn append(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let f = fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(JsonlWriter { w: BufWriter::new(f) })
+    }
+
     pub fn write(&mut self, v: &crate::util::json::Value) -> anyhow::Result<()> {
         writeln!(self.w, "{}", v.to_string())?;
         Ok(())

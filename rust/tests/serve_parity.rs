@@ -1,0 +1,230 @@
+//! Serve parity: the acceptance gate for checkpoint-based preemption.
+//! A job the farm preempts N times — once mid-run at an unaligned
+//! step, once migrating to a different shard count on resume (riding
+//! elastic resume) — must produce bit-identical losses/ρ/T/masks/
+//! control events to the same config run straight through, for a fused
+//! method (combined) and a host-path method (galore, which cannot
+//! checkpoint and therefore rides pinned forced yields instead).
+//!
+//! Also pins the `Session::pause` contract the scheduler depends on:
+//! pause is idempotent (same boundary → byte-identical snapshots) and
+//! refuses with a named error at an illegal boundary (after a failed
+//! restore) and on host-path methods.
+
+use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::checkpoint;
+use adafrugal::coordinator::method::Method;
+use adafrugal::coordinator::trainer::{RunResult, Trainer};
+use adafrugal::serve::{JobSpec, JobState, Scheduler, ServeOpts};
+
+/// Same shape as `resume_parity`'s config: loss-aware T and several
+/// redefinitions inside 120 steps, every step logged.
+fn parity_cfg(preset: &str, method: &str, steps: usize) -> TrainConfig {
+    TrainConfig {
+        preset: preset.into(),
+        backend: "sim".into(),
+        method: method.into(),
+        steps,
+        warmup_steps: 10,
+        n_eval: 10,
+        t_start: 10,
+        t_max: 60,
+        tau_low: 0.05,
+        log_every: 1, // pin EVERY step of the trajectory
+        val_batches: 4,
+        lr: 1e-2,
+        seed: 7,
+        ..TrainConfig::default()
+    }
+}
+
+fn job(id: &str, cfg: &TrainConfig, preempt_at: Vec<usize>,
+       resume_shards: Option<usize>) -> JobSpec {
+    JobSpec {
+        id: id.into(),
+        tenant: "default".into(),
+        priority: 0,
+        arrive_tick: 0,
+        preempt_at,
+        resume_shards,
+        cfg: cfg.clone(),
+    }
+}
+
+fn solo(cfg: &TrainConfig) -> (Trainer, RunResult) {
+    let mut t = Trainer::new(cfg.clone(), Method::parse(&cfg.method).unwrap()).unwrap();
+    t.quiet = true;
+    let r = t.run().unwrap();
+    (t, r)
+}
+
+/// Bit-exact comparison of two whole-run results (the farm's stitched
+/// segments vs the uninterrupted reference).
+fn assert_same_trajectory(tag: &str, full: &RunResult, got: &RunResult) {
+    assert_eq!(full.steps.len(), got.steps.len(), "{tag}: step log arity");
+    for (want, have) in full.steps.iter().zip(got.steps.iter()) {
+        assert_eq!(want.step, have.step, "{tag}: step index");
+        assert_eq!(want.train_loss, have.train_loss,
+                   "{tag}: train loss diverged at step {}", want.step);
+        assert_eq!(want.rho, have.rho, "{tag}: rho diverged at step {}", want.step);
+        assert_eq!(want.t_current, have.t_current,
+                   "{tag}: T diverged at step {}", want.step);
+    }
+    assert_eq!(full.evals.len(), got.evals.len(), "{tag}: eval arity");
+    for (want, have) in full.evals.iter().zip(got.evals.iter()) {
+        assert_eq!(want.step, have.step, "{tag}: eval step");
+        assert_eq!(want.val_loss, have.val_loss,
+                   "{tag}: val loss diverged at eval {}", want.step);
+        assert_eq!(want.memory_bytes, have.memory_bytes,
+                   "{tag}: memory diverged at eval {}", want.step);
+    }
+    assert_eq!(full.redefinition_steps, got.redefinition_steps,
+               "{tag}: redefinition steps");
+    assert_eq!(full.redefinitions, got.redefinitions, "{tag}: redefinition count");
+    // the restored control plane carries the pre-preemption log, so
+    // the farm's last segment holds the full event history
+    assert_eq!(full.t_events, got.t_events, "{tag}: T event log");
+    assert_eq!(full.control_events, got.control_events, "{tag}: control event log");
+    assert_eq!(full.rho_policy, got.rho_policy, "{tag}: rho policy");
+    assert_eq!(full.t_policy, got.t_policy, "{tag}: t policy");
+    assert_eq!(full.final_ppl(), got.final_ppl(), "{tag}: final ppl");
+}
+
+/// Fused method, preempted twice: once at step 37 (unaligned with the
+/// n_eval=10 / T0=10 cadences), once at step 80 where the job also
+/// migrates 1 shard → 2 shards on resume (elastic). Must equal the
+/// uninterrupted run bit-for-bit, params and mask included.
+#[test]
+fn serve_parity_fused_preempted_twice_with_reshard() {
+    // nano.b8: batch 8 splits over the 2-shard resume
+    let cfg = parity_cfg("nano.b8", "combined", 120);
+    let (t, full) = solo(&cfg);
+    assert!(!full.t_events.is_empty(), "precondition: loss-aware T must move");
+    assert!(full.redefinitions >= 2, "precondition: several redefinitions");
+    let full_params = t.params_host().unwrap();
+    let full_mask = t.mask_render();
+    drop(t);
+
+    let farm = Scheduler::new(ServeOpts {
+        slots: 1,
+        quantum: 25,
+        capture_final: true,
+        ..ServeOpts::default()
+    })
+    .run(vec![job("parity", &cfg, vec![37, 80], Some(2))], vec![])
+    .unwrap();
+
+    assert_eq!(farm.jobs.len(), 1);
+    let j = &farm.jobs[0];
+    assert_eq!(j.state, JobState::Done, "error: {:?}", j.error);
+    assert_eq!(j.preemptions, 2, "both grid points must preempt");
+    assert_eq!(j.shards, 2, "elastic resume must have migrated the job");
+    assert_eq!(farm.preemptions, 2);
+    let got = j.result.as_ref().expect("a done job carries its merged result");
+    assert_same_trajectory("fused", &full, got);
+    assert_eq!(&full_params, j.final_params.as_ref().unwrap(),
+               "final params must be bit-identical");
+    assert_eq!(&full_mask, j.final_mask.as_ref().unwrap(),
+               "final mask must be bit-identical");
+}
+
+/// Host-path method (galore): it cannot checkpoint, so its preemption
+/// points degrade to forced yields and it stays pinned in its slot —
+/// still bit-identical to the uninterrupted run, even interleaved with
+/// a fused job on the other slot.
+#[test]
+fn serve_parity_host_path_forced_yields() {
+    let cfg = parity_cfg("nano", "galore", 60);
+    let (t, full) = solo(&cfg);
+    let full_params = t.params_host().unwrap();
+    drop(t);
+
+    let other = parity_cfg("nano", "combined", 60);
+    let farm = Scheduler::new(ServeOpts {
+        slots: 2,
+        quantum: 13,
+        capture_final: true,
+        ..ServeOpts::default()
+    })
+    .run(
+        vec![
+            job("pinned-galore", &cfg, vec![23, 41], None),
+            job("rider", &other, vec![], None),
+        ],
+        vec![],
+    )
+    .unwrap();
+
+    let j = farm.jobs.iter().find(|j| j.id == "pinned-galore").unwrap();
+    assert_eq!(j.state, JobState::Done, "error: {:?}", j.error);
+    assert_eq!(j.preemptions, 0, "host-path jobs must never be checkpointed");
+    assert_eq!(j.forced_yields, 2, "both grid points must yield instead");
+    assert_eq!(farm.forced_yields, 2);
+    let got = j.result.as_ref().unwrap();
+    assert_same_trajectory("galore", &full, got);
+    assert_eq!(&full_params, j.final_params.as_ref().unwrap());
+    let rider = farm.jobs.iter().find(|j| j.id == "rider").unwrap();
+    assert_eq!(rider.state, JobState::Done, "error: {:?}", rider.error);
+}
+
+/// pause() is a pure read of the session's exact-snapshot boundary:
+/// calling it twice returns byte-identical snapshots, at step 0 and at
+/// a mid-run boundary alike.
+#[test]
+fn pause_is_idempotent() {
+    let cfg = parity_cfg("nano", "combined", 60);
+    let mut t = Trainer::new(cfg.clone(), Method::AdaFrugalCombined).unwrap();
+    t.quiet = true;
+    let (h1, d1) = t.pause().unwrap();
+    let (h2, d2) = t.pause().unwrap();
+    assert_eq!(h1.to_string(), h2.to_string(), "fresh-session pause");
+    assert_eq!(d1, d2);
+    assert_eq!(h1.get("step").unwrap().as_usize().unwrap(), 0);
+
+    t.run_span(0, 20).unwrap();
+    let (h1, d1) = t.pause().unwrap();
+    let (h2, d2) = t.pause().unwrap();
+    assert_eq!(h1.to_string(), h2.to_string(), "mid-run pause");
+    assert_eq!(d1, d2);
+    assert_eq!(h1.get("step").unwrap().as_usize().unwrap(), 20);
+}
+
+/// After a failed restore the session is not at an exact boundary:
+/// pause must refuse with the named error instead of snapshotting a
+/// half-restored stream. A successful restore re-arms it.
+#[test]
+fn pause_refuses_illegal_boundary() {
+    let cfg = parity_cfg("nano", "combined", 60);
+    let mut t = Trainer::new(cfg.clone(), Method::AdaFrugalCombined).unwrap();
+    t.quiet = true;
+    t.run_span(0, 20).unwrap();
+    let (header, data) = t.pause().unwrap();
+
+    // a params-only header is not a resume snapshot: restore fails...
+    let bogus = checkpoint::train_header("nano", "combined", 60, 1.0);
+    let mut t2 = Trainer::new(cfg.clone(), Method::AdaFrugalCombined).unwrap();
+    t2.quiet = true;
+    assert!(t2.restore_resume(&bogus, &data).is_err());
+    // ...and the session must now refuse to pause, loudly
+    let err = format!("{:#}", t2.pause().unwrap_err());
+    assert!(err.contains("not at an exact snapshot boundary"), "{err}");
+
+    // a real restore re-establishes the boundary
+    let next = t2.restore_resume(&header, &data).unwrap();
+    assert_eq!(next, 20);
+    let (h2, d2) = t2.pause().unwrap();
+    assert_eq!(header.to_string(), h2.to_string());
+    assert_eq!(data, d2);
+}
+
+/// Host-path methods run an opaque host optimizer: pause names that
+/// instead of pretending a snapshot is possible.
+#[test]
+fn pause_refuses_host_path() {
+    let cfg = parity_cfg("nano", "galore", 60);
+    let mut t = Trainer::new(cfg.clone(), Method::GaLore).unwrap();
+    t.quiet = true;
+    t.run_span(0, 10).unwrap();
+    let err = format!("{:#}", t.pause().unwrap_err());
+    assert!(err.contains("host optimizer"), "{err}");
+}

@@ -1,0 +1,315 @@
+//! Scheduler invariants under adversarial arrival sequences:
+//!
+//! - **no starvation** — waited-tick aging eventually out-ranks a
+//!   stream of fresh high-priority arrivals;
+//! - **bounded pool** — concurrent resident sessions never exceed the
+//!   slot bound, whatever arrives;
+//! - **budget fences** — a tenant's summed modeled bytes never exceed
+//!   its cap; an inadmissible job fails loudly instead of wedging the
+//!   queue; lowering a cap mid-stream evicts until the tenant fits;
+//! - **traces under the scheduler** — a preempted job appends all its
+//!   segments to ONE per-job trace file, and the farm report points at
+//!   it.
+
+use adafrugal::config::TrainConfig;
+use adafrugal::coordinator::memory_tracker::MemoryTracker;
+use adafrugal::coordinator::method::Method;
+use adafrugal::runtime::sim::SimEngine;
+use adafrugal::serve::{check_farm_report, farm_report, BudgetSpec, JobSpec, JobState,
+                       Scheduler, ServeOpts};
+use adafrugal::util::json;
+
+/// Tiny jobs so the farm drains in well under a second.
+fn nano_cfg(steps: usize) -> TrainConfig {
+    TrainConfig {
+        preset: "nano".into(),
+        backend: "sim".into(),
+        method: "combined".into(),
+        steps,
+        warmup_steps: 2,
+        n_eval: steps,
+        t_start: 5,
+        t_max: 20,
+        log_every: steps,
+        val_batches: 1,
+        seed: 7,
+        ..TrainConfig::default()
+    }
+}
+
+fn job(id: &str, tenant: &str, priority: i64, arrive_tick: usize,
+       cfg: &TrainConfig) -> JobSpec {
+    JobSpec {
+        id: id.into(),
+        tenant: tenant.into(),
+        priority,
+        arrive_tick,
+        preempt_at: vec![],
+        resume_shards: None,
+        cfg: cfg.clone(),
+    }
+}
+
+/// The modeled charge the scheduler prices admission with — computed
+/// through the same API so budget thresholds stay exact, not pinned.
+fn charge(cfg: &TrainConfig) -> usize {
+    let eng = SimEngine::from_name(&cfg.preset, &["eval"]).unwrap();
+    let method = Method::parse(&cfg.method).unwrap();
+    MemoryTracker::bytes_for(eng.manifest(), method.memory_model(), None, cfg.rho)
+}
+
+/// One slot, a fresh +5-priority job arriving every tick, plus one −5
+/// job from tick 0. With aging_every=1 the starved job's effective rank
+/// climbs one per waited tick, so it must run before the last fresh
+/// arrival despite never matching their raw priority.
+#[test]
+fn aging_beats_priority_no_starvation() {
+    let cfg = nano_cfg(12);
+    let mut jobs: Vec<JobSpec> = (0..12)
+        .map(|i| job(&format!("high{i:02}"), "vip", 5, i, &cfg))
+        .collect();
+    jobs.push(job("starved", "pleb", -5, 0, &cfg));
+
+    let farm = Scheduler::new(ServeOpts {
+        slots: 1,
+        quantum: 12, // one tick per job: the slot frees every tick
+        aging_every: 1,
+        ..ServeOpts::default()
+    })
+    .run(jobs, vec![])
+    .unwrap();
+
+    for j in &farm.jobs {
+        assert_eq!(j.state, JobState::Done, "{}: {:?}", j.id, j.error);
+    }
+    let starved = farm.jobs.iter().find(|j| j.id == "starved").unwrap();
+    let last_high = farm
+        .jobs
+        .iter()
+        .filter(|j| j.id.starts_with("high"))
+        .map(|j| j.done_tick.unwrap())
+        .max()
+        .unwrap();
+    assert!(
+        starved.done_tick.unwrap() < last_high,
+        "aging must admit the -5 job (done tick {}) before the stream of \
+         +5 jobs drains (last done tick {last_high})",
+        starved.done_tick.unwrap()
+    );
+    // and the wait is bounded by the aging arithmetic: rank -5 + w*1
+    // overtakes rank 5 + 0 within ~10 ticks of waiting
+    assert!(starved.wait_ticks <= 11, "waited {} ticks", starved.wait_ticks);
+}
+
+/// Deterministic LCG so the adversarial schedule is reproducible
+/// without `rand` (and without wall-clock seeding, which the workflow
+/// forbids anyway for replay).
+struct Lcg(u64);
+impl Lcg {
+    fn next(&mut self, bound: u64) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        (self.0 >> 33) % bound
+    }
+}
+
+/// 40 jobs with pseudo-random priorities/arrivals/lengths on 3 slots:
+/// the resident-session count never exceeds the bound and everything
+/// still drains.
+#[test]
+fn slot_bound_holds_under_adversarial_arrivals() {
+    let mut rng = Lcg(0x5eed);
+    let jobs: Vec<JobSpec> = (0..40)
+        .map(|i| {
+            let cfg = nano_cfg(4 + rng.next(12) as usize);
+            let mut j = job(
+                &format!("j{i:02}"),
+                ["a", "b", "c"][rng.next(3) as usize],
+                rng.next(9) as i64 - 4,
+                rng.next(20) as usize,
+                &cfg,
+            );
+            if (i % 4 == 0) && j.cfg.steps > 2 {
+                j.preempt_at = vec![j.cfg.steps / 2]; // forced churn on every 4th job
+            }
+            j
+        })
+        .collect();
+
+    let farm = Scheduler::new(ServeOpts {
+        slots: 3,
+        quantum: 5,
+        aging_every: 2,
+        ..ServeOpts::default()
+    })
+    .run(jobs, vec![])
+    .unwrap();
+
+    assert_eq!(farm.slots, 3);
+    assert!(
+        farm.peak_resident <= 3,
+        "peak resident sessions {} exceeded the slot bound",
+        farm.peak_resident
+    );
+    assert_eq!(farm.jobs.len(), 40);
+    for j in &farm.jobs {
+        assert_eq!(j.state, JobState::Done, "{}: {:?}", j.id, j.error);
+    }
+    assert!(farm.preemptions > 0, "the churny schedule should preempt");
+
+    // the farm report over this outcome is schema-valid
+    let report = farm_report(&farm);
+    check_farm_report(&json::parse(&report.to_string()).unwrap()).unwrap();
+}
+
+/// Per-tenant byte fences, all three edges: a budget that serializes a
+/// tenant's jobs (peak stays at one charge), a budget the job can never
+/// fit (named failure, queue keeps draining), and no budget at all.
+#[test]
+fn tenant_budget_is_enforced() {
+    let cfg = nano_cfg(6);
+    let one = charge(&cfg);
+    let jobs = vec![
+        job("cap-a", "capped", 0, 0, &cfg),
+        job("cap-b", "capped", 0, 0, &cfg),
+        job("cap-c", "capped", 0, 0, &cfg),
+        job("free-a", "free", 0, 0, &cfg),
+    ];
+    let budgets = vec![BudgetSpec {
+        tenant: "capped".into(),
+        budget_bytes: Some(one + one / 2), // fits one job, not two
+        at_tick: 0,
+    }];
+
+    let farm = Scheduler::new(ServeOpts {
+        slots: 3,
+        quantum: 3,
+        ..ServeOpts::default()
+    })
+    .run(jobs, budgets)
+    .unwrap();
+
+    for j in &farm.jobs {
+        assert_eq!(j.state, JobState::Done, "{}: {:?}", j.id, j.error);
+    }
+    let capped = farm.tenants.iter().find(|t| t.tenant == "capped").unwrap();
+    assert_eq!(capped.jobs, 3);
+    assert_eq!(capped.budget_bytes, Some(one + one / 2));
+    assert_eq!(
+        capped.peak_bytes, one,
+        "the cap must serialize the tenant: never two resident charges"
+    );
+    let free = farm.tenants.iter().find(|t| t.tenant == "free").unwrap();
+    assert_eq!(free.budget_bytes, None);
+    assert_eq!(free.peak_bytes, one);
+}
+
+/// A job whose own charge exceeds its tenant cap can never be admitted:
+/// it must fail with a named error, not occupy the queue forever.
+#[test]
+fn impossible_budget_fails_loudly() {
+    let cfg = nano_cfg(6);
+    let one = charge(&cfg);
+    let jobs = vec![
+        job("doomed", "tiny", 0, 0, &cfg),
+        job("fine", "roomy", 0, 0, &cfg),
+    ];
+    let budgets = vec![BudgetSpec {
+        tenant: "tiny".into(),
+        budget_bytes: Some(one - 1),
+        at_tick: 0,
+    }];
+
+    let farm = Scheduler::new(ServeOpts::default()).run(jobs, budgets).unwrap();
+    let doomed = farm.jobs.iter().find(|j| j.id == "doomed").unwrap();
+    assert_eq!(doomed.state, JobState::Failed);
+    let err = doomed.error.as_deref().unwrap();
+    assert!(err.contains("budget"), "error must name the budget: {err}");
+    let fine = farm.jobs.iter().find(|j| j.id == "fine").unwrap();
+    assert_eq!(fine.state, JobState::Done, "{:?}", fine.error);
+}
+
+/// Lowering a tenant's cap mid-stream evicts its residents (checkpoint
+/// preemption, not kill) until the tenant fits — the jobs still finish.
+#[test]
+fn budget_directive_mid_stream_evicts() {
+    let cfg = nano_cfg(40);
+    let one = charge(&cfg);
+    let jobs = vec![
+        job("long-a", "t", 0, 0, &cfg),
+        job("long-b", "t", 0, 0, &cfg),
+    ];
+    let budgets = vec![BudgetSpec {
+        tenant: "t".into(),
+        budget_bytes: Some(one + one / 2), // arrives at tick 2: both resident
+        at_tick: 2,
+    }];
+
+    let farm = Scheduler::new(ServeOpts {
+        slots: 2,
+        quantum: 5,
+        ..ServeOpts::default()
+    })
+    .run(jobs, budgets)
+    .unwrap();
+
+    for j in &farm.jobs {
+        assert_eq!(j.state, JobState::Done, "{}: {:?}", j.id, j.error);
+    }
+    let t = farm.tenants.iter().find(|t| t.tenant == "t").unwrap();
+    assert!(t.preemptions >= 1, "the lowered cap must evict, not kill");
+    assert_eq!(
+        t.peak_bytes,
+        2 * one,
+        "peak was legitimately 2 charges before the directive landed"
+    );
+}
+
+/// `--trace` under the scheduler: a twice-preempted job streams all its
+/// segments into ONE per-job JSONL file (appended across resumes, one
+/// record per executed step), and the farm report lists that file.
+#[test]
+fn preempted_job_appends_one_trace_file() {
+    let dir = std::env::temp_dir().join(format!(
+        "adafrugal_serve_trace_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = nano_cfg(30);
+    let mut j = job("traced", "t", 0, 0, &cfg);
+    j.preempt_at = vec![11, 23];
+
+    let farm = Scheduler::new(ServeOpts {
+        slots: 1,
+        quantum: 50,
+        trace_dir: Some(dir.to_string_lossy().into_owned()),
+        ..ServeOpts::default()
+    })
+    .run(vec![j], vec![])
+    .unwrap();
+
+    let traced = &farm.jobs[0];
+    assert_eq!(traced.state, JobState::Done, "{:?}", traced.error);
+    assert_eq!(traced.preemptions, 2);
+    let path = traced.trace.as_deref().expect("job must record its trace path");
+    let body = std::fs::read_to_string(path).unwrap();
+    let steps: Vec<usize> = body
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            let v = json::parse(l).unwrap();
+            v.get("step").unwrap().as_usize().unwrap()
+        })
+        .collect();
+    assert_eq!(
+        steps,
+        (0..30).collect::<Vec<_>>(),
+        "all three segments must land in one file, in order, no overlap"
+    );
+
+    let report = farm_report(&farm);
+    let listed = report.get("traces").unwrap().as_arr().unwrap();
+    assert_eq!(listed.len(), 1);
+    assert_eq!(listed[0].as_str().unwrap(), path);
+    check_farm_report(&report).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

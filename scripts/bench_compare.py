@@ -25,9 +25,9 @@ Three subcommands, all stdlib-only:
       fresh run fail; new configs only warn.
 
 The required-key lists below must stay in sync with
-rust/src/util/bench.rs (LOOP_RECORD_KEYS / SHARD_RECORD_KEYS); the
-bench binary self-checks against those before printing, so drift shows
-up on both sides.
+rust/src/util/bench.rs (LOOP_RECORD_KEYS / SHARD_RECORD_KEYS /
+SERVE_RECORD_KEYS); the bench binaries self-check against those before
+printing, so drift shows up on both sides.
 """
 
 import argparse
@@ -62,7 +62,27 @@ SHARD_RECORD_KEYS = [
     *PHASE_KEYS, "final_ppl",
 ]
 
-REQUIRED = {"bench_loop": LOOP_RECORD_KEYS, "bench_loop_shards": SHARD_RECORD_KEYS}
+SERVE_RECORD_KEYS = [
+    "bench", "backend", "preset", "method", "jobs", "slots", "quantum",
+    "steps_per_job", "reps", "jobs_per_sec", "jps_min", "jps_max",
+    "noise_rel", "ticks", "preemptions", "forced_yields",
+    "queue_wait_p50_ticks", "queue_wait_p95_ticks",
+    "peak_resident_sessions",
+]
+
+REQUIRED = {
+    "bench_loop": LOOP_RECORD_KEYS,
+    "bench_loop_shards": SHARD_RECORD_KEYS,
+    "bench_serve": SERVE_RECORD_KEYS,
+}
+
+# the gated throughput field per record kind (medians, with noise_rel
+# bands recorded next to them)
+THROUGHPUT = {
+    "bench_loop": "steps_per_sec",
+    "bench_loop_shards": "steps_per_sec",
+    "bench_serve": "jobs_per_sec",
+}
 
 
 def _reject_constant(name):
@@ -196,17 +216,18 @@ def cmd_gate(args):
             failures.append(f"{name}: present in baseline, missing from "
                             f"fresh run — a config silently disappeared")
             continue
-        b_sps, f_sps = brec["steps_per_sec"], frec["steps_per_sec"]
+        metric = THROUGHPUT[key[0]]
+        b_sps, f_sps = brec[metric], frec[metric]
         band = brec["noise_rel"] + frec["noise_rel"] + margin
         floor = b_sps * (1.0 - band)
         verdict = "PASS" if f_sps >= floor else "FAIL"
-        print(f"  {verdict} {name}: baseline {b_sps:.2f} sps "
-              f"(noise {brec['noise_rel']:.3f}), fresh {f_sps:.2f} sps "
+        print(f"  {verdict} {name}: baseline {b_sps:.2f} {metric} "
+              f"(noise {brec['noise_rel']:.3f}), fresh {f_sps:.2f} "
               f"(noise {frec['noise_rel']:.3f}), floor {floor:.2f} "
               f"(margin {margin:.2f})")
         if f_sps < floor:
             failures.append(
-                f"{name}: steps/sec regressed beyond noise: "
+                f"{name}: {metric} regressed beyond noise: "
                 f"{f_sps:.2f} < floor {floor:.2f} "
                 f"(baseline {b_sps:.2f}, combined band {band:.3f})")
     for key in sorted(set(fresh) - set(base)):

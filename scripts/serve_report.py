@@ -1,0 +1,170 @@
+#!/usr/bin/env python3
+"""Validate a serve farm report (`serve --report` JSON) and print it.
+
+Stdlib-only, one positional argument:
+
+  serve_report.py FARM_REPORT.json [--expect-jobs N]
+
+Validation mirrors the locked Rust-side schema exactly
+(rust/src/serve/report.rs): strict JSON (no NaN/Infinity literals), the
+exact farm-report key set (missing AND extra keys both fail), the exact
+per-tenant key set in every `tenants` entry, finite numbers everywhere
+a number is required, and the queue-wait percentile ordering invariant
+p50 <= p95 <= max. `--expect-jobs N` additionally asserts the farm ran
+exactly N jobs and ALL of them completed (the CI smoke uses this).
+
+The key lists below must stay in sync with rust/src/serve/report.rs
+(FARM_REPORT_KEYS / TENANT_REPORT_KEYS); the CLI self-checks the report
+against those before writing, so drift shows up on both sides.
+"""
+
+import argparse
+import json
+import math
+import sys
+
+# keep in sync with rust/src/serve/report.rs FARM_REPORT_KEYS
+FARM_REPORT_KEYS = [
+    "kind", "slots", "quantum", "ticks", "jobs_total", "jobs_done",
+    "jobs_failed", "preemptions", "forced_yields", "peak_resident_sessions",
+    "queue_wait_p50_ticks", "queue_wait_p95_ticks", "queue_wait_max_ticks",
+    "tenants", "traces",
+]
+
+# keep in sync with rust/src/serve/report.rs TENANT_REPORT_KEYS
+TENANT_REPORT_KEYS = ["tenant", "jobs", "peak_bytes", "budget_bytes",
+                      "preemptions"]
+
+# top-level keys that must be a finite number (never null)
+REQUIRED_NUM = [
+    "slots", "quantum", "ticks", "jobs_total", "jobs_done", "jobs_failed",
+    "preemptions", "forced_yields", "peak_resident_sessions",
+    "queue_wait_p50_ticks", "queue_wait_p95_ticks", "queue_wait_max_ticks",
+]
+
+
+def _reject_constant(name):
+    raise ValueError(f"non-strict JSON constant {name!r}")
+
+
+def strict_loads(text):
+    """json.loads that rejects NaN/Infinity literals (strict JSON)."""
+    return json.loads(text, parse_constant=_reject_constant)
+
+
+def fail(msg):
+    print(f"serve_report: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_finite_num(value, where):
+    if not isinstance(value, (int, float)) or isinstance(value, bool):
+        fail(f"{where}: not a number: {value!r}")
+    if not math.isfinite(value):
+        fail(f"{where}: non-finite number")
+
+
+def check_report(rep, where):
+    if not isinstance(rep, dict):
+        fail(f"{where}: report is not a JSON object")
+    missing = [k for k in FARM_REPORT_KEYS if k not in rep]
+    if missing:
+        fail(f"{where}: missing keys {missing}")
+    extra = [k for k in rep if k not in FARM_REPORT_KEYS]
+    if extra:
+        fail(f"{where}: unexpected keys {extra} (schema drift: update "
+             f"FARM_REPORT_KEYS here and in rust/src/serve/report.rs "
+             f"together)")
+    if rep["kind"] != "farm_report":
+        fail(f"{where}: unknown report kind {rep['kind']!r}")
+    for k in REQUIRED_NUM:
+        check_finite_num(rep[k], f"{where}: key {k!r}")
+    p50 = rep["queue_wait_p50_ticks"]
+    p95 = rep["queue_wait_p95_ticks"]
+    top = rep["queue_wait_max_ticks"]
+    if not (p50 <= p95 <= top):
+        fail(f"{where}: queue-wait percentiles out of order: "
+             f"p50 {p50} p95 {p95} max {top}")
+    if rep["jobs_done"] + rep["jobs_failed"] > rep["jobs_total"]:
+        fail(f"{where}: jobs_done + jobs_failed exceeds jobs_total")
+    if not isinstance(rep["tenants"], list):
+        fail(f"{where}: key 'tenants' is not an array")
+    for i, t in enumerate(rep["tenants"]):
+        if not isinstance(t, dict):
+            fail(f"{where}: tenant entry {i} is not an object")
+        t_missing = [k for k in TENANT_REPORT_KEYS if k not in t]
+        if t_missing:
+            fail(f"{where}: tenant entry {i} missing keys {t_missing}")
+        t_extra = [k for k in t if k not in TENANT_REPORT_KEYS]
+        if t_extra:
+            fail(f"{where}: tenant entry {i} unexpected keys {t_extra}")
+        if not isinstance(t["tenant"], str):
+            fail(f"{where}: tenant entry {i} key 'tenant' is not a string")
+        for k in ["jobs", "peak_bytes", "preemptions"]:
+            check_finite_num(t[k], f"{where}: tenant entry {i} key {k!r}")
+        if t["budget_bytes"] is not None:
+            check_finite_num(t["budget_bytes"],
+                             f"{where}: tenant entry {i} key 'budget_bytes'")
+            if t["peak_bytes"] > t["budget_bytes"]:
+                # legitimate when a budget directive lowered the cap
+                # mid-stream (the peak predates the cap), so warn only
+                print(f"serve_report: WARN: tenant {t['tenant']!r} "
+                      f"peak_bytes {t['peak_bytes']} exceeds its final "
+                      f"budget {t['budget_bytes']} (cap lowered "
+                      f"mid-stream?)", file=sys.stderr)
+    if not isinstance(rep["traces"], list):
+        fail(f"{where}: key 'traces' is not an array")
+    for i, tr in enumerate(rep["traces"]):
+        if not isinstance(tr, str):
+            fail(f"{where}: traces entry {i} is not a string")
+
+
+def summarize(rep):
+    print(f"serve_report: {rep['slots']} slots, quantum {rep['quantum']}, "
+          f"{rep['ticks']} ticks")
+    print(f"  jobs: {rep['jobs_total']} total, {rep['jobs_done']} done, "
+          f"{rep['jobs_failed']} failed")
+    print(f"  preemptions {rep['preemptions']}, "
+          f"forced yields {rep['forced_yields']}, "
+          f"peak resident {rep['peak_resident_sessions']}")
+    print(f"  queue wait ticks: p50 {rep['queue_wait_p50_ticks']}, "
+          f"p95 {rep['queue_wait_p95_ticks']}, "
+          f"max {rep['queue_wait_max_ticks']}")
+    for t in rep["tenants"]:
+        budget = t["budget_bytes"]
+        cap = f"{budget}" if budget is not None else "unbounded"
+        print(f"  tenant {t['tenant']}: {t['jobs']} jobs, "
+              f"peak {t['peak_bytes']} B (budget {cap}), "
+              f"{t['preemptions']} preemptions")
+    if rep["traces"]:
+        print(f"  traces: {len(rep['traces'])} per-job files")
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("report", help="farm report (`serve --report` JSON)")
+    p.add_argument("--expect-jobs", type=int, default=None,
+                   help="assert the farm ran exactly N jobs and all of "
+                        "them completed")
+    args = p.parse_args()
+    with open(args.report, encoding="utf-8") as f:
+        text = f.read()
+    try:
+        rep = strict_loads(text)
+    except ValueError as e:
+        fail(f"{args.report}: not strict JSON: {e}")
+    check_report(rep, args.report)
+    if args.expect_jobs is not None:
+        if rep["jobs_total"] != args.expect_jobs:
+            fail(f"{args.report}: expected {args.expect_jobs} jobs, "
+                 f"report has {rep['jobs_total']}")
+        if rep["jobs_done"] != args.expect_jobs:
+            fail(f"{args.report}: expected all {args.expect_jobs} jobs done, "
+                 f"only {rep['jobs_done']} completed "
+                 f"({rep['jobs_failed']} failed)")
+    summarize(rep)
+    print("serve_report: OK")
+
+
+if __name__ == "__main__":
+    main()
